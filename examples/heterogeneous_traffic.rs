@@ -1,0 +1,38 @@
+//! The paper's headline experiment (Fig. 5), end to end: how do the
+//! narrow-wide links protect latency-sensitive traffic from bulk DMA
+//! bursts — and the DMA bandwidth from small-message pollution?
+//!
+//! ```sh
+//! cargo run --release --example heterogeneous_traffic
+//! ```
+
+use floonoc::coordinator::{fig5a, fig5b};
+use floonoc::noc::LinkMode;
+use floonoc::report;
+
+fn main() {
+    println!("=== Fig. 5a: narrow latency vs wide-burst interference ===\n");
+    let levels = [0u32, 1, 2, 4, 8];
+    for bidir in [false, true] {
+        for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
+            let rows = fig5a(mode, bidir, &levels);
+            print!("{}", report::fig5a_table(&rows));
+            println!();
+        }
+    }
+
+    println!("=== Fig. 5b: wide effective bandwidth vs narrow interference ===\n");
+    let levels = [0u32, 2, 4, 8, 16, 32];
+    for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
+        let rows = fig5b(mode, false, &levels);
+        print!("{}", report::fig5b_table(&rows));
+        println!();
+    }
+
+    println!(
+        "Takeaway (matches the paper): with wide-only links the narrow\n\
+         transactions suffer multi-x latency degradation under burst\n\
+         traffic, and the wide link loses effective bandwidth to small\n\
+         messages; the narrow-wide configuration keeps both flat."
+    );
+}

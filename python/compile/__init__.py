@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas models AOT-lowered to HLO text.
+
+Nothing in this package runs at simulation time — the Rust coordinator
+loads the artifacts produced by ``python -m compile.aot``.
+"""

@@ -1,0 +1,98 @@
+"""AOT lowering: JAX models -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. Lowering uses
+``return_tuple=True`` so the Rust side unwraps a single tuple result.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Produces:
+  * ``tile_matmul.hlo.txt``      x[64,64] w[64,64] -> (y[64,64],)
+  * ``cluster_compute.hlo.txt``  x[64,64] w[64,64] b[64] -> (y[64,64],)
+  * ``noc_perf.hlo.txt``         traffic[16,16] -> (loads[4,4,4], max, mean, sat)
+  * ``meta.json``                shape/metadata contract for the runtime
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args):
+    return jax.jit(fn).lower(*example_args)
+
+
+def build_artifacts(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    f32 = jnp.float32
+    d = model.TILE_DIM
+    n = model.DSE_MESH_N
+    entries = {
+        "tile_matmul": (
+            model.tile_matmul,
+            (
+                jax.ShapeDtypeStruct((d, d), f32),
+                jax.ShapeDtypeStruct((d, d), f32),
+            ),
+        ),
+        "cluster_compute": (
+            model.cluster_compute,
+            (
+                jax.ShapeDtypeStruct((d, d), f32),
+                jax.ShapeDtypeStruct((d, d), f32),
+                jax.ShapeDtypeStruct((d,), f32),
+            ),
+        ),
+        "noc_perf": (
+            model.noc_perf,
+            (jax.ShapeDtypeStruct((n * n, n * n), f32),),
+        ),
+    }
+    meta = {"tile_dim": d, "dse_mesh_n": n, "artifacts": {}}
+    for name, (fn, args) in entries.items():
+        lowered = lower_entry(fn, args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(a.shape) for a in args],
+            "hlo_chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    meta_path = os.path.join(out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build_artifacts(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernel: XY-routing interval-load computation.
+
+The analytical NoC model (Layer 2, ``model.link_loads``) reduces the
+traffic matrix to stacks of per-dimension weight matrices ``w[g, a, b]``
+(traffic entering a row/column at coordinate ``a`` and leaving at ``b``);
+this kernel computes, for every coordinate ``p``, the load crossing the
+forward link ``p -> p+1`` (``a <= p < b``) and the backward link
+``p+1 -> p`` (``b <= p < a``).
+
+The grid runs over ``g`` (one mesh row or column per step) so each step
+holds a single ``[n, n]`` slab in VMEM — the same tiling discipline the
+matmul kernel uses for its operand blocks.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _interval_kernel(w_ref, fwd_ref, bwd_ref):
+    w = w_ref[...]  # [1, n, n] block: one row/column's weights
+    n = w.shape[-1]
+    p = jax.lax.broadcasted_iota(jnp.int32, (n, n, n), 0)
+    a = jax.lax.broadcasted_iota(jnp.int32, (n, n, n), 1)
+    b = jax.lax.broadcasted_iota(jnp.int32, (n, n, n), 2)
+    fwd_mask = ((a <= p) & (p < b)).astype(w.dtype)
+    bwd_mask = ((b <= p) & (p < a)).astype(w.dtype)
+    # [p, a, b] x [a, b] -> [p]
+    fwd_ref[...] = jnp.einsum("pab,ab->p", fwd_mask, w[0])[None, :]
+    bwd_ref[...] = jnp.einsum("pab,ab->p", bwd_mask, w[0])[None, :]
+
+
+@jax.jit
+def interval_load(w):
+    """Pallas interval-load over a stack ``w[g, n, n]`` -> ``(fwd, bwd)``
+    each of shape ``[g, n]``."""
+    g, n, n2 = w.shape
+    assert n == n2, f"weight slabs must be square, got {w.shape}"
+    out = jax.ShapeDtypeStruct((g, n), w.dtype)
+    return pl.pallas_call(
+        _interval_kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))],
+        out_specs=(
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ),
+        out_shape=(out, out),
+        interpret=True,
+    )(w)

@@ -1,0 +1,84 @@
+"""Layer-1 Pallas kernel: blocked matmul (the tile's compute hot-spot).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's wide
+512-bit link exists to feed DMA-driven double-buffered tile compute. On
+TPU terms the same structure is a grid over (M, N, K) blocks whose
+``BlockSpec``s stage operand tiles HBM->VMEM — the BlockSpec schedule
+plays the role the DMA bursts play in the Snitch cluster, and the inner
+``jnp.dot`` targets the MXU systolic array.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness (vs ``ref.matmul_ref``) is the build-time
+gate. VMEM-footprint and MXU-utilization estimates for a real TPU are
+derived analytically in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output block; grid = (M/bm, N/bn, K/bk).
+
+    The output block is revisited across the K dimension (its index map
+    ignores ``k``), so it serves as the VMEM-resident f32 accumulator —
+    the standard Pallas reduction pattern.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, w, *, bm=64, bn=64, bk=64):
+    """Blocked ``x @ w`` via a Pallas kernel (interpret mode).
+
+    Shapes must tile exactly: ``M % bm == N % bn == K % bk == 0``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k})x({k},{n}) must tile by ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_footprint_bytes(bm, bn, bk, dtype_bytes=4):
+    """Per-grid-step VMEM residency estimate: x, w blocks + accumulator +
+    output block (double-buffering would multiply operand blocks by 2)."""
+    return dtype_bytes * (bm * bk + bk * bn + 2 * bm * bn)
+
+
+def mxu_utilization_estimate(bm, bn, bk, mxu=128):
+    """Fraction of MXU lanes a (bm, bn, bk) block keeps busy: the systolic
+    array processes 128x128 tiles, so each dimension contributes
+    ``min(dim, mxu) / mxu`` (ceil-division padding waste otherwise)."""
+
+    def eff(d):
+        import math
+
+        padded = math.ceil(d / mxu) * mxu
+        return d / padded
+
+    return eff(bm) * eff(bn) * eff(bk)

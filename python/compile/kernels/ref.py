@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package must
+match its oracle to float tolerance under pytest + hypothesis sweeps
+(``python/tests/test_kernels.py``).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain dense matmul, fp32 accumulation."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def cluster_compute_ref(x, w, b):
+    """The tile workload: GEMM + bias + ReLU (the DMA-fed FP kernel the
+    Snitch cluster case study motivates)."""
+    return jnp.maximum(matmul_ref(x, w) + b[None, :], 0.0)
+
+
+def interval_load_ref(w):
+    """Oracle for the interval-crossing load computation.
+
+    ``w[..., a, b]`` is traffic starting at coordinate ``a`` and ending at
+    ``b`` along one mesh dimension. Returns ``(fwd, bwd)`` where
+    ``fwd[..., p]`` is the load on the link ``p -> p+1`` (used iff
+    ``a <= p < b``) and ``bwd[..., p]`` on ``p+1 -> p`` (used iff
+    ``b <= p < a``).
+    """
+    n = w.shape[-1]
+    p = jnp.arange(n)[:, None, None]
+    a = jnp.arange(n)[None, :, None]
+    b = jnp.arange(n)[None, None, :]
+    fwd_mask = (a <= p) & (p < b)
+    bwd_mask = (b <= p) & (p < a)
+    fwd = jnp.einsum("pab,...ab->...p", fwd_mask.astype(w.dtype), w)
+    bwd = jnp.einsum("pab,...ab->...p", bwd_mask.astype(w.dtype), w)
+    return fwd, bwd
+
+
+def link_loads_ref(traffic, n):
+    """XY-routing link loads for an ``n x n`` mesh.
+
+    ``traffic[s, d]`` is offered load (flits/cycle) from node ``s`` to
+    node ``d``; nodes are row-major (``id = y * n + x``). Returns an array
+    ``[4, n, n]`` with loads of the E, W, N, S output links of the router
+    at ``(x, y)`` (axis order ``[dir, y_or_column, position]`` — see
+    below).
+
+    Dimension-ordered XY: the X leg runs at the source row ``sy`` from
+    ``sx`` to ``dx``; the Y leg runs at the destination column ``dx``
+    from ``sy`` to ``dy``.
+
+    Layout of the result:
+      * ``loads[0, y, x]`` — E link of router (x, y)
+      * ``loads[1, y, x]`` — W link of router (x+1, y)  (bwd on row y)
+      * ``loads[2, y, x]`` — N link of router (x=?, ...)`` transposed:
+        ``loads[2, y, x]`` is the N link of router (x, y) and
+        ``loads[3, y, x]`` its S counterpart.
+    """
+    t4 = traffic.reshape(n, n, n, n)  # [sy, sx, dy, dx]
+    # X legs: aggregate over dy -> w_row[sy][sx, dx].
+    w_row = t4.sum(axis=2)  # [sy, sx, dx]
+    east, west = interval_load_ref(w_row)  # [sy, p]
+    # Y legs: aggregate over sx -> w_col[dx][sy, dy].
+    w_col = t4.sum(axis=1).transpose(2, 0, 1)  # [dx, sy, dy]
+    north, south = interval_load_ref(w_col)  # [dx, p]
+    loads = jnp.stack(
+        [
+            east,  # [y, x]
+            west,  # [y, x]
+            north.T,  # [dx, y] -> [y, x=dx]
+            south.T,
+        ]
+    )
+    return loads
+
+
+def noc_perf_ref(traffic, n):
+    """Analytical NoC performance summary from link loads.
+
+    Returns ``(loads, max_load, mean_load, saturation_scale)`` where
+    ``saturation_scale`` is the factor by which the offered traffic can be
+    scaled before the most-loaded link saturates (1 flit/cycle capacity).
+    """
+    loads = link_loads_ref(traffic, n)
+    max_load = loads.max()
+    mean_load = loads.mean()
+    sat = jnp.where(max_load > 0, 1.0 / jnp.maximum(max_load, 1e-9), jnp.inf)
+    return loads, max_load, mean_load, sat

@@ -1,0 +1,59 @@
+"""Layer-2 JAX models, built on the Layer-1 Pallas kernels.
+
+Three AOT entry points (see ``aot.py``):
+
+* ``tile_matmul`` — the bare tile GEMM used by the distributed
+  mesh-matmul example (accumulated across tiles on the Rust side);
+* ``cluster_compute`` — GEMM + bias + ReLU, the full per-tile workload;
+* ``noc_perf`` — the analytical XY link-load model used by the DSE flow.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import link_load, matmul
+
+# Fixed AOT shapes (the PJRT artifacts are shape-specialized; the Rust
+# runtime asserts against these constants, re-exported in meta.json).
+TILE_DIM = 64
+DSE_MESH_N = 4
+
+
+def tile_matmul(x, w):
+    """Bare tile GEMM ``[64,64] @ [64,64]`` via the Pallas kernel."""
+    return matmul.matmul(x, w, bm=32, bn=32, bk=32)
+
+
+def cluster_compute(x, w, b):
+    """The tile workload: GEMM + bias + ReLU."""
+    y = matmul.matmul(x, w, bm=32, bn=32, bk=32)
+    return jnp.maximum(y + b[None, :], 0.0)
+
+
+def link_loads(traffic, n):
+    """XY link loads for an ``n x n`` mesh via the interval kernel.
+
+    Mirrors ``ref.link_loads_ref`` but routes the interval computation
+    through the Pallas kernel: build the row-wise (X-leg) and column-wise
+    (Y-leg) weight stacks, run one fused kernel over ``2n`` slabs, and
+    reassemble the ``[4, n, n]`` load tensor.
+    """
+    t4 = traffic.reshape(n, n, n, n)  # [sy, sx, dy, dx]
+    w_row = t4.sum(axis=2)  # [sy, sx, dx]
+    w_col = t4.sum(axis=1).transpose(2, 0, 1)  # [dx, sy, dy]
+    stack = jnp.concatenate([w_row, w_col], axis=0)  # [2n, n, n]
+    fwd, bwd = link_load.interval_load(stack)
+    east, north = fwd[:n], fwd[n:]
+    west, south = bwd[:n], bwd[n:]
+    return jnp.stack([east, west, north.T, south.T])
+
+
+def noc_perf(traffic):
+    """DSE entry point (fixed ``DSE_MESH_N``): returns
+    ``(loads[4,n,n], max_load, mean_load, saturation_scale)``."""
+    loads = link_loads(traffic, DSE_MESH_N)
+    max_load = loads.max()
+    mean_load = loads.mean()
+    sat = jnp.where(
+        max_load > 0, 1.0 / jnp.maximum(max_load, 1e-9), jnp.inf
+    )
+    return loads, max_load, mean_load, sat

@@ -1,0 +1,125 @@
+"""Kernel-vs-oracle correctness: the core build-time signal.
+
+Every Pallas kernel must match its pure-jnp reference; hypothesis sweeps
+shapes and values.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import link_load, matmul, ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+# --------------------------------------------------------------- matmul
+
+
+class TestMatmul:
+    def test_square_exact_blocks(self):
+        x, w = rand((64, 64), 0), rand((64, 64), 1)
+        got = matmul.matmul(x, w, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_rectangular(self):
+        x, w = rand((32, 96), 2), rand((96, 64), 3)
+        got = matmul.matmul(x, w, bm=16, bn=16, bk=32)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_single_block(self):
+        x, w = rand((16, 16), 4), rand((16, 16), 5)
+        got = matmul.matmul(x, w, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_k_accumulation_many_steps(self):
+        # 8 K-steps: exercises the revisited-output accumulator.
+        x, w = rand((16, 128), 6), rand((128, 16), 7)
+        got = matmul.matmul(x, w, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_rejects_non_tiling_shapes(self):
+        x, w = rand((10, 10), 8), rand((10, 10), 9)
+        with pytest.raises(AssertionError):
+            matmul.matmul(x, w, bm=16, bn=16, bk=16)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        mb=st.integers(1, 4),
+        nb=st.integers(1, 4),
+        kb=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, mb, nb, kb, seed):
+        bm = bn = bk = 8
+        x = rand((mb * bm, kb * bk), seed)
+        w = rand((kb * bk, nb * bn), seed + 1)
+        got = matmul.matmul(x, w, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+    def test_identity(self):
+        x = rand((32, 32), 10)
+        eye = jnp.eye(32, dtype=jnp.float32)
+        got = matmul.matmul(x, eye, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(got, x, rtol=1e-6, atol=1e-6)
+
+    def test_vmem_footprint_estimator(self):
+        # (128,128,128) f32 blocks: 128*128*4 = 64 KiB each, 4 blocks total.
+        assert matmul.vmem_footprint_bytes(128, 128, 128) == 4 * 128 * 128 * 4
+
+    def test_mxu_estimate_perfect_at_128(self):
+        assert matmul.mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert matmul.mxu_utilization_estimate(64, 128, 128) == 0.5
+
+
+# ----------------------------------------------------------- interval load
+
+
+class TestIntervalLoad:
+    def test_matches_ref_basic(self):
+        w = rand((4, 8, 8), 11) ** 2  # non-negative traffic
+        fwd, bwd = link_load.interval_load(w)
+        rfwd, rbwd = ref.interval_load_ref(w)
+        np.testing.assert_allclose(fwd, rfwd, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(bwd, rbwd, rtol=1e-5, atol=1e-6)
+
+    def test_single_flow_forward(self):
+        # One unit of traffic 1 -> 3 crosses links 1->2 and 2->3.
+        w = np.zeros((1, 4, 4), dtype=np.float32)
+        w[0, 1, 3] = 1.0
+        fwd, bwd = link_load.interval_load(jnp.asarray(w))
+        np.testing.assert_allclose(fwd[0], [0, 1, 1, 0])
+        np.testing.assert_allclose(bwd[0], [0, 0, 0, 0])
+
+    def test_single_flow_backward(self):
+        w = np.zeros((1, 4, 4), dtype=np.float32)
+        w[0, 3, 0] = 2.0
+        fwd, bwd = link_load.interval_load(jnp.asarray(w))
+        np.testing.assert_allclose(fwd[0], [0, 0, 0, 0])
+        np.testing.assert_allclose(bwd[0], [2, 2, 2, 0])
+
+    def test_self_traffic_loads_nothing(self):
+        w = jnp.asarray(np.diag([1.0] * 5)[None].astype(np.float32))
+        fwd, bwd = link_load.interval_load(w)
+        assert float(fwd.sum()) == 0.0
+        assert float(bwd.sum()) == 0.0
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        g=st.integers(1, 6),
+        n=st.integers(2, 10),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, g, n, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(
+            rng.uniform(0, 2, size=(g, n, n)).astype(np.float32)
+        )
+        fwd, bwd = link_load.interval_load(w)
+        rfwd, rbwd = ref.interval_load_ref(w)
+        np.testing.assert_allclose(fwd, rfwd, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(bwd, rbwd, rtol=1e-5, atol=1e-5)

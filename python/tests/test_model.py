@@ -1,0 +1,113 @@
+"""Layer-2 model tests: shapes, semantics, and the link-load model's
+agreement between the Pallas path and the oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+class TestClusterCompute:
+    def test_matches_ref(self):
+        d = model.TILE_DIM
+        x, w, b = rand((d, d), 0), rand((d, d), 1), rand((d,), 2)
+        got = model.cluster_compute(x, w, b)
+        want = ref.cluster_compute_ref(x, w, b)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_relu_clamps(self):
+        d = model.TILE_DIM
+        x = jnp.zeros((d, d), jnp.float32)
+        w = jnp.zeros((d, d), jnp.float32)
+        b = jnp.full((d,), -1.0, jnp.float32)
+        out = model.cluster_compute(x, w, b)
+        assert float(out.max()) == 0.0
+
+    def test_tile_matmul_matches_ref(self):
+        d = model.TILE_DIM
+        x, w = rand((d, d), 3), rand((d, d), 4)
+        np.testing.assert_allclose(
+            model.tile_matmul(x, w), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestLinkLoads:
+    def test_matches_oracle_uniform(self):
+        n = 4
+        t = jnp.ones((n * n, n * n), jnp.float32) / (n * n)
+        got = model.link_loads(t, n)
+        want = ref.link_loads_ref(t, n)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_single_flow_path(self):
+        # Node (0,0) -> (2,1) on a 3x3 mesh: X leg crosses E links at
+        # (0,0) and (1,0); Y leg crosses the N link at (2,0).
+        n = 3
+        t = np.zeros((9, 9), np.float32)
+        t[0, 1 * n + 2] = 1.0
+        loads = np.asarray(model.link_loads(jnp.asarray(t), n))
+        east, west, north, south = loads
+        assert east[0, 0] == 1.0 and east[0, 1] == 1.0
+        assert east.sum() == 2.0
+        assert north[0, 2] == 1.0 and north.sum() == 1.0
+        assert west.sum() == 0.0 and south.sum() == 0.0
+
+    def test_boundary_links_unused(self):
+        # The E link of the last column / N link of the top row can never
+        # be used by XY routing inside the mesh.
+        n = 4
+        rng = np.random.default_rng(7)
+        t = jnp.asarray(rng.uniform(0, 1, (16, 16)).astype(np.float32))
+        loads = np.asarray(model.link_loads(t, n))
+        east, west, north, south = loads
+        assert east[:, n - 1].sum() == 0.0
+        assert west[:, n - 1].sum() == 0.0  # bwd[p] stored at p = n-1 unused
+        assert north[n - 1, :].sum() == 0.0
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([2, 3, 4, 5]), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_matches_oracle(self, n, seed):
+        rng = np.random.default_rng(seed)
+        t = jnp.asarray(
+            rng.uniform(0, 1, (n * n, n * n)).astype(np.float32)
+        )
+        got = model.link_loads(t, n)
+        want = ref.link_loads_ref(t, n)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_noc_perf_summary(self):
+        n = model.DSE_MESH_N
+        t = jnp.ones((n * n, n * n), jnp.float32) * 0.01
+        loads, max_load, mean_load, sat = model.noc_perf(t)
+        assert loads.shape == (4, n, n)
+        assert float(max_load) >= float(mean_load) > 0.0
+        # Saturation scale is the inverse of the max link load.
+        np.testing.assert_allclose(float(sat) * float(max_load), 1.0, rtol=1e-5)
+
+    def test_conservation(self):
+        # Total (fwd+bwd) X-leg load equals sum of |dx - sx| per flow;
+        # same for Y legs — the interval model conserves hop counts.
+        n = 4
+        rng = np.random.default_rng(11)
+        t = rng.uniform(0, 1, (16, 16)).astype(np.float32)
+        loads = np.asarray(model.link_loads(jnp.asarray(t), n))
+        coords = [(i % n, i // n) for i in range(16)]
+        want_x = sum(
+            t[s, d] * abs(coords[d][0] - coords[s][0])
+            for s in range(16)
+            for d in range(16)
+        )
+        want_y = sum(
+            t[s, d] * abs(coords[d][1] - coords[s][1])
+            for s in range(16)
+            for d in range(16)
+        )
+        np.testing.assert_allclose(loads[0].sum() + loads[1].sum(), want_x, rtol=1e-4)
+        np.testing.assert_allclose(loads[2].sum() + loads[3].sum(), want_y, rtol=1e-4)

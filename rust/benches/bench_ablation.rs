@@ -1,0 +1,94 @@
+//! Ablation benches over the design choices DESIGN.md calls out: ROB
+//! sizing (the paper's footnote 2), router buffering, burst length,
+//! output registers, mesh scaling, and the AXI4-matrix baseline's
+//! scalability wall.
+
+use floonoc::baseline::AxiMatrixModel;
+use floonoc::coordinator as exp;
+use floonoc::report;
+use floonoc::util::bench::Bencher;
+
+fn main() {
+    println!("== bench_ablation ==\n");
+    let mut b = Bencher::new(0, 1);
+
+    let mut rows = Vec::new();
+    b.bench("ROB size sweep", None, || {
+        rows = exp::ablate_rob_size(&[16, 32, 64, 128, 256]);
+    });
+    print!(
+        "{}",
+        report::ablation_table("wide-ROB slots vs 16x1kB-read makespan (cycles)", &rows)
+    );
+    // The paper sized the 8 kB ROB for >=2 outstanding max-size bursts:
+    // halving below that (<=32 slots = 2 kB) must visibly hurt.
+    let t16 = rows[0].metric;
+    let t128 = rows[3].metric;
+    assert!(t16 > t128 * 1.2, "small ROB must throttle: {t16} vs {t128}");
+    println!();
+
+    b.bench("buffer depth sweep", None, || {
+        rows = exp::ablate_buffer_depth(&[1, 2, 4, 8]);
+    });
+    print!(
+        "{}",
+        report::ablation_table(
+            "router input-buffer depth vs narrow latency under interference",
+            &rows
+        )
+    );
+    println!();
+
+    b.bench("burst length sweep", None, || {
+        rows = exp::ablate_burst_len(&[0, 1, 3, 7, 15, 31]);
+    });
+    print!(
+        "{}",
+        report::ablation_table("burst beats vs effective wide utilization", &rows)
+    );
+    assert!(
+        rows.last().unwrap().metric > rows[0].metric,
+        "longer bursts amortize better"
+    );
+    println!();
+
+    b.bench("output-register ablation", None, || {
+        rows = exp::ablate_output_reg();
+    });
+    print!(
+        "{}",
+        report::ablation_table("output register (2-cycle router) vs zero-load", &rows)
+    );
+    println!();
+
+    b.bench("mesh scaling", None, || {
+        rows = exp::scale_mesh(&[2, 3, 4, 6]);
+    });
+    print!(
+        "{}",
+        report::ablation_table("mesh size vs delivered wide bytes/cycle", &rows)
+    );
+    println!();
+
+    // AXI4-matrix baseline: the scalability argument quantified.
+    let m = AxiMatrixModel::default();
+    println!("AXI4-matrix tracker growth (per crossbar stage):");
+    for s in m.sweep(6) {
+        println!(
+            "  {} hops: {:>2}-bit IDs, {:>12} tracker entries",
+            s.hops,
+            s.id_bits,
+            if s.tracker_entries > 1 << 40 {
+                ">1e12".to_string()
+            } else {
+                s.tracker_entries.to_string()
+            }
+        );
+    }
+    println!(
+        "  FlooNoC NI (hop-independent): {} entries; matrix exceeds the \
+         entire 500 kGE NoC budget at {} hops",
+        m.floonoc_ni_entries(),
+        m.scalability_wall_hops(500_000)
+    );
+}

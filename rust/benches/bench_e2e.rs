@@ -1,0 +1,56 @@
+//! End-to-end simulator throughput: full meshes under load — the number
+//! that gates how big a sweep we can afford (L3 perf deliverable).
+//!
+//! Reports simulated cycles/s and router-flit-events/s.
+
+use floonoc::cluster::{TileTraffic, TiledWorkload};
+use floonoc::flit::NodeId;
+use floonoc::noc::{NocConfig, NocSystem};
+use floonoc::traffic::{GenCfg, Pattern};
+use floonoc::util::bench::Bencher;
+
+fn bench_mesh(b: &mut Bencher, n: u8, label: &str) {
+    let mk = || {
+        let sys = NocSystem::new(NocConfig::mesh(n, n));
+        let tiles = sys.topo.num_tiles;
+        let profiles: Vec<TileTraffic> = (0..tiles)
+            .map(|i| TileTraffic {
+                core: Some(GenCfg {
+                    pattern: Pattern::UniformTiles,
+                    num_txns: u64::MAX,
+                    seed: i as u64,
+                    ..GenCfg::narrow_probe(NodeId(0), 1)
+                }),
+                dma: Some(GenCfg {
+                    pattern: Pattern::UniformTiles,
+                    num_txns: u64::MAX,
+                    seed: 100 + i as u64,
+                    ..GenCfg::dma_burst(NodeId(0), 1, false)
+                }),
+            })
+            .collect();
+        TiledWorkload::new(sys, profiles)
+    };
+    const CYCLES: u64 = 20_000;
+    let mut flits = 0u64;
+    let mut w = mk();
+    b.bench(&format!("{label}: {CYCLES} cycles saturated"), Some(CYCLES), || {
+        w = mk();
+        for _ in 0..CYCLES {
+            w.step();
+        }
+        flits = (0..w.sys.nets.len())
+            .map(|i| w.sys.router_flit_hops(i))
+            .sum();
+    });
+    let per_cycle = flits as f64 / CYCLES as f64;
+    println!("    ({flits} flit-hops total, {per_cycle:.1} per cycle)");
+}
+
+fn main() {
+    println!("== bench_e2e: whole-system simulation throughput ==");
+    let mut b = Bencher::new(1, 5);
+    bench_mesh(&mut b, 2, "2x2 mesh");
+    bench_mesh(&mut b, 4, "4x4 mesh");
+    bench_mesh(&mut b, 8, "8x8 mesh");
+}

@@ -1,0 +1,58 @@
+//! End-to-end benches regenerating the paper's Fig. 5a and Fig. 5b data
+//! (both link configurations, both directions), timing each point.
+//!
+//! `BENCH_SAMPLES=3 cargo bench --bench bench_fig5` for a quick pass.
+
+use floonoc::coordinator::{fig5a, fig5b};
+use floonoc::noc::LinkMode;
+use floonoc::report;
+use floonoc::util::bench::Bencher;
+
+fn main() {
+    println!("== bench_fig5: regenerate Fig. 5a / 5b ==");
+    let mut b = Bencher::new(0, 3);
+
+    let mut out_5a = Vec::new();
+    b.bench("fig5a sweep (both modes, unidir)", None, || {
+        out_5a.clear();
+        for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
+            out_5a.extend(fig5a(mode, false, &[0, 1, 2, 4, 8]));
+        }
+    });
+    print!("{}", report::fig5a_table(&out_5a));
+
+    let mut out_5a_bidir = Vec::new();
+    b.bench("fig5a sweep (both modes, bidir)", None, || {
+        out_5a_bidir.clear();
+        for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
+            out_5a_bidir.extend(fig5a(mode, true, &[0, 1, 2, 4, 8]));
+        }
+    });
+    print!("{}", report::fig5a_table(&out_5a_bidir));
+
+    let mut out_5b = Vec::new();
+    b.bench("fig5b sweep (both modes)", None, || {
+        out_5b.clear();
+        for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
+            out_5b.extend(fig5b(mode, false, &[0, 2, 4, 8, 16, 32]));
+        }
+    });
+    print!("{}", report::fig5b_table(&out_5b));
+
+    // Shape assertions (the paper's claims, as a regression gate).
+    let nw_max = out_5a
+        .iter()
+        .filter(|r| r.mode == LinkMode::NarrowWide)
+        .map(|r| r.slowdown)
+        .fold(0.0f64, f64::max);
+    let wo_max = out_5a
+        .iter()
+        .filter(|r| r.mode == LinkMode::WideOnly)
+        .map(|r| r.slowdown)
+        .fold(0.0f64, f64::max);
+    println!(
+        "\nfig5a: narrow-wide max slowdown {nw_max:.2}x vs wide-only {wo_max:.2}x \
+         (paper: flat vs up to 5x)"
+    );
+    assert!(nw_max < wo_max, "narrow-wide must dominate");
+}

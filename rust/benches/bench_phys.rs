@@ -1,0 +1,64 @@
+//! Benches regenerating the physical-model results: Table I, Fig. 6a,
+//! Fig. 6b, §V wires, §VI-B bandwidth, Table II — plus their evaluation
+//! cost (all analytical, so these also serve as regression checks).
+
+use floonoc::cluster::TileSpec;
+use floonoc::coordinator::fig6b_power;
+use floonoc::flit::NocLayout;
+use floonoc::phys::{AreaModel, BandwidthModel, ChannelGeometry};
+use floonoc::report;
+use floonoc::util::bench::Bencher;
+
+fn main() {
+    println!("== bench_phys: Table I / Fig. 6a / Fig. 6b / §V / §VI-B ==\n");
+    let layout = NocLayout::default();
+    print!("{}", report::table_one(&layout));
+    println!();
+    print!("{}", report::table_two());
+    println!();
+
+    let area = AreaModel::default().tile(&TileSpec::default(), &layout, 2);
+    println!(
+        "Fig. 6a: tile {:.2} MGE, NoC {:.0} kGE ({:.1} %) \
+         [paper: ~5 MGE, ~500 kGE, 10 %]",
+        area.tile_total() / 1e6,
+        area.noc_total() / 1e3,
+        area.noc_fraction() * 100.0
+    );
+
+    let (power, pjb) = fig6b_power();
+    println!(
+        "Fig. 6b: tile {:.1} mW, NoC {:.1} % | {:.2} pJ/B/hop \
+         [paper: 139 mW, 7 %, 0.19 pJ/B/hop]",
+        power.total_mw,
+        power.noc_fraction * 100.0,
+        pjb
+    );
+
+    let geom = ChannelGeometry::default();
+    println!(
+        "§V wires: {} per duplex channel, {:.0} um slice, {} island sets \
+         [paper: ~1600, 120 um, 3]",
+        geom.duplex_wires(&layout),
+        geom.channel_width_um(&layout),
+        geom.island_sets()
+    );
+
+    let bw = BandwidthModel::default();
+    println!(
+        "§VI-B: {:.0} Gbps/link, {:.2} Tbps duplex, 7x7 boundary {:.1} TB/s \
+         [paper: 629, 1.26, 4.4]",
+        bw.wide_link_gbps(),
+        bw.wide_duplex_tbps(),
+        bw.mesh_boundary_tbs(7)
+    );
+
+    println!("\ntimings:");
+    let mut b = Bencher::default();
+    b.bench("full area model evaluation", Some(1), || {
+        std::hint::black_box(AreaModel::default().tile(&TileSpec::default(), &layout, 2));
+    });
+    b.bench("fig6b power experiment (incl. simulation)", Some(1), || {
+        std::hint::black_box(fig6b_power());
+    });
+}

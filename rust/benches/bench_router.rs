@@ -1,0 +1,99 @@
+//! Router micro-benchmarks: per-cycle stepping cost of the switch — the
+//! simulator's innermost hot path (L3 perf target: >10 M router-flit
+//! events/s).
+
+use floonoc::axi::{AxReq, Burst};
+use floonoc::flit::{FlooFlit, Header, NodeId, Payload};
+use floonoc::router::{Router, RouterCfg, RouteTable};
+use floonoc::sim::Link;
+use floonoc::util::bench::Bencher;
+
+fn flit(dst: u16) -> FlooFlit {
+    FlooFlit::new(
+        Header {
+            dst: NodeId(dst),
+            src: NodeId(0),
+            rob_idx: 0,
+            rob_req: true,
+            atomic: false,
+            last: true,
+        },
+        Payload::NarrowAr(AxReq {
+            id: 0,
+            addr: 0,
+            len: 0,
+            size: 3,
+            burst: Burst::Incr,
+            atop: false,
+        }),
+        0,
+    )
+}
+
+/// 5-port router with all ports looped: saturated crossbar stepping.
+fn saturated_router_cycle(b: &mut Bencher) {
+    let ports = 5;
+    let mut links: Vec<Link<FlooFlit>> = (0..2 * ports).map(|_| Link::new(4)).collect();
+    let mut table = vec![0u8; ports];
+    for (i, t) in table.iter_mut().enumerate() {
+        *t = i as u8;
+    }
+    let mut r = Router::new(
+        RouterCfg {
+            ports,
+            in_buf_depth: 4,
+        },
+        RouteTable::new(table),
+    );
+    for p in 0..ports {
+        r.in_links[p] = Some(p);
+        r.out_links[p] = Some(ports + p);
+    }
+    const CYCLES: u64 = 100_000;
+    b.bench("router 5x5 saturated step", Some(CYCLES * 4), || {
+        for _ in 0..CYCLES {
+            // Keep inputs loaded with flits to rotating outputs (no
+            // loopback: input i sends to (i+1) % ports).
+            for p in 0..ports {
+                if links[p].can_offer() {
+                    links[p].offer(flit(((p + 1) % ports) as u16));
+                }
+            }
+            for l in links.iter_mut() {
+                l.deliver();
+            }
+            r.step(&mut links);
+            // Drain outputs.
+            for p in 0..ports {
+                links[ports + p].pop();
+            }
+        }
+    });
+}
+
+/// Idle router stepping (common case in large meshes).
+fn idle_router_cycle(b: &mut Bencher) {
+    let ports = 5;
+    let mut links: Vec<Link<FlooFlit>> = (0..2 * ports).map(|_| Link::new(4)).collect();
+    let mut r = Router::new(RouterCfg::default(), RouteTable::new(vec![0; ports]));
+    for p in 0..ports {
+        r.in_links[p] = Some(p);
+        r.out_links[p] = Some(ports + p);
+    }
+    const CYCLES: u64 = 1_000_000;
+    b.bench("router 5x5 idle step", Some(CYCLES), || {
+        for _ in 0..CYCLES {
+            for l in links.iter_mut() {
+                l.deliver();
+            }
+            r.step(&mut links);
+        }
+    });
+}
+
+fn main() {
+    println!("== bench_router (L3 hot path) ==");
+    let mut b = Bencher::default();
+    saturated_router_cycle(&mut b);
+    idle_router_cycle(&mut b);
+}

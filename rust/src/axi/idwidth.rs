@@ -1,0 +1,84 @@
+//! ID-width growth arithmetic for AXI4 multi-hop interconnects.
+//!
+//! Background for the paper's scalability argument (§II-A, §VII): when AXI4
+//! itself is used as the link-level protocol, every N:1 multiplexer stage
+//! must widen the ID by log2(N) bits to keep transactions unique, and every
+//! crossbar must track outstanding transactions *per ID*. This module
+//! quantifies that growth and the resulting tracker state so the
+//! AXI4-matrix baseline ([`crate::baseline::axi_matrix`]) can report the
+//! exponential complexity the paper cites from Kurth et al. [1].
+
+/// ID width after crossing `hops` crossbar stages, each muxing `initiators`
+/// masters onto one slave port, starting from `base_bits` at the endpoint.
+pub fn id_width_after_hops(base_bits: u32, initiators: u32, hops: u32) -> u32 {
+    let grow = (initiators.max(2) as f64).log2().ceil() as u32;
+    base_bits + grow * hops
+}
+
+/// Number of distinct IDs a tracker at the given stage must handle.
+pub fn id_space(bits: u32) -> u128 {
+    if bits >= 127 {
+        u128::MAX
+    } else {
+        1u128 << bits
+    }
+}
+
+/// Tracker state (in counter entries) for a crossbar that must support
+/// `outstanding` transactions per ID over a `bits`-wide ID space. This is
+/// the structure whose growth "increases exponentially in complexity" [1].
+pub fn tracker_entries(bits: u32, outstanding: u32) -> u128 {
+    id_space(bits).saturating_mul(outstanding as u128)
+}
+
+/// Approximate gate cost (GE) of an ID-tracking table: one small counter
+/// (~12 GE including decode share) per entry, saturating to keep the model
+/// defined in the absurd regimes the growth reaches.
+pub fn tracker_gates(bits: u32, outstanding: u32) -> u128 {
+    tracker_entries(bits, outstanding).saturating_mul(12)
+}
+
+/// The same cost for an endpoint-reordering NoC (FlooNoC): the routers keep
+/// **no** per-ID state; only the NI's reorder table scales, and only with
+/// the number of *endpoint* IDs, independent of hop count.
+pub fn floonoc_ni_table_entries(endpoint_id_bits: u32, outstanding: u32) -> u128 {
+    id_space(endpoint_id_bits).saturating_mul(outstanding as u128)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_grows_linearly_with_hops() {
+        // 4-bit endpoint IDs, 4-initiator crossbars.
+        assert_eq!(id_width_after_hops(4, 4, 0), 4);
+        assert_eq!(id_width_after_hops(4, 4, 1), 6);
+        assert_eq!(id_width_after_hops(4, 4, 7), 18);
+    }
+
+    #[test]
+    fn tracker_state_explodes_exponentially() {
+        let w0 = id_width_after_hops(4, 4, 0);
+        let w7 = id_width_after_hops(4, 4, 7);
+        let t0 = tracker_entries(w0, 4);
+        let t7 = tracker_entries(w7, 4);
+        // 14 extra bits -> 2^14 x more state.
+        assert_eq!(t7 / t0, 1 << 14);
+    }
+
+    #[test]
+    fn floonoc_state_independent_of_hops() {
+        let ni = floonoc_ni_table_entries(4, 4);
+        assert_eq!(ni, 64);
+        // Even at 7 hops the NI table stays the same size, while the matrix
+        // tracker grew by 2^14.
+        assert!(tracker_entries(id_width_after_hops(4, 4, 7), 4) > 1000 * ni);
+    }
+
+    #[test]
+    fn id_space_saturates() {
+        assert_eq!(id_space(2), 4);
+        assert_eq!(id_space(200), u128::MAX);
+    }
+}

@@ -1,0 +1,15 @@
+//! AXI4 transaction model.
+//!
+//! Models the five AXI4 channels (AW, W, B, AR, R) at transaction/beat
+//! granularity: IDs, burst types and lengths, the 4 kB boundary rule, and
+//! the protocol's per-ID ordering requirements. This is the substrate the
+//! paper's NI must remain compliant with; [`ordering::OrderingMonitor`] is
+//! the executable statement of those rules and is attached to every
+//! endpoint in the integration tests.
+
+pub mod types;
+pub mod ordering;
+pub mod idwidth;
+
+pub use types::*;
+pub use ordering::OrderingMonitor;

@@ -1,0 +1,244 @@
+//! AXI4 channel payload types and burst arithmetic.
+
+/// AXI4 transaction identifier. The paper's tile exposes 4-bit narrow and
+/// wide IDs at the NI boundary; we keep `u16` for headroom in sweeps.
+pub type AxiId = u16;
+
+/// Byte address (paper: ADDRWIDTH = 48).
+pub type Addr = u64;
+
+/// Burst type (AxBURST).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Burst {
+    /// Same address every beat (FIFO-style peripherals).
+    Fixed,
+    /// Incrementing addresses — the common case for memory.
+    Incr,
+    /// Wrapping bursts (cache-line fills).
+    Wrap,
+}
+
+/// Response code (xRESP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resp {
+    Okay,
+    ExOkay,
+    SlvErr,
+    DecErr,
+}
+
+/// Read/write request descriptor (AR and AW carry the same fields).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AxReq {
+    pub id: AxiId,
+    pub addr: Addr,
+    /// AxLEN: beats = len + 1, 0..=255 (INCR).
+    pub len: u8,
+    /// AxSIZE: bytes per beat = 1 << size.
+    pub size: u8,
+    pub burst: Burst,
+    /// Atomic operation marker (AXI5-style ATOP as used by the PULP
+    /// ecosystem; the paper's NI stores atomics in separate meta buffers).
+    pub atop: bool,
+}
+
+impl AxReq {
+    /// Number of data beats in the burst.
+    #[inline]
+    pub fn beats(&self) -> u32 {
+        self.len as u32 + 1
+    }
+
+    /// Bytes per beat.
+    #[inline]
+    pub fn beat_bytes(&self) -> u32 {
+        1 << self.size
+    }
+
+    /// Total payload bytes of the burst.
+    #[inline]
+    pub fn total_bytes(&self) -> u32 {
+        self.beats() * self.beat_bytes()
+    }
+
+    /// Address of beat `i` per the AXI4 burst equations.
+    pub fn beat_addr(&self, i: u32) -> Addr {
+        let nb = self.beat_bytes() as u64;
+        match self.burst {
+            Burst::Fixed => self.addr,
+            Burst::Incr => self.addr + nb * i as u64,
+            Burst::Wrap => {
+                let container = nb * self.beats() as u64;
+                let base = self.addr & !(container - 1);
+                base + ((self.addr - base) + nb * i as u64) % container
+            }
+        }
+    }
+
+    /// AXI4 forbids INCR bursts from crossing a 4 kB boundary.
+    pub fn crosses_4k(&self) -> bool {
+        match self.burst {
+            Burst::Incr => {
+                let last = self.addr + (self.total_bytes() as u64 - 1);
+                (self.addr >> 12) != (last >> 12)
+            }
+            _ => false,
+        }
+    }
+
+    /// Protocol-legality check used by generators and the ordering monitor.
+    pub fn is_legal(&self, data_bytes: u32) -> bool {
+        if self.beat_bytes() > data_bytes {
+            return false; // AxSIZE must not exceed the bus width
+        }
+        if self.crosses_4k() {
+            return false;
+        }
+        match self.burst {
+            Burst::Wrap => {
+                // WRAP: length must be 2, 4, 8 or 16 beats and the address
+                // aligned to the beat size.
+                matches!(self.beats(), 2 | 4 | 8 | 16)
+                    && self.addr % self.beat_bytes() as u64 == 0
+            }
+            Burst::Fixed => self.beats() <= 16,
+            Burst::Incr => true,
+        }
+    }
+}
+
+/// Write-data beat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WBeat {
+    /// Beat index within the burst (modelling WDATA; the simulator tracks
+    /// payload identity, not bit patterns, except in the compute bridge).
+    pub beat: u32,
+    pub last: bool,
+}
+
+/// Read-data beat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RBeat {
+    pub id: AxiId,
+    pub beat: u32,
+    pub last: bool,
+    pub resp: Resp,
+}
+
+/// Write response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BResp {
+    pub id: AxiId,
+    pub resp: Resp,
+}
+
+/// A complete transaction as observed by generators / scoreboards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    Read,
+    Write,
+}
+
+/// Unique transaction tag used by scoreboards (not an AXI field).
+pub type TxnTag = u64;
+
+/// A transaction in flight, as tracked by test scoreboards and the
+/// latency statistics.
+#[derive(Debug, Clone)]
+pub struct Txn {
+    pub tag: TxnTag,
+    pub dir: Dir,
+    pub req: AxReq,
+    pub issued_at: u64,
+    pub completed_at: Option<u64>,
+}
+
+impl Txn {
+    pub fn latency(&self) -> Option<u64> {
+        self.completed_at.map(|c| c - self.issued_at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(addr: Addr, len: u8, size: u8, burst: Burst) -> AxReq {
+        AxReq {
+            id: 0,
+            addr,
+            len,
+            size,
+            burst,
+            atop: false,
+        }
+    }
+
+    #[test]
+    fn incr_beat_addresses() {
+        let r = req(0x1000, 3, 3, Burst::Incr); // 4 beats x 8B
+        assert_eq!(r.beats(), 4);
+        assert_eq!(r.beat_addr(0), 0x1000);
+        assert_eq!(r.beat_addr(3), 0x1018);
+        assert_eq!(r.total_bytes(), 32);
+    }
+
+    #[test]
+    fn wrap_beat_addresses() {
+        // 4-beat x 4B wrap starting at offset 8 of a 16B container.
+        let r = req(0x108, 3, 2, Burst::Wrap);
+        assert_eq!(r.beat_addr(0), 0x108);
+        assert_eq!(r.beat_addr(1), 0x10C);
+        assert_eq!(r.beat_addr(2), 0x100); // wrapped
+        assert_eq!(r.beat_addr(3), 0x104);
+    }
+
+    #[test]
+    fn fixed_beat_addresses() {
+        let r = req(0x200, 7, 2, Burst::Fixed);
+        for i in 0..8 {
+            assert_eq!(r.beat_addr(i), 0x200);
+        }
+    }
+
+    #[test]
+    fn four_k_boundary() {
+        let ok = req(0xF80, 15, 3, Burst::Incr); // ends at 0xFFF
+        assert!(!ok.crosses_4k());
+        assert!(ok.is_legal(8));
+        let bad = req(0xF88, 15, 3, Burst::Incr); // crosses into next page
+        assert!(bad.crosses_4k());
+        assert!(!bad.is_legal(8));
+    }
+
+    #[test]
+    fn wrap_legality() {
+        assert!(req(0x100, 3, 2, Burst::Wrap).is_legal(8)); // 4 beats ok
+        assert!(!req(0x100, 2, 2, Burst::Wrap).is_legal(8)); // 3 beats bad
+        assert!(!req(0x101, 3, 2, Burst::Wrap).is_legal(8)); // misaligned
+    }
+
+    #[test]
+    fn size_exceeding_bus_illegal() {
+        assert!(!req(0, 0, 4, Burst::Incr).is_legal(8)); // 16B beat on 8B bus
+        assert!(req(0, 0, 3, Burst::Incr).is_legal(8));
+    }
+
+    #[test]
+    fn fixed_len_cap() {
+        assert!(req(0, 15, 2, Burst::Fixed).is_legal(8));
+        assert!(!req(0, 16, 2, Burst::Fixed).is_legal(8));
+    }
+
+    #[test]
+    fn txn_latency() {
+        let t = Txn {
+            tag: 1,
+            dir: Dir::Read,
+            req: req(0, 0, 3, Burst::Incr),
+            issued_at: 10,
+            completed_at: Some(28),
+        };
+        assert_eq!(t.latency(), Some(18));
+    }
+}

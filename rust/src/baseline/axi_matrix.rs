@@ -1,0 +1,145 @@
+//! AXI4-matrix baseline: multi-hop interconnect built from AXI4 crossbars.
+//!
+//! Models the scalability cost structure of using AXI4 as the link-level
+//! protocol (paper §II-A, §VII): every crossbar stage widens IDs by
+//! log2(initiators) bits, and every stage must track outstanding
+//! transactions *per ID value* to enforce same-ID ordering. The per-stage
+//! tracker state therefore grows exponentially with hop count [1].
+//!
+//! The model also produces the latency/area consequences used in the
+//! Table-II comparison row and the scalability ablation bench.
+
+use crate::axi::idwidth;
+use crate::util::json::Json;
+
+/// One mesh deployment implemented as cascaded AXI4 crossbars.
+#[derive(Debug, Clone)]
+pub struct AxiMatrixModel {
+    /// Endpoint ID bits (paper tile: 4).
+    pub base_id_bits: u32,
+    /// Initiator ports muxed per crossbar stage (5-port mesh node).
+    pub initiators_per_stage: u32,
+    /// Outstanding transactions supported per ID.
+    pub outstanding_per_id: u32,
+    /// Crossbar traversal latency in cycles (arbitration + mux).
+    pub stage_latency: u64,
+}
+
+impl Default for AxiMatrixModel {
+    fn default() -> Self {
+        AxiMatrixModel {
+            base_id_bits: 4,
+            initiators_per_stage: 5,
+            outstanding_per_id: 4,
+            stage_latency: 2,
+        }
+    }
+}
+
+/// Scaling record for one hop count.
+#[derive(Debug, Clone)]
+pub struct MatrixScaling {
+    pub hops: u32,
+    pub id_bits: u32,
+    pub tracker_entries: u128,
+    pub tracker_gates: u128,
+    pub latency_cycles: u64,
+}
+
+impl MatrixScaling {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hops", Json::Num(self.hops as f64)),
+            ("id_bits", Json::Num(self.id_bits as f64)),
+            (
+                "tracker_entries",
+                Json::Num(self.tracker_entries.min(1 << 52) as f64),
+            ),
+            (
+                "tracker_kge",
+                Json::Num((self.tracker_gates.min(1 << 52) as f64) / 1e3),
+            ),
+            ("latency_cycles", Json::Num(self.latency_cycles as f64)),
+        ])
+    }
+}
+
+impl AxiMatrixModel {
+    /// Cost of supporting transactions across `hops` crossbar stages.
+    pub fn at_hops(&self, hops: u32) -> MatrixScaling {
+        let id_bits =
+            idwidth::id_width_after_hops(self.base_id_bits, self.initiators_per_stage, hops);
+        MatrixScaling {
+            hops,
+            id_bits,
+            tracker_entries: idwidth::tracker_entries(id_bits, self.outstanding_per_id),
+            tracker_gates: idwidth::tracker_gates(id_bits, self.outstanding_per_id),
+            latency_cycles: self.stage_latency * hops as u64,
+        }
+    }
+
+    /// Sweep hop counts (the scalability ablation).
+    pub fn sweep(&self, max_hops: u32) -> Vec<MatrixScaling> {
+        (0..=max_hops).map(|h| self.at_hops(h)).collect()
+    }
+
+    /// The FlooNoC equivalent: NI reorder-table state is independent of
+    /// hop count (only endpoint IDs matter).
+    pub fn floonoc_ni_entries(&self) -> u128 {
+        idwidth::floonoc_ni_table_entries(self.base_id_bits, self.outstanding_per_id)
+    }
+
+    /// Hop count at which the per-stage tracker alone exceeds the paper's
+    /// *entire* NoC area budget (500 kGE) — the scalability wall.
+    pub fn scalability_wall_hops(&self, budget_ge: u128) -> u32 {
+        for h in 0..64 {
+            if self.at_hops(h).tracker_gates > budget_ge {
+                return h;
+            }
+        }
+        64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_growth_is_exponential() {
+        let m = AxiMatrixModel::default();
+        let s = m.sweep(6);
+        // Each hop adds ceil(log2 5) = 3 ID bits -> 8x tracker state.
+        for w in s.windows(2) {
+            assert_eq!(w[1].id_bits - w[0].id_bits, 3);
+            assert_eq!(w[1].tracker_entries / w[0].tracker_entries, 8);
+        }
+    }
+
+    #[test]
+    fn floonoc_state_is_flat() {
+        let m = AxiMatrixModel::default();
+        let ni = m.floonoc_ni_entries();
+        assert_eq!(ni, 64); // 16 IDs x 4 outstanding
+        // At 7 hops the matrix tracker dwarfs the NI by >10^5.
+        assert!(m.at_hops(7).tracker_entries > ni * 100_000);
+    }
+
+    #[test]
+    fn scalability_wall_is_near() {
+        let m = AxiMatrixModel::default();
+        // 500 kGE NoC budget: the matrix blows through it within a few
+        // hops — the paper's scalability argument, quantified.
+        let wall = m.scalability_wall_hops(500_000);
+        assert!(
+            (2..=5).contains(&wall),
+            "tracker exceeds the whole NoC budget within a few hops, got {wall}"
+        );
+    }
+
+    #[test]
+    fn latency_scales_linearly() {
+        let m = AxiMatrixModel::default();
+        assert_eq!(m.at_hops(4).latency_cycles, 8);
+    }
+}

@@ -1,0 +1,14 @@
+//! Baselines the paper compares against.
+//!
+//! * **Wide-only links** (Fig. 5): built into the simulator as
+//!   [`crate::noc::LinkMode::WideOnly`] — same routers/NIs, all payload
+//!   classes multiplexed onto one wide request + one wide response
+//!   network.
+//! * **AXI4 matrix interconnect** ([`axi_matrix`]): the AXI4-XP-style
+//!   alternative (Kurth et al. [1], Table II) where AXI4 itself is the
+//!   link-level protocol — quantifying the ID-width growth and
+//!   ID-tracking state that motivates FlooNoC's endpoint reordering.
+
+pub mod axi_matrix;
+
+pub use axi_matrix::{AxiMatrixModel, MatrixScaling};

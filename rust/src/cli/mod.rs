@@ -1,0 +1,139 @@
+//! Command-line interface (hand-rolled: `clap` is not in the offline
+//! crate snapshot).
+//!
+//! ```text
+//! repro info                          system summary (layout, area, bw)
+//! repro reproduce <exp> [--bidir]     regenerate a paper table/figure:
+//!        tab1 | tab2 | fig5a | fig5b | fig6a | fig6b |
+//!        latency | bandwidth | wires | scaling | all
+//! repro simulate [--config f] [--cycles n] [--txns n] run uniform traffic
+//! repro sweep <rob|buffers|burst|mesh|output-reg>     ablations
+//! repro dse [--mesh n] [--artifacts dir]              analytical model vs sim
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context};
+
+/// Parsed command line: subcommand, positional args, `--key value` /
+/// `--flag` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an argv-style iterator (excluding the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> crate::Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        let Some(cmd) = it.next() else {
+            bail!("no command given (try 'repro help')");
+        };
+        args.command = cmd;
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // `--key value` when the next token is not another option;
+                // bare `--flag` otherwise.
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let val = it.next().unwrap();
+                        args.options.insert(key.to_string(), val);
+                    }
+                    _ => args.flags.push(key.to_string()),
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> crate::Result<u64> {
+        match self.opt(name) {
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects an integer, got '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn pos(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(String::as_str)
+    }
+}
+
+pub const HELP: &str = "\
+FlooNoC reproduction CLI
+
+USAGE: repro <command> [args]
+
+COMMANDS:
+  info                         layout, area, bandwidth and timing summary
+  reproduce <experiment>       regenerate a paper table/figure:
+                               tab1 tab2 fig5a fig5b fig6a fig6b latency
+                               bandwidth wires scaling all
+                               options: --bidir, --levels a,b,c
+  simulate                     run uniform-random traffic on a mesh
+                               options: --config <file.json>, --txns <n>,
+                               --mesh <n>, --wide-only
+  sweep <ablation>             rob | buffers | burst | mesh | output-reg
+  dse                          analytical link-load model (PJRT artifact)
+                               cross-validated against the simulator;
+                               options: --mesh <n>, --artifacts <dir>
+  help                         this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_positionals() {
+        let a = parse("reproduce fig5a");
+        assert_eq!(a.command, "reproduce");
+        assert_eq!(a.pos(0), Some("fig5a"));
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = parse("simulate --mesh 4 --wide-only --txns 100");
+        assert_eq!(a.opt("mesh"), Some("4"));
+        assert!(a.flag("wide-only"));
+        assert_eq!(a.opt_u64("txns", 0).unwrap(), 100);
+        assert_eq!(a.opt_u64("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse("reproduce fig5a --bidir --levels 0,4,8");
+        assert!(a.flag("bidir"));
+        assert_eq!(a.opt("levels"), Some("0,4,8"));
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Args::parse(Vec::<String>::new()).is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse("simulate --txns many");
+        assert!(a.opt_u64("txns", 0).is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! Compute-tile model: the Snitch cluster of the paper's case study (§IV).
+//!
+//! The paper integrates the NoC into an L1-shared compute cluster with
+//! 8 RISC-V worker cores (with FPUs), one DMA-control core, a 128 kB SPM
+//! and an 8 kB shared instruction cache. For NoC evaluation only the
+//! *traffic behaviour* of that cluster matters, so [`ComputeTile`] models:
+//!
+//! * the **DMA engine** — a wide-bus generator issuing long INCR bursts
+//!   (512-bit beats), programmed by one core;
+//! * the **cores** — a narrow-bus generator issuing single-word remote
+//!   loads/stores (synchronization, configuration);
+//! * the **SPM** — the target memory already attached to the tile's NI
+//!   ([`crate::ni::Target`]), remotely accessible from both buses.
+//!
+//! The zero-load calibration (paper §VI-A: 18-cycle adjacent-tile round
+//! trip = 8 router + 1 NI + 9 cluster/memory cycles) lives in the SPM
+//! latency constant — see `TargetCfg::spm_default`.
+
+use crate::flit::{BusKind, NodeId};
+use crate::noc::NocSystem;
+use crate::traffic::{GenCfg, Generator};
+
+/// Static description of the paper's tile (used by the physical model and
+/// the reports; the traffic behaviour lives in the generators).
+#[derive(Debug, Clone)]
+pub struct TileSpec {
+    pub worker_cores: u32,
+    pub dma_cores: u32,
+    pub spm_kib: u32,
+    pub icache_kib: u32,
+    pub narrow_data_width: u32,
+    pub wide_data_width: u32,
+}
+
+impl Default for TileSpec {
+    fn default() -> Self {
+        TileSpec {
+            worker_cores: 8,
+            dma_cores: 1,
+            spm_kib: 128,
+            icache_kib: 8,
+            narrow_data_width: 64,
+            wide_data_width: 512,
+        }
+    }
+}
+
+/// Traffic profile of one tile: what its cores and DMA are doing.
+#[derive(Debug, Clone)]
+pub struct TileTraffic {
+    /// Narrow (core) workload; `None` = cores idle.
+    pub core: Option<GenCfg>,
+    /// Wide (DMA) workload; `None` = DMA idle.
+    pub dma: Option<GenCfg>,
+}
+
+impl TileTraffic {
+    pub fn idle() -> Self {
+        TileTraffic {
+            core: None,
+            dma: None,
+        }
+    }
+
+    /// The paper's energy experiment (§VI-D): a single 1 kB DMA transfer,
+    /// all cores idle except the DMA programmer.
+    pub fn single_dma_1kib(dst: NodeId) -> Self {
+        TileTraffic {
+            core: None,
+            dma: Some(GenCfg::dma_burst(dst, 1, true)),
+        }
+    }
+}
+
+/// A live compute tile: generators bound to a tile's initiators.
+#[derive(Debug)]
+pub struct ComputeTile {
+    pub node: NodeId,
+    pub spec: TileSpec,
+    pub core_gen: Option<Generator>,
+    pub dma_gen: Option<Generator>,
+}
+
+impl ComputeTile {
+    pub fn new(node: NodeId, traffic: TileTraffic) -> Self {
+        let mk = |cfg: Option<GenCfg>, bus: BusKind| {
+            cfg.map(|mut c| {
+                debug_assert_eq!(c.bus, bus);
+                // Distinct seed per tile for decorrelated streams.
+                c.seed ^= 0x9E37 + node.0 as u64 * 0x1_0001;
+                Generator::new(c, node)
+            })
+        };
+        ComputeTile {
+            node,
+            spec: TileSpec::default(),
+            core_gen: mk(traffic.core, BusKind::Narrow),
+            dma_gen: mk(traffic.dma, BusKind::Wide),
+        }
+    }
+
+    /// Step both generators against the system.
+    pub fn step(&mut self, sys: &mut NocSystem) {
+        if let Some(g) = self.core_gen.as_mut() {
+            sys.step_generator(g);
+        }
+        if let Some(g) = self.dma_gen.as_mut() {
+            sys.step_generator(g);
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.core_gen.as_ref().map(Generator::done).unwrap_or(true)
+            && self.dma_gen.as_ref().map(Generator::done).unwrap_or(true)
+    }
+
+    /// Protocol compliance across both buses.
+    pub fn protocol_ok(&self) -> bool {
+        self.core_gen
+            .as_ref()
+            .map(|g| g.monitor.ok())
+            .unwrap_or(true)
+            && self
+                .dma_gen
+                .as_ref()
+                .map(|g| g.monitor.ok())
+                .unwrap_or(true)
+    }
+}
+
+/// A whole mesh of tiles plus its traffic, stepped as one workload.
+/// This is the harness the Fig. 5 experiments and examples drive.
+pub struct TiledWorkload {
+    pub sys: NocSystem,
+    pub tiles: Vec<ComputeTile>,
+}
+
+impl TiledWorkload {
+    /// Build from a system and per-tile traffic profiles (index = tile id).
+    pub fn new(sys: NocSystem, profiles: Vec<TileTraffic>) -> Self {
+        assert_eq!(profiles.len(), sys.topo.num_tiles);
+        let tiles = profiles
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| ComputeTile::new(NodeId(i as u16), p))
+            .collect();
+        TiledWorkload { sys, tiles }
+    }
+
+    /// One global cycle: NoC step, then all tile generators.
+    pub fn step(&mut self) {
+        self.sys.step();
+        for t in &mut self.tiles {
+            t.step(&mut self.sys);
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.tiles.iter().all(ComputeTile::done)
+    }
+
+    /// Run until all generators complete and the network drains, or
+    /// `max_cycles` pass. Returns true on completion.
+    pub fn run_to_completion(&mut self, max_cycles: u64) -> bool {
+        for _ in 0..max_cycles {
+            if self.done() && self.sys.is_idle() {
+                return true;
+            }
+            self.step();
+        }
+        self.done() && self.sys.is_idle()
+    }
+
+    /// All tiles' protocol monitors are clean.
+    pub fn protocol_ok(&self) -> bool {
+        self.tiles.iter().all(ComputeTile::protocol_ok)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::NocConfig;
+    use crate::traffic::Pattern;
+
+    #[test]
+    fn single_dma_tile_runs() {
+        let sys = NocSystem::new(NocConfig::mesh(2, 1));
+        let profiles = vec![
+            TileTraffic::single_dma_1kib(NodeId(1)),
+            TileTraffic::idle(),
+        ];
+        let mut w = TiledWorkload::new(sys, profiles);
+        assert!(w.run_to_completion(2_000));
+        assert!(w.protocol_ok());
+        assert_eq!(w.sys.nodes[1].target.stats.writes_served, 1);
+    }
+
+    #[test]
+    fn all_tiles_active_mesh() {
+        // 2×2 mesh, every tile DMA-reads from its +x neighbour while its
+        // cores probe the same neighbour — heterogeneous traffic on every
+        // link, protocol-checked.
+        let sys = NocSystem::new(NocConfig::mesh(2, 2));
+        let profiles = (0..4)
+            .map(|i| {
+                let dst = NodeId(((i as u16) / 2) * 2 + ((i as u16) + 1) % 2);
+                TileTraffic {
+                    core: Some(GenCfg::narrow_probe(dst, 10)),
+                    dma: Some(GenCfg::dma_burst(dst, 4, false)),
+                }
+            })
+            .collect();
+        let mut w = TiledWorkload::new(sys, profiles);
+        assert!(w.run_to_completion(20_000));
+        assert!(w.protocol_ok());
+        for t in &w.tiles {
+            assert_eq!(t.core_gen.as_ref().unwrap().completed, 10);
+            assert_eq!(t.dma_gen.as_ref().unwrap().completed, 4);
+        }
+    }
+
+    #[test]
+    fn uniform_random_all_to_all() {
+        let sys = NocSystem::new(NocConfig::mesh(3, 3));
+        let profiles = (0..9)
+            .map(|_| TileTraffic {
+                core: Some(GenCfg {
+                    pattern: Pattern::UniformTiles,
+                    ..GenCfg::narrow_probe(NodeId(0), 20)
+                }),
+                dma: None,
+            })
+            .collect();
+        let mut w = TiledWorkload::new(sys, profiles);
+        assert!(w.run_to_completion(50_000));
+        assert!(w.protocol_ok());
+    }
+
+    #[test]
+    fn tile_spec_defaults_match_paper() {
+        let s = TileSpec::default();
+        assert_eq!(s.worker_cores, 8);
+        assert_eq!(s.dma_cores, 1);
+        assert_eq!(s.spm_kib, 128);
+        assert_eq!(s.icache_kib, 8);
+        assert_eq!((s.narrow_data_width, s.wide_data_width), (64, 512));
+    }
+}

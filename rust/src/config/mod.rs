@@ -1,0 +1,215 @@
+//! JSON-backed configuration for the simulator and experiments.
+//!
+//! A config file selects the mesh geometry, link mode, NI/ROB sizing and
+//! memory latencies; every field is optional and defaults to the paper's
+//! tile configuration. Example:
+//!
+//! ```json
+//! {
+//!   "mesh": {"width": 4, "height": 4, "mem_edge": "west"},
+//!   "mode": "narrow_wide",
+//!   "router": {"in_buf_depth": 2, "output_reg": true},
+//!   "ni": {"wide_rob_slots": 128, "narrow_rob_slots": 256,
+//!          "per_id_depth": 4, "num_ids": 16},
+//!   "mem": {"spm_latency": 7, "mem_ctrl_latency": 30}
+//! }
+//! ```
+
+use anyhow::{bail, Context};
+
+use crate::noc::{LinkMode, NocConfig};
+use crate::topology::MemEdge;
+use crate::util::json::Json;
+
+/// Parse a full [`NocConfig`] from JSON text.
+pub fn noc_config_from_json(text: &str) -> crate::Result<NocConfig> {
+    let j = Json::parse(text).context("config is not valid JSON")?;
+    noc_config_from_value(&j)
+}
+
+/// Parse from an already-parsed JSON value.
+pub fn noc_config_from_value(j: &Json) -> crate::Result<NocConfig> {
+    let mut cfg = NocConfig::default();
+    if let Some(mesh) = j.get("mesh") {
+        if let Some(w) = mesh.get("width").and_then(Json::as_u64) {
+            cfg.width = w as u8;
+        }
+        if let Some(h) = mesh.get("height").and_then(Json::as_u64) {
+            cfg.height = h as u8;
+        }
+        if let Some(edge) = mesh.get("mem_edge").and_then(Json::as_str) {
+            cfg.mem_edge = match edge {
+                "none" => MemEdge::None,
+                "west" => MemEdge::West,
+                "east_west" => MemEdge::EastWest,
+                "all" => MemEdge::All,
+                other => bail!("unknown mem_edge '{other}'"),
+            };
+        }
+    }
+    if let Some(mode) = j.get("mode").and_then(Json::as_str) {
+        cfg.mode = match mode {
+            "narrow_wide" => LinkMode::NarrowWide,
+            "wide_only" => LinkMode::WideOnly,
+            other => bail!("unknown mode '{other}'"),
+        };
+    }
+    if let Some(r) = j.get("router") {
+        if let Some(d) = r.get("in_buf_depth").and_then(Json::as_usize) {
+            if d == 0 {
+                bail!("in_buf_depth must be >= 1");
+            }
+            cfg.in_buf_depth = d;
+        }
+        if let Some(o) = r.get("output_reg").and_then(Json::as_bool) {
+            cfg.output_reg = o;
+        }
+    }
+    if let Some(ni) = j.get("ni") {
+        if let Some(s) = ni.get("wide_rob_slots").and_then(Json::as_u64) {
+            cfg.wide_init.rob_slots = s as u32;
+        }
+        if let Some(s) = ni.get("narrow_rob_slots").and_then(Json::as_u64) {
+            cfg.narrow_init.rob_slots = s as u32;
+        }
+        if let Some(d) = ni.get("per_id_depth").and_then(Json::as_usize) {
+            cfg.wide_init.per_id_depth = d;
+            cfg.narrow_init.per_id_depth = d;
+        }
+        if let Some(n) = ni.get("num_ids").and_then(Json::as_usize) {
+            cfg.wide_init.num_ids = n;
+            cfg.narrow_init.num_ids = n;
+        }
+    }
+    if let Some(mem) = j.get("mem") {
+        if let Some(l) = mem.get("spm_latency").and_then(Json::as_u64) {
+            cfg.spm.mem_latency = l;
+        }
+        if let Some(l) = mem.get("mem_ctrl_latency").and_then(Json::as_u64) {
+            cfg.mem_ctrl.mem_latency = l;
+        }
+    }
+    if cfg.width == 0 || cfg.height == 0 {
+        bail!("mesh dimensions must be >= 1");
+    }
+    Ok(cfg)
+}
+
+/// Serialize a config back to JSON (round-trip support, dumped into
+/// experiment records so every result is reproducible from its file).
+pub fn noc_config_to_json(cfg: &NocConfig) -> Json {
+    Json::obj(vec![
+        (
+            "mesh",
+            Json::obj(vec![
+                ("width", Json::Num(cfg.width as f64)),
+                ("height", Json::Num(cfg.height as f64)),
+                (
+                    "mem_edge",
+                    Json::Str(
+                        match cfg.mem_edge {
+                            MemEdge::None => "none",
+                            MemEdge::West => "west",
+                            MemEdge::EastWest => "east_west",
+                            MemEdge::All => "all",
+                        }
+                        .to_string(),
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "mode",
+            Json::Str(
+                match cfg.mode {
+                    LinkMode::NarrowWide => "narrow_wide",
+                    LinkMode::WideOnly => "wide_only",
+                }
+                .to_string(),
+            ),
+        ),
+        (
+            "router",
+            Json::obj(vec![
+                ("in_buf_depth", Json::Num(cfg.in_buf_depth as f64)),
+                ("output_reg", Json::Bool(cfg.output_reg)),
+            ]),
+        ),
+        (
+            "ni",
+            Json::obj(vec![
+                ("wide_rob_slots", Json::Num(cfg.wide_init.rob_slots as f64)),
+                (
+                    "narrow_rob_slots",
+                    Json::Num(cfg.narrow_init.rob_slots as f64),
+                ),
+                ("per_id_depth", Json::Num(cfg.wide_init.per_id_depth as f64)),
+                ("num_ids", Json::Num(cfg.wide_init.num_ids as f64)),
+            ]),
+        ),
+        (
+            "mem",
+            Json::obj(vec![
+                ("spm_latency", Json::Num(cfg.spm.mem_latency as f64)),
+                (
+                    "mem_ctrl_latency",
+                    Json::Num(cfg.mem_ctrl.mem_latency as f64),
+                ),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_from_empty_object() {
+        let cfg = noc_config_from_json("{}").unwrap();
+        assert_eq!(cfg.width, 2);
+        assert_eq!(cfg.mode, LinkMode::NarrowWide);
+        assert_eq!(cfg.wide_init.rob_slots, 128);
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let cfg = noc_config_from_json(
+            r#"{
+                "mesh": {"width": 4, "height": 3, "mem_edge": "west"},
+                "mode": "wide_only",
+                "router": {"in_buf_depth": 4, "output_reg": false},
+                "ni": {"wide_rob_slots": 64, "per_id_depth": 2},
+                "mem": {"spm_latency": 9}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!((cfg.width, cfg.height), (4, 3));
+        assert_eq!(cfg.mem_edge, MemEdge::West);
+        assert_eq!(cfg.mode, LinkMode::WideOnly);
+        assert_eq!(cfg.in_buf_depth, 4);
+        assert!(!cfg.output_reg);
+        assert_eq!(cfg.wide_init.rob_slots, 64);
+        assert_eq!(cfg.wide_init.per_id_depth, 2);
+        assert_eq!(cfg.spm.mem_latency, 9);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(noc_config_from_json(r#"{"mode": "quantum"}"#).is_err());
+        assert!(noc_config_from_json(r#"{"mesh": {"mem_edge": "north"}}"#).is_err());
+        assert!(noc_config_from_json(r#"{"router": {"in_buf_depth": 0}}"#).is_err());
+        assert!(noc_config_from_json("not json").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut cfg = NocConfig::mesh(5, 5).wide_only();
+        cfg.in_buf_depth = 3;
+        let j = noc_config_to_json(&cfg);
+        let back = noc_config_from_value(&j).unwrap();
+        assert_eq!(back.width, 5);
+        assert_eq!(back.mode, LinkMode::WideOnly);
+        assert_eq!(back.in_buf_depth, 3);
+    }
+}

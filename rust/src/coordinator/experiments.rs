@@ -1,0 +1,497 @@
+//! The paper's experiments, parameterized and reproducible.
+
+use crate::cluster::{TileTraffic, TiledWorkload};
+use crate::flit::NodeId;
+use crate::noc::{LinkMode, NocConfig, NocSystem, NET_RSP, NET_WIDE};
+use crate::phys::energy::{Activity, EnergyModel, PowerBreakdown};
+use crate::traffic::{GenCfg, Generator};
+
+/// Workload constants from the paper's Fig. 5 caption.
+pub const NUM_NARROW_TRANS: u64 = 100;
+pub const NUM_WIDE_TRANS: u64 = 16;
+pub const BURST_LEN: u8 = 15; // AxLEN for BURSTLEN = 16 beats
+
+/// §VI-A: zero-load round-trip latency of a narrow read to the adjacent
+/// tile. Returns total cycles (paper: 18).
+pub fn zero_load_latency(mode: LinkMode) -> u64 {
+    let mut cfg = NocConfig::mesh(2, 1);
+    cfg.mode = mode;
+    let mut sys = NocSystem::new(cfg);
+    let mut g = Generator::new(GenCfg::narrow_probe(NodeId(1), 1), NodeId(0));
+    // Prime the request before the first cycle so issue aligns with t=0.
+    sys.step_generator(&mut g);
+    let start = sys.now;
+    for _ in 0..200 {
+        sys.step();
+        sys.step_generator(&mut g);
+        if g.done() {
+            return g.latencies.max().max(sys.now - start - 1).min(g.latencies.max());
+        }
+    }
+    panic!("zero-load read did not complete");
+}
+
+/// One point of the Fig. 5a curve.
+#[derive(Debug, Clone)]
+pub struct Fig5aRow {
+    pub mode: LinkMode,
+    pub bidir: bool,
+    /// Interference level: concurrent outstanding wide bursts (0 = none).
+    pub wide_outstanding: u32,
+    pub narrow_mean: f64,
+    pub narrow_p99: u64,
+    pub narrow_max: u64,
+    /// Degradation vs the zero-interference point of the same config.
+    pub slowdown: f64,
+}
+
+/// Fig. 5a: latency of `NUM_NARROW_TRANS` narrow transactions under
+/// increasing wide-burst interference, for one link mode.
+///
+/// The paper measures *cluster-to-cluster* accesses: all traffic flows
+/// between one pair of adjacent tiles. The narrow probe runs tile 0 →
+/// tile 1 while wide DMA write bursts stream tile 0 → tile 1 over the
+/// same links; `bidir` adds the reverse wide stream tile 1 → tile 0
+/// (which additionally congests the probe's response path in the
+/// wide-only configuration).
+pub fn fig5a(mode: LinkMode, bidir: bool, levels: &[u32]) -> Vec<Fig5aRow> {
+    let mut rows = Vec::new();
+    let mut baseline_mean = 0.0;
+    for &level in levels {
+        let (mean, p99, max) = fig5a_point(mode, bidir, level);
+        if level == 0 {
+            baseline_mean = mean;
+        }
+        rows.push(Fig5aRow {
+            mode,
+            bidir,
+            wide_outstanding: level,
+            narrow_mean: mean,
+            narrow_p99: p99,
+            narrow_max: max,
+            slowdown: if baseline_mean > 0.0 {
+                mean / baseline_mean
+            } else {
+                1.0
+            },
+        });
+    }
+    rows
+}
+
+fn fig5a_point(mode: LinkMode, bidir: bool, wide_outstanding: u32) -> (f64, u64, u64) {
+    let mut cfg = NocConfig::mesh(2, 1);
+    cfg.mode = mode;
+    let sys = NocSystem::new(cfg);
+    let probe_src = 0usize;
+    let probe_dst = NodeId(1);
+    let mut profiles: Vec<TileTraffic> = (0..2).map(|_| TileTraffic::idle()).collect();
+    profiles[probe_src].core = Some(GenCfg::narrow_probe(probe_dst, NUM_NARROW_TRANS));
+    if wide_outstanding > 0 {
+        let mk = |dst: NodeId| {
+            let mut c = GenCfg::dma_burst(dst, u64::MAX, true);
+            c.burst_len = BURST_LEN;
+            c.max_outstanding = wide_outstanding;
+            c
+        };
+        profiles[0].dma = Some(mk(NodeId(1)));
+        if bidir {
+            profiles[1].dma = Some(mk(NodeId(0)));
+        }
+    }
+    let mut w = TiledWorkload::new(sys, profiles);
+    // Run until the probe finishes (wide generators are unbounded and keep
+    // the interference sustained the whole time).
+    for _ in 0..2_000_000u64 {
+        w.step();
+        if w.tiles[probe_src]
+            .core_gen
+            .as_ref()
+            .map(Generator::done)
+            .unwrap_or(false)
+        {
+            break;
+        }
+    }
+    let g = w.tiles[probe_src].core_gen.as_mut().unwrap();
+    assert!(g.done(), "narrow probe starved: did not finish");
+    assert!(g.monitor.ok(), "protocol violation under interference");
+    (g.latencies.mean(), g.latencies.p99(), g.latencies.max())
+}
+
+/// One point of the Fig. 5b curve.
+#[derive(Debug, Clone)]
+pub struct Fig5bRow {
+    pub mode: LinkMode,
+    pub bidir: bool,
+    /// Narrow interference: outstanding-transaction budget of the
+    /// competing narrow streams (0 = none). The paper's x-axis is the
+    /// number of interfering narrow transactions; a budget of N keeps N
+    /// narrow transactions in flight continuously.
+    pub narrow_outstanding: u32,
+    /// Effective wide-link bandwidth utilization in [0, 1] at the link
+    /// delivering the wide data.
+    pub utilization: f64,
+    /// Wide transfer makespan in cycles (NUM_WIDE_TRANS bursts).
+    pub makespan: u64,
+}
+
+/// Fig. 5b: effective bandwidth utilization of `NUM_WIDE_TRANS` wide
+/// write bursts under increasing narrow-transaction interference.
+///
+/// Cluster-to-cluster, like the paper: the DMA at tile 0 writes 1 kB
+/// bursts to tile 1 while the cores of both tiles issue single-beat
+/// narrow reads to each other. In the wide-only configuration the AW
+/// headers and the narrow requests share the physical link with the
+/// W-beat stream (and B/narrow-R share the response link), so effective
+/// utilization starts below peak and degrades further with narrow
+/// interference; the narrow-wide configuration keeps the wide link free
+/// of small messages (Table I) and stays flat. `bidir` adds a reverse
+/// DMA stream tile 1 → tile 0.
+pub fn fig5b(mode: LinkMode, bidir: bool, levels: &[u32]) -> Vec<Fig5bRow> {
+    levels
+        .iter()
+        .map(|&level| {
+            let (util, makespan) = fig5b_point(mode, bidir, level);
+            Fig5bRow {
+                mode,
+                bidir,
+                narrow_outstanding: level,
+                utilization: util,
+                makespan,
+            }
+        })
+        .collect()
+}
+
+fn fig5b_point(mode: LinkMode, bidir: bool, narrow_outstanding: u32) -> (f64, u64) {
+    let mut cfg = NocConfig::mesh(2, 1);
+    cfg.mode = mode;
+    let sys = NocSystem::new(cfg);
+    let dma_tile = 0usize;
+    let mut profiles: Vec<TileTraffic> = (0..2).map(|_| TileTraffic::idle()).collect();
+    {
+        let mut c = GenCfg::dma_burst(NodeId(1), NUM_WIDE_TRANS, true);
+        c.burst_len = BURST_LEN;
+        c.max_outstanding = 8;
+        profiles[dma_tile].dma = Some(c);
+    }
+    if bidir {
+        let mut c = GenCfg::dma_burst(NodeId(0), NUM_WIDE_TRANS, true);
+        c.burst_len = BURST_LEN;
+        c.max_outstanding = 8;
+        profiles[1].dma = Some(c);
+    }
+    if narrow_outstanding > 0 {
+        // Narrow interference from the cores of both tiles (the paper's
+        // 9-core clusters sustain many outstanding single-word accesses).
+        for t in 0..2usize {
+            let mut c = GenCfg::narrow_probe(NodeId(1 - t as u16), u64::MAX);
+            c.max_outstanding = narrow_outstanding;
+            c.ids = 16;
+            profiles[t].core = Some(c);
+        }
+    }
+    let mut w = TiledWorkload::new(sys, profiles);
+    let mut makespan = 0;
+    for _ in 0..2_000_000u64 {
+        w.step();
+        if w.tiles[dma_tile]
+            .dma_gen
+            .as_ref()
+            .map(Generator::done)
+            .unwrap_or(false)
+        {
+            makespan = w.sys.now;
+            break;
+        }
+    }
+    let g = w.tiles[dma_tile].dma_gen.as_ref().unwrap();
+    assert!(g.done(), "wide transfer never finished");
+    assert!(g.monitor.ok());
+    // Observe the link delivering the wide W data into tile 1.
+    let meter = w.sys.wide_write_meter(NodeId(1));
+    (meter.utilization(), makespan)
+}
+
+/// §VI-B: measured peak wide-link bandwidth — a single saturating DMA
+/// read stream; returns (utilization, Gbps at `freq_ghz`).
+pub fn peak_bandwidth(freq_ghz: f64) -> (f64, f64) {
+    let mut cfg = NocConfig::mesh(2, 1);
+    cfg.mode = LinkMode::NarrowWide;
+    let sys = NocSystem::new(cfg);
+    let mut profiles: Vec<TileTraffic> = (0..2).map(|_| TileTraffic::idle()).collect();
+    let mut c = GenCfg::dma_burst(NodeId(1), 64, false);
+    c.burst_len = BURST_LEN;
+    c.max_outstanding = 8;
+    profiles[0].dma = Some(c);
+    let mut w = TiledWorkload::new(sys, profiles);
+    assert!(w.run_to_completion(100_000));
+    let meter = w.sys.wide_read_meter(NodeId(0));
+    let util = meter.utilization();
+    (util, util * 512.0 * freq_ghz)
+}
+
+/// §VI-D / Fig. 6b: run the single-1 kB-DMA power scenario and feed the
+/// measured activity into the energy model.
+pub fn fig6b_power() -> (PowerBreakdown, f64) {
+    let sys = NocSystem::new(NocConfig::mesh(2, 1));
+    let profiles = vec![TileTraffic::single_dma_1kib(NodeId(1)), TileTraffic::idle()];
+    let mut w = TiledWorkload::new(sys, profiles);
+    assert!(w.run_to_completion(10_000));
+    assert!(w.protocol_ok());
+    let model = EnergyModel::default();
+    // Activity: flit-hops per network over the active window. The §VI-D
+    // energy quantity counts one router crossing per beat ("across the
+    // tile"), so normalize wide hops by the 2 routers on the path.
+    let wide_hops = w.sys.router_flit_hops(NET_WIDE);
+    let narrow_hops = w.sys.router_flit_hops(0) + w.sys.router_flit_hops(NET_RSP);
+    let window = w
+        .sys
+        .eject_meters
+        .iter()
+        .flat_map(|per_node| per_node.iter())
+        .map(|m| m.last_cycle)
+        .max()
+        .unwrap_or(w.sys.now)
+        .max(1);
+    let act = Activity {
+        wide_flit_hops: wide_hops / 2,
+        narrow_flit_hops: narrow_hops / 2,
+        cycles: window,
+        active_cores: 0,
+    };
+    let breakdown = model.power(&act);
+    let pj_per_byte_hop = model.transfer_pj(1024, 1) / 1024.0;
+    (breakdown, pj_per_byte_hop)
+}
+
+/// Ablation row: one (parameter, value) → measured outcome.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub param: &'static str,
+    pub value: u64,
+    pub metric: f64,
+}
+
+/// ROB-size ablation: wide-transfer makespan (lower is better) as the wide
+/// ROB shrinks — shows why the paper sized it for 2 outstanding max bursts.
+pub fn ablate_rob_size(slots_options: &[u32]) -> Vec<AblationRow> {
+    slots_options
+        .iter()
+        .map(|&slots| {
+            let mut cfg = NocConfig::mesh(2, 1);
+            cfg.wide_init.rob_slots = slots;
+            let sys = NocSystem::new(cfg);
+            let mut profiles: Vec<TileTraffic> =
+                (0..2).map(|_| TileTraffic::idle()).collect();
+            let mut c = GenCfg::dma_burst(NodeId(1), 16, false);
+            c.burst_len = BURST_LEN;
+            c.max_outstanding = 8;
+            profiles[0].dma = Some(c);
+            let mut w = TiledWorkload::new(sys, profiles);
+            assert!(w.run_to_completion(1_000_000));
+            AblationRow {
+                param: "wide_rob_slots",
+                value: slots as u64,
+                metric: w.sys.now as f64,
+            }
+        })
+        .collect()
+}
+
+/// Router input-buffer depth ablation: narrow mean latency under fixed
+/// wide interference.
+pub fn ablate_buffer_depth(depths: &[usize]) -> Vec<AblationRow> {
+    depths
+        .iter()
+        .map(|&d| {
+            let mut cfg = NocConfig::mesh(4, 1);
+            cfg.in_buf_depth = d;
+            let sys = NocSystem::new(cfg);
+            let mut profiles: Vec<TileTraffic> =
+                (0..4).map(|_| TileTraffic::idle()).collect();
+            profiles[1].core = Some(GenCfg::narrow_probe(NodeId(2), 50));
+            let mut dma = GenCfg::dma_burst(NodeId(3), u64::MAX, true);
+            dma.max_outstanding = 4;
+            profiles[0].dma = Some(dma);
+            let mut w = TiledWorkload::new(sys, profiles);
+            for _ in 0..1_000_000u64 {
+                w.step();
+                if w.tiles[1].core_gen.as_ref().unwrap().done() {
+                    break;
+                }
+            }
+            let g = w.tiles[1].core_gen.as_mut().unwrap();
+            AblationRow {
+                param: "in_buf_depth",
+                value: d as u64,
+                metric: g.latencies.mean(),
+            }
+        })
+        .collect()
+}
+
+/// Burst-length ablation: wide effective utilization vs AxLEN.
+pub fn ablate_burst_len(lens: &[u8]) -> Vec<AblationRow> {
+    lens.iter()
+        .map(|&len| {
+            let sys = NocSystem::new(NocConfig::mesh(2, 1));
+            let mut profiles: Vec<TileTraffic> =
+                (0..2).map(|_| TileTraffic::idle()).collect();
+            let mut c = GenCfg::dma_burst(NodeId(1), 32, false);
+            c.burst_len = len;
+            c.max_outstanding = 8;
+            profiles[0].dma = Some(c);
+            let mut w = TiledWorkload::new(sys, profiles);
+            assert!(w.run_to_completion(1_000_000));
+            let util = w.sys.wide_read_meter(NodeId(0)).utilization();
+            AblationRow {
+                param: "burst_len",
+                value: len as u64 + 1,
+                metric: util,
+            }
+        })
+        .collect()
+}
+
+/// Mesh-size scaling: aggregate delivered wide bandwidth with all tiles
+/// DMA-reading from their +x neighbour (ring in each row).
+pub fn scale_mesh(sizes: &[u8]) -> Vec<AblationRow> {
+    sizes
+        .iter()
+        .map(|&n| {
+            let sys = NocSystem::new(NocConfig::mesh(n, n));
+            let tiles = (n as usize) * (n as usize);
+            let profiles: Vec<TileTraffic> = (0..tiles)
+                .map(|i| {
+                    let y = i / n as usize;
+                    let x = i % n as usize;
+                    let dst = (y * n as usize + (x + 1) % n as usize) as u16;
+                    let mut c = GenCfg::dma_burst(NodeId(dst), 8, false);
+                    c.max_outstanding = 4;
+                    TileTraffic {
+                        core: None,
+                        dma: Some(c),
+                    }
+                })
+                .collect();
+            let mut w = TiledWorkload::new(sys, profiles);
+            assert!(w.run_to_completion(2_000_000), "mesh {n} didn't drain");
+            assert!(w.protocol_ok());
+            // Total wide beats delivered / makespan = beats/cycle.
+            let beats: u64 = (0..tiles)
+                .map(|i| w.sys.wide_read_meter(NodeId(i as u16)).flits)
+                .sum();
+            AblationRow {
+                param: "mesh_n",
+                value: n as u64,
+                metric: beats as f64 * 64.0 / w.sys.now as f64, // bytes/cycle
+            }
+        })
+        .collect()
+}
+
+/// Output-register (1- vs 2-cycle router) ablation on zero-load latency.
+pub fn ablate_output_reg() -> Vec<AblationRow> {
+    [false, true]
+        .iter()
+        .map(|&reg| {
+            let mut cfg = NocConfig::mesh(2, 1);
+            cfg.output_reg = reg;
+            let mut sys = NocSystem::new(cfg);
+            let mut g = Generator::new(GenCfg::narrow_probe(NodeId(1), 1), NodeId(0));
+            sys.step_generator(&mut g);
+            for _ in 0..100 {
+                sys.step();
+                sys.step_generator(&mut g);
+                if g.done() {
+                    break;
+                }
+            }
+            assert!(g.done());
+            AblationRow {
+                param: "output_reg",
+                value: reg as u64,
+                metric: g.latencies.max() as f64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_load_is_eighteen() {
+        assert_eq!(zero_load_latency(LinkMode::NarrowWide), 18);
+    }
+
+    /// The core Fig. 5a claim: narrow-wide stays flat, wide-only degrades
+    /// severely (paper: up to 5×).
+    #[test]
+    fn fig5a_shape_holds() {
+        let nw = fig5a(LinkMode::NarrowWide, true, &[0, 8]);
+        let wo = fig5a(LinkMode::WideOnly, true, &[0, 8]);
+        assert!(
+            nw[1].slowdown < 1.3,
+            "narrow-wide must be robust, got {:.2}x",
+            nw[1].slowdown
+        );
+        assert!(
+            wo[1].slowdown > 1.8,
+            "wide-only must degrade clearly, got {:.2}x",
+            wo[1].slowdown
+        );
+        assert!(wo[1].slowdown > nw[1].slowdown * 1.5);
+    }
+
+    /// The core Fig. 5b claim: narrow-wide sustains high utilization under
+    /// narrow interference; wide-only starts below peak (AW self-overhead
+    /// on the shared link) and loses further bandwidth.
+    #[test]
+    fn fig5b_shape_holds() {
+        let nw = fig5b(LinkMode::NarrowWide, false, &[0, 32]);
+        let wo = fig5b(LinkMode::WideOnly, false, &[0, 32]);
+        assert!(
+            nw[1].utilization > 0.9,
+            "narrow-wide stays near peak (paper: 85 %, robust), got {:.2}",
+            nw[1].utilization
+        );
+        assert!(
+            wo[0].utilization < 0.97,
+            "wide-only pays AW overhead even uncontended: {:.2}",
+            wo[0].utilization
+        );
+        assert!(
+            wo[1].utilization < nw[1].utilization - 0.08,
+            "wide-only must lose utilization: {:.2} vs {:.2}",
+            wo[1].utilization,
+            nw[1].utilization
+        );
+        assert!(wo[1].utilization < wo[0].utilization - 0.03, "degrades with interference");
+    }
+
+    #[test]
+    fn peak_bandwidth_near_line_rate() {
+        let (util, gbps) = peak_bandwidth(1.23);
+        assert!(util > 0.8, "sustained stream ≈ line rate, got {util:.2}");
+        assert!(gbps > 500.0, "≈629 Gbps peak, got {gbps:.0}");
+    }
+
+    #[test]
+    fn fig6b_reproduces_headlines() {
+        let (p, pjb) = fig6b_power();
+        assert!((130.0..=150.0).contains(&p.total_mw), "{:.1} mW", p.total_mw);
+        assert!((0.04..=0.10).contains(&p.noc_fraction));
+        assert!((pjb - 0.19).abs() < 0.01);
+    }
+
+    #[test]
+    fn rob_ablation_monotone() {
+        let rows = ablate_rob_size(&[16, 128]);
+        // Smaller ROB => longer makespan (flow control throttles).
+        assert!(rows[0].metric > rows[1].metric);
+    }
+}

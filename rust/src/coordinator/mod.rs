@@ -1,0 +1,10 @@
+//! Experiment coordination: every table and figure of the paper's
+//! evaluation as a runnable, parameterized experiment.
+//!
+//! See DESIGN.md §4 for the experiment index. Each function returns plain
+//! row structs that [`crate::report`] renders as the paper's tables/series
+//! and that EXPERIMENTS.md records as paper-vs-measured.
+
+pub mod experiments;
+
+pub use experiments::*;

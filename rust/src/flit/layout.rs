@@ -1,0 +1,323 @@
+//! Table-I link-width calculator.
+//!
+//! Computes the physical width of the three FlooNoC links from first
+//! principles: exact AXI4(+ATOP) channel payload widths plus the parallel
+//! header lines of Fig. 2. With the paper's parameters (ADDR = 48,
+//! DATA = 64/512, 4-bit IDs, 2 kB narrow / 8 kB wide ROB, ≤16×16 mesh)
+//! the calculator reproduces Table I bit-for-bit:
+//!
+//! | link       | header | widest payload      | total |
+//! |------------|--------|---------------------|-------|
+//! | narrow_req |  32    | AW+ATOP = 87        | 119   |
+//! | narrow_rsp |  32    | R(64)   = 71        | 103   |
+//! | wide       |  26    | W(512)  = 577       | 603   |
+//!
+//! Field inventory (documented in DESIGN.md):
+//! * narrow header: dst(4+4) + src(4+4) + rob_req(1) + rob_idx(8) +
+//!   last(1) + axi_ch(3) + atop(3) = 32. The 8-bit rob_idx addresses the
+//!   2 kB narrow ROB at 8 B granularity (256 slots).
+//! * wide header: dst(8) + src(8) + rob_req(1) + rob_idx(7) + last(1) +
+//!   axi_ch(1) = 26. The 7-bit rob_idx addresses the 8 kB wide ROB at
+//!   64 B granularity (128 slots); 1 bit distinguishes W from R.
+
+/// AXI4 bus parameterization at the NI boundary.
+#[derive(Debug, Clone, Copy)]
+pub struct AxiParams {
+    /// Address width (paper: 48).
+    pub addr_width: u32,
+    /// Data width of this bus (64 narrow / 512 wide).
+    pub data_width: u32,
+    /// ID width at the endpoint (paper tile: 4).
+    pub id_width: u32,
+    /// ATOP sideband width on AW (PULP AXI: 6).
+    pub atop_width: u32,
+}
+
+impl AxiParams {
+    pub fn narrow() -> Self {
+        AxiParams {
+            addr_width: 48,
+            data_width: 64,
+            id_width: 4,
+            atop_width: 6,
+        }
+    }
+
+    pub fn wide() -> Self {
+        AxiParams {
+            addr_width: 48,
+            data_width: 512,
+            id_width: 4,
+            atop_width: 6,
+        }
+    }
+
+    /// AR payload bits: addr + id + len(8) + size(3) + burst(2) + lock(1)
+    /// + cache(4) + prot(3) + qos(4) + region(4).
+    pub fn ar_bits(&self) -> u32 {
+        self.addr_width + self.id_width + 8 + 3 + 2 + 1 + 4 + 3 + 4 + 4
+    }
+
+    /// AW payload bits: AR fields + ATOP sideband.
+    pub fn aw_bits(&self) -> u32 {
+        self.ar_bits() + self.atop_width
+    }
+
+    /// W payload bits: data + strb + last.
+    pub fn w_bits(&self) -> u32 {
+        self.data_width + self.data_width / 8 + 1
+    }
+
+    /// R payload bits: data + id + resp(2) + last.
+    pub fn r_bits(&self) -> u32 {
+        self.data_width + self.id_width + 2 + 1
+    }
+
+    /// B payload bits: id + resp(2).
+    pub fn b_bits(&self) -> u32 {
+        self.id_width + 2
+    }
+}
+
+/// Header geometry for one physical link.
+#[derive(Debug, Clone, Copy)]
+pub struct HeaderLayout {
+    /// Destination coordinate bits (x+y).
+    pub dst_bits: u32,
+    /// Source coordinate bits (x+y).
+    pub src_bits: u32,
+    /// ROB index bits (log2 of ROB slots).
+    pub rob_idx_bits: u32,
+    /// Payload-type discriminator bits.
+    pub axi_ch_bits: u32,
+    /// ATOP class echo bits (narrow links only).
+    pub atop_bits: u32,
+}
+
+impl HeaderLayout {
+    /// rob_req(1) + last(1) + all configurable fields.
+    pub fn bits(&self) -> u32 {
+        self.dst_bits + self.src_bits + 1 + self.rob_idx_bits + 1 + self.axi_ch_bits + self.atop_bits
+    }
+}
+
+/// Complete layout of one physical link.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkLayout {
+    pub header: HeaderLayout,
+    pub payload_bits: u32,
+}
+
+impl LinkLayout {
+    /// Total parallel wires carrying flit content (excl. valid/ready).
+    pub fn flit_bits(&self) -> u32 {
+        self.header.bits() + self.payload_bits
+    }
+
+    /// Physical wires per direction including the valid/ready handshake.
+    pub fn wires_simplex(&self) -> u32 {
+        self.flit_bits() + 2
+    }
+}
+
+/// ROB sizing, used both here (rob_idx width) and by the NI.
+#[derive(Debug, Clone, Copy)]
+pub struct RobParams {
+    /// Total ROB bytes (paper: 2 kB narrow, 8 kB wide).
+    pub bytes: u32,
+    /// Allocation granule = one data beat (8 B narrow, 64 B wide).
+    pub granule: u32,
+}
+
+impl RobParams {
+    pub fn narrow() -> Self {
+        RobParams {
+            bytes: 2 * 1024,
+            granule: 8,
+        }
+    }
+
+    pub fn wide() -> Self {
+        RobParams {
+            bytes: 8 * 1024,
+            granule: 64,
+        }
+    }
+
+    pub fn slots(&self) -> u32 {
+        self.bytes / self.granule
+    }
+
+    pub fn idx_bits(&self) -> u32 {
+        u32::BITS - (self.slots() - 1).leading_zeros()
+    }
+}
+
+/// The full narrow-wide NoC layout (all three physical links).
+#[derive(Debug, Clone)]
+pub struct NocLayout {
+    pub narrow: AxiParams,
+    pub wide: AxiParams,
+    pub narrow_rob: RobParams,
+    pub wide_rob: RobParams,
+    /// Coordinate bits per axis (4 ⇒ up to 16×16 meshes).
+    pub coord_bits: u32,
+}
+
+impl Default for NocLayout {
+    fn default() -> Self {
+        NocLayout {
+            narrow: AxiParams::narrow(),
+            wide: AxiParams::wide(),
+            narrow_rob: RobParams::narrow(),
+            wide_rob: RobParams::wide(),
+            coord_bits: 4,
+        }
+    }
+}
+
+impl NocLayout {
+    fn narrow_header(&self) -> HeaderLayout {
+        HeaderLayout {
+            dst_bits: 2 * self.coord_bits,
+            src_bits: 2 * self.coord_bits,
+            rob_idx_bits: self.narrow_rob.idx_bits(),
+            // narrow_req carries 5 payload kinds, narrow_rsp 3; a shared
+            // 3-bit discriminator covers both.
+            axi_ch_bits: 3,
+            atop_bits: 3,
+        }
+    }
+
+    fn wide_header(&self) -> HeaderLayout {
+        HeaderLayout {
+            dst_bits: 2 * self.coord_bits,
+            src_bits: 2 * self.coord_bits,
+            rob_idx_bits: self.wide_rob.idx_bits(),
+            // wide carries only W and R: 1 bit.
+            axi_ch_bits: 1,
+            atop_bits: 0,
+        }
+    }
+
+    /// `narrow_req`: narrow AR/AW/W plus wide AR/AW (Table I mapping) —
+    /// sized by the widest member of that union.
+    pub fn narrow_req(&self) -> LinkLayout {
+        let payload = self
+            .narrow
+            .aw_bits()
+            .max(self.narrow.ar_bits())
+            .max(self.narrow.w_bits())
+            .max(self.wide.aw_bits())
+            .max(self.wide.ar_bits());
+        LinkLayout {
+            header: self.narrow_header(),
+            payload_bits: payload,
+        }
+    }
+
+    /// `narrow_rsp`: narrow R/B plus wide B.
+    pub fn narrow_rsp(&self) -> LinkLayout {
+        let payload = self
+            .narrow
+            .r_bits()
+            .max(self.narrow.b_bits())
+            .max(self.wide.b_bits());
+        LinkLayout {
+            header: self.narrow_header(),
+            payload_bits: payload,
+        }
+    }
+
+    /// `wide`: wide W and R only.
+    pub fn wide_link(&self) -> LinkLayout {
+        let payload = self.wide.w_bits().max(self.wide.r_bits());
+        LinkLayout {
+            header: self.wide_header(),
+            payload_bits: payload,
+        }
+    }
+
+    /// Wires of a full duplex channel (all three links, both directions,
+    /// incl. valid/ready) — the §V "approximately 1600 wires".
+    pub fn duplex_wires(&self) -> u32 {
+        2 * (self.narrow_req().wires_simplex()
+            + self.narrow_rsp().wires_simplex()
+            + self.wide_link().wires_simplex())
+    }
+
+    /// Peak payload bandwidth of the wide link in Gbps at `freq_ghz`:
+    /// 512 data bits per cycle (the paper's 629 Gbps at 1.23 GHz).
+    pub fn wide_peak_gbps(&self, freq_ghz: f64) -> f64 {
+        self.wide.data_width as f64 * freq_ghz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axi_channel_payload_widths() {
+        let n = AxiParams::narrow();
+        let w = AxiParams::wide();
+        assert_eq!(n.ar_bits(), 81);
+        assert_eq!(n.aw_bits(), 87);
+        assert_eq!(n.w_bits(), 73);
+        assert_eq!(n.r_bits(), 71);
+        assert_eq!(n.b_bits(), 6);
+        assert_eq!(w.w_bits(), 577);
+        assert_eq!(w.r_bits(), 519);
+    }
+
+    #[test]
+    fn rob_index_widths() {
+        assert_eq!(RobParams::narrow().slots(), 256);
+        assert_eq!(RobParams::narrow().idx_bits(), 8);
+        assert_eq!(RobParams::wide().slots(), 128);
+        assert_eq!(RobParams::wide().idx_bits(), 7);
+    }
+
+    /// Table I, bit for bit.
+    #[test]
+    fn table_one_link_widths() {
+        let l = NocLayout::default();
+        assert_eq!(l.narrow_req().flit_bits(), 119, "narrow_req (Table I)");
+        assert_eq!(l.narrow_rsp().flit_bits(), 103, "narrow_rsp (Table I)");
+        assert_eq!(l.wide_link().flit_bits(), 603, "wide (Table I)");
+    }
+
+    #[test]
+    fn header_widths() {
+        let l = NocLayout::default();
+        assert_eq!(l.narrow_req().header.bits(), 32);
+        assert_eq!(l.narrow_rsp().header.bits(), 32);
+        assert_eq!(l.wide_link().header.bits(), 26);
+    }
+
+    /// §V: "a duplex channel requires approximately 1600 wires".
+    #[test]
+    fn duplex_channel_wire_count() {
+        let l = NocLayout::default();
+        let wires = l.duplex_wires();
+        assert_eq!(wires, 2 * (121 + 105 + 605));
+        assert!((1500..=1700).contains(&wires), "≈1600 wires, got {wires}");
+    }
+
+    /// §VI-B: 629 Gbps per wide link at 1.23 GHz.
+    #[test]
+    fn wide_peak_bandwidth() {
+        let l = NocLayout::default();
+        let gbps = l.wide_peak_gbps(1.23);
+        assert!((gbps - 629.76).abs() < 0.01, "512 bit × 1.23 GHz = {gbps}");
+    }
+
+    #[test]
+    fn bigger_mesh_grows_headers_not_payload() {
+        let mut l = NocLayout::default();
+        let base = l.wide_link().flit_bits();
+        l.coord_bits = 6; // up to 64×64 tiles
+        assert_eq!(l.wide_link().flit_bits(), base + 8);
+        assert_eq!(l.wide_link().payload_bits, 577);
+    }
+}

@@ -1,0 +1,20 @@
+//! FlooNoC link-level protocol: flits with parallel header lines.
+//!
+//! The paper's key link-level decision (§III-B): instead of serializing a
+//! packet into header/payload/tail flits over a narrow link, every flit
+//! carries its full header on dedicated parallel wires and the whole
+//! payload in one cycle. Three physical links exist per direction:
+//!
+//! * `narrow_req` (119 bit) — narrow AR/AW/W plus *wide* AR/AW (small
+//!   messages that would waste the wide link);
+//! * `narrow_rsp` (103 bit) — narrow R/B plus wide B;
+//! * `wide` (603 bit) — wide W and R bursts only.
+//!
+//! [`layout`] computes these widths from first principles and is checked
+//! against Table I bit-for-bit in its tests.
+
+pub mod layout;
+pub mod types;
+
+pub use layout::{AxiParams, LinkLayout, NocLayout, RobParams};
+pub use types::*;

@@ -1,0 +1,277 @@
+//! Flit header and payload types.
+//!
+//! All physical networks carry the same Rust flit type; *which* network a
+//! payload class rides on is the Table-I mapping implemented by
+//! [`ChannelClass::phys_link`]. This mirrors the hardware, where the three
+//! links differ in wire count but the routers are payload-agnostic — and it
+//! lets the wide-only baseline (§VI, Fig. 5 comparison) reuse the exact
+//! same router/NI machinery with a different mapping.
+
+use crate::axi::{AxReq, AxiId, BResp, RBeat, WBeat};
+
+/// Node identifier in the network (tile or memory controller).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u16);
+
+/// (x, y) mesh coordinate, used by XY routing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Coord {
+    pub x: u8,
+    pub y: u8,
+}
+
+impl Coord {
+    pub fn new(x: u8, y: u8) -> Self {
+        Coord { x, y }
+    }
+}
+
+/// Parallel header lines present on every flit (paper Fig. 2): routing
+/// (dst/src), ordering (rob index + whether the response must consult the
+/// ROB), atomic marker, and `last` for wormhole packets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub dst: NodeId,
+    pub src: NodeId,
+    /// Slot index into the initiator's ROB, allocated at injection and
+    /// echoed by the response (the paper's "unique identifier").
+    pub rob_idx: u32,
+    /// True when ROB space was reserved for the response.
+    pub rob_req: bool,
+    /// Atomic transaction marker (separate meta buffers at the target NI).
+    pub atomic: bool,
+    /// Wormhole: final flit of the packet (single-flit packets set it).
+    pub last: bool,
+}
+
+/// One flit: parallel header + payload, plus an injection timestamp used
+/// only for latency accounting (not a hardware field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlooFlit {
+    pub header: Header,
+    pub payload: Payload,
+    pub injected_at: u64,
+}
+
+/// Every message class that can cross the NoC. `Narrow*` originate from the
+/// 64-bit AXI bus, `Wide*` from the 512-bit bus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Payload {
+    NarrowAr(AxReq),
+    NarrowAw(AxReq),
+    NarrowW { id: AxiId, beat: WBeat },
+    NarrowR(RBeat),
+    NarrowB(BResp),
+    WideAr(AxReq),
+    WideAw(AxReq),
+    WideW { id: AxiId, beat: WBeat },
+    WideR(RBeat),
+    WideB(BResp),
+}
+
+/// Which AXI bus a payload belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BusKind {
+    Narrow,
+    Wide,
+}
+
+/// Request- vs response-class messages. The paper keeps these on separate
+/// physical links *always* ("AXI4 requests and responses are always sent
+/// over different physical links to prevent message-level deadlocks").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MsgClass {
+    Request,
+    Response,
+}
+
+/// The three FlooNoC physical links of Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ChannelClass {
+    NarrowReq,
+    NarrowRsp,
+    Wide,
+}
+
+impl Payload {
+    pub fn bus(&self) -> BusKind {
+        match self {
+            Payload::NarrowAr(_)
+            | Payload::NarrowAw(_)
+            | Payload::NarrowW { .. }
+            | Payload::NarrowR(_)
+            | Payload::NarrowB(_) => BusKind::Narrow,
+            _ => BusKind::Wide,
+        }
+    }
+
+    pub fn class(&self) -> MsgClass {
+        match self {
+            Payload::NarrowAr(_)
+            | Payload::NarrowAw(_)
+            | Payload::NarrowW { .. }
+            | Payload::WideAr(_)
+            | Payload::WideAw(_)
+            | Payload::WideW { .. } => MsgClass::Request,
+            _ => MsgClass::Response,
+        }
+    }
+
+    /// Table-I mapping: which of the three physical links this payload
+    /// rides in the narrow-wide configuration. Wide AR/AW and wide B are
+    /// deliberately mapped to the *narrow* links to keep the wide link free
+    /// for bulk data (§III-B).
+    pub fn phys_link(&self) -> ChannelClass {
+        match self {
+            Payload::NarrowAr(_)
+            | Payload::NarrowAw(_)
+            | Payload::NarrowW { .. }
+            | Payload::WideAr(_)
+            | Payload::WideAw(_) => ChannelClass::NarrowReq,
+            Payload::NarrowR(_) | Payload::NarrowB(_) | Payload::WideB(_) => {
+                ChannelClass::NarrowRsp
+            }
+            Payload::WideW { .. } | Payload::WideR(_) => ChannelClass::Wide,
+        }
+    }
+
+    /// Useful payload bits this flit carries (for effective-bandwidth
+    /// accounting, Fig. 5b): the *data* content, not headers/strobe.
+    pub fn payload_bits(&self) -> u32 {
+        match self {
+            Payload::NarrowAr(_) | Payload::NarrowAw(_) => 48, // an address
+            Payload::WideAr(_) | Payload::WideAw(_) => 48,
+            Payload::NarrowW { .. } | Payload::NarrowR(_) => 64,
+            Payload::WideW { .. } | Payload::WideR(_) => 512,
+            Payload::NarrowB(_) | Payload::WideB(_) => 2,
+        }
+    }
+}
+
+impl FlooFlit {
+    pub fn new(header: Header, payload: Payload, now: u64) -> Self {
+        FlooFlit {
+            header,
+            payload,
+            injected_at: now,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::{Burst, Resp};
+
+    fn req(id: AxiId) -> AxReq {
+        AxReq {
+            id,
+            addr: 0x1000,
+            len: 15,
+            size: 6,
+            burst: Burst::Incr,
+            atop: false,
+        }
+    }
+
+    /// Table I "Mapping & Primary Payload" column, as code.
+    #[test]
+    fn table_one_mapping() {
+        use ChannelClass::*;
+        assert_eq!(Payload::NarrowAr(req(0)).phys_link(), NarrowReq);
+        assert_eq!(Payload::NarrowAw(req(0)).phys_link(), NarrowReq);
+        assert_eq!(
+            Payload::NarrowW {
+                id: 0,
+                beat: WBeat { beat: 0, last: true }
+            }
+            .phys_link(),
+            NarrowReq
+        );
+        // Wide AR/AW ride the narrow request link.
+        assert_eq!(Payload::WideAr(req(0)).phys_link(), NarrowReq);
+        assert_eq!(Payload::WideAw(req(0)).phys_link(), NarrowReq);
+        // Responses.
+        assert_eq!(
+            Payload::NarrowR(RBeat {
+                id: 0,
+                beat: 0,
+                last: true,
+                resp: Resp::Okay
+            })
+            .phys_link(),
+            NarrowRsp
+        );
+        assert_eq!(
+            Payload::NarrowB(BResp { id: 0, resp: Resp::Okay }).phys_link(),
+            NarrowRsp
+        );
+        // Wide B rides the narrow response link.
+        assert_eq!(
+            Payload::WideB(BResp { id: 0, resp: Resp::Okay }).phys_link(),
+            NarrowRsp
+        );
+        // Only bulk data uses the wide link.
+        assert_eq!(
+            Payload::WideW {
+                id: 0,
+                beat: WBeat { beat: 0, last: false }
+            }
+            .phys_link(),
+            Wide
+        );
+        assert_eq!(
+            Payload::WideR(RBeat {
+                id: 0,
+                beat: 0,
+                last: false,
+                resp: Resp::Okay
+            })
+            .phys_link(),
+            Wide
+        );
+    }
+
+    #[test]
+    fn request_response_separation() {
+        // Deadlock-freedom invariant: no payload class maps requests and
+        // responses onto the same physical link.
+        let reqs = [
+            Payload::NarrowAr(req(0)),
+            Payload::NarrowAw(req(0)),
+            Payload::WideAr(req(0)),
+        ];
+        let rsps = [
+            Payload::NarrowR(RBeat {
+                id: 0,
+                beat: 0,
+                last: true,
+                resp: Resp::Okay,
+            }),
+            Payload::NarrowB(BResp { id: 0, resp: Resp::Okay }),
+            Payload::WideB(BResp { id: 0, resp: Resp::Okay }),
+        ];
+        for r in &reqs {
+            assert_eq!(r.class(), MsgClass::Request);
+            for s in &rsps {
+                assert_eq!(s.class(), MsgClass::Response);
+                assert_ne!(r.phys_link(), s.phys_link());
+            }
+        }
+    }
+
+    #[test]
+    fn payload_bits_for_bandwidth_accounting() {
+        assert_eq!(
+            Payload::WideR(RBeat {
+                id: 0,
+                beat: 0,
+                last: false,
+                resp: Resp::Okay
+            })
+            .payload_bits(),
+            512
+        );
+        assert_eq!(Payload::WideB(BResp { id: 0, resp: Resp::Okay }).payload_bits(), 2);
+    }
+}

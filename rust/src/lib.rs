@@ -1,0 +1,64 @@
+//! # FlooNoC reproduction library
+//!
+//! A cycle-accurate reproduction of *FlooNoC: A Multi-Tbps Wide NoC for
+//! Heterogeneous AXI4 Traffic* (Fischer et al., IEEE D&T 2023).
+//!
+//! The crate implements, from the bottom up:
+//!
+//! * [`sim`] — a deterministic, cycle-stepped simulation kernel with
+//!   valid/ready links and single-cycle hop registers;
+//! * [`axi`] — an AXI4 transaction model (AR/AW/W/R/B channels, IDs,
+//!   bursts) plus a protocol ordering monitor;
+//! * [`flit`] — the FlooNoC link-level protocol: parallel-header flits and
+//!   the Table-I link-width calculator (119/103/603 bit);
+//! * [`ni`] — the paper's key contribution: a fully AXI4-compliant network
+//!   interface with a dynamically allocated reorder buffer (ROB), per-ID
+//!   reorder table, meta FIFOs, and end-to-end flow control;
+//! * [`router`] — configurable-radix single-cycle wormhole routers with XY
+//!   and table-based routing, no virtual channels, multilink operation;
+//! * [`topology`] — 2D meshes of compute tiles with boundary memory
+//!   controllers and a global address map;
+//! * [`cluster`] — a behavioural Snitch-like compute tile (8 cores + DMA +
+//!   SPM) calibrated to the paper's 18-cycle zero-load round trip;
+//! * [`traffic`] — workload generators for the paper's Fig. 5 experiments
+//!   and general synthetic patterns;
+//! * [`phys`] — the physical model (area in kGE, energy in pJ/B/hop, wire
+//!   counts and routing-channel geometry) calibrated to the published
+//!   GF 12 nm post-layout results;
+//! * [`baseline`] — the wide-only link configuration and an AXI4-matrix
+//!   interconnect baseline;
+//! * [`runtime`] / [`compute`] — the PJRT bridge that loads the AOT-lowered
+//!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and executes the tile
+//!   compute and the analytical NoC model from the Rust side;
+//! * [`coordinator`] — experiment orchestration reproducing every table and
+//!   figure of the paper's evaluation;
+//! * [`report`] — table/figure formatters, incl. the Table-II comparison.
+//!
+//! Python (JAX + Pallas) is used **only at build time** to author and
+//! AOT-lower the compute kernels; the simulator and all experiments run
+//! from this crate alone once `make artifacts` has been executed.
+
+pub mod util;
+pub mod sim;
+pub mod axi;
+pub mod flit;
+pub mod ni;
+pub mod router;
+pub mod topology;
+pub mod mem;
+pub mod cluster;
+pub mod traffic;
+pub mod phys;
+pub mod baseline;
+pub mod noc;
+pub mod stats;
+pub mod config;
+pub mod runtime;
+pub mod compute;
+pub mod dse;
+pub mod coordinator;
+pub mod report;
+pub mod cli;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,282 @@
+//! `repro` — the FlooNoC reproduction CLI (leader entrypoint).
+//!
+//! See `repro help` or [`floonoc::cli::HELP`].
+
+use anyhow::{bail, Context};
+
+use floonoc::cli::{Args, HELP};
+use floonoc::cluster::{TileSpec, TileTraffic, TiledWorkload};
+use floonoc::config;
+use floonoc::coordinator as exp;
+use floonoc::flit::{NocLayout, NodeId};
+use floonoc::noc::{LinkMode, NocConfig, NocSystem};
+use floonoc::phys::{AreaModel, BandwidthModel, ChannelGeometry, TimingModel};
+use floonoc::report;
+use floonoc::traffic::{GenCfg, Pattern};
+use floonoc::util::json::{pretty, Json};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{HELP}");
+        return;
+    }
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => println!("{HELP}"),
+        "info" => info(),
+        "reproduce" => reproduce(args)?,
+        "simulate" => simulate(args)?,
+        "sweep" => sweep(args)?,
+        "dse" => dse(args)?,
+        other => bail!("unknown command '{other}' (try 'repro help')"),
+    }
+    Ok(())
+}
+
+fn info() {
+    let layout = NocLayout::default();
+    let bw = BandwidthModel::default();
+    let timing = TimingModel::default();
+    let geom = ChannelGeometry::default();
+    let area = AreaModel::default().tile(&TileSpec::default(), &layout, 2);
+    println!("FlooNoC reproduction — system summary\n");
+    println!("{}", report::table_one(&layout));
+    println!(
+        "clock: {:.2} GHz at {:.0} FO4 | wide link {:.0} Gbps, duplex {:.2} Tbps",
+        1.23,
+        timing.fo4_depth(1.23),
+        bw.wide_link_gbps(),
+        bw.wide_duplex_tbps()
+    );
+    println!(
+        "7x7 mesh boundary aggregate: {:.1} TB/s",
+        bw.mesh_boundary_tbs(7)
+    );
+    println!(
+        "routing channel: {} wires, {:.0} um slice, {} buffer-island sets",
+        geom.duplex_wires(&layout),
+        geom.channel_width_um(&layout),
+        geom.island_sets()
+    );
+    println!(
+        "tile area: {:.2} MGE, NoC {:.0} kGE ({:.1} %)",
+        area.tile_total() / 1e6,
+        area.noc_total() / 1e3,
+        area.noc_fraction() * 100.0
+    );
+}
+
+fn parse_levels_u32(args: &Args, default: &[u32]) -> anyhow::Result<Vec<u32>> {
+    match args.opt("levels") {
+        Some(s) => s
+            .split(',')
+            .map(|v| v.parse().with_context(|| format!("bad level '{v}'")))
+            .collect(),
+        None => Ok(default.to_vec()),
+    }
+}
+
+fn reproduce(args: &Args) -> anyhow::Result<()> {
+    let what = args.pos(0).unwrap_or("all");
+    let bidir = args.flag("bidir");
+    let layout = NocLayout::default();
+    match what {
+        "tab1" => print!("{}", report::table_one(&layout)),
+        "tab2" => print!("{}", report::table_two()),
+        "fig5a" => {
+            let levels = parse_levels_u32(args, &[0, 1, 2, 4, 8])?;
+            for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
+                let rows = exp::fig5a(mode, bidir, &levels);
+                print!("{}", report::fig5a_table(&rows));
+            }
+        }
+        "fig5b" => {
+            let levels = parse_levels_u32(args, &[0, 2, 4, 8, 16, 32])?;
+            for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
+                let rows = exp::fig5b(mode, bidir, &levels);
+                print!("{}", report::fig5b_table(&rows));
+            }
+        }
+        "fig6a" => {
+            let area = AreaModel::default().tile(&TileSpec::default(), &layout, 2);
+            println!("Fig. 6a: area breakdown");
+            println!("{}", pretty(&area.to_json()));
+        }
+        "fig6b" => {
+            let (p, pjb) = exp::fig6b_power();
+            println!("Fig. 6b: power breakdown during a single 1 kB DMA transfer");
+            println!("{}", pretty(&p.to_json()));
+            println!("energy efficiency: {pjb:.2} pJ/B/hop (paper: 0.19)");
+        }
+        "latency" => {
+            let l = exp::zero_load_latency(LinkMode::NarrowWide);
+            println!("zero-load tile-to-adjacent-tile round trip: {l} cycles (paper: 18)");
+        }
+        "bandwidth" => {
+            let bw = BandwidthModel::default();
+            let (util, gbps) = exp::peak_bandwidth(1.23);
+            println!(
+                "wide link peak: {:.0} Gbps theoretical, {gbps:.0} Gbps measured \
+                 (utilization {:.1} %)",
+                bw.wide_link_gbps(),
+                util * 100.0
+            );
+            println!("duplex: {:.2} Tbps", bw.wide_duplex_tbps());
+            println!(
+                "7x7 mesh boundary aggregate: {:.1} TB/s (paper: 4.4)",
+                bw.mesh_boundary_tbs(7)
+            );
+        }
+        "wires" => {
+            let g = ChannelGeometry::default();
+            println!(
+                "duplex channel: {} wires (paper: ~1600), slice {:.0} um \
+                 (paper: 120), {} buffer-island sets (paper: 3)",
+                g.duplex_wires(&layout),
+                g.channel_width_um(&layout),
+                g.island_sets()
+            );
+        }
+        "scaling" => {
+            let m = floonoc::baseline::AxiMatrixModel::default();
+            println!("AXI4-matrix baseline scalability (per-stage ID tracker):");
+            for row in m.sweep(7) {
+                println!("{}", row.to_json());
+            }
+            println!(
+                "FlooNoC NI reorder-table entries (hop-independent): {}",
+                m.floonoc_ni_entries()
+            );
+        }
+        "all" => {
+            for e in [
+                "tab1", "tab2", "latency", "bandwidth", "wires", "fig6a", "fig6b",
+                "scaling", "fig5a", "fig5b",
+            ] {
+                println!("==================== {e} ====================");
+                let mut sub = args.clone();
+                sub.positional = vec![e.to_string()];
+                reproduce(&sub)?;
+            }
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = match args.opt("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config '{path}'"))?;
+            config::noc_config_from_json(&text)?
+        }
+        None => {
+            let n = args.opt_u64("mesh", 4)? as u8;
+            let mut c = NocConfig::mesh(n, n);
+            if args.flag("wide-only") {
+                c = c.wide_only();
+            }
+            c
+        }
+    };
+    let txns = args.opt_u64("txns", 64)?;
+    println!("config: {}", config::noc_config_to_json(&cfg));
+    let sys = NocSystem::new(cfg);
+    let tiles = sys.topo.num_tiles;
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                ..GenCfg::narrow_probe(NodeId(0), txns)
+            }),
+            dma: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                seed: 0xD0A + i as u64,
+                ..GenCfg::dma_burst(NodeId(0), (txns / 4).max(1), false)
+            }),
+        })
+        .collect();
+    let mut w = TiledWorkload::new(sys, profiles);
+    let ok = w.run_to_completion(50_000_000);
+    if !ok {
+        bail!("workload did not drain");
+    }
+    if !w.protocol_ok() {
+        bail!("AXI protocol violations detected");
+    }
+    let mut lat = floonoc::stats::LatencyRecorder::new();
+    let mut dma_lat = floonoc::stats::LatencyRecorder::new();
+    for t in &mut w.tiles {
+        if let Some(g) = t.core_gen.as_mut() {
+            lat.record(g.latencies.mean() as u64);
+        }
+        if let Some(g) = t.dma_gen.as_mut() {
+            dma_lat.record(g.latencies.mean() as u64);
+        }
+    }
+    let j = Json::obj(vec![
+        ("cycles", Json::Num(w.sys.now as f64)),
+        ("narrow_mean_latency", Json::Num(lat.mean())),
+        ("wide_mean_latency", Json::Num(dma_lat.mean())),
+        (
+            "req_net_flit_hops",
+            Json::Num(w.sys.router_flit_hops(0) as f64),
+        ),
+        (
+            "rsp_net_flit_hops",
+            Json::Num(w.sys.router_flit_hops(1) as f64),
+        ),
+    ]);
+    println!("{}", pretty(&j));
+    Ok(())
+}
+
+fn sweep(args: &Args) -> anyhow::Result<()> {
+    let what = args.pos(0).unwrap_or("rob");
+    let table = match what {
+        "rob" => report::ablation_table(
+            "wide-ROB size vs 16x1kB-read makespan (cycles)",
+            &exp::ablate_rob_size(&[16, 32, 64, 128, 256]),
+        ),
+        "buffers" => report::ablation_table(
+            "router input-buffer depth vs narrow latency under interference",
+            &exp::ablate_buffer_depth(&[1, 2, 4, 8]),
+        ),
+        "burst" => report::ablation_table(
+            "burst length vs effective wide utilization",
+            &exp::ablate_burst_len(&[0, 1, 3, 7, 15, 31]),
+        ),
+        "mesh" => report::ablation_table(
+            "mesh size vs delivered wide bytes/cycle (neighbor ring)",
+            &exp::scale_mesh(&[2, 3, 4, 6]),
+        ),
+        "output-reg" => report::ablation_table(
+            "router output register (0/1) vs zero-load latency",
+            &exp::ablate_output_reg(),
+        ),
+        other => bail!("unknown sweep '{other}'"),
+    };
+    print!("{table}");
+    Ok(())
+}
+
+fn dse(args: &Args) -> anyhow::Result<()> {
+    let n = args.opt_u64("mesh", 4)? as u8;
+    let dir = args.opt("artifacts").unwrap_or("artifacts");
+    floonoc::dse::run_dse(n, dir)
+}

@@ -1,0 +1,222 @@
+//! Memory endpoint models: tile SPM and boundary memory controllers.
+//!
+//! Both are fully pipelined fixed-latency request/response engines: a
+//! request accepted at cycle *t* produces its first response beat at
+//! *t + latency*, then one beat per cycle (the SPM's banked array and the
+//! controller's DRAM channel both sustain one beat/cycle at their port
+//! width). This is the behaviour the paper's latency budget attributes to
+//! "cluster-internal cuts and memory access latency" (§VI-A).
+
+use std::collections::VecDeque;
+
+use crate::axi::{AxReq, Resp};
+use crate::flit::NodeId;
+
+/// A memory access in flight inside the model.
+#[derive(Debug, Clone)]
+pub struct MemOp {
+    /// Originating node (for response routing by the target NI).
+    pub src: NodeId,
+    /// Echoed ROB index.
+    pub rob_idx: u32,
+    pub rob_req: bool,
+    pub atomic: bool,
+    pub req: AxReq,
+    pub is_read: bool,
+    /// Cycle at which the first response beat is ready.
+    ready_at: u64,
+    /// Beats already emitted.
+    beats_done: u32,
+}
+
+/// One response beat leaving the memory.
+#[derive(Debug, Clone, Copy)]
+pub struct MemRsp {
+    pub src: NodeId,
+    pub rob_idx: u32,
+    pub rob_req: bool,
+    pub atomic: bool,
+    pub id: u16,
+    pub is_read: bool,
+    pub beat: u32,
+    pub last: bool,
+    pub resp: Resp,
+}
+
+/// Fixed-latency pipelined memory port.
+#[derive(Debug)]
+pub struct MemModel {
+    /// Cycles from accept to first beat.
+    pub latency: u64,
+    /// In-flight + waiting ops, in acceptance order. Responses are emitted
+    /// in acceptance order (the target NI serializes onto one local ID, so
+    /// the memory must preserve order — §III-A).
+    ops: VecDeque<MemOp>,
+    /// Max ops in flight (accept backpressure beyond this).
+    pub max_outstanding: usize,
+    /// Total beats served (bandwidth accounting).
+    pub beats_served: u64,
+}
+
+impl MemModel {
+    pub fn new(latency: u64, max_outstanding: usize) -> Self {
+        MemModel {
+            latency,
+            ops: VecDeque::new(),
+            max_outstanding,
+            beats_served: 0,
+        }
+    }
+
+    pub fn can_accept(&self) -> bool {
+        self.ops.len() < self.max_outstanding
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Accept an operation at cycle `now`.
+    pub fn accept(
+        &mut self,
+        now: u64,
+        src: NodeId,
+        rob_idx: u32,
+        rob_req: bool,
+        atomic: bool,
+        req: AxReq,
+        is_read: bool,
+    ) {
+        assert!(self.can_accept(), "memory accept without can_accept");
+        self.ops.push_back(MemOp {
+            src,
+            rob_idx,
+            rob_req,
+            atomic,
+            req,
+            is_read,
+            ready_at: now + self.latency,
+            beats_done: 0,
+        });
+    }
+
+    /// Peek the head operation if it is ready to emit a beat at `now`
+    /// (without consuming). Used by the target NI to decide which physical
+    /// link the next response needs before committing to pop it.
+    pub fn peek_head(&self, now: u64) -> Option<&MemOp> {
+        let op = self.ops.front()?;
+        (now >= op.ready_at).then_some(op)
+    }
+
+    /// Emit at most one response beat this cycle (the head op, in order).
+    /// Writes produce a single B beat; reads produce `beats` R beats.
+    pub fn step(&mut self, now: u64) -> Option<MemRsp> {
+        let op = self.ops.front_mut()?;
+        if now < op.ready_at {
+            return None;
+        }
+        let total = if op.is_read { op.req.beats() } else { 1 };
+        let beat = op.beats_done;
+        let last = beat + 1 == total;
+        let rsp = MemRsp {
+            src: op.src,
+            rob_idx: op.rob_idx,
+            rob_req: op.rob_req,
+            atomic: op.atomic,
+            id: op.req.id,
+            is_read: op.is_read,
+            beat,
+            last,
+            resp: Resp::Okay,
+        };
+        op.beats_done += 1;
+        if last {
+            self.ops.pop_front();
+        }
+        self.beats_served += 1;
+        Some(rsp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::Burst;
+
+    fn req(len: u8) -> AxReq {
+        AxReq {
+            id: 1,
+            addr: 0x100,
+            len,
+            size: 6,
+            burst: Burst::Incr,
+            atop: false,
+        }
+    }
+
+    #[test]
+    fn read_latency_then_streaming() {
+        let mut m = MemModel::new(5, 4);
+        m.accept(10, NodeId(2), 7, true, false, req(3), true); // 4 beats
+        for t in 10..15 {
+            assert!(m.step(t).is_none(), "latency not yet elapsed at {t}");
+        }
+        let beats: Vec<_> = (15..19).map(|t| m.step(t).unwrap()).collect();
+        assert_eq!(beats.len(), 4);
+        assert_eq!(beats[0].beat, 0);
+        assert!(!beats[0].last);
+        assert!(beats[3].last);
+        assert!(m.is_idle());
+        assert_eq!(m.beats_served, 4);
+    }
+
+    #[test]
+    fn write_single_b_response() {
+        let mut m = MemModel::new(3, 4);
+        m.accept(0, NodeId(1), 0, false, false, req(15), false);
+        assert!(m.step(2).is_none());
+        let b = m.step(3).unwrap();
+        assert!(!b.is_read);
+        assert!(b.last);
+        assert!(m.is_idle());
+    }
+
+    #[test]
+    fn responses_in_acceptance_order() {
+        let mut m = MemModel::new(1, 4);
+        m.accept(0, NodeId(1), 10, true, false, req(0), true);
+        m.accept(0, NodeId(2), 20, true, false, req(0), true);
+        let a = m.step(1).unwrap();
+        let b = m.step(2).unwrap();
+        assert_eq!(a.rob_idx, 10);
+        assert_eq!(b.rob_idx, 20);
+    }
+
+    #[test]
+    fn pipelining_overlaps_latency() {
+        // Two back-to-back single-beat reads at latency 5: second completes
+        // one cycle after the first (pipelined), not 5 cycles after.
+        let mut m = MemModel::new(5, 4);
+        m.accept(0, NodeId(1), 0, true, false, req(0), true);
+        m.accept(1, NodeId(1), 1, true, false, req(0), true);
+        let mut done = Vec::new();
+        for t in 0..12 {
+            if let Some(r) = m.step(t) {
+                done.push((t, r.rob_idx));
+            }
+        }
+        assert_eq!(done, vec![(5, 0), (6, 1)]);
+    }
+
+    #[test]
+    fn outstanding_limit() {
+        let mut m = MemModel::new(1, 2);
+        m.accept(0, NodeId(1), 0, true, false, req(0), true);
+        m.accept(0, NodeId(1), 1, true, false, req(0), true);
+        assert!(!m.can_accept());
+    }
+}

@@ -1,0 +1,622 @@
+//! Initiator half of the AXI4 NI (paper Fig. 1).
+//!
+//! Accepts AXI requests from the attached bus (traffic generator / DMA /
+//! compute bridge), enforces **end-to-end flow control** (a request is
+//! only accepted once ROB space for its response and a reorder-table slot
+//! for its ID are reserved), injects request flits, and terminates
+//! response flits — bypassing in-order responses straight to the AXI
+//! interface and buffering out-of-order ones in the ROB.
+
+use crate::axi::{AxReq, AxiId, BResp, RBeat, Resp, WBeat};
+use crate::flit::{BusKind, FlooFlit, Header, NodeId, Payload};
+use crate::util::fifo::Fifo;
+
+use super::reorder::{ReorderTable, RspAction};
+use super::rob::RobAllocator;
+
+/// Static configuration of one initiator (one per bus per tile).
+#[derive(Debug, Clone)]
+pub struct InitiatorCfg {
+    pub bus: BusKind,
+    /// Distinct AXI IDs at this port (paper: 4-bit ⇒ 16).
+    pub num_ids: usize,
+    /// Max outstanding transactions per ID (reorder-table FIFO depth).
+    pub per_id_depth: usize,
+    /// Read-response ROB slots (beats). Paper: 2 kB/8 B = 256 narrow,
+    /// 8 kB/64 B = 128 wide.
+    pub rob_slots: u32,
+    /// Outstanding write slots (B responses live in SCM; one slot each).
+    pub wr_slots: u32,
+    /// Depth of the AXI-side request/response FIFOs.
+    pub port_depth: usize,
+}
+
+impl InitiatorCfg {
+    pub fn narrow_default() -> Self {
+        InitiatorCfg {
+            bus: BusKind::Narrow,
+            num_ids: 16,
+            per_id_depth: 4,
+            rob_slots: 256,
+            wr_slots: 16,
+            port_depth: 4,
+        }
+    }
+
+    pub fn wide_default() -> Self {
+        InitiatorCfg {
+            bus: BusKind::Wide,
+            num_ids: 16,
+            per_id_depth: 4,
+            rob_slots: 128,
+            wr_slots: 16,
+            port_depth: 4,
+        }
+    }
+}
+
+/// An in-progress outgoing W-beat stream (one packet on the request link).
+#[derive(Debug, Clone, Copy)]
+struct WStream {
+    req: AxReq,
+    dst: NodeId,
+    rob_idx: u32,
+    next_beat: u32,
+}
+
+/// Counters for the experiment harness.
+#[derive(Debug, Clone, Default)]
+pub struct InitiatorStats {
+    pub reads_issued: u64,
+    pub writes_issued: u64,
+    pub reads_completed: u64,
+    pub writes_completed: u64,
+    pub read_stall_cycles: u64,
+    pub write_stall_cycles: u64,
+}
+
+/// Initiator-side NI state for one AXI bus.
+#[derive(Debug)]
+pub struct Initiator {
+    pub cfg: InitiatorCfg,
+    pub node: NodeId,
+    // ----- AXI side (generator <-> NI) -----------------------------------
+    /// Read requests from the bus.
+    pub ar_in: Fifo<AxReq>,
+    /// Write requests from the bus (the NI streams the W beats itself;
+    /// the tuple's second field is the destination resolved by the caller's
+    /// address map — resolution happens at push time).
+    pub aw_in: Fifo<(AxReq, NodeId)>,
+    /// Same resolved-destination channel for reads.
+    pub ar_dst: Fifo<NodeId>,
+    /// Read data back to the bus.
+    pub r_out: Fifo<RBeat>,
+    /// Write responses back to the bus.
+    pub b_out: Fifo<BResp>,
+    // ----- reorder machinery ---------------------------------------------
+    r_table: ReorderTable,
+    r_rob: RobAllocator,
+    b_table: ReorderTable,
+    b_slots: RobAllocator,
+    /// Outgoing W-beat stream, if a write burst is mid-flight. While set,
+    /// this NI may not inject any other packet on the W link (wormhole).
+    w_stream: Option<WStream>,
+    /// Round-robin over IDs for ROB drains.
+    drain_rr: usize,
+    pub stats: InitiatorStats,
+}
+
+impl Initiator {
+    pub fn new(cfg: InitiatorCfg, node: NodeId) -> Self {
+        Initiator {
+            node,
+            ar_in: Fifo::new(cfg.port_depth),
+            aw_in: Fifo::new(cfg.port_depth),
+            ar_dst: Fifo::new(cfg.port_depth),
+            r_out: Fifo::new(cfg.port_depth),
+            b_out: Fifo::new(cfg.port_depth),
+            r_table: ReorderTable::new(cfg.num_ids, cfg.per_id_depth),
+            r_rob: RobAllocator::new(cfg.rob_slots),
+            b_table: ReorderTable::new(cfg.num_ids, cfg.per_id_depth),
+            b_slots: RobAllocator::new(cfg.wr_slots),
+            w_stream: None,
+            drain_rr: 0,
+            stats: InitiatorStats::default(),
+            cfg,
+        }
+    }
+
+    /// Convenience for generators: can another read with `id` be queued?
+    pub fn ar_ready(&self) -> bool {
+        !self.ar_in.is_full()
+    }
+
+    pub fn aw_ready(&self) -> bool {
+        !self.aw_in.is_full()
+    }
+
+    /// Queue a read request (generator side).
+    pub fn push_ar(&mut self, req: AxReq, dst: NodeId) {
+        self.ar_in.push(req);
+        self.ar_dst.push(dst);
+    }
+
+    /// Queue a write request (generator side).
+    pub fn push_aw(&mut self, req: AxReq, dst: NodeId) {
+        self.aw_in.push((req, dst));
+    }
+
+    /// Outstanding transactions currently tracked.
+    pub fn outstanding(&self) -> usize {
+        self.r_table.outstanding() + self.b_table.outstanding()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.outstanding() == 0
+            && self.w_stream.is_none()
+            && self.ar_in.is_empty()
+            && self.aw_in.is_empty()
+    }
+
+    /// ROB occupancy (read side), for the sizing ablation.
+    pub fn rob_occupancy(&self) -> f64 {
+        self.r_rob.occupancy()
+    }
+
+    pub fn rob_peak_slots(&self) -> u32 {
+        self.r_rob.peak_used()
+    }
+
+    pub fn reorder_stats(&self) -> (u64, u64) {
+        (
+            self.r_table.bypassed_beats + self.b_table.bypassed_beats,
+            self.r_table.buffered_beats + self.b_table.buffered_beats,
+        )
+    }
+
+    // ------------------------------------------------------------ injection
+
+    /// True when a W-beat stream is mid-flight (the caller must not let any
+    /// other packet onto the same physical link).
+    pub fn streaming_w(&self) -> bool {
+        self.w_stream.is_some()
+    }
+
+    /// Produce the next W-beat flit of the active stream, if any.
+    pub fn next_w_flit(&mut self, now: u64) -> Option<FlooFlit> {
+        let s = self.w_stream.as_mut()?;
+        let beat = s.next_beat;
+        let last = beat + 1 == s.req.beats();
+        let flit = FlooFlit::new(
+            Header {
+                dst: s.dst,
+                src: self.node,
+                rob_idx: s.rob_idx,
+                rob_req: true,
+                atomic: s.req.atop,
+                last,
+            },
+            match self.cfg.bus {
+                BusKind::Narrow => Payload::NarrowW {
+                    id: s.req.id,
+                    beat: WBeat { beat, last },
+                },
+                BusKind::Wide => Payload::WideW {
+                    id: s.req.id,
+                    beat: WBeat { beat, last },
+                },
+            },
+            now,
+        );
+        s.next_beat += 1;
+        if last {
+            self.w_stream = None;
+        }
+        Some(flit)
+    }
+
+    /// Try to issue the next request (AR preferred over AW via a simple
+    /// alternation embedded in FIFO order — callers alternate by arrival).
+    /// Returns the request flit to inject on the **request link**, or
+    /// `None` when nothing can issue this cycle (empty queues or flow
+    /// control refusing). Must not be called while `streaming_w()` on the
+    /// same physical link the AW would start its W stream on — the caller
+    /// (tile NI) enforces link-level wormhole atomicity.
+    pub fn try_issue(&mut self, now: u64, w_link_free: bool) -> Option<FlooFlit> {
+        // Reads first when both are pending and read flow control passes
+        // (matching the RTL's rr between AR/AW; the asymmetry is invisible
+        // at the throughput level because queues are short).
+        if let Some(req) = self.ar_in.front().copied() {
+            let beats = req.beats();
+            if self.r_table.can_push(req.id) && self.r_rob.can_alloc(beats) {
+                let grant = self.r_rob.alloc(beats).unwrap();
+                self.r_table.push(req.id, grant, beats);
+                self.ar_in.pop();
+                let dst = self.ar_dst.pop().expect("ar/dst queues in lockstep");
+                self.stats.reads_issued += 1;
+                return Some(FlooFlit::new(
+                    Header {
+                        dst,
+                        src: self.node,
+                        rob_idx: grant.base,
+                        rob_req: true,
+                        atomic: false,
+                        last: true,
+                    },
+                    match self.cfg.bus {
+                        BusKind::Narrow => Payload::NarrowAr(req),
+                        BusKind::Wide => Payload::WideAr(req),
+                    },
+                    now,
+                ));
+            } else {
+                self.stats.read_stall_cycles += 1;
+            }
+        }
+        if let Some(&(req, dst)) = self.aw_in.front() {
+            // A write needs: a B slot, a B reorder entry, and the W link
+            // free to start streaming beats right after the AW.
+            if w_link_free
+                && self.w_stream.is_none()
+                && self.b_table.can_push(req.id)
+                && self.b_slots.can_alloc(1)
+            {
+                let grant = self.b_slots.alloc(1).unwrap();
+                self.b_table.push(req.id, grant, 1);
+                self.aw_in.pop();
+                self.w_stream = Some(WStream {
+                    req,
+                    dst,
+                    rob_idx: grant.base,
+                    next_beat: 0,
+                });
+                self.stats.writes_issued += 1;
+                return Some(FlooFlit::new(
+                    Header {
+                        dst,
+                        src: self.node,
+                        rob_idx: grant.base,
+                        rob_req: true,
+                        atomic: req.atop,
+                        last: true,
+                    },
+                    match self.cfg.bus {
+                        BusKind::Narrow => Payload::NarrowAw(req),
+                        BusKind::Wide => Payload::WideAw(req),
+                    },
+                    now,
+                ));
+            } else if !self.aw_in.is_empty() {
+                self.stats.write_stall_cycles += 1;
+            }
+        }
+        None
+    }
+
+    // ------------------------------------------------------------ responses
+
+    /// Handle an arriving response flit addressed to this initiator.
+    /// Returns `false` when the flit could not be consumed this cycle
+    /// (AXI-side backpressure) — the caller leaves it in the link buffer.
+    pub fn handle_response(&mut self, flit: &FlooFlit) -> bool {
+        match flit.payload {
+            Payload::NarrowR(beat) | Payload::WideR(beat) => {
+                debug_assert_eq!(self.bus_matches_r(&flit.payload), true);
+                let (action, _slot) =
+                    match self.peek_r_action(beat.id, flit.header.rob_idx) {
+                        Some(a) => a,
+                        None => return false, // r_out full for a bypass
+                    };
+                let (action2, _slot2) = self.r_table.on_response_beat(
+                    beat.id,
+                    flit.header.rob_idx,
+                    beat.last,
+                );
+                debug_assert_eq!(action, action2);
+                match action2 {
+                    RspAction::Forward => {
+                        self.r_out.push(beat);
+                        if beat.last {
+                            let grant = self.r_table.complete_bypass(beat.id);
+                            self.r_rob.release(grant);
+                            self.stats.reads_completed += 1;
+                        }
+                    }
+                    RspAction::Buffer => {
+                        // Data would be written to ROB SRAM at `slot2`;
+                        // the simulator tracks occupancy, not bit patterns.
+                    }
+                }
+                true
+            }
+            Payload::NarrowB(resp) | Payload::WideB(resp) => {
+                let head_ready = !self.b_out.is_full();
+                if !head_ready {
+                    return false;
+                }
+                let (action, _) = self.b_table.on_response_beat(
+                    resp.id,
+                    flit.header.rob_idx,
+                    true,
+                );
+                match action {
+                    RspAction::Forward => {
+                        self.b_out.push(resp);
+                        let grant = self.b_table.complete_bypass(resp.id);
+                        self.b_slots.release(grant);
+                        self.stats.writes_completed += 1;
+                    }
+                    RspAction::Buffer => {}
+                }
+                true
+            }
+            _ => panic!("request-class flit delivered to initiator"),
+        }
+    }
+
+    fn bus_matches_r(&self, p: &Payload) -> bool {
+        matches!(
+            (self.cfg.bus, p),
+            (BusKind::Narrow, Payload::NarrowR(_)) | (BusKind::Wide, Payload::WideR(_))
+        )
+    }
+
+    /// Pre-check a read beat: would it bypass, and if so is there AXI-side
+    /// space? (Avoids mutating the table when we must stall.)
+    fn peek_r_action(&self, _id: AxiId, rob_idx: u32) -> Option<(RspAction, u32)> {
+        // A bypass lands in r_out immediately; a buffered beat does not
+        // touch r_out. We conservatively require r_out space only when the
+        // beat would bypass. Recompute cheaply: bypass iff head-of-FIFO.
+        let would_forward = self.r_table_would_forward(_id, rob_idx);
+        if would_forward && self.r_out.is_full() {
+            return None;
+        }
+        Some((
+            if would_forward {
+                RspAction::Forward
+            } else {
+                RspAction::Buffer
+            },
+            rob_idx,
+        ))
+    }
+
+    fn r_table_would_forward(&self, id: AxiId, rob_idx: u32) -> bool {
+        self.r_table.would_forward(id, rob_idx)
+    }
+
+    // --------------------------------------------------------------- drains
+
+    /// Forward one buffered-and-now-in-order beat from the ROB to the AXI
+    /// interface (one per cycle, round-robin over ready IDs). Called once
+    /// per cycle by the tile NI *after* response handling; skipped when a
+    /// bypass already used the AXI channel this cycle.
+    pub fn drain_cycle(&mut self) {
+        // Fast path: nothing buffered anywhere (the common case — most
+        // responses take the in-order bypass and never touch the ROB).
+        if !self.r_table.any_drainable() && !self.b_table.any_drainable() {
+            return;
+        }
+        // R drains.
+        if self.r_table.any_drainable() && !self.r_out.is_full() {
+            if let Some(id) = self.r_table.next_drain_ready(self.drain_rr) {
+                self.drain_rr = (id as usize + 1) % self.r_table.num_ids();
+                if let Some((_slot, last)) = self.r_table.drain_step(id) {
+                    // Reconstruct the beat for the AXI side.
+                    let beat_no = self.r_table.draining_beats_done(id) - 1;
+                    self.r_out.push(RBeat {
+                        id,
+                        beat: beat_no,
+                        last,
+                        resp: Resp::Okay,
+                    });
+                    if last {
+                        let grant = self.r_table.complete_drain(id);
+                        self.r_rob.release(grant);
+                        self.stats.reads_completed += 1;
+                    }
+                }
+            }
+        }
+        // B drains.
+        if self.b_table.any_drainable() && !self.b_out.is_full() {
+            if let Some(id) = self.b_table.next_drain_ready(0) {
+                if let Some((_slot, last)) = self.b_table.drain_step(id) {
+                    debug_assert!(last);
+                    self.b_out.push(BResp {
+                        id,
+                        resp: Resp::Okay,
+                    });
+                    let grant = self.b_table.complete_drain(id);
+                    self.b_slots.release(grant);
+                    self.stats.writes_completed += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::Burst;
+
+    fn rd(id: AxiId, len: u8) -> AxReq {
+        AxReq {
+            id,
+            addr: 0x2000,
+            len,
+            size: 3,
+            burst: Burst::Incr,
+            atop: false,
+        }
+    }
+
+    fn init() -> Initiator {
+        Initiator::new(InitiatorCfg::narrow_default(), NodeId(0))
+    }
+
+    fn rsp_flit(init_node: NodeId, id: AxiId, rob_idx: u32, beat: u32, last: bool) -> FlooFlit {
+        FlooFlit::new(
+            Header {
+                dst: init_node,
+                src: NodeId(5),
+                rob_idx,
+                rob_req: true,
+                atomic: false,
+                last,
+            },
+            Payload::NarrowR(RBeat {
+                id,
+                beat,
+                last,
+                resp: Resp::Okay,
+            }),
+            0,
+        )
+    }
+
+    #[test]
+    fn read_issue_allocates_and_injects() {
+        let mut i = init();
+        i.push_ar(rd(1, 3), NodeId(5));
+        let flit = i.try_issue(0, true).unwrap();
+        assert!(matches!(flit.payload, Payload::NarrowAr(_)));
+        assert_eq!(flit.header.dst, NodeId(5));
+        assert_eq!(flit.header.rob_idx, 0);
+        assert_eq!(i.outstanding(), 1);
+        assert_eq!(i.stats.reads_issued, 1);
+    }
+
+    #[test]
+    fn in_order_response_bypasses_to_axi() {
+        let mut i = init();
+        i.push_ar(rd(1, 1), NodeId(5));
+        let f = i.try_issue(0, true).unwrap();
+        let idx = f.header.rob_idx;
+        assert!(i.handle_response(&rsp_flit(NodeId(0), 1, idx, 0, false)));
+        assert!(i.handle_response(&rsp_flit(NodeId(0), 1, idx, 1, true)));
+        assert_eq!(i.r_out.len(), 2);
+        assert_eq!(i.stats.reads_completed, 1);
+        assert!(i.is_idle());
+        let (bypassed, buffered) = i.reorder_stats();
+        assert_eq!((bypassed, buffered), (2, 0));
+    }
+
+    #[test]
+    fn out_of_order_buffered_then_drained() {
+        let mut i = init();
+        i.push_ar(rd(1, 0), NodeId(5)); // txn A -> rob 0
+        i.push_ar(rd(1, 0), NodeId(6)); // txn B -> rob 1
+        let fa = i.try_issue(0, true).unwrap();
+        let fb = i.try_issue(0, true).unwrap();
+        // B's response first: buffered, nothing on AXI yet.
+        assert!(i.handle_response(&rsp_flit(NodeId(0), 1, fb.header.rob_idx, 0, true)));
+        assert_eq!(i.r_out.len(), 0);
+        // A's response: bypass.
+        assert!(i.handle_response(&rsp_flit(NodeId(0), 1, fa.header.rob_idx, 0, true)));
+        assert_eq!(i.r_out.len(), 1);
+        // Drain brings B out next cycle.
+        i.drain_cycle();
+        assert_eq!(i.r_out.len(), 2);
+        assert_eq!(i.stats.reads_completed, 2);
+        assert!(i.is_idle());
+    }
+
+    #[test]
+    fn flow_control_refuses_beyond_rob() {
+        let mut cfg = InitiatorCfg::narrow_default();
+        cfg.rob_slots = 4;
+        let mut i = Initiator::new(cfg, NodeId(0));
+        i.push_ar(rd(1, 3), NodeId(5)); // 4 beats: fills the ROB
+        i.push_ar(rd(2, 0), NodeId(5));
+        assert!(i.try_issue(0, true).is_some());
+        // Second read cannot issue: no ROB space.
+        assert!(i.try_issue(1, true).is_none());
+        assert!(i.stats.read_stall_cycles > 0);
+    }
+
+    #[test]
+    fn per_id_depth_limits_outstanding() {
+        let mut cfg = InitiatorCfg::narrow_default();
+        cfg.per_id_depth = 2;
+        let mut i = Initiator::new(cfg, NodeId(0));
+        for _ in 0..3 {
+            i.push_ar(rd(7, 0), NodeId(5));
+        }
+        assert!(i.try_issue(0, true).is_some());
+        assert!(i.try_issue(1, true).is_some());
+        assert!(i.try_issue(2, true).is_none(), "depth=2 per ID");
+    }
+
+    #[test]
+    fn write_streams_aw_then_w_beats() {
+        let mut i = init();
+        let mut w = rd(3, 1); // 2 beats
+        w.addr = 0x3000;
+        i.push_aw(w, NodeId(4));
+        let aw = i.try_issue(0, true).unwrap();
+        assert!(matches!(aw.payload, Payload::NarrowAw(_)));
+        assert!(i.streaming_w());
+        let w0 = i.next_w_flit(1).unwrap();
+        assert!(matches!(
+            w0.payload,
+            Payload::NarrowW { beat: WBeat { beat: 0, last: false }, .. }
+        ));
+        assert!(!w0.header.last);
+        let w1 = i.next_w_flit(2).unwrap();
+        assert!(w1.header.last);
+        assert!(!i.streaming_w());
+        // B response completes the write.
+        let b = FlooFlit::new(
+            Header {
+                dst: NodeId(0),
+                src: NodeId(4),
+                rob_idx: aw.header.rob_idx,
+                rob_req: true,
+                atomic: false,
+                last: true,
+            },
+            Payload::NarrowB(BResp {
+                id: 3,
+                resp: Resp::Okay,
+            }),
+            3,
+        );
+        assert!(i.handle_response(&b));
+        assert_eq!(i.b_out.len(), 1);
+        assert_eq!(i.stats.writes_completed, 1);
+        assert!(i.is_idle());
+    }
+
+    #[test]
+    fn aw_blocked_while_w_link_busy() {
+        let mut i = init();
+        i.push_aw(rd(1, 0), NodeId(4));
+        assert!(i.try_issue(0, false).is_none(), "W link busy: AW must wait");
+        assert!(i.try_issue(0, true).is_some());
+    }
+
+    #[test]
+    fn response_backpressure_stalls_flit() {
+        let mut i = init();
+        // Fill r_out completely.
+        i.push_ar(rd(1, 3), NodeId(5));
+        let f = i.try_issue(0, true).unwrap();
+        for beat in 0..4u32 {
+            let fl = rsp_flit(NodeId(0), 1, f.header.rob_idx, beat, beat == 3);
+            if beat < 4 {
+                // port_depth = 4: all four fit.
+                assert!(i.handle_response(&fl));
+            }
+        }
+        // Next transaction's response cannot bypass into a full r_out.
+        i.push_ar(rd(1, 0), NodeId(5));
+        let f2 = i.try_issue(1, true).unwrap();
+        let fl = rsp_flit(NodeId(0), 1, f2.header.rob_idx, 0, true);
+        assert!(!i.handle_response(&fl), "must stall, r_out full");
+        // Generator consumes; retry succeeds.
+        i.r_out.pop();
+        assert!(i.handle_response(&fl));
+    }
+}

@@ -1,0 +1,29 @@
+//! AXI4 Network Interface — the paper's key contribution (§III-A).
+//!
+//! The NI decouples the AXI4 protocol from the NoC link-level protocol so
+//! routers never track transaction state:
+//!
+//! * **end-to-end flow control** — a request enters the network only after
+//!   reorder-buffer space for its *response* has been reserved;
+//! * **[`rob::RobAllocator`]** — dynamic, arbitrary-burst-length allocation
+//!   of response storage (SRAM for R data, SCM for tiny B responses);
+//! * **[`reorder::ReorderTable`]** — one FIFO of ROB indices per AXI ID;
+//!   a response whose index is at the head of its ID FIFO is *in order*
+//!   and bypasses the ROB straight to the AXI interface (this single rule
+//!   implements both paper optimizations: the first response of a stream,
+//!   and same-destination streams under deterministic routing);
+//! * **meta FIFO** (target side) — stores the request's source and ordering
+//!   info so responses can be routed back; non-atomic requests are
+//!   serialized onto one local ID, atomics get separate meta buffers;
+//! * **[`initiator::Initiator`] / [`target::Target`]** — the two halves,
+//!   instantiated once per AXI bus (narrow + wide) per tile.
+
+pub mod rob;
+pub mod reorder;
+pub mod initiator;
+pub mod target;
+
+pub use initiator::{Initiator, InitiatorCfg};
+pub use reorder::{ReorderTable, RspAction};
+pub use rob::RobAllocator;
+pub use target::{Target, TargetCfg};

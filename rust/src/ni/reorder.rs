@@ -1,0 +1,392 @@
+//! Reorder table: per-AXI-ID FIFOs of ROB grants.
+//!
+//! Paper §III-A: "The reorder table, which is used for the ROB management,
+//! consists of a FIFO for each AXI4 ID that can hold a configurable number
+//! of indexes into the ROB (the depth corresponds to the number of
+//! outstanding transactions for each ID)."
+//!
+//! The in-order test is the paper's "unique identifier" mechanism: each
+//! response echoes the `rob_idx` of its request; if that index equals the
+//! head of its ID's FIFO **and** the head is not already draining buffered
+//! data, the response is in order and is forwarded directly to the AXI
+//! interface (bypassing ROB storage). This one rule subsumes both paper
+//! optimizations (first-of-stream, and same-destination streams under
+//! deterministic routing).
+
+use crate::axi::AxiId;
+use crate::util::fifo::Fifo;
+
+use super::rob::RobGrant;
+
+/// State of one outstanding transaction in its ID FIFO.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryState {
+    /// Waiting for its response; no beats arrived yet.
+    Pending,
+    /// Response is arriving in order and streaming straight to AXI.
+    Bypassing { beats_done: u32 },
+    /// Response arrived out of order; beats accumulate in the ROB.
+    Buffering { beats_done: u32 },
+    /// Fully buffered in the ROB, waiting to reach the FIFO head.
+    Complete,
+    /// At the head and draining buffered beats to AXI, one per cycle.
+    Draining { beats_done: u32 },
+}
+
+/// One outstanding transaction tracked by the reorder table.
+#[derive(Debug, Clone, Copy)]
+pub struct Entry {
+    pub grant: RobGrant,
+    pub beats: u32,
+    pub state: EntryState,
+}
+
+/// What the NI should do with an arriving response beat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RspAction {
+    /// Forward to the AXI interface this cycle (in-order bypass).
+    Forward,
+    /// Write into ROB storage at the grant's slots; drain later.
+    Buffer,
+}
+
+/// Per-ID reorder bookkeeping for one response channel (R or B) of one bus.
+#[derive(Debug)]
+pub struct ReorderTable {
+    /// FIFO per AXI ID; index = ID value.
+    fifos: Vec<Fifo<Entry>>,
+    /// Total outstanding entries across all IDs (O(1) idle check).
+    count: usize,
+    /// Entries currently in `Complete`/`Draining` state (O(1) guard for
+    /// the drain scheduler — most responses bypass, so this is usually 0).
+    drainable: usize,
+    /// Statistics.
+    pub bypassed_beats: u64,
+    pub buffered_beats: u64,
+    pub drained_beats: u64,
+}
+
+impl ReorderTable {
+    /// `num_ids` distinct AXI IDs, each with `depth` outstanding txns max.
+    pub fn new(num_ids: usize, depth: usize) -> Self {
+        ReorderTable {
+            fifos: (0..num_ids).map(|_| Fifo::new(depth)).collect(),
+            count: 0,
+            drainable: 0,
+            bypassed_beats: 0,
+            buffered_beats: 0,
+            drained_beats: 0,
+        }
+    }
+
+    pub fn num_ids(&self) -> usize {
+        self.fifos.len()
+    }
+
+    /// Can a new transaction with `id` be tracked? (FIFO depth = max
+    /// outstanding per ID; part of end-to-end flow control.)
+    pub fn can_push(&self, id: AxiId) -> bool {
+        !self.fifos[id as usize].is_full()
+    }
+
+    /// Register a new outstanding transaction (called at request injection,
+    /// after the ROB grant succeeded).
+    pub fn push(&mut self, id: AxiId, grant: RobGrant, beats: u32) {
+        self.fifos[id as usize].push(Entry {
+            grant,
+            beats,
+            state: EntryState::Pending,
+        });
+        self.count += 1;
+    }
+
+    /// Total outstanding transactions across all IDs (O(1)).
+    pub fn outstanding(&self) -> usize {
+        self.count
+    }
+
+    /// Pure query: would a response beat for (`id`, `rob_idx`) bypass to
+    /// the AXI interface right now? Mirrors the decision logic of
+    /// [`Self::on_response_beat`] without mutating (used for AXI-side
+    /// backpressure checks).
+    pub fn would_forward(&self, id: AxiId, rob_idx: u32) -> bool {
+        let fifo = &self.fifos[id as usize];
+        let Some(head) = fifo.front() else { return false };
+        // A beat may only bypass if it is the head's AND the head has no
+        // beats parked in the ROB (Pending/Bypassing): once any beat of a
+        // burst was buffered, later beats must buffer too, or they would
+        // overtake their own burst (same-ID beat-order violation).
+        head.grant.base == rob_idx
+            && matches!(
+                head.state,
+                EntryState::Pending | EntryState::Bypassing { .. }
+            )
+    }
+
+    /// Beats already drained for `id`'s head entry (0 when not draining).
+    pub fn draining_beats_done(&self, id: AxiId) -> u32 {
+        match self.fifos[id as usize].front().map(|e| e.state) {
+            Some(EntryState::Draining { beats_done }) => beats_done,
+            _ => 0,
+        }
+    }
+
+    /// A response beat arrived for `id` with echoed `rob_idx`. Decide
+    /// bypass vs buffer and update entry state. Returns the action plus the
+    /// absolute ROB slot for `Buffer` actions.
+    ///
+    /// `is_last` marks the final beat of the response burst.
+    pub fn on_response_beat(&mut self, id: AxiId, rob_idx: u32, is_last: bool) -> (RspAction, u32) {
+        let fifo = &mut self.fifos[id as usize];
+        // Locate the entry by its grant base. Hardware addresses the table
+        // by rob_idx directly; the FIFO scan here is over ≤depth entries.
+        let do_bypass = fifo
+            .front()
+            .map(|e| {
+                e.grant.base == rob_idx
+                    && matches!(
+                        e.state,
+                        EntryState::Pending | EntryState::Bypassing { .. }
+                    )
+            })
+            .unwrap_or(false);
+        let e = fifo
+            .iter_mut()
+            .find(|e| e.grant.base == rob_idx)
+            .expect("response for unknown rob_idx (protocol violation)");
+        let beat_no = match e.state {
+            EntryState::Pending => 0,
+            EntryState::Bypassing { beats_done } | EntryState::Buffering { beats_done } => {
+                beats_done
+            }
+            ref s => panic!("beat for entry in state {s:?}"),
+        };
+        debug_assert!(beat_no < e.beats);
+        debug_assert_eq!(
+            is_last,
+            beat_no + 1 == e.beats,
+            "last flag must match beat count"
+        );
+        if do_bypass {
+            e.state = EntryState::Bypassing {
+                beats_done: beat_no + 1,
+            };
+            self.bypassed_beats += 1;
+            (RspAction::Forward, rob_idx)
+        } else {
+            let slot = e.grant.base + beat_no;
+            if beat_no + 1 == e.beats {
+                e.state = EntryState::Complete;
+                self.drainable += 1;
+            } else {
+                e.state = EntryState::Buffering {
+                    beats_done: beat_no + 1,
+                };
+            }
+            self.buffered_beats += 1;
+            (RspAction::Buffer, slot)
+        }
+    }
+
+    /// A bypassing head entry finished (its last beat was forwarded).
+    /// Pops it and returns its grant for ROB release.
+    pub fn complete_bypass(&mut self, id: AxiId) -> RobGrant {
+        let fifo = &mut self.fifos[id as usize];
+        let head = fifo.front().expect("bypass completion without head");
+        match head.state {
+            EntryState::Bypassing { beats_done } if beats_done == head.beats => {}
+            ref s => panic!("complete_bypass in state {s:?}"),
+        }
+        self.count -= 1;
+        fifo.pop().unwrap().grant
+    }
+
+    /// If the head of `id`'s FIFO is `Complete` (fully buffered), start or
+    /// continue draining: returns the ROB slot to read this cycle and
+    /// whether this is the final beat. The caller forwards one beat per
+    /// cycle to the AXI interface. Returns `None` when nothing to drain.
+    pub fn drain_step(&mut self, id: AxiId) -> Option<(u32, bool)> {
+        let fifo = &mut self.fifos[id as usize];
+        let head = fifo.front_mut()?;
+        let beats_done = match head.state {
+            EntryState::Complete => 0,
+            EntryState::Draining { beats_done } => beats_done,
+            _ => return None,
+        };
+        let slot = head.grant.base + beats_done;
+        let last = beats_done + 1 == head.beats;
+        head.state = EntryState::Draining {
+            beats_done: beats_done + 1,
+        };
+        self.drained_beats += 1;
+        Some((slot, last))
+    }
+
+    /// Pop a fully drained head, returning its grant for ROB release.
+    pub fn complete_drain(&mut self, id: AxiId) -> RobGrant {
+        let fifo = &mut self.fifos[id as usize];
+        let head = fifo.front().expect("drain completion without head");
+        match head.state {
+            EntryState::Draining { beats_done } if beats_done == head.beats => {}
+            ref s => panic!("complete_drain in state {s:?}"),
+        }
+        self.count -= 1;
+        self.drainable -= 1;
+        fifo.pop().unwrap().grant
+    }
+
+    /// Allocation-free scheduler query: the first drain-ready ID at or
+    /// after `start` (wrapping), for round-robin drain selection.
+    pub fn next_drain_ready(&self, start: usize) -> Option<AxiId> {
+        let n = self.fifos.len();
+        for off in 0..n {
+            let id = (start + off) % n;
+            if matches!(
+                self.fifos[id].front().map(|e| e.state),
+                Some(EntryState::Complete) | Some(EntryState::Draining { .. })
+            ) {
+                return Some(id as AxiId);
+            }
+        }
+        None
+    }
+
+    /// True when any entry exists at all (O(1)).
+    pub fn any_outstanding(&self) -> bool {
+        self.count > 0
+    }
+
+    /// True when some entry is fully buffered and awaiting drain (O(1)).
+    pub fn any_drainable(&self) -> bool {
+        self.drainable > 0
+    }
+
+    /// IDs whose head is complete and ready to drain (for the NI scheduler).
+    pub fn drain_ready_ids(&self) -> Vec<AxiId> {
+        self.fifos
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| {
+                matches!(
+                    f.front().map(|e| e.state),
+                    Some(EntryState::Complete) | Some(EntryState::Draining { .. })
+                )
+            })
+            .map(|(i, _)| i as AxiId)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> ReorderTable {
+        ReorderTable::new(4, 4)
+    }
+
+    fn grant(base: u32, len: u32) -> RobGrant {
+        RobGrant { base, len }
+    }
+
+    #[test]
+    fn in_order_single_bypasses() {
+        let mut t = table();
+        t.push(1, grant(0, 1), 1);
+        let (a, slot) = t.on_response_beat(1, 0, true);
+        assert_eq!(a, RspAction::Forward);
+        assert_eq!(slot, 0);
+        let g = t.complete_bypass(1);
+        assert_eq!(g, grant(0, 1));
+        assert_eq!(t.bypassed_beats, 1);
+        assert_eq!(t.outstanding(), 0);
+    }
+
+    #[test]
+    fn out_of_order_buffers_then_drains() {
+        let mut t = table();
+        t.push(1, grant(0, 2), 2); // txn A, 2 beats
+        t.push(1, grant(2, 1), 1); // txn B, 1 beat
+        // B's response arrives first -> must buffer at its slot.
+        let (a, slot) = t.on_response_beat(1, 2, true);
+        assert_eq!(a, RspAction::Buffer);
+        assert_eq!(slot, 2);
+        // A arrives -> head -> bypasses.
+        assert_eq!(t.on_response_beat(1, 0, false).0, RspAction::Forward);
+        assert_eq!(t.on_response_beat(1, 0, true).0, RspAction::Forward);
+        let ga = t.complete_bypass(1);
+        assert_eq!(ga, grant(0, 2));
+        // Now B (complete in ROB) drains.
+        assert_eq!(t.drain_step(1), Some((2, true)));
+        let gb = t.complete_drain(1);
+        assert_eq!(gb, grant(2, 1));
+        assert_eq!(t.outstanding(), 0);
+        assert_eq!(t.buffered_beats, 1);
+        assert_eq!(t.drained_beats, 1);
+    }
+
+    #[test]
+    fn different_ids_independent() {
+        let mut t = table();
+        t.push(0, grant(0, 1), 1);
+        t.push(1, grant(1, 1), 1);
+        // ID 1 responds first; still head of its own FIFO -> bypass.
+        assert_eq!(t.on_response_beat(1, 1, true).0, RspAction::Forward);
+        assert_eq!(t.on_response_beat(0, 0, true).0, RspAction::Forward);
+    }
+
+    #[test]
+    fn depth_limit_flow_control() {
+        let mut t = ReorderTable::new(2, 2);
+        assert!(t.can_push(0));
+        t.push(0, grant(0, 1), 1);
+        t.push(0, grant(1, 1), 1);
+        assert!(!t.can_push(0));
+        assert!(t.can_push(1), "other IDs unaffected");
+    }
+
+    #[test]
+    fn head_draining_blocks_bypass() {
+        let mut t = table();
+        t.push(1, grant(0, 1), 1); // A
+        t.push(1, grant(1, 2), 2); // B
+        t.push(1, grant(3, 1), 1); // C
+        // B arrives out of order (buffered, complete).
+        t.on_response_beat(1, 1, false);
+        t.on_response_beat(1, 1, true);
+        // A arrives, bypasses, pops.
+        t.on_response_beat(1, 0, true);
+        t.complete_bypass(1);
+        // B is head & complete -> drain begins.
+        assert_eq!(t.drain_step(1), Some((1, false)));
+        // C's response arrives while B drains: C is not head -> buffer.
+        let (a, slot) = t.on_response_beat(1, 3, true);
+        assert_eq!(a, RspAction::Buffer);
+        assert_eq!(slot, 3);
+        // Finish draining B.
+        assert_eq!(t.drain_step(1), Some((2, true)));
+        t.complete_drain(1);
+        // C drains next.
+        assert_eq!(t.drain_step(1), Some((3, true)));
+        t.complete_drain(1);
+    }
+
+    #[test]
+    fn drain_ready_ids_reports() {
+        let mut t = table();
+        t.push(2, grant(0, 1), 1);
+        t.push(2, grant(1, 1), 1);
+        t.on_response_beat(2, 1, true); // second txn buffered
+        assert!(t.drain_ready_ids().is_empty(), "head still pending");
+        t.on_response_beat(2, 0, true); // head bypasses
+        t.complete_bypass(2);
+        assert_eq!(t.drain_ready_ids(), vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown rob_idx")]
+    fn unknown_response_panics() {
+        let mut t = table();
+        t.on_response_beat(0, 5, true);
+    }
+}

@@ -1,0 +1,505 @@
+//! Target half of the AXI4 NI.
+//!
+//! Terminates request flits at a node: pairs AW headers (narrow_req link)
+//! with their W-beat streams (wide link for the wide bus, same link for
+//! the narrow bus), forwards operations to the local memory, and turns
+//! memory responses back into response flits addressed to the request's
+//! source.
+//!
+//! The paper's **meta FIFO** is the per-operation `(src, rob_idx, rob_req)`
+//! record that travels with each memory op: "the source ID of the request
+//! is stored in the meta FIFO, together with the information required for
+//! ordering the response. The order of all incoming non-atomic responses
+//! is preserved by serializing them with an identical AXI4 ID" — our
+//! in-order [`MemModel`] plays that serialized role, and atomics go
+//! through a separate bounded meta buffer exactly as described.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+use crate::axi::AxReq;
+use crate::flit::{BusKind, FlooFlit, Header, NodeId, Payload};
+use crate::mem::{MemModel, MemRsp};
+
+/// Target-side configuration (per node).
+#[derive(Debug, Clone)]
+pub struct TargetCfg {
+    /// Latency of the local memory (SPM ≈ 5, memory controller ≈ 30+).
+    pub mem_latency: u64,
+    /// Max in-flight ops per memory port.
+    pub mem_outstanding: usize,
+    /// Pending (unmatched) AW / completed-W-burst queue bound per source.
+    pub pending_writes: usize,
+    /// Separate meta buffer depth for atomics.
+    pub atomic_slots: usize,
+}
+
+impl TargetCfg {
+    /// Tile SPM. `mem_latency = 7` is the zero-load calibration constant:
+    /// the paper's §VI-A attributes 9 cycles of the 18-cycle round trip to
+    /// "cluster-internal cuts and memory access latency"; we fold the two
+    /// cluster-interconnect cut registers into the SPM access constant
+    /// (5-cycle banked SPM + 2 cut cycles), giving exactly the published
+    /// 18-cycle tile-to-adjacent-tile round trip.
+    pub fn spm_default() -> Self {
+        TargetCfg {
+            mem_latency: 7,
+            mem_outstanding: 16,
+            pending_writes: 4,
+            atomic_slots: 4,
+        }
+    }
+
+    pub fn mem_ctrl_default() -> Self {
+        TargetCfg {
+            mem_latency: 30,
+            mem_outstanding: 32,
+            pending_writes: 8,
+            atomic_slots: 4,
+        }
+    }
+}
+
+/// An AW waiting for its W burst (or vice versa).
+#[derive(Debug, Clone, Copy)]
+struct PendingAw {
+    req: AxReq,
+    src: NodeId,
+    rob_idx: u32,
+    rob_req: bool,
+    atomic: bool,
+}
+
+/// Write-reassembly state per (source, bus).
+#[derive(Debug, Default)]
+struct WriteAssembly {
+    /// AWs in arrival order, not yet matched to a complete W burst.
+    aws: VecDeque<PendingAw>,
+    /// Beat count of the W burst currently streaming in.
+    cur_beats: u32,
+    /// Completed W bursts (beat counts) not yet matched to an AW.
+    done_bursts: VecDeque<u32>,
+}
+
+/// Counters.
+#[derive(Debug, Clone, Default)]
+pub struct TargetStats {
+    pub reads_served: u64,
+    pub writes_served: u64,
+    pub atomics_served: u64,
+    pub req_stall_cycles: u64,
+}
+
+/// Target-side NI state for one node (tile or memory controller).
+#[derive(Debug)]
+pub struct Target {
+    pub cfg: TargetCfg,
+    pub node: NodeId,
+    /// 64-bit port memory.
+    pub narrow_mem: MemModel,
+    /// 512-bit port memory.
+    pub wide_mem: MemModel,
+    assembly: HashMap<(u16, BusKind), WriteAssembly>,
+    /// Atomics meta buffer (separate, as in the paper). Counts in-flight
+    /// atomic ops; bounded.
+    atomics_inflight: usize,
+    /// Round-robin between narrow-mem and wide-mem for narrow_rsp
+    /// injection (wide B competes with narrow R/B there).
+    rsp_rr: bool,
+    pub stats: TargetStats,
+}
+
+impl Target {
+    pub fn new(cfg: TargetCfg, node: NodeId) -> Self {
+        Target {
+            narrow_mem: MemModel::new(cfg.mem_latency, cfg.mem_outstanding),
+            wide_mem: MemModel::new(cfg.mem_latency, cfg.mem_outstanding),
+            assembly: HashMap::new(),
+            atomics_inflight: 0,
+            rsp_rr: false,
+            stats: TargetStats::default(),
+            node,
+            cfg,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.narrow_mem.is_idle()
+            && self.wide_mem.is_idle()
+            && self.atomics_inflight == 0
+            && self
+                .assembly
+                .values()
+                .all(|a| a.aws.is_empty() && a.done_bursts.is_empty() && a.cur_beats == 0)
+    }
+
+    /// Handle a request-class flit. Returns `false` when it cannot be
+    /// consumed this cycle (memory/assembly backpressure): the caller
+    /// leaves it in the link buffer, modelling ready deassertion.
+    pub fn handle_request(&mut self, flit: &FlooFlit, now: u64) -> bool {
+        let h = flit.header;
+        match flit.payload {
+            Payload::NarrowAr(req) => self.accept_read(BusKind::Narrow, req, h, now),
+            Payload::WideAr(req) => self.accept_read(BusKind::Wide, req, h, now),
+            Payload::NarrowAw(req) => self.accept_aw(BusKind::Narrow, req, h, now),
+            Payload::WideAw(req) => self.accept_aw(BusKind::Wide, req, h, now),
+            Payload::NarrowW { beat, .. } => {
+                self.accept_w(BusKind::Narrow, h.src, beat.last, now)
+            }
+            Payload::WideW { beat, .. } => {
+                self.accept_w(BusKind::Wide, h.src, beat.last, now)
+            }
+            _ => panic!("response-class flit delivered to target"),
+        }
+    }
+
+    fn mem(&mut self, bus: BusKind) -> &mut MemModel {
+        match bus {
+            BusKind::Narrow => &mut self.narrow_mem,
+            BusKind::Wide => &mut self.wide_mem,
+        }
+    }
+
+    fn accept_read(&mut self, bus: BusKind, req: AxReq, h: Header, now: u64) -> bool {
+        if !self.mem(bus).can_accept() {
+            self.stats.req_stall_cycles += 1;
+            return false;
+        }
+        self.mem(bus)
+            .accept(now, h.src, h.rob_idx, h.rob_req, h.atomic, req, true);
+        self.stats.reads_served += 1;
+        true
+    }
+
+    fn accept_aw(&mut self, bus: BusKind, req: AxReq, h: Header, now: u64) -> bool {
+        if h.atomic && self.atomics_inflight >= self.cfg.atomic_slots {
+            self.stats.req_stall_cycles += 1;
+            return false;
+        }
+        let asm = self.assembly.entry((h.src.0, bus)).or_default();
+        if asm.aws.len() >= self.cfg.pending_writes {
+            self.stats.req_stall_cycles += 1;
+            return false;
+        }
+        if h.atomic {
+            self.atomics_inflight += 1;
+        }
+        asm.aws.push_back(PendingAw {
+            req,
+            src: h.src,
+            rob_idx: h.rob_idx,
+            rob_req: h.rob_req,
+            atomic: h.atomic,
+        });
+        self.try_submit_write(h.src.0, bus, now);
+        true
+    }
+
+    fn accept_w(&mut self, bus: BusKind, src: NodeId, last: bool, now: u64) -> bool {
+        let asm = self.assembly.entry((src.0, bus)).or_default();
+        if last && asm.done_bursts.len() >= self.cfg.pending_writes {
+            self.stats.req_stall_cycles += 1;
+            return false;
+        }
+        asm.cur_beats += 1;
+        if last {
+            let beats = asm.cur_beats;
+            asm.cur_beats = 0;
+            asm.done_bursts.push_back(beats);
+            self.try_submit_write(src.0, bus, now);
+        }
+        true
+    }
+
+    /// Match the oldest AW with the oldest completed W burst and hand the
+    /// write to memory when it has room.
+    fn try_submit_write(&mut self, src: u16, bus: BusKind, now: u64) {
+        // Split borrows: decide, then act.
+        let ready = {
+            let asm = self.assembly.get(&(src, bus)).unwrap();
+            !asm.aws.is_empty() && !asm.done_bursts.is_empty()
+        };
+        if !ready || !self.mem(bus).can_accept() {
+            return;
+        }
+        let (aw, beats) = {
+            let asm = self.assembly.get_mut(&(src, bus)).unwrap();
+            (asm.aws.pop_front().unwrap(), asm.done_bursts.pop_front().unwrap())
+        };
+        debug_assert_eq!(
+            beats,
+            aw.req.beats(),
+            "W burst length must match its AW (src {src})"
+        );
+        self.mem(bus)
+            .accept(now, aw.src, aw.rob_idx, aw.rob_req, aw.atomic, aw.req, false);
+        if aw.atomic {
+            self.stats.atomics_served += 1;
+        } else {
+            self.stats.writes_served += 1;
+        }
+    }
+
+    /// Retry deferred write submissions (memory freed up this cycle).
+    pub fn pump_writes(&mut self, now: u64) {
+        if self.assembly.is_empty() {
+            return; // fast path: no write reassembly in flight
+        }
+        let mut first: Option<(u16, BusKind)> = None;
+        for (&k, a) in &self.assembly {
+            if !a.aws.is_empty() && !a.done_bursts.is_empty() {
+                first = Some(k);
+                break;
+            }
+        }
+        // At most one deferred submission per cycle matters (the memory
+        // accepts one op per port per cycle anyway); avoids allocating a
+        // key list in the per-node per-cycle path.
+        if let Some((src, bus)) = first {
+            self.try_submit_write(src, bus, now);
+        }
+    }
+
+    /// Is the narrow memory ready to emit a response beat at `now`?
+    pub fn narrow_head_ready(&self, now: u64) -> bool {
+        self.narrow_mem.peek_head(now).is_some()
+    }
+
+    /// Wide memory head readiness: `Some(is_read)` when a beat is ready.
+    pub fn wide_head(&self, now: u64) -> Option<bool> {
+        self.wide_mem.peek_head(now).map(|op| op.is_read)
+    }
+
+    /// Pop the next narrow-memory response beat as a flit (narrow R or B).
+    /// The caller (tile NI injection logic) owns wormhole contiguity: once
+    /// a multi-beat R burst starts it must keep calling this source until
+    /// the `last` flit.
+    pub fn pop_narrow(&mut self, now: u64) -> Option<FlooFlit> {
+        let rsp = self.narrow_mem.step(now)?;
+        if rsp.atomic && !rsp.is_read {
+            self.atomics_inflight -= 1;
+        }
+        Some(self.rsp_to_flit(BusKind::Narrow, rsp, now))
+    }
+
+    /// Pop the next wide-memory response beat as a flit (wide R or B).
+    pub fn pop_wide(&mut self, now: u64) -> Option<FlooFlit> {
+        let rsp = self.wide_mem.step(now)?;
+        if rsp.atomic && !rsp.is_read {
+            self.atomics_inflight -= 1;
+        }
+        Some(self.rsp_to_flit(BusKind::Wide, rsp, now))
+    }
+
+    /// Round-robin tiebreak bit for the caller's response arbitration.
+    pub fn flip_rr(&mut self) -> bool {
+        self.rsp_rr = !self.rsp_rr;
+        self.rsp_rr
+    }
+
+    fn rsp_to_flit(&self, bus: BusKind, rsp: MemRsp, now: u64) -> FlooFlit {
+        use crate::axi::{BResp, RBeat};
+        let header = Header {
+            dst: rsp.src,
+            src: self.node,
+            rob_idx: rsp.rob_idx,
+            rob_req: rsp.rob_req,
+            atomic: rsp.atomic,
+            last: rsp.last,
+        };
+        let payload = match (bus, rsp.is_read) {
+            (BusKind::Narrow, true) => Payload::NarrowR(RBeat {
+                id: rsp.id,
+                beat: rsp.beat,
+                last: rsp.last,
+                resp: rsp.resp,
+            }),
+            (BusKind::Wide, true) => Payload::WideR(RBeat {
+                id: rsp.id,
+                beat: rsp.beat,
+                last: rsp.last,
+                resp: rsp.resp,
+            }),
+            (BusKind::Narrow, false) => Payload::NarrowB(BResp {
+                id: rsp.id,
+                resp: rsp.resp,
+            }),
+            (BusKind::Wide, false) => Payload::WideB(BResp {
+                id: rsp.id,
+                resp: rsp.resp,
+            }),
+        };
+        FlooFlit::new(header, payload, now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::Burst;
+
+    fn req(id: u16, len: u8, atop: bool) -> AxReq {
+        AxReq {
+            id,
+            addr: 0x40,
+            len,
+            size: 6,
+            burst: Burst::Incr,
+            atop,
+        }
+    }
+
+    fn hdr(src: u16, rob_idx: u32, atomic: bool, last: bool) -> Header {
+        Header {
+            dst: NodeId(9),
+            src: NodeId(src),
+            rob_idx,
+            rob_req: true,
+            atomic,
+            last,
+        }
+    }
+
+    fn fl(p: Payload, h: Header) -> FlooFlit {
+        FlooFlit::new(h, p, 0)
+    }
+
+    #[test]
+    fn read_request_to_response_flits() {
+        let mut t = Target::new(TargetCfg::spm_default(), NodeId(9));
+        let h = hdr(2, 5, false, true);
+        assert!(t.handle_request(&fl(Payload::WideAr(req(1, 1, false)), h), 0));
+        let lat = t.cfg.mem_latency;
+        assert!(t.pop_wide(lat - 1).is_none(), "nothing before the latency");
+        let r0 = t.pop_wide(lat).unwrap();
+        assert_eq!(r0.header.dst, NodeId(2));
+        assert_eq!(r0.header.rob_idx, 5);
+        assert!(matches!(r0.payload, Payload::WideR(b) if b.beat == 0 && !b.last));
+        let r1 = t.pop_wide(lat + 1).unwrap();
+        assert!(r1.header.last);
+        assert!(t.is_idle());
+        assert_eq!(t.stats.reads_served, 1);
+    }
+
+    #[test]
+    fn wide_write_pairs_aw_with_w_burst() {
+        let mut t = Target::new(TargetCfg::spm_default(), NodeId(9));
+        // W beats arrive before the AW (different physical links).
+        assert!(t.handle_request(
+            &fl(
+                Payload::WideW {
+                    id: 3,
+                    beat: crate::axi::WBeat { beat: 0, last: false }
+                },
+                hdr(2, 7, false, false)
+            ),
+            0
+        ));
+        assert!(t.handle_request(
+            &fl(
+                Payload::WideW {
+                    id: 3,
+                    beat: crate::axi::WBeat { beat: 1, last: true }
+                },
+                hdr(2, 7, false, true)
+            ),
+            1
+        ));
+        assert!(!t.is_idle(), "unmatched W burst pending");
+        assert!(t.handle_request(&fl(Payload::WideAw(req(3, 1, false)), hdr(2, 7, false, true)), 2));
+        // B response comes back (Table I maps it onto narrow_rsp).
+        let b = t.pop_wide(2 + t.cfg.mem_latency).unwrap();
+        assert!(matches!(b.payload, Payload::WideB(_)));
+        assert_eq!(b.header.dst, NodeId(2));
+        assert!(t.is_idle());
+        assert_eq!(t.stats.writes_served, 1);
+    }
+
+    #[test]
+    fn narrow_write_aw_first() {
+        let mut t = Target::new(TargetCfg::spm_default(), NodeId(9));
+        let mut r = req(1, 0, false);
+        r.size = 3;
+        assert!(t.handle_request(&fl(Payload::NarrowAw(r), hdr(4, 0, false, true)), 0));
+        assert!(t.handle_request(
+            &fl(
+                Payload::NarrowW {
+                    id: 1,
+                    beat: crate::axi::WBeat { beat: 0, last: true }
+                },
+                hdr(4, 0, false, true)
+            ),
+            1
+        ));
+        let b = t.pop_narrow(1 + t.cfg.mem_latency).unwrap();
+        assert!(matches!(b.payload, Payload::NarrowB(_)));
+    }
+
+    #[test]
+    fn memory_backpressure_stalls_reads() {
+        let mut cfg = TargetCfg::spm_default();
+        cfg.mem_outstanding = 1;
+        let mut t = Target::new(cfg, NodeId(9));
+        assert!(t.handle_request(&fl(Payload::NarrowAr(req(1, 0, false)), hdr(2, 0, false, true)), 0));
+        assert!(
+            !t.handle_request(&fl(Payload::NarrowAr(req(1, 0, false)), hdr(2, 1, false, true)), 0),
+            "second read must stall"
+        );
+        assert!(t.stats.req_stall_cycles > 0);
+    }
+
+    #[test]
+    fn atomics_use_separate_bounded_slots() {
+        let mut cfg = TargetCfg::spm_default();
+        cfg.atomic_slots = 1;
+        let mut t = Target::new(cfg, NodeId(9));
+        let mut w = req(1, 0, true);
+        w.size = 3;
+        assert!(t.handle_request(&fl(Payload::NarrowAw(w), hdr(2, 0, true, true)), 0));
+        // Second atomic refused while the first is in flight.
+        assert!(!t.handle_request(&fl(Payload::NarrowAw(w), hdr(2, 1, true, true)), 0));
+        // Complete the first.
+        assert!(t.handle_request(
+            &fl(
+                Payload::NarrowW {
+                    id: 1,
+                    beat: crate::axi::WBeat { beat: 0, last: true }
+                },
+                hdr(2, 0, true, true)
+            ),
+            0
+        ));
+        let b = t.pop_narrow(t.cfg.mem_latency).unwrap();
+        assert!(b.header.atomic);
+        assert_eq!(t.stats.atomics_served, 1);
+        // Slot free again.
+        assert!(t.handle_request(&fl(Payload::NarrowAw(w), hdr(2, 1, true, true)), 6));
+    }
+
+    #[test]
+    fn rr_between_wide_b_and_narrow_rsp() {
+        let mut t = Target::new(TargetCfg::spm_default(), NodeId(9));
+        // One narrow read and one wide write complete at the same time.
+        let mut nr = req(1, 0, false);
+        nr.size = 3;
+        assert!(t.handle_request(&fl(Payload::NarrowAr(nr), hdr(2, 0, false, true)), 0));
+        assert!(t.handle_request(&fl(Payload::WideAw(req(2, 0, false)), hdr(3, 1, false, true)), 0));
+        assert!(t.handle_request(
+            &fl(
+                Payload::WideW {
+                    id: 2,
+                    beat: crate::axi::WBeat { beat: 0, last: true }
+                },
+                hdr(3, 1, false, true)
+            ),
+            0
+        ));
+        let lat = t.cfg.mem_latency;
+        assert!(t.narrow_head_ready(lat));
+        assert_eq!(t.wide_head(lat), Some(false), "wide head is a B");
+        let first = t.pop_narrow(lat).unwrap();
+        let second = t.pop_wide(lat + 1).unwrap();
+        assert!(matches!(first.payload, Payload::NarrowR(_)));
+        assert!(matches!(second.payload, Payload::WideB(_)));
+    }
+}

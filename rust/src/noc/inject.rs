@@ -1,0 +1,275 @@
+//! Per-node injection scheduling with wormhole packet atomicity.
+//!
+//! A node injects at most one flit per cycle per physical network. While a
+//! multi-flit packet (a W burst from an initiator or a multi-beat R burst
+//! from the target memory) is streaming, its network's local port is
+//! locked to that source until the `last` flit — otherwise flits of
+//! different packets would interleave on the link, which wormhole routing
+//! forbids.
+
+use crate::flit::FlooFlit;
+
+use super::system::{LinkMode, NetCounters, Network, NodeNi, NET_REQ, NET_RSP, NET_WIDE};
+
+/// Sources that can hold a local-port wormhole lock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Src {
+    /// Narrow initiator's W-beat stream.
+    NarrowInitW,
+    /// Wide initiator's W-beat stream.
+    WideInitW,
+    /// Target's narrow-memory response stream (multi-beat narrow R).
+    TgtNarrow,
+    /// Target's wide-memory response stream (multi-beat wide R).
+    TgtWideR,
+}
+
+/// Per-node injection state: one lock slot per network + fairness bits.
+#[derive(Debug)]
+pub struct InjectState {
+    pub locks: [Option<Src>; 3],
+    /// Alternation between narrow and wide initiators on the request net.
+    rr_init: bool,
+}
+
+impl InjectState {
+    pub fn new() -> Self {
+        InjectState {
+            locks: [None; 3],
+            rr_init: false,
+        }
+    }
+}
+
+impl Default for InjectState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn offer(
+    nets: &mut [Network],
+    counters: &mut [NetCounters],
+    net: usize,
+    node_idx: usize,
+    flit: FlooFlit,
+) {
+    let lid = nets[net].inject[node_idx];
+    nets[net].links[lid].offer(flit);
+    counters[net].injected += 1;
+}
+
+fn can_offer(nets: &[Network], net: usize, node_idx: usize) -> bool {
+    let lid = nets[net].inject[node_idx];
+    nets[net].links[lid].can_offer()
+}
+
+/// Schedule this node's injections for one cycle.
+pub fn inject_node(
+    mode: &LinkMode,
+    node: &mut NodeNi,
+    nets: &mut [Network],
+    counters: &mut [NetCounters],
+    now: u64,
+) {
+    let node_idx = node.target.node.0 as usize;
+    match mode {
+        LinkMode::NarrowWide => {
+            inject_req_net(node, nets, counters, node_idx, now, /*shared_w=*/ false);
+            inject_rsp_net(node, nets, counters, node_idx, now, /*merged=*/ false);
+            inject_wide_net(node, nets, counters, node_idx, now);
+        }
+        LinkMode::WideOnly => {
+            inject_req_net(node, nets, counters, node_idx, now, /*shared_w=*/ true);
+            inject_rsp_net(node, nets, counters, node_idx, now, /*merged=*/ true);
+        }
+    }
+}
+
+/// Request network: initiator AR/AW issue + W-beat streams.
+/// `shared_w`: wide W beats ride this network too (wide-only mode);
+/// otherwise they ride NET_WIDE.
+fn inject_req_net(
+    node: &mut NodeNi,
+    nets: &mut [Network],
+    counters: &mut [NetCounters],
+    node_idx: usize,
+    now: u64,
+    shared_w: bool,
+) {
+    if node.narrow.is_none() || !can_offer(nets, NET_REQ, node_idx) {
+        return;
+    }
+    match node.inj.locks[NET_REQ] {
+        Some(Src::NarrowInitW) => {
+            let n = node.narrow.as_mut().unwrap();
+            if let Some(f) = n.next_w_flit(now) {
+                if f.header.last {
+                    node.inj.locks[NET_REQ] = None;
+                }
+                offer(nets, counters, NET_REQ, node_idx, f);
+            }
+        }
+        Some(Src::WideInitW) => {
+            debug_assert!(shared_w, "wide W on req net only in wide-only mode");
+            let w = node.wide.as_mut().unwrap();
+            if let Some(f) = w.next_w_flit(now) {
+                if f.header.last {
+                    node.inj.locks[NET_REQ] = None;
+                }
+                offer(nets, counters, NET_REQ, node_idx, f);
+            }
+        }
+        Some(_) => unreachable!("target sources never lock the request net"),
+        None => {
+            // Alternate which initiator gets first shot (fairness between
+            // the latency-critical narrow bus and the wide DMA bus).
+            let wide_first = node.inj.rr_init;
+            for turn in 0..2 {
+                let pick_wide = (turn == 0) == wide_first;
+                if pick_wide {
+                    // Wide initiator: its W beats ride NET_WIDE (narrow-wide)
+                    // or this net (wide-only); AW issue requires that link's
+                    // lock to be free.
+                    let w_net = if shared_w { NET_REQ } else { NET_WIDE };
+                    let w_free = node.inj.locks[w_net].is_none();
+                    let w = node.wide.as_mut().unwrap();
+                    if let Some(f) = w.try_issue(now, w_free) {
+                        if w.streaming_w() {
+                            node.inj.locks[w_net] = Some(Src::WideInitW);
+                        }
+                        offer(nets, counters, NET_REQ, node_idx, f);
+                        node.inj.rr_init = !node.inj.rr_init;
+                        return;
+                    }
+                } else {
+                    // Narrow initiator: its W beats ride this same network.
+                    let n = node.narrow.as_mut().unwrap();
+                    if let Some(f) = n.try_issue(now, true) {
+                        if n.streaming_w() {
+                            node.inj.locks[NET_REQ] = Some(Src::NarrowInitW);
+                        }
+                        offer(nets, counters, NET_REQ, node_idx, f);
+                        node.inj.rr_init = !node.inj.rr_init;
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Response network. In narrow-wide mode it carries narrow R/B and wide B
+/// (`merged = false`: wide R goes to NET_WIDE instead). In wide-only mode
+/// (`merged = true`) it carries every response.
+fn inject_rsp_net(
+    node: &mut NodeNi,
+    nets: &mut [Network],
+    counters: &mut [NetCounters],
+    node_idx: usize,
+    now: u64,
+    merged: bool,
+) {
+    if !can_offer(nets, NET_RSP, node_idx) {
+        return;
+    }
+    match node.inj.locks[NET_RSP] {
+        Some(Src::TgtNarrow) => {
+            if let Some(f) = node.target.pop_narrow(now) {
+                if f.header.last {
+                    node.inj.locks[NET_RSP] = None;
+                }
+                offer(nets, counters, NET_RSP, node_idx, f);
+            }
+        }
+        Some(Src::TgtWideR) => {
+            debug_assert!(merged, "wide R on rsp net only in wide-only mode");
+            if let Some(f) = node.target.pop_wide(now) {
+                if f.header.last {
+                    node.inj.locks[NET_RSP] = None;
+                }
+                offer(nets, counters, NET_RSP, node_idx, f);
+            }
+        }
+        Some(_) => unreachable!("initiator sources never lock the response net"),
+        None => {
+            let n_ready = node.target.narrow_head_ready(now);
+            // Wide memory contributes to this net: only B responses in
+            // narrow-wide mode, anything in wide-only mode.
+            let w_ready = match node.target.wide_head(now) {
+                Some(is_read) => merged || !is_read,
+                None => false,
+            };
+            let pick_wide = match (n_ready, w_ready) {
+                (true, true) => node.target.flip_rr(),
+                (false, true) => true,
+                (true, false) => false,
+                (false, false) => return,
+            };
+            let f = if pick_wide {
+                node.target.pop_wide(now).unwrap()
+            } else {
+                node.target.pop_narrow(now).unwrap()
+            };
+            if !f.header.last {
+                node.inj.locks[NET_RSP] = Some(if pick_wide {
+                    Src::TgtWideR
+                } else {
+                    Src::TgtNarrow
+                });
+            }
+            offer(nets, counters, NET_RSP, node_idx, f);
+        }
+    }
+}
+
+/// Wide network (narrow-wide mode only): wide W streams from the initiator
+/// and wide R streams from the target share the local port.
+fn inject_wide_net(
+    node: &mut NodeNi,
+    nets: &mut [Network],
+    counters: &mut [NetCounters],
+    node_idx: usize,
+    now: u64,
+) {
+    if !can_offer(nets, NET_WIDE, node_idx) {
+        return;
+    }
+    match node.inj.locks[NET_WIDE] {
+        Some(Src::WideInitW) => {
+            let w = node
+                .wide
+                .as_mut()
+                .expect("wide W lock on node without initiator");
+            if let Some(f) = w.next_w_flit(now) {
+                if f.header.last {
+                    node.inj.locks[NET_WIDE] = None;
+                }
+                offer(nets, counters, NET_WIDE, node_idx, f);
+            }
+        }
+        Some(Src::TgtWideR) => {
+            if let Some(f) = node.target.pop_wide(now) {
+                if f.header.last {
+                    node.inj.locks[NET_WIDE] = None;
+                }
+                offer(nets, counters, NET_WIDE, node_idx, f);
+            }
+        }
+        Some(_) => unreachable!("narrow sources never touch the wide net"),
+        None => {
+            // Wide R streams start here; wide W streams start via the AW
+            // issue on the request net (which takes this lock directly).
+            // Alternate fairness is implicit: W streams pre-empt only when
+            // the port is free, and R streams likewise.
+            let r_ready = matches!(node.target.wide_head(now), Some(true));
+            if r_ready {
+                let f = node.target.pop_wide(now).unwrap();
+                if !f.header.last {
+                    node.inj.locks[NET_WIDE] = Some(Src::TgtWideR);
+                }
+                offer(nets, counters, NET_WIDE, node_idx, f);
+            }
+        }
+    }
+}

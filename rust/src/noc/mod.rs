@@ -1,0 +1,23 @@
+//! The complete NoC system: networks, routers, NIs, tiles and memories
+//! wired together and stepped cycle by cycle.
+//!
+//! This is where the paper's architecture becomes executable: a `W×H`
+//! mesh where every tile hosts a multilink router (one router per
+//! physical network), an AXI4 NI (narrow + wide initiator halves and
+//! one target), and boundary memory controllers hang off the free
+//! cardinal ports.
+//!
+//! Two link configurations are supported, selected by `LinkMode`:
+//!
+//! * **NarrowWide** (the paper's proposal): three physical networks —
+//!   `narrow_req`, `narrow_rsp`, `wide` — with the Table-I payload
+//!   mapping;
+//! * **WideOnly** (the paper's Fig. 5 baseline): two wide physical
+//!   networks (request + response; the paper keeps request/response
+//!   separation even in the baseline to remain deadlock-free), all
+//!   payload classes sharing them.
+
+pub mod system;
+pub mod inject;
+
+pub use system::{LinkMode, Network, NocConfig, NocSystem, NET_REQ, NET_RSP, NET_WIDE};

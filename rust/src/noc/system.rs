@@ -1,0 +1,583 @@
+//! System construction and the per-cycle step loop.
+
+use crate::flit::{ChannelClass, FlooFlit, MsgClass, NodeId, Payload};
+use crate::ni::{Initiator, InitiatorCfg, Target, TargetCfg};
+use crate::router::{Router, RouterCfg, PORT_E, PORT_LOCAL, PORT_N, PORT_S, PORT_W};
+use crate::sim::{Link, LinkId};
+use crate::stats::BandwidthMeter;
+use crate::topology::{MemEdge, NodeKind, Topology};
+
+use super::inject::InjectState;
+
+/// Physical-network indices.
+pub const NET_REQ: usize = 0;
+pub const NET_RSP: usize = 1;
+pub const NET_WIDE: usize = 2;
+
+/// Link configuration under evaluation (the Fig. 5 comparison axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkMode {
+    /// The paper's proposal: narrow_req + narrow_rsp + wide networks.
+    NarrowWide,
+    /// Baseline: one wide request network + one wide response network
+    /// carrying every payload class.
+    WideOnly,
+}
+
+impl LinkMode {
+    pub fn num_nets(&self) -> usize {
+        match self {
+            LinkMode::NarrowWide => 3,
+            LinkMode::WideOnly => 2,
+        }
+    }
+
+    /// Which network a payload rides in this mode.
+    pub fn net_of(&self, p: &Payload) -> usize {
+        match self {
+            LinkMode::NarrowWide => match p.phys_link() {
+                ChannelClass::NarrowReq => NET_REQ,
+                ChannelClass::NarrowRsp => NET_RSP,
+                ChannelClass::Wide => NET_WIDE,
+            },
+            LinkMode::WideOnly => match p.class() {
+                MsgClass::Request => NET_REQ,
+                MsgClass::Response => NET_RSP,
+            },
+        }
+    }
+}
+
+/// Full system configuration.
+#[derive(Debug, Clone)]
+pub struct NocConfig {
+    pub width: u8,
+    pub height: u8,
+    pub mem_edge: MemEdge,
+    pub mode: LinkMode,
+    /// Router input-buffer depth (flits).
+    pub in_buf_depth: usize,
+    /// Output register on router links ("elastic buffer", §III-C): the
+    /// two-cycle router used by the paper's physical implementation.
+    pub output_reg: bool,
+    pub narrow_init: InitiatorCfg,
+    pub wide_init: InitiatorCfg,
+    pub spm: TargetCfg,
+    pub mem_ctrl: TargetCfg,
+}
+
+impl Default for NocConfig {
+    fn default() -> Self {
+        NocConfig {
+            width: 2,
+            height: 1,
+            mem_edge: MemEdge::None,
+            mode: LinkMode::NarrowWide,
+            in_buf_depth: 2,
+            output_reg: true,
+            narrow_init: InitiatorCfg::narrow_default(),
+            wide_init: InitiatorCfg::wide_default(),
+            spm: TargetCfg::spm_default(),
+            mem_ctrl: TargetCfg::mem_ctrl_default(),
+        }
+    }
+}
+
+impl NocConfig {
+    pub fn mesh(width: u8, height: u8) -> Self {
+        NocConfig {
+            width,
+            height,
+            ..Default::default()
+        }
+    }
+
+    pub fn wide_only(mut self) -> Self {
+        self.mode = LinkMode::WideOnly;
+        self
+    }
+
+    pub fn with_mem_edge(mut self, edge: MemEdge) -> Self {
+        self.mem_edge = edge;
+        self
+    }
+}
+
+/// One physical network: a full mesh of routers plus per-node local ports.
+#[derive(Debug)]
+pub struct Network {
+    pub links: Vec<Link<FlooFlit>>,
+    pub routers: Vec<Router>,
+    /// Per node: NI -> router link.
+    pub inject: Vec<LinkId>,
+    /// Per node: router -> NI link.
+    pub eject: Vec<LinkId>,
+}
+
+/// Per-node NI bundle: initiators exist on tiles only.
+#[derive(Debug)]
+pub struct NodeNi {
+    pub narrow: Option<Initiator>,
+    pub wide: Option<Initiator>,
+    pub target: Target,
+    pub inj: InjectState,
+}
+
+/// Aggregate flit statistics per network.
+#[derive(Debug, Clone, Default)]
+pub struct NetCounters {
+    pub injected: u64,
+    pub ejected: u64,
+}
+
+/// The complete simulated system.
+pub struct NocSystem {
+    pub topo: Topology,
+    pub cfg: NocConfig,
+    pub nets: Vec<Network>,
+    pub nodes: Vec<NodeNi>,
+    pub now: u64,
+    /// Per-network, per-node ejection bandwidth meters: every consumed
+    /// ejection is observed with 512 useful bits for WideR/WideW flits and
+    /// 0 bits for anything else sharing that link — the Fig. 5b
+    /// effective-bandwidth instrument. Indexed `[net][node]`.
+    pub eject_meters: Vec<Vec<BandwidthMeter>>,
+    pub counters: Vec<NetCounters>,
+}
+
+impl NocSystem {
+    pub fn new(cfg: NocConfig) -> Self {
+        let topo = Topology::mesh(cfg.width, cfg.height, cfg.mem_edge);
+        let nets = (0..cfg.mode.num_nets())
+            .map(|_| build_network(&topo, &cfg))
+            .collect();
+        let nodes = topo
+            .nodes
+            .iter()
+            .map(|n| match n.kind {
+                NodeKind::Tile => NodeNi {
+                    narrow: Some(Initiator::new(cfg.narrow_init.clone(), n.id)),
+                    wide: Some(Initiator::new(cfg.wide_init.clone(), n.id)),
+                    target: Target::new(cfg.spm.clone(), n.id),
+                    inj: InjectState::new(),
+                },
+                NodeKind::MemCtrl { .. } => NodeNi {
+                    narrow: None,
+                    wide: None,
+                    target: Target::new(cfg.mem_ctrl.clone(), n.id),
+                    inj: InjectState::new(),
+                },
+            })
+            .collect();
+        let eject_meters = (0..cfg.mode.num_nets())
+            .map(|_| topo.nodes.iter().map(|_| BandwidthMeter::new(512)).collect())
+            .collect();
+        let counters = vec![NetCounters::default(); cfg.mode.num_nets()];
+        NocSystem {
+            topo,
+            nets,
+            nodes,
+            now: 0,
+            eject_meters,
+            counters,
+            cfg,
+        }
+    }
+
+    /// Borrow a tile's narrow initiator (panics for memory controllers).
+    pub fn narrow_init(&mut self, node: NodeId) -> &mut Initiator {
+        self.nodes[node.0 as usize]
+            .narrow
+            .as_mut()
+            .expect("node has no narrow initiator")
+    }
+
+    pub fn wide_init(&mut self, node: NodeId) -> &mut Initiator {
+        self.nodes[node.0 as usize]
+            .wide
+            .as_mut()
+            .expect("node has no wide initiator")
+    }
+
+    /// Step a traffic generator against its tile's initiator, splitting
+    /// the borrow between the topology (read) and the NI (write).
+    pub fn step_generator(&mut self, g: &mut crate::traffic::Generator) {
+        let now = self.now;
+        let topo = &self.topo;
+        let node = &mut self.nodes[g.node.0 as usize];
+        let init = match g.cfg.bus {
+            crate::flit::BusKind::Narrow => node.narrow.as_mut(),
+            crate::flit::BusKind::Wide => node.wide.as_mut(),
+        }
+        .expect("generator attached to node without initiator");
+        g.step(now, init, topo);
+    }
+
+    /// Advance one clock cycle.
+    pub fn step(&mut self) {
+        let now = self.now;
+        // Phase 1: links deliver registered flits into input buffers.
+        for net in &mut self.nets {
+            for l in &mut net.links {
+                l.deliver();
+            }
+        }
+        // Phase 2: routers switch.
+        for net in &mut self.nets {
+            for r in &mut net.routers {
+                r.step(&mut net.links);
+            }
+        }
+        // Phase 3: NIs terminate and inject.
+        for idx in 0..self.nodes.len() {
+            self.eject_node(idx, now);
+            self.nodes[idx].target.pump_writes(now);
+            super::inject::inject_node(
+                &self.cfg.mode,
+                &mut self.nodes[idx],
+                &mut self.nets,
+                &mut self.counters,
+                now,
+            );
+            let node = &mut self.nodes[idx];
+            if let Some(n) = node.narrow.as_mut() {
+                n.drain_cycle();
+            }
+            if let Some(w) = node.wide.as_mut() {
+                w.drain_cycle();
+            }
+        }
+        self.now += 1;
+    }
+
+    /// Terminate at most one flit per network at this node.
+    fn eject_node(&mut self, idx: usize, now: u64) {
+        for n in 0..self.nets.len() {
+            let lid = self.nets[n].eject[idx];
+            let Some(flit) = self.nets[n].links[lid].peek() else {
+                continue;
+            };
+            let node = &mut self.nodes[idx];
+            let consumed = match flit.payload.class() {
+                MsgClass::Request => node.target.handle_request(flit, now),
+                MsgClass::Response => {
+                    let init = match flit.payload.bus() {
+                        crate::flit::BusKind::Narrow => node.narrow.as_mut(),
+                        crate::flit::BusKind::Wide => node.wide.as_mut(),
+                    }
+                    .expect("response delivered to node without initiator");
+                    init.handle_response(flit)
+                }
+            };
+            if consumed {
+                let f = self.nets[n].links[lid].pop().unwrap();
+                self.counters[n].ejected += 1;
+                // Fig. 5b instrument: wide data counts 512 useful bits;
+                // everything else occupies a slot of the observed link at
+                // zero useful wide bits.
+                let wide_bits = match f.payload {
+                    Payload::WideR(_) | Payload::WideW { .. } => 512,
+                    _ => 0,
+                };
+                self.eject_meters[n][idx].observe(now, wide_bits);
+            }
+        }
+    }
+
+    /// Run for `n` cycles.
+    pub fn run(&mut self, n: u64) {
+        for _ in 0..n {
+            self.step();
+        }
+    }
+
+    /// Everything drained: no flits in flight, no outstanding transactions,
+    /// no memory ops pending.
+    pub fn is_idle(&self) -> bool {
+        self.nets
+            .iter()
+            .all(|net| net.links.iter().all(Link::is_idle))
+            && self.nodes.iter().all(|n| {
+                n.target.is_idle()
+                    && n.narrow.as_ref().map(Initiator::is_idle).unwrap_or(true)
+                    && n.wide.as_ref().map(Initiator::is_idle).unwrap_or(true)
+            })
+    }
+
+    /// Run until idle (true) or `max` cycles elapse (false).
+    pub fn run_until_idle(&mut self, max: u64) -> bool {
+        for _ in 0..max {
+            if self.is_idle() {
+                return true;
+            }
+            self.step();
+        }
+        self.is_idle()
+    }
+
+    /// Total flits forwarded by all routers of network `n` (hop count
+    /// integral — the energy model's activity input).
+    pub fn router_flit_hops(&self, n: usize) -> u64 {
+        self.nets[n].routers.iter().map(|r| r.forwarded).sum()
+    }
+
+    /// The meter observing the link that carries wide data towards
+    /// `node`'s initiator (read-bandwidth experiments): NET_WIDE in
+    /// narrow-wide mode, the shared response net in wide-only mode.
+    pub fn wide_read_meter(&self, node: NodeId) -> &BandwidthMeter {
+        let net = match self.cfg.mode {
+            LinkMode::NarrowWide => NET_WIDE,
+            LinkMode::WideOnly => NET_RSP,
+        };
+        &self.eject_meters[net][node.0 as usize]
+    }
+
+    /// The meter observing the link that carries wide data towards
+    /// `node`'s target (write-bandwidth experiments).
+    pub fn wide_write_meter(&self, node: NodeId) -> &BandwidthMeter {
+        let net = match self.cfg.mode {
+            LinkMode::NarrowWide => NET_WIDE,
+            LinkMode::WideOnly => NET_REQ,
+        };
+        &self.eject_meters[net][node.0 as usize]
+    }
+}
+
+/// Build one physical network over the topology.
+fn build_network(topo: &Topology, cfg: &NocConfig) -> Network {
+    let num_routers = topo.width as usize * topo.height as usize;
+    let mut links: Vec<Link<FlooFlit>> = Vec::new();
+    let new_link = |links: &mut Vec<Link<FlooFlit>>, pipelined: bool| -> LinkId {
+        let l = if pipelined && cfg.output_reg {
+            Link::with_pipeline(cfg.in_buf_depth, 1)
+        } else {
+            Link::new(cfg.in_buf_depth)
+        };
+        links.push(l);
+        links.len() - 1
+    };
+
+    let mut routers: Vec<Router> = (0..num_routers)
+        .map(|i| {
+            let coord = topo.nodes[i].coord;
+            Router::new(
+                RouterCfg {
+                    ports: 5,
+                    in_buf_depth: cfg.in_buf_depth,
+                },
+                topo.xy_table(coord),
+            )
+        })
+        .collect();
+
+    // Mesh links between adjacent routers (router outputs are pipelined
+    // when output_reg is set — the two-cycle router).
+    let w = topo.width as usize;
+    let h = topo.height as usize;
+    for y in 0..h {
+        for x in 0..w {
+            let me = y * w + x;
+            if x + 1 < w {
+                let east = y * w + (x + 1);
+                let l = new_link(&mut links, true);
+                routers[me].out_links[PORT_E] = Some(l);
+                routers[east].in_links[PORT_W] = Some(l);
+                let l = new_link(&mut links, true);
+                routers[east].out_links[PORT_W] = Some(l);
+                routers[me].in_links[PORT_E] = Some(l);
+            }
+            if y + 1 < h {
+                let north = (y + 1) * w + x;
+                let l = new_link(&mut links, true);
+                routers[me].out_links[PORT_N] = Some(l);
+                routers[north].in_links[PORT_S] = Some(l);
+                let l = new_link(&mut links, true);
+                routers[north].out_links[PORT_S] = Some(l);
+                routers[me].in_links[PORT_N] = Some(l);
+            }
+        }
+    }
+
+    // Local ports: tiles on PORT_LOCAL, memory controllers on their attach
+    // ports of the host router.
+    let mut inject = vec![usize::MAX; topo.num_nodes()];
+    let mut eject = vec![usize::MAX; topo.num_nodes()];
+    for node in &topo.nodes {
+        let r = topo.router_index(node.coord);
+        let port = match node.kind {
+            NodeKind::Tile => PORT_LOCAL,
+            NodeKind::MemCtrl { attach_port } => attach_port,
+        };
+        let inj = new_link(&mut links, false);
+        routers[r].in_links[port] = Some(inj);
+        inject[node.id.0 as usize] = inj;
+        let ej = new_link(&mut links, true);
+        routers[r].out_links[port] = Some(ej);
+        eject[node.id.0 as usize] = ej;
+    }
+
+    Network {
+        links,
+        routers,
+        inject,
+        eject,
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::{AxReq, Burst};
+    use crate::topology::TILE_SPAN;
+
+    fn rd(id: u16, len: u8, size: u8, addr: u64) -> AxReq {
+        AxReq {
+            id,
+            addr,
+            len,
+            size,
+            burst: Burst::Incr,
+            atop: false,
+        }
+    }
+
+    /// Single narrow read from tile 0 to adjacent tile 1: the §VI-A
+    /// zero-load scenario. The total must be deterministic; the exact
+    /// value is pinned by the zero-load calibration (see cluster module).
+    #[test]
+    fn zero_load_narrow_read_completes() {
+        let mut sys = NocSystem::new(NocConfig::mesh(2, 1));
+        let dst = NodeId(1);
+        sys.narrow_init(NodeId(0))
+            .push_ar(rd(1, 0, 3, TILE_SPAN + 0x100), dst);
+        let mut completed_at = None;
+        for _ in 0..100 {
+            sys.step();
+            if sys.narrow_init(NodeId(0)).r_out.pop().is_some() {
+                completed_at = Some(sys.now);
+                break;
+            }
+        }
+        let lat = completed_at.expect("read must complete");
+        assert!(sys.run_until_idle(10));
+        // Print for calibration visibility when running with --nocapture.
+        println!("zero-load round trip: {lat} cycles");
+        assert!(lat >= 10 && lat <= 30, "sane zero-load range, got {lat}");
+    }
+
+    /// A wide DMA burst (16 beats x 64 B = 1 kB) completes and delivers
+    /// every beat.
+    #[test]
+    fn wide_read_burst_completes() {
+        let mut sys = NocSystem::new(NocConfig::mesh(2, 1));
+        sys.wide_init(NodeId(0))
+            .push_ar(rd(2, 15, 6, TILE_SPAN + 0x0), NodeId(1));
+        let mut beats = 0;
+        for _ in 0..200 {
+            sys.step();
+            while sys.wide_init(NodeId(0)).r_out.pop().is_some() {
+                beats += 1;
+            }
+            if beats == 16 {
+                break;
+            }
+        }
+        assert_eq!(beats, 16);
+        assert!(sys.run_until_idle(10));
+        // All 16 beats crossed the wide network once each direction of the
+        // request traveled the narrow_req net.
+        assert!(sys.router_flit_hops(NET_WIDE) >= 16);
+    }
+
+    /// A wide write burst: AW on narrow_req, beats on wide, B back on
+    /// narrow_rsp.
+    #[test]
+    fn wide_write_burst_completes() {
+        let mut sys = NocSystem::new(NocConfig::mesh(2, 1));
+        sys.wide_init(NodeId(0))
+            .push_aw(rd(3, 15, 6, TILE_SPAN + 0x40), NodeId(1));
+        let mut done = false;
+        for _ in 0..200 {
+            sys.step();
+            if sys.wide_init(NodeId(0)).b_out.pop().is_some() {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "write must receive its B response");
+        assert!(sys.run_until_idle(10));
+        assert_eq!(sys.nodes[1].target.stats.writes_served, 1);
+    }
+
+    /// The same traffic in wide-only mode also completes (the baseline
+    /// config is functionally correct, just slower under contention).
+    #[test]
+    fn wide_only_mode_functional() {
+        let mut sys = NocSystem::new(NocConfig::mesh(2, 1).wide_only());
+        sys.narrow_init(NodeId(0))
+            .push_ar(rd(1, 0, 3, TILE_SPAN + 0x100), NodeId(1));
+        sys.wide_init(NodeId(0))
+            .push_aw(rd(3, 15, 6, TILE_SPAN + 0x40), NodeId(1));
+        let mut r = false;
+        let mut b = false;
+        for _ in 0..300 {
+            sys.step();
+            r |= sys.narrow_init(NodeId(0)).r_out.pop().is_some();
+            b |= sys.wide_init(NodeId(0)).b_out.pop().is_some();
+            if r && b {
+                break;
+            }
+        }
+        assert!(r && b);
+        assert!(sys.run_until_idle(10));
+        assert_eq!(sys.nets.len(), 2);
+    }
+
+    /// Memory-controller traffic: DMA read from a boundary controller.
+    #[test]
+    fn mem_ctrl_read() {
+        use crate::topology::{MemEdge, MEM_BASE};
+        let mut sys =
+            NocSystem::new(NocConfig::mesh(2, 2).with_mem_edge(MemEdge::West));
+        let mem = sys.topo.mem_ctrls()[0];
+        sys.wide_init(NodeId(3))
+            .push_ar(rd(0, 15, 6, MEM_BASE), mem);
+        let mut beats = 0;
+        for _ in 0..400 {
+            sys.step();
+            while sys.wide_init(NodeId(3)).r_out.pop().is_some() {
+                beats += 1;
+            }
+            if beats == 16 {
+                break;
+            }
+        }
+        assert_eq!(beats, 16);
+        assert!(sys.run_until_idle(20));
+    }
+
+    /// Two concurrent wide writes from different tiles to the same target
+    /// must not interleave their W bursts (wormhole atomicity end to end).
+    #[test]
+    fn concurrent_writes_no_interleave() {
+        let mut sys = NocSystem::new(NocConfig::mesh(3, 1));
+        sys.wide_init(NodeId(0))
+            .push_aw(rd(1, 7, 6, 2 * TILE_SPAN), NodeId(2));
+        sys.wide_init(NodeId(1))
+            .push_aw(rd(1, 7, 6, 2 * TILE_SPAN + 0x1000), NodeId(2));
+        let mut b0 = false;
+        let mut b1 = false;
+        for _ in 0..300 {
+            sys.step();
+            b0 |= sys.wide_init(NodeId(0)).b_out.pop().is_some();
+            b1 |= sys.wide_init(NodeId(1)).b_out.pop().is_some();
+        }
+        // The target's write-assembly debug_asserts would have fired on any
+        // interleaving (beats/AW mismatch); both writes completing is the
+        // end-to-end check.
+        assert!(b0 && b1);
+        assert_eq!(sys.nodes[2].target.stats.writes_served, 2);
+        assert!(sys.run_until_idle(10));
+    }
+}

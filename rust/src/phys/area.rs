@@ -1,0 +1,233 @@
+//! Area model in gate equivalents (GE), reproducing Fig. 6a.
+//!
+//! Structure: SRAM macros scale with bits, flop-based structures (link
+//! buffers, SCM tables) scale with bits at a higher per-bit cost, crossbars
+//! scale with `ports² × width`. Coefficients are fitted so the paper's tile
+//! configuration lands on the published totals (≈5 MGE tile, ≈500 kGE NoC,
+//! 10 %); the *scaling* then lets `repro sweep` explore other configs.
+
+use crate::cluster::TileSpec;
+use crate::flit::NocLayout;
+use crate::util::json::Json;
+
+/// Fitted technology/implementation coefficients (GF 12 nm flavoured).
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    /// GE per SRAM bit (macro, incl. periphery amortized).
+    pub ge_per_sram_bit: f64,
+    /// GE per flop-based (SCM / buffer) bit.
+    pub ge_per_scm_bit: f64,
+    /// GE per crossbar bit-port² (mux-tree share).
+    pub ge_per_xbar_bit: f64,
+    /// GE per Snitch worker core incl. FPU share.
+    pub ge_per_core: f64,
+    /// GE for the DMA engine + control core.
+    pub ge_dma: f64,
+    /// GE for the cluster-internal AXI interconnect.
+    pub ge_cluster_ic: f64,
+    /// Fixed NI control logic (allocator, state machines) per bus.
+    pub ge_ni_control: f64,
+    /// Buffer-island flops per link bit per island set.
+    pub ge_island_per_bit: f64,
+    /// Number of island sets on the routing channel (§V: three).
+    pub island_sets: u32,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel {
+            ge_per_sram_bit: 1.6,
+            ge_per_scm_bit: 8.0,
+            ge_per_xbar_bit: 1.0,
+            ge_per_core: 260_000.0,
+            ge_dma: 95_000.0,
+            ge_cluster_ic: 450_000.0,
+            ge_ni_control: 95_000.0,
+            ge_island_per_bit: 12.0,
+            island_sets: 3,
+        }
+    }
+}
+
+/// One Fig. 6a slice, in GE.
+#[derive(Debug, Clone)]
+pub struct AreaBreakdown {
+    pub cores: f64,
+    pub spm: f64,
+    pub icache: f64,
+    pub dma: f64,
+    pub cluster_ic: f64,
+    pub routers: f64,
+    pub ni: f64,
+    pub rob: f64,
+    pub buffer_islands: f64,
+}
+
+impl AreaBreakdown {
+    pub fn cluster_total(&self) -> f64 {
+        self.cores + self.spm + self.icache + self.dma + self.cluster_ic
+    }
+
+    /// NoC components: router + NI + ROB + buffer islands (the paper's
+    /// "≈500 kGE, 10 % of the tile").
+    pub fn noc_total(&self) -> f64 {
+        self.routers + self.ni + self.rob + self.buffer_islands
+    }
+
+    pub fn tile_total(&self) -> f64 {
+        self.cluster_total() + self.noc_total()
+    }
+
+    pub fn noc_fraction(&self) -> f64 {
+        self.noc_total() / self.tile_total()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cores_kge", Json::Num(self.cores / 1e3)),
+            ("spm_kge", Json::Num(self.spm / 1e3)),
+            ("icache_kge", Json::Num(self.icache / 1e3)),
+            ("dma_kge", Json::Num(self.dma / 1e3)),
+            ("cluster_ic_kge", Json::Num(self.cluster_ic / 1e3)),
+            ("routers_kge", Json::Num(self.routers / 1e3)),
+            ("ni_kge", Json::Num(self.ni / 1e3)),
+            ("rob_kge", Json::Num(self.rob / 1e3)),
+            ("buffer_islands_kge", Json::Num(self.buffer_islands / 1e3)),
+            ("noc_total_kge", Json::Num(self.noc_total() / 1e3)),
+            ("tile_total_mge", Json::Num(self.tile_total() / 1e6)),
+            ("noc_fraction", Json::Num(self.noc_fraction())),
+        ])
+    }
+}
+
+impl AreaModel {
+    /// Router area for one physical link of `flit_bits`, radix `ports`,
+    /// input-buffer depth `depth` (paper §III-C: input buffers + switch,
+    /// loopback and impossible XY turns pruned from the crossbar).
+    pub fn router_ge(&self, ports: u32, flit_bits: u32, depth: u32) -> f64 {
+        let buf = (ports * depth * flit_bits) as f64 * self.ge_per_scm_bit;
+        // XY pruning: of the ports² connections, loopback (ports) and the
+        // two Y->X turn pairs (4) are disabled.
+        let conns = (ports * ports - ports - 4).max(1) as f64;
+        let xbar = conns * flit_bits as f64 * self.ge_per_xbar_bit;
+        let arb = ports as f64 * 220.0;
+        buf + xbar + arb
+    }
+
+    /// NI area (both buses): control + reorder tables (SCM) + meta FIFOs.
+    pub fn ni_ge(&self, layout: &NocLayout, per_id_depth: u32, num_ids: u32) -> f64 {
+        let table_bits = |rob_idx_bits: u32| {
+            // Each reorder-table entry: rob index + beat count + state.
+            (num_ids * per_id_depth * (rob_idx_bits + 10)) as f64
+        };
+        let tables = (table_bits(layout.narrow_rob.idx_bits())
+            + table_bits(layout.wide_rob.idx_bits()))
+            * self.ge_per_scm_bit;
+        // Write-response slots (SCM) + meta FIFOs, both buses.
+        let meta = 2.0 * (num_ids * per_id_depth) as f64 * 24.0 * self.ge_per_scm_bit / 8.0;
+        2.0 * self.ge_ni_control + tables + meta
+    }
+
+    /// ROB storage: R-response ROBs in SRAM (8 kB + 2 kB), B-response and
+    /// table state in SCM (counted in `ni_ge`).
+    pub fn rob_ge(&self, layout: &NocLayout) -> f64 {
+        ((layout.narrow_rob.bytes + layout.wide_rob.bytes) * 8) as f64 * self.ge_per_sram_bit
+    }
+
+    /// Buffer islands on the horizontal + vertical routing channels.
+    pub fn islands_ge(&self, layout: &NocLayout) -> f64 {
+        let channel_bits = layout.duplex_wires() as f64;
+        channel_bits * self.ge_island_per_bit * self.island_sets as f64
+    }
+
+    /// Full Fig. 6a breakdown for a tile.
+    pub fn tile(&self, spec: &TileSpec, layout: &NocLayout, in_buf_depth: u32) -> AreaBreakdown {
+        let routers = self.router_ge(5, layout.narrow_req().flit_bits(), in_buf_depth)
+            + self.router_ge(5, layout.narrow_rsp().flit_bits(), in_buf_depth)
+            + self.router_ge(5, layout.wide_link().flit_bits(), in_buf_depth);
+        AreaBreakdown {
+            cores: spec.worker_cores as f64 * self.ge_per_core,
+            spm: (spec.spm_kib * 1024 * 8) as f64 * self.ge_per_sram_bit,
+            icache: (spec.icache_kib * 1024 * 8) as f64 * self.ge_per_sram_bit * 1.3,
+            dma: self.ge_dma,
+            cluster_ic: self.ge_cluster_ic,
+            routers,
+            ni: self.ni_ge(layout, 4, 16),
+            rob: self.rob_ge(layout),
+            buffer_islands: self.islands_ge(layout),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breakdown() -> AreaBreakdown {
+        AreaModel::default().tile(&TileSpec::default(), &NocLayout::default(), 2)
+    }
+
+    /// Fig. 6a headline: tile ≈ 5 MGE.
+    #[test]
+    fn tile_total_five_mge() {
+        let b = breakdown();
+        let mge = b.tile_total() / 1e6;
+        assert!(
+            (4.5..=5.5).contains(&mge),
+            "tile ≈ 5 MGE (paper §VI-C), got {mge:.2}"
+        );
+    }
+
+    /// Fig. 6a / abstract: NoC ≈ 450–500 kGE, ≈10 % of the tile.
+    #[test]
+    fn noc_area_and_fraction() {
+        let b = breakdown();
+        let kge = b.noc_total() / 1e3;
+        assert!(
+            (420.0..=560.0).contains(&kge),
+            "NoC ≈ 450–500 kGE, got {kge:.0}"
+        );
+        let frac = b.noc_fraction();
+        assert!(
+            (0.08..=0.12).contains(&frac),
+            "NoC ≈ 10 % of tile, got {:.1} %",
+            frac * 100.0
+        );
+    }
+
+    /// §VI-C: "The NoC's size is primarily governed by the NI and its
+    /// ROBs" — NI+ROB must dominate the routers.
+    #[test]
+    fn ni_and_rob_dominate() {
+        let b = breakdown();
+        assert!(b.ni + b.rob > b.routers);
+    }
+
+    /// The wide router costs more than both narrow routers together
+    /// (603 bit vs 119 + 103).
+    #[test]
+    fn router_scales_with_width() {
+        let m = AreaModel::default();
+        let wide = m.router_ge(5, 603, 2);
+        let narrow = m.router_ge(5, 119, 2) + m.router_ge(5, 103, 2);
+        assert!(wide > narrow);
+    }
+
+    /// Doubling the ROB doubles its SRAM area (sweepability).
+    #[test]
+    fn rob_area_scales() {
+        let m = AreaModel::default();
+        let mut l = NocLayout::default();
+        let base = m.rob_ge(&l);
+        l.wide_rob.bytes *= 2;
+        l.narrow_rob.bytes *= 2;
+        assert!((m.rob_ge(&l) / base - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_export_has_fraction() {
+        let b = breakdown();
+        let j = b.to_json();
+        assert!(j.get("noc_fraction").unwrap().as_f64().unwrap() > 0.05);
+    }
+}

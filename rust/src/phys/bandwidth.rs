@@ -1,0 +1,89 @@
+//! Bandwidth arithmetic (§VI-B): per-link peak, duplex, and mesh-boundary
+//! aggregate.
+
+use crate::flit::NocLayout;
+
+/// Peak-bandwidth model at a given clock.
+#[derive(Debug, Clone)]
+pub struct BandwidthModel {
+    pub freq_ghz: f64,
+    pub layout: NocLayout,
+}
+
+impl Default for BandwidthModel {
+    fn default() -> Self {
+        BandwidthModel {
+            freq_ghz: 1.23,
+            layout: NocLayout::default(),
+        }
+    }
+}
+
+impl BandwidthModel {
+    /// Peak payload bandwidth of one wide link, Gbps (§VI-B: 629 Gbps).
+    pub fn wide_link_gbps(&self) -> f64 {
+        self.layout.wide_peak_gbps(self.freq_ghz)
+    }
+
+    /// Duplex wide-link bandwidth, Tbps (§VI-B: 1.26 Tbps).
+    pub fn wide_duplex_tbps(&self) -> f64 {
+        2.0 * self.wide_link_gbps() / 1000.0
+    }
+
+    /// Aggregate duplex bandwidth crossing the boundary of a `n×n` mesh in
+    /// TB/s: every boundary router exposes one outward duplex channel
+    /// (paper Fig. 4a — memory controllers at the boundary), 4n channels
+    /// total (§VI-B: 4.4 TB/s for 7×7).
+    pub fn mesh_boundary_tbs(&self, n: u32) -> f64 {
+        let channels = 4 * n;
+        let gbytes_per_chan = 2.0 * self.wide_link_gbps() / 8.0; // duplex GB/s
+        channels as f64 * gbytes_per_chan / 1000.0
+    }
+
+    /// The frequency a serialized narrow NoC would need to match one wide
+    /// link (§I's motivation: 512-bit @ 1 GHz over 32-bit needs 16 GHz).
+    pub fn equivalent_narrow_freq_ghz(&self, narrow_bits: u32) -> f64 {
+        self.wide_link_gbps() / narrow_bits as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// §VI-B: 629 Gbps per link at 1.23 GHz.
+    #[test]
+    fn wide_link_peak() {
+        let m = BandwidthModel::default();
+        assert!((m.wide_link_gbps() - 629.76).abs() < 0.1);
+    }
+
+    /// §VI-B: 1.26 Tbps duplex.
+    #[test]
+    fn duplex_peak() {
+        let m = BandwidthModel::default();
+        assert!((m.wide_duplex_tbps() - 1.26).abs() < 0.01);
+    }
+
+    /// §VI-B: "the aggregate bandwidth at the boundary of a 7×7 mesh
+    /// amounts to 4.4 TB/s".
+    #[test]
+    fn seven_by_seven_boundary() {
+        let m = BandwidthModel::default();
+        let tbs = m.mesh_boundary_tbs(7);
+        assert!(
+            (4.3..=4.5).contains(&tbs),
+            "≈4.4 TB/s, got {tbs:.2}"
+        );
+    }
+
+    /// §I: serializing a 512-bit 1 GHz channel onto 32-bit needs 16 GHz.
+    #[test]
+    fn narrow_serialization_motivation() {
+        let m = BandwidthModel {
+            freq_ghz: 1.0,
+            layout: NocLayout::default(),
+        };
+        assert!((m.equivalent_narrow_freq_ghz(32) - 16.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,49 @@
+//! Timing model: frequency ⇔ FO4 depth (§V: 1.23 GHz at 70 FO4 in
+//! GF 12 nm, TT / 0.8 V / 25 °C).
+
+/// Logic-depth/frequency conversion for a given technology's FO4 delay.
+#[derive(Debug, Clone)]
+pub struct TimingModel {
+    /// FO4 inverter delay in picoseconds.
+    pub fo4_ps: f64,
+}
+
+impl Default for TimingModel {
+    fn default() -> Self {
+        // Fitted: 1.23 GHz ⇔ 70 FO4 ⇒ FO4 ≈ 11.6 ps (GF 12 nm TT 0.8 V).
+        TimingModel { fo4_ps: 11.614 }
+    }
+}
+
+impl TimingModel {
+    /// Clock frequency for a pipeline of `fo4_depth` FO4.
+    pub fn freq_ghz(&self, fo4_depth: f64) -> f64 {
+        1000.0 / (self.fo4_ps * fo4_depth)
+    }
+
+    /// FO4 depth implied by a target frequency.
+    pub fn fo4_depth(&self, freq_ghz: f64) -> f64 {
+        1000.0 / (self.fo4_ps * freq_ghz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// §V: timing closes at 1.23 GHz ⇔ 70 FO4.
+    #[test]
+    fn paper_operating_point() {
+        let t = TimingModel::default();
+        assert!((t.freq_ghz(70.0) - 1.23).abs() < 0.01);
+        assert!((t.fo4_depth(1.23) - 70.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn inverse_consistency() {
+        let t = TimingModel::default();
+        for depth in [40.0, 70.0, 100.0] {
+            assert!((t.fo4_depth(t.freq_ghz(depth)) - depth).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Physical model: area, energy/power, wires and bandwidth.
+//!
+//! The paper's physical results come from a GF 12 nm Fusion Compiler flow
+//! we cannot run; this module substitutes an analytical model whose
+//! *coefficients* are fitted to the published post-layout numbers and
+//! whose *structure* (what scales with what) follows the architecture.
+//! That lets every physical figure be regenerated and swept:
+//!
+//! * Fig. 6a — area breakdown (`area`): tile ≈ 5 MGE, NoC ≈ 500 kGE ≈ 10 %;
+//! * Fig. 6b — power breakdown (`energy`): 139 mW tile, NoC ≈ 7 %,
+//!   198 pJ / 1 kB / hop ⇒ 0.19 pJ/B/hop;
+//! * §V — routing-channel geometry (`wires`): ≈1600 wires/duplex channel,
+//!   ≈120 µm slice on two metal layers;
+//! * §VI-B — bandwidth (`bandwidth`): 629 Gbps/link at 1.23 GHz,
+//!   1.26 Tbps duplex, 4.4 TB/s at the boundary of a 7×7 mesh;
+//! * timing (`freq`): 1.23 GHz ⇔ 70 FO4 in 12 nm.
+
+pub mod area;
+pub mod energy;
+pub mod wires;
+pub mod bandwidth;
+pub mod freq;
+
+pub use area::{AreaBreakdown, AreaModel};
+pub use bandwidth::BandwidthModel;
+pub use energy::{EnergyModel, PowerBreakdown};
+pub use freq::TimingModel;
+pub use wires::ChannelGeometry;

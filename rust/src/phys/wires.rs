@@ -1,0 +1,122 @@
+//! Routing-channel geometry (§V): wire counts and channel width.
+//!
+//! The paper routes the horizontal and vertical duplex channels on four
+//! reserved upper metal layers over the SRAM macros: "a duplex channel
+//! requires approximately 1600 wires ... using two of the four metal
+//! layers with preferred routing direction, the routing channel occupies
+//! a slice of 120 µm", with buffer islands between SRAM macros refueling
+//! the long wires (three sets suffice for a 1 mm tile).
+
+use crate::flit::NocLayout;
+
+/// Metal-stack parameters (GF 12 nm upper-layer flavoured).
+#[derive(Debug, Clone)]
+pub struct ChannelGeometry {
+    /// Routing track pitch on the reserved layers, in µm.
+    pub track_pitch_um: f64,
+    /// Usable track utilization (margin for the power grid, §V).
+    pub utilization: f64,
+    /// Layers available per routing direction.
+    pub layers_per_dir: u32,
+    /// Tile edge length in mm (the paper's hard macro: 1 mm sides).
+    pub tile_mm: f64,
+    /// Max wire length between refueling buffers, in mm (transition-time
+    /// limited; §V: three sets of buffers over 1 mm ⇒ ≈0.25 mm spacing).
+    pub max_unbuffered_mm: f64,
+}
+
+impl Default for ChannelGeometry {
+    fn default() -> Self {
+        ChannelGeometry {
+            track_pitch_um: 0.14,
+            utilization: 0.97,
+            layers_per_dir: 2,
+            tile_mm: 1.0,
+            max_unbuffered_mm: 0.26,
+        }
+    }
+}
+
+impl ChannelGeometry {
+    /// Wires in one duplex channel (all three physical links, both
+    /// directions, valid/ready included) — the "≈1600 wires".
+    pub fn duplex_wires(&self, layout: &NocLayout) -> u32 {
+        layout.duplex_wires()
+    }
+
+    /// Channel slice width in µm when routed on `layers_per_dir` layers.
+    pub fn channel_width_um(&self, layout: &NocLayout) -> f64 {
+        let per_layer =
+            (self.duplex_wires(layout) as f64 / self.layers_per_dir as f64).ceil();
+        per_layer * self.track_pitch_um / self.utilization
+    }
+
+    /// Number of buffer-island sets needed to cross the tile without
+    /// violating transition-time limits: interior buffers between wire
+    /// segments (§V: three sets for a 1 mm tile at ≈0.25 mm spacing).
+    pub fn island_sets(&self) -> u32 {
+        ((self.tile_mm / self.max_unbuffered_mm).ceil() as u32).saturating_sub(1)
+    }
+
+    /// Fraction of the tile edge consumed by one routing channel.
+    pub fn edge_fraction(&self, layout: &NocLayout) -> f64 {
+        self.channel_width_um(layout) / (self.tile_mm * 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// §V: "approximately 1600 wires".
+    #[test]
+    fn sixteen_hundred_wires() {
+        let g = ChannelGeometry::default();
+        let w = g.duplex_wires(&NocLayout::default());
+        assert!((1500..=1700).contains(&w), "≈1600, got {w}");
+    }
+
+    /// §V: "the routing channel occupies a slice of 120 µm".
+    #[test]
+    fn one_twenty_micron_slice() {
+        let g = ChannelGeometry::default();
+        let um = g.channel_width_um(&NocLayout::default());
+        assert!(
+            (110.0..=130.0).contains(&um),
+            "≈120 µm slice, got {um:.1}"
+        );
+    }
+
+    /// §V: three buffer-island sets over the 1 mm macro.
+    #[test]
+    fn three_island_sets() {
+        assert_eq!(ChannelGeometry::default().island_sets(), 3);
+    }
+
+    /// §VI-C: channels cover "roughly a quarter of the entire floorplan" —
+    /// horizontal + vertical slices of ~120 µm each over a 1 mm tile ⇒
+    /// 2 × 12 % ≈ 24 % of tile area overlapped (routed above SRAMs).
+    #[test]
+    fn quarter_of_floorplan_overlap() {
+        let g = ChannelGeometry::default();
+        let l = NocLayout::default();
+        let frac = g.edge_fraction(&l);
+        let covered = 2.0 * frac - frac * frac; // union of H + V strips
+        assert!(
+            (0.18..=0.30).contains(&covered),
+            "≈ quarter of floorplan, got {:.1} %",
+            covered * 100.0
+        );
+    }
+
+    /// Wider meshes (more coord bits) widen the channel but only by header
+    /// bits — sweepability check.
+    #[test]
+    fn channel_scales_with_headers() {
+        let g = ChannelGeometry::default();
+        let mut l = NocLayout::default();
+        let base = g.channel_width_um(&l);
+        l.coord_bits = 6;
+        assert!(g.channel_width_um(&l) > base);
+    }
+}

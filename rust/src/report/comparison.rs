@@ -1,0 +1,203 @@
+//! Table II: comparison of FlooNoC with state-of-the-art NoCs.
+//!
+//! The paper's Table II is a spec/feature comparison; the entries below
+//! encode the published rows (with the paper's own annotations) plus the
+//! values our reproduction computes for "This work".
+
+use crate::phys::BandwidthModel;
+
+/// Feature flags as printed in Table II.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Support {
+    Yes,
+    No,
+    Partial(&'static str),
+    Unknown,
+}
+
+impl Support {
+    pub fn glyph(&self) -> String {
+        match self {
+            Support::Yes => "yes".to_string(),
+            Support::No => "no".to_string(),
+            Support::Partial(note) => format!("~({note})"),
+            Support::Unknown => "n.a.".to_string(),
+        }
+    }
+}
+
+/// One comparison row.
+#[derive(Debug, Clone)]
+pub struct NocEntry {
+    pub name: &'static str,
+    /// Link width in bits (as published; `0` = not disclosed).
+    pub link_bits: &'static str,
+    /// Frequency in GHz (0.0 = not disclosed).
+    pub freq_ghz: f64,
+    /// Peak link bandwidth in Gbps (0.0 = not disclosed).
+    pub link_gbps: f64,
+    pub open_source: Support,
+    pub outstanding_txns: Support,
+    pub axi4_compliant: Support,
+    pub physical_impl: Support,
+}
+
+/// The published rows of Table II plus this reproduction's computed row.
+pub fn table_two_entries() -> Vec<NocEntry> {
+    let this_work_bw = BandwidthModel::default().wide_link_gbps();
+    vec![
+        NocEntry {
+            name: "FlexNoC [9]",
+            link_bits: "n.a.",
+            freq_ghz: 0.0,
+            link_gbps: 0.0,
+            open_source: Support::No,
+            outstanding_txns: Support::Yes,
+            axi4_compliant: Support::Yes,
+            physical_impl: Support::Partial("not benchmarked openly"),
+        },
+        NocEntry {
+            name: "CoreLink [8]",
+            link_bits: "<=512",
+            freq_ghz: 1.0,
+            link_gbps: 512.0,
+            open_source: Support::No,
+            outstanding_txns: Support::Yes,
+            axi4_compliant: Support::Yes,
+            physical_impl: Support::Unknown,
+        },
+        NocEntry {
+            name: "ESP [4]",
+            link_bits: "5x64",
+            freq_ghz: 0.8,
+            link_gbps: 281.0,
+            open_source: Support::Yes,
+            outstanding_txns: Support::No,
+            axi4_compliant: Support::No,
+            physical_impl: Support::Yes,
+        },
+        NocEntry {
+            name: "Constellation [7]",
+            link_bits: "64",
+            freq_ghz: 0.5,
+            link_gbps: 32.0,
+            open_source: Support::Yes,
+            outstanding_txns: Support::Partial("no AXI4 reordering"),
+            axi4_compliant: Support::Partial("1 txn per ID"),
+            physical_impl: Support::No,
+        },
+        NocEntry {
+            name: "OpenPiton [6]",
+            link_bits: "3x64",
+            freq_ghz: 1.0,
+            link_gbps: 192.0,
+            open_source: Support::Yes,
+            outstanding_txns: Support::Partial("AXI4-Lite only"),
+            axi4_compliant: Support::No,
+            physical_impl: Support::Yes,
+        },
+        NocEntry {
+            name: "Celerity [5]",
+            link_bits: "80",
+            freq_ghz: 1.0,
+            link_gbps: 80.0,
+            open_source: Support::Yes,
+            outstanding_txns: Support::No,
+            axi4_compliant: Support::No,
+            physical_impl: Support::Yes,
+        },
+        NocEntry {
+            name: "AXI4-XP [1]",
+            link_bits: "512/64",
+            freq_ghz: 1.0,
+            link_gbps: 512.0,
+            open_source: Support::Yes,
+            outstanding_txns: Support::Yes,
+            axi4_compliant: Support::Yes,
+            physical_impl: Support::Partial("not scalable"),
+        },
+        NocEntry {
+            name: "This work",
+            link_bits: "512/64",
+            freq_ghz: 1.23,
+            link_gbps: this_work_bw,
+            open_source: Support::Yes,
+            outstanding_txns: Support::Yes,
+            axi4_compliant: Support::Yes,
+            physical_impl: Support::Yes,
+        },
+    ]
+}
+
+/// Render Table II.
+pub fn table_two() -> String {
+    let mut out = String::new();
+    out.push_str("Table II: comparison with state-of-the-art NoCs\n");
+    out.push_str(&format!(
+        "{:<18} {:>9} {:>6} {:>9} {:>7} {:>22} {:>10} {:>14}\n",
+        "work", "link[b]", "GHz", "Gbps", "open", "outstanding", "AXI4", "phys impl"
+    ));
+    for e in table_two_entries() {
+        out.push_str(&format!(
+            "{:<18} {:>9} {:>6} {:>9} {:>7} {:>22} {:>10} {:>14}\n",
+            e.name,
+            e.link_bits,
+            if e.freq_ghz > 0.0 {
+                format!("{:.2}", e.freq_ghz)
+            } else {
+                "n.a.".into()
+            },
+            if e.link_gbps > 0.0 {
+                format!("{:.0}", e.link_gbps)
+            } else {
+                "n.a.".into()
+            },
+            e.open_source.glyph(),
+            e.outstanding_txns.glyph(),
+            e.axi4_compliant.glyph(),
+            e.physical_impl.glyph()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn this_work_row_matches_paper() {
+        let rows = table_two_entries();
+        let tw = rows.last().unwrap();
+        assert_eq!(tw.name, "This work");
+        assert!((tw.freq_ghz - 1.23).abs() < 1e-9);
+        assert!((tw.link_gbps - 629.76).abs() < 0.1);
+        assert_eq!(tw.open_source, Support::Yes);
+        assert_eq!(tw.axi4_compliant, Support::Yes);
+    }
+
+    #[test]
+    fn eight_published_rows_plus_this_work() {
+        assert_eq!(table_two_entries().len(), 8);
+    }
+
+    #[test]
+    fn only_this_work_and_flexnoc_corelink_axi4xp_are_fully_axi4() {
+        let full: Vec<_> = table_two_entries()
+            .into_iter()
+            .filter(|e| e.axi4_compliant == Support::Yes)
+            .map(|e| e.name)
+            .collect();
+        assert_eq!(
+            full,
+            vec!["FlexNoC [9]", "CoreLink [8]", "AXI4-XP [1]", "This work"]
+        );
+    }
+
+    #[test]
+    fn renders() {
+        let t = table_two();
+        assert!(t.contains("This work"));
+        assert!(t.contains("630") || t.contains("629"));
+    }
+}

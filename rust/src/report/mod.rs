@@ -1,0 +1,140 @@
+//! Table/figure renderers: turn experiment rows into the tables the
+//! paper prints, plus the Table-II state-of-the-art comparison.
+
+pub mod comparison;
+
+pub use comparison::{table_two, NocEntry};
+
+use crate::coordinator::{AblationRow, Fig5aRow, Fig5bRow};
+use crate::flit::NocLayout;
+use crate::noc::LinkMode;
+
+fn mode_name(m: LinkMode) -> &'static str {
+    match m {
+        LinkMode::NarrowWide => "narrow-wide",
+        LinkMode::WideOnly => "wide-only",
+    }
+}
+
+/// Render Table I from the layout calculator.
+pub fn table_one(layout: &NocLayout) -> String {
+    let mut out = String::new();
+    out.push_str("Table I: physical links (computed from AXI parameters)\n");
+    out.push_str(&format!(
+        "{:<12} {:>8} {:>8} {:>8}  {}\n",
+        "link", "header", "payload", "total", "mapping"
+    ));
+    let rows = [
+        (
+            "narrow_req",
+            layout.narrow_req(),
+            "narrow AR/AW/W + wide AR/AW",
+        ),
+        ("narrow_rsp", layout.narrow_rsp(), "narrow R/B + wide B"),
+        ("wide", layout.wide_link(), "wide W/R (512-bit data)"),
+    ];
+    for (name, l, map) in rows {
+        out.push_str(&format!(
+            "{:<12} {:>8} {:>8} {:>8}  {}\n",
+            name,
+            l.header.bits(),
+            l.payload_bits,
+            l.flit_bits(),
+            map
+        ));
+    }
+    out.push_str(&format!(
+        "duplex channel wires (incl. valid/ready): {}\n",
+        layout.duplex_wires()
+    ));
+    out
+}
+
+/// Render the Fig. 5a series.
+pub fn fig5a_table(rows: &[Fig5aRow]) -> String {
+    let mut out = String::new();
+    out.push_str("Fig. 5a: narrow-transaction latency vs wide-burst interference\n");
+    out.push_str(&format!(
+        "{:<12} {:>6} {:>12} {:>10} {:>10} {:>10} {:>9}\n",
+        "config", "bidir", "wide_outst", "mean", "p99", "max", "slowdown"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<12} {:>6} {:>12} {:>10.1} {:>10} {:>10} {:>8.2}x\n",
+            mode_name(r.mode),
+            r.bidir,
+            r.wide_outstanding,
+            r.narrow_mean,
+            r.narrow_p99,
+            r.narrow_max,
+            r.slowdown
+        ));
+    }
+    out
+}
+
+/// Render the Fig. 5b series.
+pub fn fig5b_table(rows: &[Fig5bRow]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Fig. 5b: effective wide-link bandwidth vs narrow interference\n",
+    );
+    out.push_str(&format!(
+        "{:<12} {:>6} {:>14} {:>12} {:>10}\n",
+        "config", "bidir", "narrow_outst", "utilization", "makespan"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<12} {:>6} {:>14} {:>11.1}% {:>10}\n",
+            mode_name(r.mode),
+            r.bidir,
+            r.narrow_outstanding,
+            r.utilization * 100.0,
+            r.makespan
+        ));
+    }
+    out
+}
+
+/// Render an ablation series.
+pub fn ablation_table(title: &str, rows: &[AblationRow]) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("{:<20} {:>10} {:>14}\n", "param", "value", "metric"));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<20} {:>10} {:>14.3}\n",
+            r.param, r.value, r.metric
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_one_contains_paper_numbers() {
+        let t = table_one(&NocLayout::default());
+        assert!(t.contains("119"));
+        assert!(t.contains("103"));
+        assert!(t.contains("603"));
+        assert!(t.contains("narrow_req"));
+    }
+
+    #[test]
+    fn fig_tables_render() {
+        let rows = vec![Fig5aRow {
+            mode: LinkMode::NarrowWide,
+            bidir: false,
+            wide_outstanding: 4,
+            narrow_mean: 18.5,
+            narrow_p99: 20,
+            narrow_max: 22,
+            slowdown: 1.02,
+        }];
+        let t = fig5a_table(&rows);
+        assert!(t.contains("narrow-wide"));
+        assert!(t.contains("1.02x"));
+    }
+}

@@ -1,0 +1,28 @@
+//! FlooNoC routers (§III-C).
+//!
+//! Design points taken from the paper, each visible in the code:
+//!
+//! * **no virtual channels, no internal pipelining** — a router is input
+//!   FIFOs + route computation + round-robin switch allocation, nothing
+//!   else; single-cycle latency because forwarding happens the same cycle
+//!   a flit sits at an input-buffer head;
+//! * **multilink** — one independent router instance per physical link
+//!   (narrow_req / narrow_rsp / wide); the three networks never share
+//!   resources;
+//! * **wormhole routing with valid-ready flow control** — an output port
+//!   locks to the winning input until the flit marked `last` passes;
+//! * **configurable radix** — any number of ports (the paper's tile uses
+//!   5×5: local + 4 cardinal);
+//! * **optional output register** ("elastic buffer") — trades one extra
+//!   cycle for relaxed link timing; the paper's physical implementation
+//!   uses this two-cycle variant, and so does our calibrated default;
+//! * **static routing** — dimension-ordered XY or table-based; the
+//!   decision logic is a pluggable function of (router, dst).
+
+pub mod router;
+pub mod routing;
+pub mod arbiter;
+
+pub use arbiter::RoundRobin;
+pub use router::{Router, RouterCfg, PORT_LOCAL, PORT_N, PORT_E, PORT_S, PORT_W};
+pub use routing::{xy_route, RouteTable};

@@ -1,0 +1,361 @@
+//! The router proper: input-buffered, wormhole, round-robin switch.
+
+use crate::flit::FlooFlit;
+use crate::sim::{Link, LinkId};
+
+use super::arbiter::RoundRobin;
+use super::routing::RouteTable;
+
+/// Canonical port numbering for the 5×5 mesh router.
+pub const PORT_LOCAL: usize = 0;
+pub const PORT_N: usize = 1;
+pub const PORT_E: usize = 2;
+pub const PORT_S: usize = 3;
+pub const PORT_W: usize = 4;
+
+/// Static router configuration.
+#[derive(Debug, Clone)]
+pub struct RouterCfg {
+    /// Radix (inputs = outputs = ports). The paper's tile router is 5.
+    pub ports: usize,
+    /// Input FIFO depth in flits.
+    pub in_buf_depth: usize,
+}
+
+impl Default for RouterCfg {
+    fn default() -> Self {
+        RouterCfg {
+            ports: 5,
+            in_buf_depth: 2,
+        }
+    }
+}
+
+/// Per-output wormhole/arbitration state.
+#[derive(Debug, Clone)]
+struct OutputState {
+    /// Input port holding this output until its packet's `last` flit.
+    lock: Option<usize>,
+    arb: RoundRobin,
+    /// Forwarded flit count (utilization accounting).
+    forwarded: u64,
+}
+
+/// One router instance of one physical network.
+///
+/// The router does not own its links; it holds [`LinkId`]s into the
+/// network's link arena and is stepped with that arena (`step`). `None`
+/// entries are unconnected ports (mesh boundary).
+#[derive(Debug)]
+pub struct Router {
+    pub cfg: RouterCfg,
+    /// Input link per port (delivers into this router's input buffers).
+    pub in_links: Vec<Option<LinkId>>,
+    /// Output link per port.
+    pub out_links: Vec<Option<LinkId>>,
+    /// Routing table (dst node -> output port).
+    pub table: RouteTable,
+    outputs: Vec<OutputState>,
+    /// Reusable route-computation scratch (avoids per-cycle allocation).
+    want: Vec<Option<usize>>,
+    /// Total flits forwarded (all ports).
+    pub forwarded: u64,
+    /// Cycles with at least one forwarded flit (activity factor).
+    pub active_cycles: u64,
+}
+
+impl Router {
+    pub fn new(cfg: RouterCfg, table: RouteTable) -> Self {
+        let outputs = (0..cfg.ports)
+            .map(|_| OutputState {
+                lock: None,
+                arb: RoundRobin::new(cfg.ports),
+                forwarded: 0,
+            })
+            .collect();
+        Router {
+            in_links: vec![None; cfg.ports],
+            out_links: vec![None; cfg.ports],
+            table,
+            outputs,
+            want: vec![None; cfg.ports],
+            cfg,
+            forwarded: 0,
+            active_cycles: 0,
+        }
+    }
+
+    /// Flits forwarded through a specific output port.
+    pub fn forwarded_on(&self, port: usize) -> u64 {
+        self.outputs[port].forwarded
+    }
+
+    /// One cycle: route computation on input-buffer heads, switch
+    /// allocation (wormhole locks honoured, round-robin otherwise), and
+    /// traversal into the output links.
+    pub fn step(&mut self, links: &mut [Link<FlooFlit>]) {
+        let ports = self.cfg.ports;
+        // Phase 1: route computation — desired output per input head.
+        // `want[i] = Some(o)` when input i's head flit requests output o.
+        // The scratch buffer lives in the router (no per-cycle allocation)
+        // and the step exits early when every input is empty — the common
+        // case in large meshes.
+        let mut any_input = false;
+        for i in 0..ports {
+            self.want[i] = None;
+            let Some(lid) = self.in_links[i] else { continue };
+            if let Some(flit) = links[lid].peek() {
+                let o = self.table.lookup(flit.header.dst);
+                debug_assert!(o < ports, "route table port out of range");
+                debug_assert!(
+                    o != i,
+                    "loopback disabled: flit at port {i} routed back (dst {:?})",
+                    flit.header.dst
+                );
+                self.want[i] = Some(o);
+                any_input = true;
+            }
+        }
+        if !any_input {
+            return;
+        }
+        // Phase 2: switch allocation + traversal, one winner per output.
+        let mut any = false;
+        for o in 0..ports {
+            let Some(out_lid) = self.out_links[o] else { continue };
+            if !links[out_lid].can_offer() {
+                continue; // downstream backpressure (ready deasserted)
+            }
+            let want = &self.want;
+            let winner = match self.outputs[o].lock {
+                // Wormhole: the locked input continues its packet; if its
+                // next flit hasn't arrived yet the output idles but stays
+                // locked (no interleaving, as in RTL).
+                Some(i) => {
+                    if want[i] == Some(o) {
+                        Some(i)
+                    } else {
+                        None
+                    }
+                }
+                None => self.outputs[o].arb.arbitrate_with(|i| want[i] == Some(o)),
+            };
+            let Some(i) = winner else { continue };
+            let in_lid = self.in_links[i].unwrap();
+            let flit = links[in_lid].pop().unwrap();
+            self.outputs[o].lock = if flit.header.last { None } else { Some(i) };
+            links[out_lid].offer(flit);
+            self.outputs[o].forwarded += 1;
+            self.forwarded += 1;
+            self.want[i] = None; // an input feeds at most one output per cycle
+            any = true;
+        }
+        if any {
+            self.active_cycles += 1;
+        }
+    }
+
+    /// True when all input buffers this router reads from are empty and no
+    /// output is mid-packet.
+    pub fn is_idle(&self, links: &[Link<FlooFlit>]) -> bool {
+        self.outputs.iter().all(|o| o.lock.is_none())
+            && self
+                .in_links
+                .iter()
+                .flatten()
+                .all(|&lid| links[lid].peek().is_none())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::{AxReq, Burst, Resp, RBeat};
+    use crate::flit::{Header, NodeId, Payload};
+
+    fn flit(dst: u16, last: bool, tag: u32) -> FlooFlit {
+        FlooFlit {
+            header: Header {
+                dst: NodeId(dst),
+                src: NodeId(0),
+                rob_idx: tag,
+                rob_req: true,
+                atomic: false,
+                last,
+            },
+            payload: Payload::NarrowAr(AxReq {
+                id: 0,
+                addr: 0,
+                len: 0,
+                size: 3,
+                burst: Burst::Incr,
+                atop: false,
+            }),
+            injected_at: 0,
+        }
+    }
+
+    fn rflit(dst: u16, beat: u32, last: bool) -> FlooFlit {
+        FlooFlit {
+            header: Header {
+                dst: NodeId(dst),
+                src: NodeId(0),
+                rob_idx: 0,
+                rob_req: true,
+                atomic: false,
+                last,
+            },
+            payload: Payload::WideR(RBeat {
+                id: 0,
+                beat,
+                last,
+                resp: Resp::Okay,
+            }),
+            injected_at: 0,
+        }
+    }
+
+    /// Build a 3-port router with dedicated in/out links.
+    /// dst 0 -> port 0, dst 1 -> port 1, dst 2 -> port 2.
+    fn mini() -> (Router, Vec<Link<FlooFlit>>) {
+        let mut links: Vec<Link<FlooFlit>> = (0..6).map(|_| Link::new(2)).collect();
+        let _ = &mut links;
+        let mut r = Router::new(
+            RouterCfg {
+                ports: 3,
+                in_buf_depth: 2,
+            },
+            RouteTable::new(vec![0, 1, 2]),
+        );
+        for p in 0..3 {
+            r.in_links[p] = Some(p);
+            r.out_links[p] = Some(3 + p);
+        }
+        (r, links)
+    }
+
+    fn deliver_all(links: &mut [Link<FlooFlit>]) {
+        for l in links {
+            l.deliver();
+        }
+    }
+
+    #[test]
+    fn single_cycle_forwarding() {
+        let (mut r, mut links) = mini();
+        links[0].offer(flit(1, true, 7));
+        deliver_all(&mut links); // flit reaches input buffer
+        r.step(&mut links); // forwarded to out link 4 (port 1)
+        deliver_all(&mut links);
+        let got = links[4].pop().unwrap();
+        assert_eq!(got.header.rob_idx, 7);
+        assert_eq!(r.forwarded, 1);
+    }
+
+    #[test]
+    fn wormhole_locks_output_until_last() {
+        let (mut r, mut links) = mini();
+        // Input 0: 2-beat packet to dst 2. Input 1: single flit to dst 2.
+        links[0].offer(rflit(2, 0, false));
+        links[1].offer(flit(2, true, 99));
+        deliver_all(&mut links);
+        r.step(&mut links); // winner starts packet, output 2 locks
+        deliver_all(&mut links);
+        let first = links[5].pop().unwrap();
+        // Offer second beat from the same input that won.
+        let winner_was_0 = matches!(first.payload, Payload::WideR(_));
+        if winner_was_0 {
+            links[0].offer(rflit(2, 1, true));
+        } else {
+            // rr picked input 1's single flit; nothing to continue. Not the
+            // scenario under test; force the deterministic case instead.
+            panic!("expected input 0 to win first rr grant");
+        }
+        deliver_all(&mut links);
+        r.step(&mut links);
+        deliver_all(&mut links);
+        let second = links[5].pop().unwrap();
+        assert!(
+            matches!(second.payload, Payload::WideR(RBeat { beat: 1, .. })),
+            "locked output must continue the packet, not interleave: {second:?}"
+        );
+        // Now the lock is released; the waiting flit goes through.
+        r.step(&mut links);
+        deliver_all(&mut links);
+        assert_eq!(links[5].pop().unwrap().header.rob_idx, 99);
+    }
+
+    #[test]
+    fn backpressure_holds_flit() {
+        let (mut r, mut links) = mini();
+        // Fill output 1's downstream buffer (depth 2) + register.
+        links[0].offer(flit(1, true, 1));
+        deliver_all(&mut links);
+        r.step(&mut links);
+        links[0].offer(flit(1, true, 2));
+        deliver_all(&mut links);
+        r.step(&mut links);
+        links[0].offer(flit(1, true, 3));
+        deliver_all(&mut links);
+        r.step(&mut links);
+        // out link 4 now: buf [1,2] + reg 3 -> full.
+        links[0].offer(flit(1, true, 4));
+        deliver_all(&mut links);
+        let before = r.forwarded;
+        r.step(&mut links); // cannot offer: register busy
+        assert_eq!(r.forwarded, before, "no forward under backpressure");
+        // Drain one and try again.
+        assert_eq!(links[4].pop().unwrap().header.rob_idx, 1);
+        deliver_all(&mut links); // reg 3 -> buf
+        r.step(&mut links); // 4 forwards into reg
+        assert_eq!(r.forwarded, before + 1);
+    }
+
+    #[test]
+    fn parallel_disjoint_transfers_same_cycle() {
+        let (mut r, mut links) = mini();
+        links[0].offer(flit(1, true, 10));
+        links[1].offer(flit(2, true, 20));
+        deliver_all(&mut links);
+        r.step(&mut links);
+        deliver_all(&mut links);
+        assert_eq!(links[4].pop().unwrap().header.rob_idx, 10);
+        assert_eq!(links[5].pop().unwrap().header.rob_idx, 20);
+        assert_eq!(r.forwarded, 2, "crossbar moves disjoint pairs in parallel");
+    }
+
+    #[test]
+    fn contention_resolved_round_robin() {
+        let (mut r, mut links) = mini();
+        // Both inputs target output 2 with single-flit packets repeatedly.
+        let mut order = Vec::new();
+        for round in 0..4 {
+            links[0].offer(flit(2, true, 100 + round));
+            links[1].offer(flit(2, true, 200 + round));
+            deliver_all(&mut links);
+            r.step(&mut links);
+            deliver_all(&mut links);
+            order.push(links[5].pop().unwrap().header.rob_idx / 100);
+            // Second one goes through next cycle.
+            r.step(&mut links);
+            deliver_all(&mut links);
+            order.push(links[5].pop().unwrap().header.rob_idx / 100);
+        }
+        // Fair alternation: each round serves both, rotating priority.
+        let ones = order.iter().filter(|&&x| x == 1).count();
+        let twos = order.iter().filter(|&&x| x == 2).count();
+        assert_eq!(ones, 4);
+        assert_eq!(twos, 4);
+    }
+
+    #[test]
+    fn idle_detection() {
+        let (mut r, mut links) = mini();
+        assert!(r.is_idle(&links));
+        links[0].offer(flit(1, true, 1));
+        deliver_all(&mut links);
+        assert!(!r.is_idle(&links));
+        r.step(&mut links);
+        assert!(r.is_idle(&links));
+    }
+}

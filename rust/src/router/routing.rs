@@ -1,0 +1,101 @@
+//! Static routing: dimension-ordered XY and table-based.
+//!
+//! Both are materialized per router as a destination-indexed table (what
+//! "table-based routing using the destination's ID" means in the paper);
+//! [`xy_route`] is the generator rule for XY tables and is also exposed for
+//! direct use/testing.
+
+use crate::flit::{Coord, NodeId};
+
+use super::router::{PORT_E, PORT_LOCAL, PORT_N, PORT_S, PORT_W};
+
+/// Dimension-ordered XY step from `me` towards `dst`: move in X first,
+/// then Y, then deliver locally. Returns the output port.
+pub fn xy_route(me: Coord, dst: Coord) -> usize {
+    if dst.x > me.x {
+        PORT_E
+    } else if dst.x < me.x {
+        PORT_W
+    } else if dst.y > me.y {
+        PORT_N
+    } else if dst.y < me.y {
+        PORT_S
+    } else {
+        PORT_LOCAL
+    }
+}
+
+/// Per-router route table: output port for every destination node.
+#[derive(Debug, Clone)]
+pub struct RouteTable {
+    ports: Vec<u8>,
+}
+
+impl RouteTable {
+    pub fn new(ports: Vec<u8>) -> Self {
+        RouteTable { ports }
+    }
+
+    /// Output port for `dst`. Panics on unknown destinations — a routing
+    /// table must be total over the deployed nodes.
+    #[inline]
+    pub fn lookup(&self, dst: NodeId) -> usize {
+        self.ports[dst.0 as usize] as usize
+    }
+
+    pub fn len(&self) -> usize {
+        self.ports.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ports.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xy_goes_x_first() {
+        let me = Coord::new(1, 1);
+        assert_eq!(xy_route(me, Coord::new(3, 0)), PORT_E);
+        assert_eq!(xy_route(me, Coord::new(0, 3)), PORT_W);
+        // Same column: move in Y.
+        assert_eq!(xy_route(me, Coord::new(1, 3)), PORT_N);
+        assert_eq!(xy_route(me, Coord::new(1, 0)), PORT_S);
+        // Arrived.
+        assert_eq!(xy_route(me, me), PORT_LOCAL);
+    }
+
+    #[test]
+    fn xy_path_is_monotone() {
+        // Walk the rule from (0,0) to (3,2): first 3 E steps, then 2 N.
+        let dst = Coord::new(3, 2);
+        let mut cur = Coord::new(0, 0);
+        let mut ports = Vec::new();
+        loop {
+            let p = xy_route(cur, dst);
+            if p == PORT_LOCAL {
+                break;
+            }
+            ports.push(p);
+            match p {
+                PORT_E => cur.x += 1,
+                PORT_W => cur.x -= 1,
+                PORT_N => cur.y += 1,
+                PORT_S => cur.y -= 1,
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(ports, vec![PORT_E, PORT_E, PORT_E, PORT_N, PORT_N]);
+    }
+
+    #[test]
+    fn table_lookup() {
+        let t = RouteTable::new(vec![0, 2, 2, 4]);
+        assert_eq!(t.lookup(NodeId(0)), 0);
+        assert_eq!(t.lookup(NodeId(2)), 2);
+        assert_eq!(t.len(), 4);
+    }
+}

@@ -1,0 +1,159 @@
+//! PJRT runtime: load and execute the AOT-lowered JAX/Pallas artifacts.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. One compiled
+//! executable per model entry point; Python never runs on this path.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+
+/// Artifact metadata (the `meta.json` contract emitted by `compile.aot`).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub tile_dim: usize,
+    pub dse_mesh_n: usize,
+    pub entries: Vec<(String, Vec<Vec<usize>>)>,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> crate::Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).context("meta.json is not valid JSON")?;
+        let tile_dim = j
+            .get("tile_dim")
+            .and_then(Json::as_usize)
+            .context("meta.json missing tile_dim")?;
+        let dse_mesh_n = j
+            .get("dse_mesh_n")
+            .and_then(Json::as_usize)
+            .context("meta.json missing dse_mesh_n")?;
+        let mut entries = Vec::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("meta.json missing artifacts")?;
+        for (name, info) in arts {
+            let inputs = info
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("artifact missing inputs")?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect()
+                })
+                .collect();
+            entries.push((name.clone(), inputs));
+        }
+        Ok(ArtifactMeta {
+            tile_dim,
+            dse_mesh_n,
+            entries,
+        })
+    }
+}
+
+/// A compiled model: PJRT executable + its input-shape contract.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+impl Executable {
+    /// Execute with f32 inputs (shape-checked against the contract).
+    /// Returns the flattened f32 outputs of the result tuple.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> crate::Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.input_shapes.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().enumerate() {
+            let want = &self.input_shapes[i];
+            if shape != want {
+                bail!(
+                    "{}: input {i} shape {shape:?} != artifact contract {want:?}",
+                    self.name
+                );
+            }
+            let numel: usize = shape.iter().product();
+            if data.len() != numel {
+                bail!("{}: input {i} has {} elems, shape needs {numel}", self.name, data.len());
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True: unpack the tuple elements.
+        let elems = result.to_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// The runtime: a PJRT CPU client plus compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub meta: ArtifactMeta,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load artifact metadata from `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> crate::Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta = ArtifactMeta::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, meta, dir })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact by entry-point name.
+    pub fn load(&self, name: &str) -> crate::Result<Executable> {
+        let (entry, shapes) = self
+            .meta
+            .entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .with_context(|| format!("artifact '{name}' not in meta.json"))?;
+        let path = self.dir.join(format!("{entry}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Executable {
+            exe,
+            name: name.to_string(),
+            input_shapes: shapes.clone(),
+        })
+    }
+}
+
+// Tests for the runtime live in rust/tests/integration_runtime.rs because
+// they require `make artifacts` to have produced the HLO files.

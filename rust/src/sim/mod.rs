@@ -1,0 +1,32 @@
+//! Cycle-stepped simulation kernel.
+//!
+//! The simulator is a synchronous model of the RTL: a global cycle counter
+//! advances, and every hardware structure steps once per cycle. Hop timing
+//! and backpressure are modelled by [`Link`], a one-entry register stage in
+//! front of a bounded input FIFO:
+//!
+//! ```text
+//!   producer --(offer when reg empty)--> [reg] --(deliver when fifo space)--> [input fifo] --> consumer
+//! ```
+//!
+//! Each cycle proceeds in two phases:
+//!
+//! 1. **deliver** — every link moves its registered flit into the consumer's
+//!    input FIFO if there is space (this models the valid/ready handshake at
+//!    the downstream input buffer);
+//! 2. **step** — every component consumes from its input FIFOs and offers new
+//!    flits into the links whose register is empty.
+//!
+//! Because a flit offered in cycle *t* is only visible to the consumer in
+//! cycle *t+1*, every hop costs exactly one cycle — matching the paper's
+//! "single-cycle latency due to input buffering" — and there are no
+//! combinational loops regardless of component evaluation order.
+
+pub mod link;
+pub mod engine;
+
+pub use engine::{Engine, SimStats};
+pub use link::{Link, LinkId};
+
+/// Simulation time in clock cycles.
+pub type Cycle = u64;

@@ -1,0 +1,227 @@
+//! Measurement infrastructure: latency distributions and bandwidth meters.
+//!
+//! Every paper experiment reduces to one of these two instruments:
+//! Fig. 5a is a [`LatencyRecorder`] over narrow transactions, Fig. 5b a
+//! [`BandwidthMeter`] over wide-link payload, §VI-A the mean of a
+//! zero-load [`LatencyRecorder`], §VI-B the meter's peak.
+
+use crate::util::json::Json;
+
+/// Online latency statistics with full sample retention (sample counts in
+/// these experiments are small: 10²–10⁵).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples: Vec<u64>,
+    sorted: bool,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, latency: u64) {
+        self.samples.push(latency);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        self.samples.iter().copied().min().unwrap_or(0)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in [0, 100]; nearest-rank.
+    pub fn percentile(&mut self, p: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        self.ensure_sorted();
+        let rank = ((p / 100.0) * (self.samples.len() as f64 - 1.0)).floor() as usize;
+        self.samples[rank.min(self.samples.len() - 1)]
+    }
+
+    pub fn p50(&mut self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&mut self) -> u64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&mut self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    pub fn to_json(&mut self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("min", Json::Num(self.min() as f64)),
+            ("p50", Json::Num(self.p50() as f64)),
+            ("p95", Json::Num(self.p95() as f64)),
+            ("p99", Json::Num(self.p99() as f64)),
+            ("max", Json::Num(self.max() as f64)),
+        ])
+    }
+}
+
+/// Payload-bandwidth meter for one observation point (e.g. the wide-link
+/// ejection at a tile). Utilization is useful payload bits over the link's
+/// theoretical peak (width × cycles) — the Fig. 5b metric.
+#[derive(Debug, Clone)]
+pub struct BandwidthMeter {
+    /// Physical payload width of the observed link in bits.
+    pub link_bits: u32,
+    /// Useful payload bits observed.
+    pub payload_bits: u64,
+    /// Flits observed.
+    pub flits: u64,
+    /// First/last observation cycles (measurement window).
+    pub first_cycle: Option<u64>,
+    pub last_cycle: u64,
+}
+
+impl BandwidthMeter {
+    pub fn new(link_bits: u32) -> Self {
+        BandwidthMeter {
+            link_bits,
+            payload_bits: 0,
+            flits: 0,
+            first_cycle: None,
+            last_cycle: 0,
+        }
+    }
+
+    pub fn observe(&mut self, now: u64, payload_bits: u32) {
+        self.payload_bits += payload_bits as u64;
+        self.flits += 1;
+        if self.first_cycle.is_none() {
+            self.first_cycle = Some(now);
+        }
+        self.last_cycle = now;
+    }
+
+    /// Active window in cycles (inclusive).
+    pub fn window(&self) -> u64 {
+        match self.first_cycle {
+            Some(f) => self.last_cycle.saturating_sub(f) + 1,
+            None => 0,
+        }
+    }
+
+    /// Effective bandwidth utilization in [0, 1]: payload bits delivered
+    /// over the link's peak capacity during the active window.
+    pub fn utilization(&self) -> f64 {
+        let w = self.window();
+        if w == 0 {
+            return 0.0;
+        }
+        self.payload_bits as f64 / (self.link_bits as f64 * w as f64)
+    }
+
+    /// Delivered payload bandwidth in Gbps at `freq_ghz`.
+    pub fn gbps(&self, freq_ghz: f64) -> f64 {
+        let w = self.window();
+        if w == 0 {
+            return 0.0;
+        }
+        (self.payload_bits as f64 / w as f64) * freq_ghz
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("flits", Json::Num(self.flits as f64)),
+            ("payload_bits", Json::Num(self.payload_bits as f64)),
+            ("window_cycles", Json::Num(self.window() as f64)),
+            ("utilization", Json::Num(self.utilization())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary() {
+        let mut l = LatencyRecorder::new();
+        for v in [10, 20, 30, 40, 50] {
+            l.record(v);
+        }
+        assert_eq!(l.count(), 5);
+        assert_eq!(l.mean(), 30.0);
+        assert_eq!(l.min(), 10);
+        assert_eq!(l.max(), 50);
+        assert_eq!(l.p50(), 30);
+    }
+
+    #[test]
+    fn percentiles_on_larger_set() {
+        let mut l = LatencyRecorder::new();
+        for v in 1..=100 {
+            l.record(v);
+        }
+        assert_eq!(l.p50(), 50);
+        assert_eq!(l.p95(), 95);
+        assert_eq!(l.p99(), 99);
+    }
+
+    #[test]
+    fn empty_recorder_is_zero() {
+        let mut l = LatencyRecorder::new();
+        assert_eq!(l.mean(), 0.0);
+        assert_eq!(l.p99(), 0);
+    }
+
+    #[test]
+    fn bandwidth_utilization() {
+        let mut b = BandwidthMeter::new(512);
+        // 8 cycles window, 4 full beats -> 50 % utilization.
+        b.observe(0, 512);
+        b.observe(2, 512);
+        b.observe(4, 512);
+        b.observe(7, 512);
+        assert_eq!(b.window(), 8);
+        assert!((b.utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_gbps() {
+        let mut b = BandwidthMeter::new(512);
+        for t in 0..10 {
+            b.observe(t, 512); // fully utilized
+        }
+        // 512 bit/cycle at 1.23 GHz = 629.76 Gbps.
+        assert!((b.gbps(1.23) - 629.76).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_export() {
+        let mut l = LatencyRecorder::new();
+        l.record(18);
+        let j = l.to_json();
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("mean").unwrap().as_f64(), Some(18.0));
+    }
+}

@@ -1,0 +1,297 @@
+//! Mesh topology, node naming, address map and route-table generation.
+//!
+//! A deployment is a `W×H` mesh of compute tiles (one multilink router +
+//! NI each) plus memory controllers attached to the free cardinal ports of
+//! boundary routers (paper Fig. 4a: "Memory controllers can be placed on
+//! the mesh boundary and connected to the NoC").
+
+use crate::flit::{Coord, NodeId};
+use crate::router::{xy_route, RouteTable, PORT_E, PORT_LOCAL, PORT_N, PORT_S, PORT_W};
+
+/// What kind of endpoint a node is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Compute tile at its own mesh coordinate.
+    Tile,
+    /// Memory controller attached to the boundary router at `host` via
+    /// `attach_port` (the otherwise-unused cardinal port).
+    MemCtrl { attach_port: usize },
+}
+
+/// Static description of one node.
+#[derive(Debug, Clone, Copy)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: NodeKind,
+    /// Mesh coordinate: own coordinate for tiles, the host router's
+    /// coordinate for memory controllers.
+    pub coord: Coord,
+}
+
+/// Which mesh edges get memory controllers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemEdge {
+    None,
+    West,
+    EastWest,
+    All,
+}
+
+/// Global address-map constants. Each node owns a contiguous window; the
+/// paper's tile has a 128 kB SPM, memory controllers front large DRAM
+/// regions.
+pub const TILE_SPAN: u64 = 1 << 24; // 16 MB window per tile (SPM + MMIO)
+pub const SPM_BYTES: u64 = 128 * 1024;
+pub const MEM_BASE: u64 = 1 << 40; // memory controllers live high
+pub const MEM_SPAN: u64 = 1 << 32; // 4 GB window per controller
+
+/// A full topology: tiles in row-major order, then memory controllers.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub width: u8,
+    pub height: u8,
+    pub nodes: Vec<Node>,
+    /// Number of tile nodes (tiles occupy ids `0..num_tiles`).
+    pub num_tiles: usize,
+}
+
+impl Topology {
+    /// Build a `width × height` tile mesh with memory controllers on the
+    /// chosen edges (one per boundary router on that edge).
+    pub fn mesh(width: u8, height: u8, mem: MemEdge) -> Self {
+        assert!(width >= 1 && height >= 1);
+        assert!(width as usize * height as usize <= u16::MAX as usize);
+        let mut nodes = Vec::new();
+        for y in 0..height {
+            for x in 0..width {
+                nodes.push(Node {
+                    id: NodeId((y as u16) * width as u16 + x as u16),
+                    kind: NodeKind::Tile,
+                    coord: Coord::new(x, y),
+                });
+            }
+        }
+        let num_tiles = nodes.len();
+        let mut next_id = num_tiles as u16;
+        let mut add_mem = |coord: Coord, attach_port: usize, nodes: &mut Vec<Node>| {
+            nodes.push(Node {
+                id: NodeId(next_id),
+                kind: NodeKind::MemCtrl { attach_port },
+                coord,
+            });
+            next_id += 1;
+        };
+        let west = matches!(mem, MemEdge::West | MemEdge::EastWest | MemEdge::All);
+        let east = matches!(mem, MemEdge::EastWest | MemEdge::All);
+        let north_south = matches!(mem, MemEdge::All);
+        if west {
+            for y in 0..height {
+                add_mem(Coord::new(0, y), PORT_W, &mut nodes);
+            }
+        }
+        if east {
+            for y in 0..height {
+                add_mem(Coord::new(width - 1, y), PORT_E, &mut nodes);
+            }
+        }
+        if north_south {
+            for x in 0..width {
+                add_mem(Coord::new(x, height - 1), PORT_N, &mut nodes);
+                add_mem(Coord::new(x, 0), PORT_S, &mut nodes);
+            }
+        }
+        Topology {
+            width,
+            height,
+            nodes,
+            num_tiles,
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    /// Tile id at mesh coordinate.
+    pub fn tile_at(&self, c: Coord) -> NodeId {
+        debug_assert!(c.x < self.width && c.y < self.height);
+        NodeId((c.y as u16) * self.width as u16 + c.x as u16)
+    }
+
+    /// All memory-controller node ids.
+    pub fn mem_ctrls(&self) -> Vec<NodeId> {
+        self.nodes[self.num_tiles..].iter().map(|n| n.id).collect()
+    }
+
+    /// Router index for a mesh coordinate (routers exist per tile).
+    pub fn router_index(&self, c: Coord) -> usize {
+        (c.y as usize) * self.width as usize + c.x as usize
+    }
+
+    // ------------------------------------------------------------ addresses
+
+    /// Base address of a node's memory window.
+    pub fn base_addr(&self, id: NodeId) -> u64 {
+        match self.node(id).kind {
+            NodeKind::Tile => id.0 as u64 * TILE_SPAN,
+            NodeKind::MemCtrl { .. } => {
+                MEM_BASE + (id.0 as usize - self.num_tiles) as u64 * MEM_SPAN
+            }
+        }
+    }
+
+    /// Address-map lookup: which node owns `addr`?
+    pub fn node_of_addr(&self, addr: u64) -> Option<NodeId> {
+        if addr >= MEM_BASE {
+            let idx = ((addr - MEM_BASE) / MEM_SPAN) as usize;
+            let id = self.num_tiles + idx;
+            (id < self.nodes.len()).then(|| NodeId(id as u16))
+        } else {
+            let idx = (addr / TILE_SPAN) as usize;
+            (idx < self.num_tiles).then(|| NodeId(idx as u16))
+        }
+    }
+
+    // -------------------------------------------------------------- routing
+
+    /// Generate the XY route table for the router at `me`: for each
+    /// destination node, the output port a flit should take. Memory
+    /// controllers route like their host router, plus the final attach-port
+    /// exit at the host itself.
+    pub fn xy_table(&self, me: Coord) -> RouteTable {
+        let ports = self
+            .nodes
+            .iter()
+            .map(|n| {
+                if n.coord == me {
+                    match n.kind {
+                        NodeKind::Tile => PORT_LOCAL as u8,
+                        NodeKind::MemCtrl { attach_port } => attach_port as u8,
+                    }
+                } else {
+                    xy_route(me, n.coord) as u8
+                }
+            })
+            .collect();
+        RouteTable::new(ports)
+    }
+
+    /// XY hop count between two nodes' host routers (for analytical checks).
+    pub fn hops(&self, a: NodeId, b: NodeId) -> u32 {
+        let ca = self.node(a).coord;
+        let cb = self.node(b).coord;
+        (ca.x.abs_diff(cb.x) + ca.y.abs_diff(cb.y)) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_node_counts() {
+        let t = Topology::mesh(4, 4, MemEdge::West);
+        assert_eq!(t.num_tiles, 16);
+        assert_eq!(t.num_nodes(), 20);
+        assert_eq!(t.mem_ctrls().len(), 4);
+    }
+
+    #[test]
+    fn tile_coords_row_major() {
+        let t = Topology::mesh(3, 2, MemEdge::None);
+        assert_eq!(t.node(NodeId(0)).coord, Coord::new(0, 0));
+        assert_eq!(t.node(NodeId(2)).coord, Coord::new(2, 0));
+        assert_eq!(t.node(NodeId(3)).coord, Coord::new(0, 1));
+        assert_eq!(t.tile_at(Coord::new(2, 1)), NodeId(5));
+    }
+
+    #[test]
+    fn address_map_roundtrip() {
+        let t = Topology::mesh(4, 4, MemEdge::EastWest);
+        for n in &t.nodes {
+            let base = t.base_addr(n.id);
+            assert_eq!(t.node_of_addr(base), Some(n.id));
+            assert_eq!(t.node_of_addr(base + 0x1000), Some(n.id));
+        }
+    }
+
+    #[test]
+    fn address_map_rejects_unmapped() {
+        let t = Topology::mesh(2, 2, MemEdge::None);
+        assert_eq!(t.node_of_addr(MEM_BASE), None, "no mem ctrls configured");
+        assert_eq!(t.node_of_addr(4 * TILE_SPAN), None, "beyond last tile");
+    }
+
+    #[test]
+    fn xy_tables_deliver_everywhere() {
+        // Follow the generated tables hop by hop from every source to every
+        // destination and check arrival within the Manhattan bound.
+        let t = Topology::mesh(4, 3, MemEdge::EastWest);
+        for src in &t.nodes {
+            for dst in &t.nodes {
+                if src.id == dst.id {
+                    continue;
+                }
+                let mut cur = src.coord;
+                let mut hops = 0;
+                loop {
+                    let table = t.xy_table(cur);
+                    let port = table.lookup(dst.id);
+                    match port {
+                        PORT_LOCAL => {
+                            assert!(matches!(dst.kind, NodeKind::Tile));
+                            assert_eq!(cur, dst.coord);
+                            break;
+                        }
+                        PORT_N => cur.y += 1,
+                        PORT_S => cur.y -= 1,
+                        PORT_E => cur.x += 1,
+                        PORT_W => {
+                            if let NodeKind::MemCtrl { attach_port: PORT_W } = dst.kind {
+                                if cur == dst.coord && cur.x == 0 {
+                                    break; // exited to the west mem ctrl
+                                }
+                            }
+                            cur.x -= 1;
+                        }
+                        p => panic!("unexpected port {p}"),
+                    }
+                    if port == PORT_E
+                        && matches!(dst.kind, NodeKind::MemCtrl { attach_port: PORT_E })
+                        && cur.x == t.width
+                    {
+                        break; // exited east; coord is off-mesh by design
+                    }
+                    hops += 1;
+                    assert!(hops <= t.hops(src.id, dst.id) + 1, "path too long");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mem_ctrl_attach_ports() {
+        let t = Topology::mesh(2, 2, MemEdge::EastWest);
+        let mems = t.mem_ctrls();
+        assert_eq!(mems.len(), 4);
+        let west: Vec<_> = mems
+            .iter()
+            .filter(|&&m| {
+                matches!(t.node(m).kind, NodeKind::MemCtrl { attach_port: PORT_W })
+            })
+            .collect();
+        assert_eq!(west.len(), 2);
+    }
+
+    #[test]
+    fn hops_manhattan() {
+        let t = Topology::mesh(4, 4, MemEdge::None);
+        assert_eq!(t.hops(NodeId(0), NodeId(15)), 6);
+        assert_eq!(t.hops(NodeId(0), NodeId(1)), 1);
+        assert_eq!(t.hops(NodeId(5), NodeId(5)), 0);
+    }
+}

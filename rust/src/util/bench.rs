@@ -1,0 +1,194 @@
+//! Tiny benchmark harness (criterion substitute for the offline build).
+//!
+//! `cargo bench` targets in this crate use `harness = false` and drive this
+//! module directly: warmup, N timed repetitions, median/p10/p90 reporting,
+//! and a machine-readable one-line summary that EXPERIMENTS.md references.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time, sorted ascending.
+    pub samples_ns: Vec<u64>,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> u64 {
+        self.samples_ns[self.samples_ns.len() / 2]
+    }
+
+    pub fn p10_ns(&self) -> u64 {
+        self.samples_ns[self.samples_ns.len() / 10]
+    }
+
+    pub fn p90_ns(&self) -> u64 {
+        self.samples_ns[self.samples_ns.len() * 9 / 10]
+    }
+
+    /// items/s at the median, when a throughput denominator was given.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n as f64 / (self.median_ns() as f64 * 1e-9))
+    }
+
+    /// Human-readable single line.
+    pub fn line(&self) -> String {
+        let med = fmt_ns(self.median_ns());
+        let p10 = fmt_ns(self.p10_ns());
+        let p90 = fmt_ns(self.p90_ns());
+        match self.throughput() {
+            Some(tp) => format!(
+                "{:<44} median {:>10}  [{} .. {}]  {:>12}/s",
+                self.name,
+                med,
+                p10,
+                p90,
+                fmt_count(tp)
+            ),
+            None => format!(
+                "{:<44} median {:>10}  [{} .. {}]",
+                self.name, med, p10, p90
+            ),
+        }
+    }
+}
+
+fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2} G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2} M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2} k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Bench runner with fixed warmup/sample counts.
+pub struct Bencher {
+    pub warmup: u32,
+    pub samples: u32,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // BENCH_SAMPLES lets CI shrink bench time.
+        let samples = std::env::var("BENCH_SAMPLES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(20);
+        Bencher {
+            warmup: 3,
+            samples,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: u32, samples: u32) -> Self {
+        Bencher {
+            warmup,
+            samples,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (which should perform one full iteration of work), with
+    /// `items` the number of logical items processed per iteration (for
+    /// throughput reporting).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, items: Option<u64>, mut f: F) {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples as usize);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as u64);
+        }
+        samples.sort();
+        let r = BenchResult {
+            name: name.to_string(),
+            samples_ns: samples,
+            items_per_iter: items,
+        };
+        println!("{}", r.line());
+        self.results.push(r);
+    }
+
+    /// Access collected results (e.g. to dump JSON).
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Measure a single closure once, returning its duration. Used by the
+/// experiment harness for coarse end-to-end timings.
+pub fn time_once<F: FnOnce()>(f: F) -> Duration {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher::new(1, 5);
+        let mut count = 0u64;
+        b.bench("noop", Some(1), || {
+            count += 1;
+        });
+        assert_eq!(count, 6); // 1 warmup + 5 samples
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples_ns: (1..=100).collect(),
+            items_per_iter: None,
+        };
+        assert!(r.p10_ns() <= r.median_ns());
+        assert!(r.median_ns() <= r.p90_ns());
+    }
+
+    #[test]
+    fn formatting_units() {
+        assert_eq!(fmt_ns(500), "500 ns");
+        assert!(fmt_ns(1_500).contains("µs"));
+        assert!(fmt_ns(2_000_000).contains("ms"));
+        assert!(fmt_ns(3_000_000_000).contains(" s"));
+    }
+
+    #[test]
+    fn time_once_positive() {
+        let d = time_once(|| {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(d.as_nanos() > 0);
+    }
+}

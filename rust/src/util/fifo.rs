@@ -1,0 +1,160 @@
+//! Bounded FIFO used throughout the simulator for input buffers, reorder
+//! table entries and meta FIFOs.
+//!
+//! A thin wrapper over `VecDeque` that makes capacity a first-class,
+//! *enforced* property — RTL FIFOs cannot silently grow, and neither can
+//! these. Pushing into a full FIFO is a modelling bug and panics.
+
+use std::collections::VecDeque;
+
+/// Bounded FIFO with RTL-like semantics.
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    q: VecDeque<T>,
+    cap: usize,
+    /// High-water mark, for sizing reports.
+    peak: usize,
+}
+
+impl<T> Fifo<T> {
+    /// Create a FIFO with `cap` entries (`cap >= 1`).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "zero-capacity fifo");
+        Fifo {
+            q: VecDeque::with_capacity(cap),
+            cap,
+            peak: 0,
+        }
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.cap
+    }
+
+    /// Free slots remaining.
+    #[inline]
+    pub fn space(&self) -> usize {
+        self.cap - self.q.len()
+    }
+
+    /// Highest occupancy ever observed.
+    #[inline]
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Push; panics when full (callers must check `is_full`/`space` first —
+    /// that check models the ready signal).
+    #[inline]
+    pub fn push(&mut self, item: T) {
+        assert!(!self.is_full(), "push into full fifo (missing ready check)");
+        self.q.push_back(item);
+        self.peak = self.peak.max(self.q.len());
+    }
+
+    /// Try-push variant returning the item when full.
+    #[inline]
+    pub fn try_push(&mut self, item: T) -> Result<(), T> {
+        if self.is_full() {
+            Err(item)
+        } else {
+            self.push(item);
+            Ok(())
+        }
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    #[inline]
+    pub fn front(&self) -> Option<&T> {
+        self.q.front()
+    }
+
+    #[inline]
+    pub fn front_mut(&mut self) -> Option<&mut T> {
+        self.q.front_mut()
+    }
+
+    /// Iterate front→back without consuming.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.q.iter()
+    }
+
+    /// Mutable iteration front→back (reorder-table style in-place updates).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut T> {
+        self.q.iter_mut()
+    }
+
+    pub fn clear(&mut self) {
+        self.q.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut f = Fifo::new(4);
+        f.push(1);
+        f.push(2);
+        f.push(3);
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        f.push(4);
+        assert_eq!(f.pop(), Some(3));
+        assert_eq!(f.pop(), Some(4));
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut f = Fifo::new(2);
+        assert!(f.try_push(1).is_ok());
+        assert!(f.try_push(2).is_ok());
+        assert!(f.is_full());
+        assert_eq!(f.try_push(3), Err(3));
+        assert_eq!(f.space(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "full fifo")]
+    fn push_full_panics() {
+        let mut f = Fifo::new(1);
+        f.push(1);
+        f.push(2);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut f = Fifo::new(8);
+        for i in 0..5 {
+            f.push(i);
+        }
+        for _ in 0..5 {
+            f.pop();
+        }
+        f.push(9);
+        assert_eq!(f.peak(), 5);
+    }
+}

@@ -1,0 +1,12 @@
+//! Offline-environment substrates: deterministic PRNG, JSON, a minimal
+//! property-testing driver, and a bench timing harness.
+//!
+//! These exist because the build environment resolves crates only from a
+//! vendored snapshot that lacks `rand`, `serde`, `proptest` and `criterion`
+//! (see DESIGN.md §1 "Offline-toolchain substitutions").
+
+pub mod rng;
+pub mod json;
+pub mod prop;
+pub mod bench;
+pub mod fifo;

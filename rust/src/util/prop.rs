@@ -1,0 +1,137 @@
+//! Minimal property-based testing driver (proptest substitute).
+//!
+//! `proptest` is not in the offline crate snapshot, so this module provides
+//! the subset the test suite needs: seeded case generation, a configurable
+//! number of cases, and reproducible failure reporting (the failing seed is
+//! printed so a case can be replayed by pinning `PropConfig::seed`).
+//!
+//! No shrinking — generators are encouraged to produce small cases with
+//! reasonable probability instead.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    /// Number of random cases to execute.
+    pub cases: u32,
+    /// Base seed; case `i` runs with seed `base_seed + i`.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Respect PROP_CASES / PROP_SEED env so CI can dial effort up/down
+        // and failures can be replayed.
+        let cases = std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(256);
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xF100_0C0D);
+        PropConfig { cases, seed }
+    }
+}
+
+/// Run `property` over `cases` seeded RNGs; panic with the failing seed on
+/// the first failure. The property signals failure by returning `Err`.
+pub fn check<F>(name: &str, cfg: &PropConfig, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay with \
+                 PROP_SEED={seed} PROP_CASES=1): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: run with the default config.
+pub fn check_default<F>(name: &str, property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, &PropConfig::default(), property);
+}
+
+/// Assertion helper for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Equality assertion helper for use inside properties.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default("add-commutes", |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            prop_assert!(a + b == b + a, "commutativity {a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            &PropConfig { cases: 3, seed: 1 },
+            |_| Err("nope".to_string()),
+        );
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut seen = Vec::new();
+        check(
+            "collect",
+            &PropConfig { cases: 5, seed: 99 },
+            |rng| {
+                seen.push(rng.next_u64());
+                Ok(())
+            },
+        );
+        let mut again = Vec::new();
+        check(
+            "collect2",
+            &PropConfig { cases: 5, seed: 99 },
+            |rng| {
+                again.push(rng.next_u64());
+                Ok(())
+            },
+        );
+        assert_eq!(seen, again);
+    }
+}

@@ -1,0 +1,139 @@
+//! AXI4-compliance integration: the ordering monitor is the oracle; the
+//! full system (NI + routers + memories) must keep it clean under
+//! adversarial workloads designed to create reordering.
+
+use floonoc::cluster::{TileTraffic, TiledWorkload};
+use floonoc::flit::NodeId;
+use floonoc::noc::{NocConfig, NocSystem};
+use floonoc::traffic::{GenCfg, Pattern};
+
+fn run_checked(cfg: NocConfig, profiles: Vec<TileTraffic>, max: u64) -> TiledWorkload {
+    let sys = NocSystem::new(cfg);
+    let mut w = TiledWorkload::new(sys, profiles);
+    assert!(w.run_to_completion(max), "workload stalled");
+    assert!(w.protocol_ok(), "AXI protocol violations");
+    w
+}
+
+/// Single-ID traffic to mixed-distance destinations: the hardest case for
+/// same-ID ordering (responses naturally arrive out of order).
+#[test]
+fn single_id_mixed_distance_reads() {
+    let mut profiles: Vec<TileTraffic> = (0..6).map(|_| TileTraffic::idle()).collect();
+    profiles[0].core = Some(GenCfg {
+        pattern: Pattern::UniformTiles,
+        ids: 1,
+        max_outstanding: 4,
+        num_txns: 100,
+        seed: 7,
+        ..GenCfg::narrow_probe(NodeId(1), 100)
+    });
+    run_checked(NocConfig::mesh(6, 1), profiles, 2_000_000);
+}
+
+/// Same for wide-bus bursts (multi-beat responses reordering).
+#[test]
+fn single_id_mixed_distance_bursts() {
+    let mut profiles: Vec<TileTraffic> = (0..6).map(|_| TileTraffic::idle()).collect();
+    profiles[0].dma = Some(GenCfg {
+        pattern: Pattern::UniformTiles,
+        ids: 1,
+        max_outstanding: 6,
+        num_txns: 40,
+        seed: 13,
+        ..GenCfg::dma_burst(NodeId(1), 40, false)
+    });
+    run_checked(NocConfig::mesh(6, 1), profiles, 2_000_000);
+}
+
+/// Mixed reads and writes on every ID from every tile simultaneously.
+#[test]
+fn full_mesh_mixed_read_write() {
+    let profiles: Vec<TileTraffic> = (0..9)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                write_fraction: 0.5,
+                ids: 4,
+                max_outstanding: 8,
+                seed: i as u64,
+                ..GenCfg::narrow_probe(NodeId(0), 50)
+            }),
+            dma: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                write_fraction: 0.5,
+                ids: 4,
+                max_outstanding: 4,
+                seed: 50 + i as u64,
+                ..GenCfg::dma_burst(NodeId(0), 12, false)
+            }),
+        })
+        .collect();
+    let w = run_checked(NocConfig::mesh(3, 3), profiles, 4_000_000);
+    // Every tile completed everything.
+    for t in &w.tiles {
+        assert!(t.core_gen.as_ref().unwrap().monitor.quiescent());
+        assert!(t.dma_gen.as_ref().unwrap().monitor.quiescent());
+    }
+}
+
+/// Write-after-write to the same target from many sources: W-burst
+/// reassembly at the target must pair AWs and bursts correctly.
+#[test]
+fn many_writers_one_target() {
+    let mut profiles: Vec<TileTraffic> = (0..8).map(|_| TileTraffic::idle()).collect();
+    for (i, p) in profiles.iter_mut().enumerate().skip(1) {
+        p.dma = Some(GenCfg {
+            seed: i as u64,
+            max_outstanding: 4,
+            ..GenCfg::dma_burst(NodeId(0), 10, true)
+        });
+    }
+    let w = run_checked(NocConfig::mesh(4, 2), profiles, 2_000_000);
+    assert_eq!(
+        w.sys.nodes[0].target.stats.writes_served,
+        7 * 10,
+        "all write bursts reassembled and served"
+    );
+}
+
+/// Tiny per-ID depth forces continuous head-of-ID flow control.
+#[test]
+fn per_id_depth_one() {
+    let mut cfg = NocConfig::mesh(3, 1);
+    cfg.narrow_init.per_id_depth = 1;
+    let mut profiles: Vec<TileTraffic> = (0..3).map(|_| TileTraffic::idle()).collect();
+    profiles[0].core = Some(GenCfg {
+        pattern: Pattern::UniformTiles,
+        ids: 2,
+        max_outstanding: 2,
+        seed: 3,
+        ..GenCfg::narrow_probe(NodeId(1), 60)
+    });
+    run_checked(cfg, profiles, 2_000_000);
+}
+
+/// Different IDs may complete out of order (the freedom the ROB exploits)
+/// — verified implicitly by the monitor accepting interleaved
+/// completions across IDs in all tests above; here we assert the system
+/// actually used that freedom under mixed-distance multi-ID traffic.
+#[test]
+fn cross_id_out_of_order_happens() {
+    let mut profiles: Vec<TileTraffic> = (0..6).map(|_| TileTraffic::idle()).collect();
+    profiles[0].core = Some(GenCfg {
+        pattern: Pattern::UniformTiles,
+        ids: 4,
+        max_outstanding: 8,
+        seed: 11,
+        ..GenCfg::narrow_probe(NodeId(1), 80)
+    });
+    let w = run_checked(NocConfig::mesh(6, 1), profiles, 2_000_000);
+    let (bypassed, buffered) = w.sys.nodes[0]
+        .narrow
+        .as_ref()
+        .unwrap()
+        .reorder_stats();
+    assert!(bypassed > 0);
+    // Multi-ID + mixed distance: some responses must have needed the ROB.
+    assert!(buffered > 0, "no reordering pressure generated");
+}

@@ -1,0 +1,211 @@
+//! Cross-module integration tests over the full simulated system.
+
+use floonoc::cluster::{TileTraffic, TiledWorkload};
+use floonoc::coordinator::{self as exp, zero_load_latency};
+use floonoc::flit::NodeId;
+use floonoc::noc::{LinkMode, NocConfig, NocSystem, NET_WIDE};
+use floonoc::topology::MemEdge;
+use floonoc::traffic::{GenCfg, Pattern};
+
+/// §VI-A headline, through the public API.
+#[test]
+fn paper_zero_load_latency() {
+    assert_eq!(zero_load_latency(LinkMode::NarrowWide), 18);
+}
+
+/// Zero-load in wide-only mode is the same (no contention, same routers).
+#[test]
+fn wide_only_zero_load_matches() {
+    assert_eq!(zero_load_latency(LinkMode::WideOnly), 18);
+}
+
+/// Far-corner traffic on a large mesh: XY delivers over many hops with
+/// latency growing by 4 cycles per extra hop pair (2-cycle routers,
+/// request + response).
+#[test]
+fn latency_scales_with_hops() {
+    let mut lat = Vec::new();
+    for n in [2u8, 4] {
+        let sys = NocSystem::new(NocConfig::mesh(n, n));
+        let far = sys.topo.num_tiles as u16 - 1;
+        let mut profiles: Vec<TileTraffic> =
+            (0..sys.topo.num_tiles).map(|_| TileTraffic::idle()).collect();
+        profiles[0].core = Some(GenCfg::narrow_probe(NodeId(far), 1));
+        let mut w = TiledWorkload::new(sys, profiles);
+        assert!(w.run_to_completion(10_000));
+        lat.push(w.tiles[0].core_gen.as_mut().unwrap().latencies.max());
+    }
+    // 2x2: 2 hops each way; 4x4: 6 hops each way. 4 extra hop-pairs at
+    // 2 cycles/router/direction = +16 cycles.
+    assert_eq!(lat[1] - lat[0], 16, "{lat:?}");
+}
+
+/// Saturating all-to-all traffic drains without deadlock in both modes
+/// and with protocol monitors clean — the core robustness statement.
+#[test]
+fn no_deadlock_under_saturation() {
+    for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
+        let mut cfg = NocConfig::mesh(3, 3);
+        cfg.mode = mode;
+        let sys = NocSystem::new(cfg);
+        let profiles: Vec<TileTraffic> = (0..9)
+            .map(|i| TileTraffic {
+                core: Some(GenCfg {
+                    pattern: Pattern::UniformTiles,
+                    max_outstanding: 16,
+                    ids: 8,
+                    seed: 1 + i as u64,
+                    ..GenCfg::narrow_probe(NodeId(0), 40)
+                }),
+                dma: Some(GenCfg {
+                    pattern: Pattern::UniformTiles,
+                    max_outstanding: 8,
+                    write_fraction: 0.5,
+                    seed: 100 + i as u64,
+                    ..GenCfg::dma_burst(NodeId(0), 10, false)
+                }),
+            })
+            .collect();
+        let mut w = TiledWorkload::new(sys, profiles);
+        assert!(
+            w.run_to_completion(2_000_000),
+            "{mode:?} deadlocked or stalled"
+        );
+        assert!(w.protocol_ok(), "{mode:?} violated AXI ordering");
+    }
+}
+
+/// Memory-controller traffic mixes with tile-to-tile traffic.
+#[test]
+fn boundary_mem_ctrl_traffic() {
+    let sys = NocSystem::new(NocConfig::mesh(4, 2).with_mem_edge(MemEdge::EastWest));
+    let profiles: Vec<TileTraffic> = (0..8)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                seed: i as u64,
+                ..GenCfg::narrow_probe(NodeId(0), 10)
+            }),
+            dma: Some(GenCfg {
+                pattern: Pattern::MemCtrls,
+                write_fraction: 0.5,
+                seed: 10 + i as u64,
+                ..GenCfg::dma_burst(NodeId(0), 6, false)
+            }),
+        })
+        .collect();
+    let mut w = TiledWorkload::new(sys, profiles);
+    assert!(w.run_to_completion(2_000_000));
+    assert!(w.protocol_ok());
+    // Memory controllers actually served wide traffic.
+    let mems = w.sys.topo.mem_ctrls();
+    let served: u64 = mems
+        .iter()
+        .map(|&m| {
+            let t = &w.sys.nodes[m.0 as usize].target.stats;
+            t.reads_served + t.writes_served
+        })
+        .sum();
+    assert!(served > 0, "controllers served {served} ops");
+}
+
+/// The Fig. 5a experiment API: narrow-wide robust, wide-only degraded
+/// (full sweep happens in benches; this is the 2-point sanity).
+#[test]
+fn fig5a_narrow_wide_beats_wide_only() {
+    let nw = exp::fig5a(LinkMode::NarrowWide, false, &[0, 4]);
+    let wo = exp::fig5a(LinkMode::WideOnly, false, &[0, 4]);
+    assert!(nw[1].slowdown < wo[1].slowdown);
+}
+
+/// ROB flow control throttles but never wedges: a tiny ROB still
+/// completes a long burst sequence.
+#[test]
+fn tiny_rob_completes() {
+    let mut cfg = NocConfig::mesh(2, 1);
+    cfg.wide_init.rob_slots = 16; // one 16-beat burst at a time
+    let sys = NocSystem::new(cfg);
+    let mut profiles: Vec<TileTraffic> = (0..2).map(|_| TileTraffic::idle()).collect();
+    let mut c = GenCfg::dma_burst(NodeId(1), 12, false);
+    c.max_outstanding = 8;
+    profiles[0].dma = Some(c);
+    let mut w = TiledWorkload::new(sys, profiles);
+    assert!(w.run_to_completion(1_000_000));
+    assert!(w.protocol_ok());
+    assert_eq!(w.tiles[0].dma_gen.as_ref().unwrap().completed, 12);
+}
+
+/// Responses from different distances reorder in the network and the NI
+/// must fix them up: reads alternate near/far destinations on one ID.
+#[test]
+fn reordering_exercised_and_corrected() {
+    let sys = NocSystem::new(NocConfig::mesh(4, 1));
+    let mut profiles: Vec<TileTraffic> = (0..4).map(|_| TileTraffic::idle()).collect();
+    // One ID, alternating far (3 hops) and near (1 hop) reads: the near
+    // response tends to arrive while the far one is outstanding.
+    profiles[0].core = Some(GenCfg {
+        pattern: Pattern::UniformTiles,
+        ids: 1,
+        max_outstanding: 4,
+        seed: 42,
+        ..GenCfg::narrow_probe(NodeId(1), 60)
+    });
+    let sys_has_buffered: bool;
+    let mut w = TiledWorkload::new(sys, profiles);
+    assert!(w.run_to_completion(1_000_000));
+    assert!(w.protocol_ok(), "NI failed to restore same-ID order");
+    let init = w.sys.nodes[0].narrow.as_ref().unwrap();
+    let (bypassed, buffered) = init.reorder_stats();
+    sys_has_buffered = buffered > 0;
+    assert!(bypassed > 0, "in-order fast path never used");
+    assert!(
+        sys_has_buffered,
+        "workload never exercised the ROB (adjust pattern)"
+    );
+}
+
+/// Wide-only mode carries every payload class on two networks.
+#[test]
+fn wide_only_network_count() {
+    let sys = NocSystem::new(NocConfig::mesh(2, 2).wide_only());
+    assert_eq!(sys.nets.len(), 2);
+    let sys = NocSystem::new(NocConfig::mesh(2, 2));
+    assert_eq!(sys.nets.len(), 3);
+}
+
+/// Peak-bandwidth experiment sustains near line rate (§VI-B).
+#[test]
+fn peak_bandwidth_experiment() {
+    let (util, gbps) = exp::peak_bandwidth(1.23);
+    assert!(util > 0.8);
+    assert!(gbps > 500.0 && gbps < 630.0);
+}
+
+/// Flit conservation: everything injected is eventually ejected.
+#[test]
+fn flit_conservation() {
+    let sys = NocSystem::new(NocConfig::mesh(3, 3));
+    let profiles: Vec<TileTraffic> = (0..9)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                seed: i as u64,
+                ..GenCfg::narrow_probe(NodeId(0), 25)
+            }),
+            dma: None,
+        })
+        .collect();
+    let mut w = TiledWorkload::new(sys, profiles);
+    assert!(w.run_to_completion(1_000_000));
+    for c in &w.sys.counters {
+        assert_eq!(c.injected, c.ejected, "flits lost or duplicated");
+    }
+}
+
+/// Fig. 6b experiment API sanity (full values checked in unit tests).
+#[test]
+fn fig6b_runs() {
+    let (p, pjb) = exp::fig6b_power();
+    assert!(p.total_mw > 100.0);
+    assert!(pjb > 0.1 && pjb < 0.3);
+}

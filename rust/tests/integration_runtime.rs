@@ -1,0 +1,111 @@
+//! PJRT runtime integration: requires `make artifacts` (skips gracefully
+//! when the artifacts are absent so `cargo test` works pre-build, but CI
+//! and `make test` always build artifacts first).
+
+use floonoc::compute::{host_matmul, max_abs_diff, TileCompute};
+use floonoc::dse;
+use floonoc::runtime::Runtime;
+use floonoc::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::new("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime tests (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn meta_contract() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.meta.tile_dim, 64);
+    assert_eq!(rt.meta.dse_mesh_n, 4);
+    assert_eq!(rt.meta.entries.len(), 3);
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn tile_matmul_matches_host() {
+    let Some(rt) = runtime() else { return };
+    let tc = TileCompute::new(&rt).unwrap();
+    let d = tc.dim;
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..d * d).map(|_| rng.f64() as f32 - 0.5).collect();
+    let w: Vec<f32> = (0..d * d).map(|_| rng.f64() as f32 - 0.5).collect();
+    let got = tc.matmul(&x, &w).unwrap();
+    let want = host_matmul(&x, &w, d);
+    let err = max_abs_diff(&got, &want);
+    assert!(err < 1e-3, "PJRT result diverges from host: {err}");
+}
+
+#[test]
+fn cluster_compute_applies_bias_relu() {
+    let Some(rt) = runtime() else { return };
+    let tc = TileCompute::new(&rt).unwrap();
+    let d = tc.dim;
+    let x = vec![0f32; d * d];
+    let w = vec![0f32; d * d];
+    // Zero matmul + bias: positive biases pass, negatives clamp to 0.
+    let mut b = vec![0f32; d];
+    b[0] = 2.5;
+    b[1] = -3.0;
+    let out = tc.cluster_compute(&x, &w, &b).unwrap();
+    assert_eq!(out[0], 2.5);
+    assert_eq!(out[1], 0.0);
+}
+
+#[test]
+fn shape_contract_enforced() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("tile_matmul").unwrap();
+    let bad = vec![0f32; 16];
+    let err = exe.run_f32(&[(&bad, &[4, 4]), (&bad, &[4, 4])]);
+    assert!(err.is_err(), "wrong shapes must be rejected");
+}
+
+#[test]
+fn unknown_artifact_rejected() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.load("nonexistent").is_err());
+}
+
+#[test]
+fn noc_perf_artifact_matches_native_model() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.meta.dse_mesh_n;
+    for (name, traffic) in [
+        ("ring", dse::ring_traffic(n, 0.3)),
+        ("uniform", dse::uniform_traffic(n, 0.7)),
+    ] {
+        let native = dse::link_loads(&traffic, n);
+        let (art, art_max, art_mean, art_sat) =
+            dse::artifact_link_loads(&rt, &traffic).unwrap();
+        let mut diff = 0.0f64;
+        for d in 0..4 {
+            for y in 0..n {
+                for x in 0..n {
+                    diff = diff.max((art[d][y][x] - native[d][y][x]).abs());
+                }
+            }
+        }
+        assert!(diff < 1e-5, "{name}: Pallas artifact diverges by {diff}");
+        assert!((art_max - dse::max_load(&native)).abs() < 1e-5);
+        assert!((art_mean - dse::mean_load(&native)).abs() < 1e-5);
+        assert!((art_sat - 1.0 / dse::max_load(&native)).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let tc = TileCompute::new(&rt).unwrap();
+    let d = tc.dim;
+    let mut rng = Rng::new(2);
+    let x: Vec<f32> = (0..d * d).map(|_| rng.f64() as f32).collect();
+    let w: Vec<f32> = (0..d * d).map(|_| rng.f64() as f32).collect();
+    let a = tc.matmul(&x, &w).unwrap();
+    let b = tc.matmul(&x, &w).unwrap();
+    assert_eq!(a, b);
+}

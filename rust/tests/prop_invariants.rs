@@ -1,0 +1,389 @@
+//! Property-based invariant tests (in-repo prop driver; see
+//! `util::prop` — proptest is unavailable offline).
+
+use floonoc::axi::{AxReq, Burst};
+use floonoc::cluster::{TileTraffic, TiledWorkload};
+use floonoc::flit::NodeId;
+use floonoc::ni::rob::RobAllocator;
+use floonoc::noc::{LinkMode, NocConfig, NocSystem};
+use floonoc::prop_assert;
+use floonoc::traffic::{GenCfg, Pattern};
+use floonoc::util::prop::{check, PropConfig};
+use floonoc::util::rng::Rng;
+
+fn small_cfg() -> PropConfig {
+    // System-level properties run fewer, heavier cases.
+    let mut c = PropConfig::default();
+    c.cases = c.cases.min(24);
+    c
+}
+
+/// ROB allocator: random alloc/release interleavings never violate the
+/// free-list invariants, never double-grant, and always recover all slots.
+#[test]
+fn prop_rob_allocator_invariants() {
+    check("rob-invariants", &PropConfig::default(), |rng| {
+        let slots = 8 + rng.below(120) as u32;
+        let mut rob = RobAllocator::new(slots);
+        let mut live: Vec<floonoc::ni::rob::RobGrant> = Vec::new();
+        for _ in 0..200 {
+            if rng.chance(0.6) || live.is_empty() {
+                let len = 1 + rng.below(16.min(slots as u64)) as u32;
+                if let Some(g) = rob.alloc(len) {
+                    // No overlap with any live grant.
+                    for l in &live {
+                        let disjoint = g.base + g.len <= l.base || l.base + l.len <= g.base;
+                        prop_assert!(disjoint, "grant {g:?} overlaps {l:?}");
+                    }
+                    live.push(g);
+                }
+            } else {
+                let idx = rng.index(live.len());
+                let g = live.swap_remove(idx);
+                rob.release(g);
+            }
+            rob.check_invariants().map_err(|e| e)?;
+        }
+        for g in live.drain(..) {
+            rob.release(g);
+        }
+        prop_assert!(
+            rob.free_slots() == slots,
+            "leaked slots: {} of {slots} free",
+            rob.free_slots()
+        );
+        Ok(())
+    });
+}
+
+/// AXI burst arithmetic: beat addresses stay inside the burst footprint
+/// and WRAP bursts stay inside their aligned container.
+#[test]
+fn prop_burst_addresses_bounded() {
+    check("burst-addresses", &PropConfig::default(), |rng| {
+        let size = rng.below(4) as u8 + 2; // 4..=32 B beats
+        let burst = *rng.choose(&[Burst::Incr, Burst::Wrap, Burst::Fixed]);
+        let len = match burst {
+            Burst::Wrap => *rng.choose(&[1u8, 3, 7, 15]),
+            _ => rng.below(16) as u8,
+        };
+        let align = 1u64 << size;
+        let addr = (rng.below(1 << 20) / align) * align + (1 << 20);
+        let req = AxReq {
+            id: 0,
+            addr,
+            len,
+            size,
+            burst,
+            atop: false,
+        };
+        if !req.is_legal(64) {
+            return Ok(()); // property only constrains legal bursts
+        }
+        let total = req.total_bytes() as u64;
+        for i in 0..req.beats() {
+            let a = req.beat_addr(i);
+            match burst {
+                Burst::Fixed => prop_assert!(a == addr, "fixed moved"),
+                Burst::Incr => prop_assert!(
+                    a >= addr && a + align <= addr + total,
+                    "incr beat {i} out of range"
+                ),
+                Burst::Wrap => {
+                    let container = total;
+                    let base = addr & !(container - 1);
+                    prop_assert!(
+                        a >= base && a + align <= base + container,
+                        "wrap beat {i} escaped container"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end delivery: ANY random workload on ANY small mesh in BOTH
+/// link modes completes with clean protocol monitors and conserved flits.
+#[test]
+fn prop_random_workloads_complete() {
+    check("random-workloads", &small_cfg(), |rng| {
+        let w = 1 + rng.below(3) as u8;
+        let h = 1 + rng.below(3) as u8;
+        if (w, h) == (1, 1) {
+            return Ok(());
+        }
+        let mode = if rng.chance(0.5) {
+            LinkMode::NarrowWide
+        } else {
+            LinkMode::WideOnly
+        };
+        let mut cfg = NocConfig::mesh(w, h);
+        cfg.mode = mode;
+        cfg.in_buf_depth = 1 + rng.below(3) as usize;
+        cfg.output_reg = rng.chance(0.5);
+        let sys = NocSystem::new(cfg);
+        let tiles = sys.topo.num_tiles;
+        let profiles: Vec<TileTraffic> = (0..tiles)
+            .map(|i| TileTraffic {
+                core: rng.chance(0.8).then(|| GenCfg {
+                    pattern: Pattern::UniformTiles,
+                    write_fraction: rng.f64() * 0.6,
+                    max_outstanding: 1 + rng.below(8) as u32,
+                    num_txns: 5 + rng.below(20),
+                    seed: rng.next_u64(),
+                    ..GenCfg::narrow_probe(NodeId(0), 1)
+                }),
+                dma: rng.chance(0.6).then(|| GenCfg {
+                    pattern: Pattern::UniformTiles,
+                    write_fraction: rng.f64(),
+                    burst_len: *rng.choose(&[0u8, 3, 7, 15]),
+                    max_outstanding: 1 + rng.below(4) as u32,
+                    num_txns: 2 + rng.below(6),
+                    seed: rng.next_u64(),
+                    ..GenCfg::dma_burst(NodeId(0), 1, false)
+                }),
+            })
+            .collect();
+        let mut wl = TiledWorkload::new(sys, profiles);
+        prop_assert!(
+            wl.run_to_completion(3_000_000),
+            "stalled: {w}x{h} {mode:?}"
+        );
+        prop_assert!(wl.protocol_ok(), "protocol violation: {w}x{h} {mode:?}");
+        for c in &wl.sys.counters {
+            prop_assert!(
+                c.injected == c.ejected,
+                "flits lost: {} vs {}",
+                c.injected,
+                c.ejected
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Determinism: the same seed gives byte-identical results.
+#[test]
+fn prop_simulation_deterministic() {
+    check("determinism", &small_cfg(), |rng| {
+        let seed = rng.next_u64();
+        let run = |seed: u64| -> (u64, f64) {
+            let sys = NocSystem::new(NocConfig::mesh(2, 2));
+            let profiles: Vec<TileTraffic> = (0..4)
+                .map(|i| TileTraffic {
+                    core: Some(GenCfg {
+                        pattern: Pattern::UniformTiles,
+                        seed: seed ^ i as u64,
+                        ..GenCfg::narrow_probe(NodeId(0), 20)
+                    }),
+                    dma: None,
+                })
+                .collect();
+            let mut w = TiledWorkload::new(sys, profiles);
+            assert!(w.run_to_completion(1_000_000));
+            let lat = w.tiles[0].core_gen.as_mut().unwrap().latencies.mean();
+            (w.sys.now, lat)
+        };
+        let a = run(seed);
+        let b = run(seed);
+        prop_assert!(a == b, "nondeterministic: {a:?} vs {b:?}");
+        Ok(())
+    });
+}
+
+/// The analytical model conserves hops for random traffic matrices.
+#[test]
+fn prop_analytical_hop_conservation() {
+    check("hop-conservation", &PropConfig::default(), |rng| {
+        let n = 2 + rng.index(5);
+        let nodes = n * n;
+        let mut t = vec![vec![0.0; nodes]; nodes];
+        for row in t.iter_mut() {
+            for v in row.iter_mut() {
+                *v = if rng.chance(0.3) { rng.f64() } else { 0.0 };
+            }
+        }
+        for (s, row) in t.iter_mut().enumerate() {
+            row[s] = 0.0;
+        }
+        let loads = floonoc::dse::link_loads(&t, n);
+        let total: f64 = loads.iter().flatten().flatten().sum();
+        let mut want = 0.0;
+        for s in 0..nodes {
+            for d in 0..nodes {
+                let (sx, sy) = ((s % n) as i64, (s / n) as i64);
+                let (dx, dy) = ((d % n) as i64, (d / n) as i64);
+                want += t[s][d] * ((sx - dx).abs() + (sy - dy).abs()) as f64;
+            }
+        }
+        prop_assert!(
+            (total - want).abs() < 1e-6,
+            "hop conservation broke: {total} vs {want}"
+        );
+        Ok(())
+    });
+}
+
+/// PRNG sanity as a property: `below(n)` is always `< n`.
+#[test]
+fn prop_rng_below_bound() {
+    check("rng-below", &PropConfig::default(), |rng| {
+        let bound = 1 + rng.next_u64() % 10_000;
+        let mut r = Rng::new(rng.next_u64());
+        for _ in 0..100 {
+            prop_assert!(r.below(bound) < bound, "out of range");
+        }
+        Ok(())
+    });
+}
+
+/// JSON roundtrip: any value we can build serializes and reparses
+/// identically (S2 in the DESIGN inventory).
+#[test]
+fn prop_json_roundtrip() {
+    use floonoc::util::json::Json;
+    fn gen_value(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.below(1_000_000) as f64) - 500_000.0),
+            3 => {
+                let n = rng.below(12) as usize;
+                Json::Str(
+                    (0..n)
+                        .map(|_| (b'a' + rng.below(26) as u8) as char)
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.below(4)).map(|_| gen_value(rng, depth - 1)).collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json-roundtrip", &PropConfig::default(), |rng| {
+        let v = gen_value(rng, 3);
+        let text = v.to_string();
+        let back = floonoc::util::json::Json::parse(&text)
+            .map_err(|e| format!("reparse failed: {e} for {text}"))?;
+        prop_assert!(back == v, "roundtrip mismatch: {text}");
+        Ok(())
+    });
+}
+
+/// Link handshake property (S5): under random offer/consume schedules a
+/// link never drops, duplicates, or reorders flits, with or without
+/// pipeline stages.
+#[test]
+fn prop_link_handshake_lossless() {
+    use floonoc::axi::{AxReq, Burst};
+    use floonoc::flit::{FlooFlit, Header, NodeId, Payload};
+    use floonoc::sim::Link;
+    fn mk(tag: u32) -> FlooFlit {
+        FlooFlit::new(
+            Header {
+                dst: NodeId(0),
+                src: NodeId(0),
+                rob_idx: tag,
+                rob_req: false,
+                atomic: false,
+                last: true,
+            },
+            Payload::NarrowAr(AxReq {
+                id: 0,
+                addr: 0,
+                len: 0,
+                size: 3,
+                burst: Burst::Incr,
+                atop: false,
+            }),
+            0,
+        )
+    }
+    check("link-lossless", &PropConfig::default(), |rng| {
+        let depth = 1 + rng.below(4) as usize;
+        let stages = rng.below(3) as usize;
+        let mut link: Link<FlooFlit> = Link::with_pipeline(depth, stages);
+        let total = 50 + rng.below(100) as u32;
+        let mut sent = 0u32;
+        let mut received = Vec::new();
+        let mut budget = 0;
+        while (received.len() as u32) < total {
+            if sent < total && rng.chance(0.7) && link.can_offer() {
+                link.offer(mk(sent));
+                sent += 1;
+            }
+            link.deliver();
+            if rng.chance(0.6) {
+                if let Some(f) = link.pop() {
+                    received.push(f.header.rob_idx);
+                }
+            }
+            budget += 1;
+            prop_assert!(budget < 100_000, "link wedged");
+        }
+        let want: Vec<u32> = (0..total).collect();
+        prop_assert!(received == want, "reorder/loss: got {received:?}");
+        prop_assert!(link.is_idle(), "flits left behind");
+        Ok(())
+    });
+}
+
+/// Trace record/replay determinism: replaying a recorded random workload
+/// reproduces the same completion counts.
+#[test]
+fn prop_trace_replay_consistent() {
+    use floonoc::traffic::trace::{TraceEvent, TraceRecorder, TraceWorkload};
+    use floonoc::topology::TILE_SPAN;
+    check("trace-replay", &small_cfg(), |rng| {
+        let n_events = 3 + rng.below(12);
+        let events: Vec<TraceEvent> = (0..n_events)
+            .map(|i| {
+                let src = rng.below(2) as u16;
+                let dst = 1 - src;
+                TraceEvent {
+                    cycle: i * rng.below(8),
+                    src: NodeId(src),
+                    dst: NodeId(dst),
+                    bus: if rng.chance(0.5) {
+                        floonoc::flit::BusKind::Wide
+                    } else {
+                        floonoc::flit::BusKind::Narrow
+                    },
+                    is_write: rng.chance(0.5),
+                    id: rng.below(4) as u16,
+                    len: if rng.chance(0.5) { 15 } else { 0 },
+                    size: 3,
+                    addr: dst as u64 * TILE_SPAN + rng.below(1024) * 128,
+                }
+            })
+            .collect();
+        // Serialize + reload (exercises the file format too).
+        let rec = TraceRecorder { events };
+        let mut buf = Vec::new();
+        rec.write_to(&mut buf).map_err(|e| e.to_string())?;
+        let reloaded = TraceRecorder::read_from(&buf[..]).map_err(|e| e.to_string())?;
+        let run = |events: Vec<TraceEvent>| -> (u64, u64, u64) {
+            let mut sys = NocSystem::new(NocConfig::mesh(2, 1));
+            let mut w = TraceWorkload::new(events);
+            for _ in 0..200_000 {
+                sys.step();
+                w.step(&mut sys);
+                if w.done_issuing() && sys.is_idle() {
+                    break;
+                }
+            }
+            (w.issued, w.completed_reads, w.completed_writes)
+        };
+        let a = run(rec.events.clone());
+        let b = run(reloaded.events);
+        prop_assert!(a == b, "replay diverged: {a:?} vs {b:?}");
+        prop_assert!(a.0 == n_events, "not all issued: {a:?}");
+        Ok(())
+    });
+}

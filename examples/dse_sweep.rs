@@ -1,14 +1,20 @@
 //! Design-space exploration: sweep mesh sizes and traffic patterns with
-//! the analytical XY link-load model (native + PJRT Pallas artifact) and
-//! sanity-check a point against the cycle-accurate simulator.
+//! the analytical XY link-load model (native + PJRT Pallas artifact),
+//! sanity-check a point against the cycle-accurate simulator, and fan a
+//! multi-point cycle-accurate sweep out across all cores with the
+//! deterministic parallel runner.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example dse_sweep
 //! ```
 
 use floonoc::dse;
+use floonoc::dse::parallel::{run_sweep, sweep_report_json, ParallelRunner, SweepPoint};
+use floonoc::noc::LinkMode;
 use floonoc::phys::BandwidthModel;
 use floonoc::runtime::Runtime;
+use floonoc::util::bench::time_once;
+use floonoc::util::json::pretty;
 
 fn main() -> anyhow::Result<()> {
     let bw = BandwidthModel::default();
@@ -74,6 +80,38 @@ fn main() -> anyhow::Result<()> {
     println!(
         "measured mean E-link throughput {tput:.3} flits/cycle over {cycles} \
          cycles (analytical: uniform across used E-links)"
+    );
+
+    // ---- parallel cycle-accurate sweep ---------------------------------
+    // Independent points (mesh size x link mode x burst length) fanned
+    // out across cores; the report is byte-identical to a serial run.
+    let points = SweepPoint::grid(
+        &[2, 3, 4],
+        &[LinkMode::NarrowWide, LinkMode::WideOnly],
+        &[7, 15],
+    );
+    let runner = ParallelRunner::default();
+    println!(
+        "\n== parallel cycle-accurate sweep: {} points on {} core(s) ==",
+        points.len(),
+        runner.threads()
+    );
+    let mut serial_results = Vec::new();
+    let t_serial = time_once(|| serial_results = run_sweep(&points, &ParallelRunner::serial()));
+    let mut parallel_results = Vec::new();
+    let t_parallel = time_once(|| parallel_results = run_sweep(&points, &runner));
+    let serial_json = pretty(&sweep_report_json(&serial_results));
+    let parallel_json = pretty(&sweep_report_json(&parallel_results));
+    anyhow::ensure!(
+        serial_json == parallel_json,
+        "parallel sweep diverged from serial reference"
+    );
+    println!("{parallel_json}");
+    println!(
+        "serial {:.2}s vs parallel {:.2}s => {:.2}x speedup, byte-identical report",
+        t_serial.as_secs_f64(),
+        t_parallel.as_secs_f64(),
+        t_serial.as_secs_f64() / t_parallel.as_secs_f64().max(1e-9)
     );
     Ok(())
 }

@@ -5,16 +5,20 @@
 
 use floonoc::baseline::AxiMatrixModel;
 use floonoc::coordinator as exp;
+use floonoc::dse::ParallelRunner;
 use floonoc::report;
 use floonoc::util::bench::Bencher;
 
 fn main() {
     println!("== bench_ablation ==\n");
     let mut b = Bencher::new(0, 1);
+    // Serial runner: keep reported per-sweep wall-clock single-threaded
+    // and comparable across hosts (fan-out is bench_e2e's subject).
+    let serial = ParallelRunner::serial();
 
     let mut rows = Vec::new();
     b.bench("ROB size sweep", None, || {
-        rows = exp::ablate_rob_size(&[16, 32, 64, 128, 256]);
+        rows = exp::ablate_rob_size_with(&[16, 32, 64, 128, 256], &serial);
     });
     print!(
         "{}",
@@ -28,7 +32,7 @@ fn main() {
     println!();
 
     b.bench("buffer depth sweep", None, || {
-        rows = exp::ablate_buffer_depth(&[1, 2, 4, 8]);
+        rows = exp::ablate_buffer_depth_with(&[1, 2, 4, 8], &serial);
     });
     print!(
         "{}",
@@ -40,7 +44,7 @@ fn main() {
     println!();
 
     b.bench("burst length sweep", None, || {
-        rows = exp::ablate_burst_len(&[0, 1, 3, 7, 15, 31]);
+        rows = exp::ablate_burst_len_with(&[0, 1, 3, 7, 15, 31], &serial);
     });
     print!(
         "{}",
@@ -62,7 +66,7 @@ fn main() {
     println!();
 
     b.bench("mesh scaling", None, || {
-        rows = exp::scale_mesh(&[2, 3, 4, 6]);
+        rows = exp::scale_mesh_with(&[2, 3, 4, 6], &serial);
     });
     print!(
         "{}",

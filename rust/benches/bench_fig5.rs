@@ -1,9 +1,15 @@
 //! End-to-end benches regenerating the paper's Fig. 5a and Fig. 5b data
 //! (both link configurations, both directions), timing each point.
 //!
+//! Points run through `ParallelRunner::serial()` so the reported
+//! wall-clock measures single-thread experiment cost and stays
+//! comparable across runs/hosts (the multi-core fan-out is measured
+//! separately in `bench_e2e`).
+//!
 //! `BENCH_SAMPLES=3 cargo bench --bench bench_fig5` for a quick pass.
 
-use floonoc::coordinator::{fig5a, fig5b};
+use floonoc::coordinator::{fig5a_with, fig5b_with};
+use floonoc::dse::ParallelRunner;
 use floonoc::noc::LinkMode;
 use floonoc::report;
 use floonoc::util::bench::Bencher;
@@ -11,12 +17,13 @@ use floonoc::util::bench::Bencher;
 fn main() {
     println!("== bench_fig5: regenerate Fig. 5a / 5b ==");
     let mut b = Bencher::new(0, 3);
+    let serial = ParallelRunner::serial();
 
     let mut out_5a = Vec::new();
     b.bench("fig5a sweep (both modes, unidir)", None, || {
         out_5a.clear();
         for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
-            out_5a.extend(fig5a(mode, false, &[0, 1, 2, 4, 8]));
+            out_5a.extend(fig5a_with(mode, false, &[0, 1, 2, 4, 8], &serial));
         }
     });
     print!("{}", report::fig5a_table(&out_5a));
@@ -25,7 +32,7 @@ fn main() {
     b.bench("fig5a sweep (both modes, bidir)", None, || {
         out_5a_bidir.clear();
         for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
-            out_5a_bidir.extend(fig5a(mode, true, &[0, 1, 2, 4, 8]));
+            out_5a_bidir.extend(fig5a_with(mode, true, &[0, 1, 2, 4, 8], &serial));
         }
     });
     print!("{}", report::fig5a_table(&out_5a_bidir));
@@ -34,7 +41,7 @@ fn main() {
     b.bench("fig5b sweep (both modes)", None, || {
         out_5b.clear();
         for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
-            out_5b.extend(fig5b(mode, false, &[0, 2, 4, 8, 16, 32]));
+            out_5b.extend(fig5b_with(mode, false, &[0, 2, 4, 8, 16, 32], &serial));
         }
     });
     print!("{}", report::fig5b_table(&out_5b));

@@ -10,6 +10,11 @@
 //! repro sweep <rob|buffers|burst|mesh|output-reg>     ablations
 //! repro dse [--mesh n] [--artifacts dir]              analytical model vs sim
 //! ```
+//!
+//! Sweep-style commands (`reproduce fig5a|fig5b`, `sweep`, `dse`) accept
+//! `--jobs <n>`: independent sweep points fan out over `n` worker threads
+//! (0 or omitted = all cores, 1 = serial) with deterministic,
+//! order-stable results.
 
 use std::collections::HashMap;
 
@@ -84,14 +89,20 @@ COMMANDS:
   reproduce <experiment>       regenerate a paper table/figure:
                                tab1 tab2 fig5a fig5b fig6a fig6b latency
                                bandwidth wires scaling all
-                               options: --bidir, --levels a,b,c
+                               options: --bidir, --levels a,b,c, --jobs <n>
   simulate                     run uniform-random traffic on a mesh
                                options: --config <file.json>, --txns <n>,
                                --mesh <n>, --wide-only
   sweep <ablation>             rob | buffers | burst | mesh | output-reg
+                               options: --jobs <n>
   dse                          analytical link-load model (PJRT artifact)
-                               cross-validated against the simulator;
-                               options: --mesh <n>, --artifacts <dir>
+                               cross-validated against the simulator, plus
+                               a parallel cycle-accurate point sweep;
+                               options: --mesh <n>, --artifacts <dir>,
+                               --jobs <n>
+
+  --jobs <n>: worker threads for sweep points (0/omitted = all cores,
+              1 = serial); results are identical for any worker count.
   help                         this text
 ";
 

@@ -1,6 +1,7 @@
 //! The paper's experiments, parameterized and reproducible.
 
 use crate::cluster::{TileTraffic, TiledWorkload};
+use crate::dse::parallel::ParallelRunner;
 use crate::flit::NodeId;
 use crate::noc::{LinkMode, NocConfig, NocSystem, NET_RSP, NET_WIDE};
 use crate::phys::energy::{Activity, EnergyModel, PowerBreakdown};
@@ -55,10 +56,24 @@ pub struct Fig5aRow {
 /// (which additionally congests the probe's response path in the
 /// wide-only configuration).
 pub fn fig5a(mode: LinkMode, bidir: bool, levels: &[u32]) -> Vec<Fig5aRow> {
+    fig5a_with(mode, bidir, levels, &ParallelRunner::default())
+}
+
+/// [`fig5a`] with an explicit runner: the interference levels are
+/// independent simulations, so they fan out across cores. Rows come back
+/// in `levels` order and are bit-identical to a serial run.
+pub fn fig5a_with(
+    mode: LinkMode,
+    bidir: bool,
+    levels: &[u32],
+    runner: &ParallelRunner,
+) -> Vec<Fig5aRow> {
+    let points = runner.run(levels, |_, &level| fig5a_point(mode, bidir, level));
+    // Slowdown normalization replays the serial scan: the baseline is the
+    // level-0 point once it has been seen, in `levels` order.
     let mut rows = Vec::new();
     let mut baseline_mean = 0.0;
-    for &level in levels {
-        let (mean, p99, max) = fig5a_point(mode, bidir, level);
+    for (&level, &(mean, p99, max)) in levels.iter().zip(&points) {
         if level == 0 {
             baseline_mean = mean;
         }
@@ -149,17 +164,26 @@ pub struct Fig5bRow {
 /// of small messages (Table I) and stays flat. `bidir` adds a reverse
 /// DMA stream tile 1 → tile 0.
 pub fn fig5b(mode: LinkMode, bidir: bool, levels: &[u32]) -> Vec<Fig5bRow> {
+    fig5b_with(mode, bidir, levels, &ParallelRunner::default())
+}
+
+/// [`fig5b`] with an explicit runner (independent points, stable order).
+pub fn fig5b_with(
+    mode: LinkMode,
+    bidir: bool,
+    levels: &[u32],
+    runner: &ParallelRunner,
+) -> Vec<Fig5bRow> {
+    let points = runner.run(levels, |_, &level| fig5b_point(mode, bidir, level));
     levels
         .iter()
-        .map(|&level| {
-            let (util, makespan) = fig5b_point(mode, bidir, level);
-            Fig5bRow {
-                mode,
-                bidir,
-                narrow_outstanding: level,
-                utilization: util,
-                makespan,
-            }
+        .zip(points)
+        .map(|(&level, (util, makespan))| Fig5bRow {
+            mode,
+            bidir,
+            narrow_outstanding: level,
+            utilization: util,
+            makespan,
         })
         .collect()
 }
@@ -277,119 +301,119 @@ pub struct AblationRow {
 /// ROB-size ablation: wide-transfer makespan (lower is better) as the wide
 /// ROB shrinks — shows why the paper sized it for 2 outstanding max bursts.
 pub fn ablate_rob_size(slots_options: &[u32]) -> Vec<AblationRow> {
-    slots_options
-        .iter()
-        .map(|&slots| {
-            let mut cfg = NocConfig::mesh(2, 1);
-            cfg.wide_init.rob_slots = slots;
-            let sys = NocSystem::new(cfg);
-            let mut profiles: Vec<TileTraffic> =
-                (0..2).map(|_| TileTraffic::idle()).collect();
-            let mut c = GenCfg::dma_burst(NodeId(1), 16, false);
-            c.burst_len = BURST_LEN;
-            c.max_outstanding = 8;
-            profiles[0].dma = Some(c);
-            let mut w = TiledWorkload::new(sys, profiles);
-            assert!(w.run_to_completion(1_000_000));
-            AblationRow {
-                param: "wide_rob_slots",
-                value: slots as u64,
-                metric: w.sys.now as f64,
-            }
-        })
-        .collect()
+    ablate_rob_size_with(slots_options, &ParallelRunner::default())
+}
+
+pub fn ablate_rob_size_with(
+    slots_options: &[u32],
+    runner: &ParallelRunner,
+) -> Vec<AblationRow> {
+    runner.run(slots_options, |_, &slots| {
+        let mut cfg = NocConfig::mesh(2, 1);
+        cfg.wide_init.rob_slots = slots;
+        let sys = NocSystem::new(cfg);
+        let mut profiles: Vec<TileTraffic> =
+            (0..2).map(|_| TileTraffic::idle()).collect();
+        let mut c = GenCfg::dma_burst(NodeId(1), 16, false);
+        c.burst_len = BURST_LEN;
+        c.max_outstanding = 8;
+        profiles[0].dma = Some(c);
+        let mut w = TiledWorkload::new(sys, profiles);
+        assert!(w.run_to_completion(1_000_000));
+        AblationRow {
+            param: "wide_rob_slots",
+            value: slots as u64,
+            metric: w.sys.now as f64,
+        }
+    })
 }
 
 /// Router input-buffer depth ablation: narrow mean latency under fixed
 /// wide interference.
 pub fn ablate_buffer_depth(depths: &[usize]) -> Vec<AblationRow> {
-    depths
-        .iter()
-        .map(|&d| {
-            let mut cfg = NocConfig::mesh(4, 1);
-            cfg.in_buf_depth = d;
-            let sys = NocSystem::new(cfg);
-            let mut profiles: Vec<TileTraffic> =
-                (0..4).map(|_| TileTraffic::idle()).collect();
-            profiles[1].core = Some(GenCfg::narrow_probe(NodeId(2), 50));
-            let mut dma = GenCfg::dma_burst(NodeId(3), u64::MAX, true);
-            dma.max_outstanding = 4;
-            profiles[0].dma = Some(dma);
-            let mut w = TiledWorkload::new(sys, profiles);
-            for _ in 0..1_000_000u64 {
-                w.step();
-                if w.tiles[1].core_gen.as_ref().unwrap().done() {
-                    break;
-                }
+    ablate_buffer_depth_with(depths, &ParallelRunner::default())
+}
+
+pub fn ablate_buffer_depth_with(depths: &[usize], runner: &ParallelRunner) -> Vec<AblationRow> {
+    runner.run(depths, |_, &d| {
+        let mut cfg = NocConfig::mesh(4, 1);
+        cfg.in_buf_depth = d;
+        let sys = NocSystem::new(cfg);
+        let mut profiles: Vec<TileTraffic> =
+            (0..4).map(|_| TileTraffic::idle()).collect();
+        profiles[1].core = Some(GenCfg::narrow_probe(NodeId(2), 50));
+        let mut dma = GenCfg::dma_burst(NodeId(3), u64::MAX, true);
+        dma.max_outstanding = 4;
+        profiles[0].dma = Some(dma);
+        let mut w = TiledWorkload::new(sys, profiles);
+        for _ in 0..1_000_000u64 {
+            w.step();
+            if w.tiles[1].core_gen.as_ref().unwrap().done() {
+                break;
             }
-            let g = w.tiles[1].core_gen.as_mut().unwrap();
-            AblationRow {
-                param: "in_buf_depth",
-                value: d as u64,
-                metric: g.latencies.mean(),
-            }
-        })
-        .collect()
+        }
+        let g = w.tiles[1].core_gen.as_mut().unwrap();
+        AblationRow {
+            param: "in_buf_depth",
+            value: d as u64,
+            metric: g.latencies.mean(),
+        }
+    })
 }
 
 /// Burst-length ablation: wide effective utilization vs AxLEN.
 pub fn ablate_burst_len(lens: &[u8]) -> Vec<AblationRow> {
-    lens.iter()
-        .map(|&len| {
-            let sys = NocSystem::new(NocConfig::mesh(2, 1));
-            let mut profiles: Vec<TileTraffic> =
-                (0..2).map(|_| TileTraffic::idle()).collect();
-            let mut c = GenCfg::dma_burst(NodeId(1), 32, false);
-            c.burst_len = len;
-            c.max_outstanding = 8;
-            profiles[0].dma = Some(c);
-            let mut w = TiledWorkload::new(sys, profiles);
-            assert!(w.run_to_completion(1_000_000));
-            let util = w.sys.wide_read_meter(NodeId(0)).utilization();
-            AblationRow {
-                param: "burst_len",
-                value: len as u64 + 1,
-                metric: util,
-            }
-        })
-        .collect()
+    ablate_burst_len_with(lens, &ParallelRunner::default())
+}
+
+pub fn ablate_burst_len_with(lens: &[u8], runner: &ParallelRunner) -> Vec<AblationRow> {
+    runner.run(lens, |_, &len| {
+        let sys = NocSystem::new(NocConfig::mesh(2, 1));
+        let mut profiles: Vec<TileTraffic> =
+            (0..2).map(|_| TileTraffic::idle()).collect();
+        let mut c = GenCfg::dma_burst(NodeId(1), 32, false);
+        c.burst_len = len;
+        c.max_outstanding = 8;
+        profiles[0].dma = Some(c);
+        let mut w = TiledWorkload::new(sys, profiles);
+        assert!(w.run_to_completion(1_000_000));
+        let util = w.sys.wide_read_meter(NodeId(0)).utilization();
+        AblationRow {
+            param: "burst_len",
+            value: len as u64 + 1,
+            metric: util,
+        }
+    })
 }
 
 /// Mesh-size scaling: aggregate delivered wide bandwidth with all tiles
 /// DMA-reading from their +x neighbour (ring in each row).
 pub fn scale_mesh(sizes: &[u8]) -> Vec<AblationRow> {
-    sizes
-        .iter()
-        .map(|&n| {
-            let sys = NocSystem::new(NocConfig::mesh(n, n));
-            let tiles = (n as usize) * (n as usize);
-            let profiles: Vec<TileTraffic> = (0..tiles)
-                .map(|i| {
-                    let y = i / n as usize;
-                    let x = i % n as usize;
-                    let dst = (y * n as usize + (x + 1) % n as usize) as u16;
-                    let mut c = GenCfg::dma_burst(NodeId(dst), 8, false);
-                    c.max_outstanding = 4;
-                    TileTraffic {
-                        core: None,
-                        dma: Some(c),
-                    }
-                })
-                .collect();
-            let mut w = TiledWorkload::new(sys, profiles);
-            assert!(w.run_to_completion(2_000_000), "mesh {n} didn't drain");
-            assert!(w.protocol_ok());
-            // Total wide beats delivered / makespan = beats/cycle.
-            let beats: u64 = (0..tiles)
-                .map(|i| w.sys.wide_read_meter(NodeId(i as u16)).flits)
-                .sum();
-            AblationRow {
-                param: "mesh_n",
-                value: n as u64,
-                metric: beats as f64 * 64.0 / w.sys.now as f64, // bytes/cycle
-            }
-        })
-        .collect()
+    scale_mesh_with(sizes, &ParallelRunner::default())
+}
+
+pub fn scale_mesh_with(sizes: &[u8], runner: &ParallelRunner) -> Vec<AblationRow> {
+    runner.run(sizes, |_, &n| {
+        let sys = NocSystem::new(NocConfig::mesh(n, n));
+        let tiles = (n as usize) * (n as usize);
+        let profiles = crate::dse::parallel::ring_profiles(n as usize, |_, dst| {
+            let mut c = GenCfg::dma_burst(dst, 8, false);
+            c.max_outstanding = 4;
+            c
+        });
+        let mut w = TiledWorkload::new(sys, profiles);
+        assert!(w.run_to_completion(2_000_000), "mesh {n} didn't drain");
+        assert!(w.protocol_ok());
+        // Total wide beats delivered / makespan = beats/cycle.
+        let beats: u64 = (0..tiles)
+            .map(|i| w.sys.wide_read_meter(NodeId(i as u16)).flits)
+            .sum();
+        AblationRow {
+            param: "mesh_n",
+            value: n as u64,
+            metric: beats as f64 * 64.0 / w.sys.now as f64, // bytes/cycle
+        }
+    })
 }
 
 /// Output-register (1- vs 2-cycle router) ablation on zero-load latency.

@@ -10,14 +10,17 @@
 //! 3. the cycle-accurate simulator, whose measured per-link throughput
 //!    must agree with the analytical loads in the unsaturated regime.
 
+pub mod parallel;
+
+pub use parallel::{run_sweep, sweep_report_json, ParallelRunner, SweepPoint, SweepResult};
+
 use anyhow::Context;
 
-use crate::cluster::{TileTraffic, TiledWorkload};
-use crate::flit::NodeId;
+use crate::cluster::TiledWorkload;
 use crate::noc::{NocConfig, NocSystem, NET_WIDE};
 use crate::router::PORT_E;
 use crate::runtime::Runtime;
-use crate::traffic::{GenCfg, Pattern};
+use crate::traffic::GenCfg;
 
 /// Per-direction link loads for an `n×n` mesh: `loads[dir][y][x]` with
 /// dir ∈ {E, W, N, S} — identical layout to the Python oracle.
@@ -138,21 +141,11 @@ pub fn artifact_link_loads(
 /// the ring workload, for comparison against the analytical E-link loads.
 pub fn simulate_ring_throughput(n: u8, bursts: u64) -> (f64, u64) {
     let sys = NocSystem::new(NocConfig::mesh(n, n));
-    let tiles = n as usize * n as usize;
-    let profiles: Vec<TileTraffic> = (0..tiles)
-        .map(|i| {
-            let y = i / n as usize;
-            let x = i % n as usize;
-            let dst = (y * n as usize + (x + 1) % n as usize) as u16;
-            let mut c = GenCfg::dma_burst(NodeId(dst), bursts, true);
-            c.pattern = Pattern::FixedDst(NodeId(dst));
-            c.max_outstanding = 4;
-            TileTraffic {
-                core: None,
-                dma: Some(c),
-            }
-        })
-        .collect();
+    let profiles = parallel::ring_profiles(n as usize, |_, dst| {
+        let mut c = GenCfg::dma_burst(dst, bursts, true);
+        c.max_outstanding = 4;
+        c
+    });
     let mut w = TiledWorkload::new(sys, profiles);
     assert!(w.run_to_completion(10_000_000), "ring workload didn't drain");
     assert!(w.protocol_ok());
@@ -172,9 +165,10 @@ pub fn simulate_ring_throughput(n: u8, bursts: u64) -> (f64, u64) {
 }
 
 /// The `repro dse` command: evaluate the analytical model natively and
-/// via the PJRT artifact, cross-check them, and (for the ring workload)
-/// compare against the cycle-accurate simulator.
-pub fn run_dse(n: u8, artifacts_dir: &str) -> crate::Result<()> {
+/// via the PJRT artifact, cross-check them, compare against the
+/// cycle-accurate simulator on the ring workload, and fan a multi-point
+/// cycle-accurate sweep out across `runner`'s cores.
+pub fn run_dse(n: u8, artifacts_dir: &str, runner: &ParallelRunner) -> crate::Result<()> {
     let n_us = n as usize;
     println!("== analytical XY link-load model, {n}x{n} mesh ==");
     for (name, traffic) in [
@@ -227,6 +221,20 @@ pub fn run_dse(n: u8, artifacts_dir: &str) -> crate::Result<()> {
         sim_tput
     );
     let _ = analytical;
+    // Multi-point cycle-accurate sweep, fanned out across cores. The
+    // report is deterministic: identical for any worker count.
+    let points = SweepPoint::grid(
+        &[n],
+        &[crate::noc::LinkMode::NarrowWide, crate::noc::LinkMode::WideOnly],
+        &[3, 15],
+    );
+    println!(
+        "\n== cycle-accurate sweep: {} points on {} worker thread(s) ==",
+        points.len(),
+        runner.threads()
+    );
+    let results = run_sweep(&points, runner);
+    println!("{}", crate::util::json::pretty(&sweep_report_json(&results)));
     Ok(())
 }
 

@@ -1,0 +1,389 @@
+//! Parallel sweep execution.
+//!
+//! Every DSE/ablation sweep in this crate is a map over independent
+//! simulation points: each point builds its own [`NocSystem`], drives its
+//! own generators, and touches no shared state. [`ParallelRunner`] fans
+//! such points out across OS threads with `std::thread::scope` (no extra
+//! dependencies), while guaranteeing:
+//!
+//! * **stable result ordering** — results come back indexed by input
+//!   position, so output is identical to a serial map;
+//! * **deterministic seeding** — per-point RNG seeds are derived from
+//!   `(base_seed, point index)` via [`mix_seed`], never from execution
+//!   order or thread identity;
+//! * **panic propagation** — a panicking point aborts the whole sweep
+//!   with the worker's panic payload, instead of silently dropping work.
+//!
+//! Together these make a parallel sweep byte-identical to its serial
+//! counterpart (covered by `tests/parallel_sweep.rs`), so callers can
+//! default to all cores.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::cluster::{TileTraffic, TiledWorkload};
+use crate::flit::NodeId;
+use crate::noc::{LinkMode, NocConfig, NocSystem, NET_WIDE};
+use crate::router::PORT_E;
+use crate::traffic::GenCfg;
+use crate::util::json::Json;
+use crate::util::rng::mix_seed;
+
+/// Work-stealing-free parallel map over independent sweep points.
+#[derive(Debug, Clone)]
+pub struct ParallelRunner {
+    threads: usize,
+}
+
+impl Default for ParallelRunner {
+    /// One worker per available core.
+    fn default() -> Self {
+        ParallelRunner::new(0)
+    }
+}
+
+impl ParallelRunner {
+    /// `threads = 0` means "all available cores".
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        ParallelRunner { threads }
+    }
+
+    /// A runner that executes on the calling thread only (the serial
+    /// reference used by the determinism tests).
+    pub fn serial() -> Self {
+        ParallelRunner::new(1)
+    }
+
+    /// Resolved worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `f` over `points`, returning results in input order. `f` gets
+    /// the point's index so it can derive deterministic per-point seeds.
+    pub fn run<P, R, F>(&self, points: &[P], f: F) -> Vec<R>
+    where
+        P: Sync,
+        R: Send,
+        F: Fn(usize, &P) -> R + Sync,
+    {
+        let n = points.len();
+        let workers = self.threads.min(n).max(1);
+        if workers == 1 {
+            return points.iter().enumerate().map(|(i, p)| f(i, p)).collect();
+        }
+        // Dynamic index dispenser: long points don't serialize behind a
+        // static chunking, and the (index, result) pairs restore input
+        // order afterwards regardless of who computed what.
+        let next = AtomicUsize::new(0);
+        let mut indexed: Vec<(usize, R)> = Vec::with_capacity(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            out.push((i, f(i, &points[i])));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            // Join every worker before unwinding: resuming the first
+            // panic while another handle is still unjoined would make
+            // `scope` panic during the unwind — a double panic aborts the
+            // process and loses both diagnostics.
+            let mut first_panic = None;
+            for h in handles {
+                match h.join() {
+                    Ok(part) => indexed.extend(part),
+                    Err(payload) => {
+                        first_panic.get_or_insert(payload);
+                    }
+                }
+            }
+            if let Some(payload) = first_panic {
+                std::panic::resume_unwind(payload);
+            }
+        });
+        indexed.sort_by_key(|&(i, _)| i);
+        indexed.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+// The whole simulation stack must stay `Send` for scoped workers to own
+// systems; this fails to compile if a non-Send handle (Rc, RefCell, raw
+// client, ...) ever creeps into the per-point state.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<NocSystem>();
+    assert_send::<crate::sim::Engine<NocSystem>>();
+    assert_send::<TiledWorkload>();
+};
+
+/// One point of a cycle-accurate sweep: the neighbour-ring DMA workload
+/// (every tile streams bursts to its +x ring neighbour) parameterized
+/// along the axes the paper's evaluation sweeps — link mode, burst
+/// length, outstanding budget, mesh size.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub name: String,
+    pub mesh_n: u8,
+    pub mode: LinkMode,
+    /// AxLEN (beats = len + 1).
+    pub burst_len: u8,
+    /// DMA bursts per tile.
+    pub bursts_per_tile: u64,
+    /// Writes instead of reads.
+    pub write: bool,
+    pub max_outstanding: u32,
+    /// Base seed; the effective per-point seed also mixes in the point's
+    /// index, and each tile's generator mixes in its node id.
+    pub base_seed: u64,
+}
+
+impl SweepPoint {
+    /// A small canonical point (used by examples/tests as a template).
+    pub fn ring(name: &str, mesh_n: u8, mode: LinkMode) -> Self {
+        SweepPoint {
+            name: name.to_string(),
+            mesh_n,
+            mode,
+            burst_len: 15,
+            bursts_per_tile: 8,
+            write: false,
+            max_outstanding: 4,
+            base_seed: 0xF100_0C0D,
+        }
+    }
+
+    /// Cartesian sweep grid over mesh sizes × link modes × burst lengths
+    /// — the shape every sweep consumer (CLI `dse`, the `dse_sweep`
+    /// example, `bench_e2e`, the determinism tests) wants. Point names
+    /// are `ring-<n>x<n>-<nw|wo>-len<beats>`.
+    pub fn grid(meshes: &[u8], modes: &[LinkMode], lens: &[u8]) -> Vec<SweepPoint> {
+        let mut points = Vec::new();
+        for &mesh_n in meshes {
+            for &mode in modes {
+                for &len in lens {
+                    let tag = match mode {
+                        LinkMode::NarrowWide => "nw",
+                        LinkMode::WideOnly => "wo",
+                    };
+                    let name = format!("ring-{mesh_n}x{mesh_n}-{tag}-len{}", len as u32 + 1);
+                    let mut p = SweepPoint::ring(&name, mesh_n, mode);
+                    p.burst_len = len;
+                    points.push(p);
+                }
+            }
+        }
+        points
+    }
+}
+
+/// Measured outcome of one sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub name: String,
+    pub mesh_n: u8,
+    pub mode: LinkMode,
+    /// Makespan until full drain.
+    pub cycles: u64,
+    /// Wide beats delivered across all tiles.
+    pub wide_beats: u64,
+    /// Delivered wide payload per cycle (bytes).
+    pub bytes_per_cycle: f64,
+    /// Mean E-link throughput over links that carried traffic
+    /// (flits/cycle) on the wide-carrying network.
+    pub e_link_tput: f64,
+}
+
+/// Neighbour-ring DMA profiles: tile `(x, y)` streams to `((x+1) mod n,
+/// y)`. The single home of the ring topology — [`run_point`],
+/// `coordinator::scale_mesh_with` and `dse::simulate_ring_throughput`
+/// all build their workloads through it. `mk(i, dst)` produces tile
+/// `i`'s DMA generator config.
+pub fn ring_profiles(n: usize, mk: impl Fn(usize, NodeId) -> GenCfg) -> Vec<TileTraffic> {
+    (0..n * n)
+        .map(|i| {
+            let (y, x) = (i / n, i % n);
+            let dst = NodeId((y * n + (x + 1) % n) as u16);
+            TileTraffic {
+                core: None,
+                dma: Some(mk(i, dst)),
+            }
+        })
+        .collect()
+}
+
+/// Execute one sweep point to completion. Pure function of
+/// `(idx, point)`: repeated calls give identical results, which is what
+/// makes the parallel sweep reproducible.
+pub fn run_point(idx: usize, p: &SweepPoint) -> SweepResult {
+    let mut cfg = NocConfig::mesh(p.mesh_n, p.mesh_n);
+    cfg.mode = p.mode;
+    let sys = NocSystem::new(cfg);
+    let n = p.mesh_n as usize;
+    let tiles = n * n;
+    let seed = mix_seed(p.base_seed, idx as u64);
+    let profiles = ring_profiles(n, |i, dst| {
+        let mut c = GenCfg::dma_burst(dst, p.bursts_per_tile, p.write);
+        c.burst_len = p.burst_len;
+        c.max_outstanding = p.max_outstanding;
+        c.seed = mix_seed(seed, i as u64);
+        c
+    });
+    let mut w = TiledWorkload::new(sys, profiles);
+    assert!(
+        w.run_to_completion(50_000_000),
+        "sweep point '{}' did not drain",
+        p.name
+    );
+    assert!(w.protocol_ok(), "sweep point '{}' violated AXI", p.name);
+    let wide_net = match p.mode {
+        LinkMode::NarrowWide => NET_WIDE,
+        LinkMode::WideOnly => {
+            // Wide data rides the response net for reads, the request net
+            // for writes.
+            if p.write {
+                crate::noc::NET_REQ
+            } else {
+                crate::noc::NET_RSP
+            }
+        }
+    };
+    // Count wide *data* beats only: the eject meters observe 512 payload
+    // bits per WideR/WideW flit and 0 for everything else sharing the
+    // observed link, so `payload_bits / 512` excludes AW/AR/B header
+    // flits even on the merged wide-only networks.
+    let wide_beats: u64 = (0..tiles)
+        .map(|i| w.sys.eject_meters[wide_net][i].payload_bits / 512)
+        .sum();
+    let cycles = w.sys.now.max(1);
+    let (mut tput_sum, mut tput_links) = (0.0f64, 0u64);
+    for r in &w.sys.nets[wide_net].routers {
+        let f = r.forwarded_on(PORT_E);
+        if f > 0 {
+            tput_sum += f as f64 / cycles as f64;
+            tput_links += 1;
+        }
+    }
+    SweepResult {
+        name: p.name.clone(),
+        mesh_n: p.mesh_n,
+        mode: p.mode,
+        cycles,
+        wide_beats,
+        bytes_per_cycle: wide_beats as f64 * 64.0 / cycles as f64,
+        e_link_tput: if tput_links > 0 {
+            tput_sum / tput_links as f64
+        } else {
+            0.0
+        },
+    }
+}
+
+/// Run a whole sweep through the runner. Result order matches `points`.
+pub fn run_sweep(points: &[SweepPoint], runner: &ParallelRunner) -> Vec<SweepResult> {
+    runner.run(points, run_point)
+}
+
+/// Deterministic JSON report: object keys are sorted (`Json::Obj` is a
+/// `BTreeMap`) and rows keep sweep order, so serial and parallel runs of
+/// the same points serialize byte-identically.
+pub fn sweep_report_json(results: &[SweepResult]) -> Json {
+    Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("mesh_n", Json::Num(r.mesh_n as f64)),
+                    (
+                        "mode",
+                        Json::Str(
+                            match r.mode {
+                                LinkMode::NarrowWide => "narrow_wide",
+                                LinkMode::WideOnly => "wide_only",
+                            }
+                            .to_string(),
+                        ),
+                    ),
+                    ("cycles", Json::Num(r.cycles as f64)),
+                    ("wide_beats", Json::Num(r.wide_beats as f64)),
+                    ("bytes_per_cycle", Json::Num(r.bytes_per_cycle)),
+                    ("e_link_tput", Json::Num(r.e_link_tput)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_maps_in_order() {
+        let points: Vec<u64> = (0..37).collect();
+        let r = ParallelRunner::new(4);
+        let got = r.run(&points, |i, &p| (i as u64, p * 2));
+        let want: Vec<(u64, u64)> = (0..37).map(|i| (i, i * 2)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn serial_runner_is_one_thread() {
+        assert_eq!(ParallelRunner::serial().threads(), 1);
+        assert!(ParallelRunner::default().threads() >= 1);
+    }
+
+    #[test]
+    fn runner_handles_more_threads_than_points() {
+        let r = ParallelRunner::new(16);
+        let got = r.run(&[10u32, 20], |_, &p| p + 1);
+        assert_eq!(got, vec![11, 21]);
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let r = ParallelRunner::default();
+        let got: Vec<u32> = r.run(&[], |_, p: &u32| *p);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "worker boom")]
+    fn worker_panics_propagate() {
+        let r = ParallelRunner::new(2);
+        let _ = r.run(&[0u32, 1, 2, 3], |_, &p| {
+            if p == 2 {
+                panic!("worker boom");
+            }
+            p
+        });
+    }
+
+    #[test]
+    fn point_results_are_reproducible() {
+        let p = SweepPoint::ring("repro", 2, LinkMode::NarrowWide);
+        let a = run_point(3, &p);
+        let b = run_point(3, &p);
+        assert_eq!((a.cycles, a.wide_beats), (b.cycles, b.wide_beats));
+        assert!(a.wide_beats > 0);
+        // A different index derives a different seed but the ring workload
+        // is seed-insensitive in shape: it must still complete.
+        let c = run_point(4, &p);
+        assert!(c.wide_beats == a.wide_beats, "same workload size");
+    }
+}

@@ -1,6 +1,20 @@
 //! `repro` — the FlooNoC reproduction CLI (leader entrypoint).
 //!
-//! See `repro help` or [`floonoc::cli::HELP`].
+//! See `repro help` or [`floonoc::cli::HELP`]. Top-level usage:
+//!
+//! ```text
+//! repro info
+//! repro reproduce <tab1|tab2|fig5a|fig5b|fig6a|fig6b|latency|bandwidth|
+//!                  wires|scaling|all> [--bidir] [--levels a,b,c] [--jobs n]
+//! repro simulate  [--config f.json] [--mesh n] [--txns n] [--wide-only]
+//! repro sweep     <rob|buffers|burst|mesh|output-reg> [--jobs n]
+//! repro dse       [--mesh n] [--artifacts dir] [--jobs n]
+//! ```
+//!
+//! `--jobs n` controls the parallel sweep runner: every sweep/ablation
+//! point is an independent simulation fanned out over `n` worker threads
+//! (`0` or omitted = all cores, `1` = serial). Results are deterministic
+//! and identical for any worker count.
 
 use anyhow::{bail, Context};
 
@@ -8,6 +22,7 @@ use floonoc::cli::{Args, HELP};
 use floonoc::cluster::{TileSpec, TileTraffic, TiledWorkload};
 use floonoc::config;
 use floonoc::coordinator as exp;
+use floonoc::dse::ParallelRunner;
 use floonoc::flit::{NocLayout, NodeId};
 use floonoc::noc::{LinkMode, NocConfig, NocSystem};
 use floonoc::phys::{AreaModel, BandwidthModel, ChannelGeometry, TimingModel};
@@ -80,6 +95,11 @@ fn info() {
     );
 }
 
+/// The sweep runner selected by `--jobs` (0/absent = all cores).
+fn runner_from(args: &Args) -> anyhow::Result<ParallelRunner> {
+    Ok(ParallelRunner::new(args.opt_u64("jobs", 0)? as usize))
+}
+
 fn parse_levels_u32(args: &Args, default: &[u32]) -> anyhow::Result<Vec<u32>> {
     match args.opt("levels") {
         Some(s) => s
@@ -99,15 +119,17 @@ fn reproduce(args: &Args) -> anyhow::Result<()> {
         "tab2" => print!("{}", report::table_two()),
         "fig5a" => {
             let levels = parse_levels_u32(args, &[0, 1, 2, 4, 8])?;
+            let runner = runner_from(args)?;
             for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
-                let rows = exp::fig5a(mode, bidir, &levels);
+                let rows = exp::fig5a_with(mode, bidir, &levels, &runner);
                 print!("{}", report::fig5a_table(&rows));
             }
         }
         "fig5b" => {
             let levels = parse_levels_u32(args, &[0, 2, 4, 8, 16, 32])?;
+            let runner = runner_from(args)?;
             for mode in [LinkMode::NarrowWide, LinkMode::WideOnly] {
-                let rows = exp::fig5b(mode, bidir, &levels);
+                let rows = exp::fig5b_with(mode, bidir, &levels, &runner);
                 print!("{}", report::fig5b_table(&rows));
             }
         }
@@ -248,22 +270,23 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
 
 fn sweep(args: &Args) -> anyhow::Result<()> {
     let what = args.pos(0).unwrap_or("rob");
+    let runner = runner_from(args)?;
     let table = match what {
         "rob" => report::ablation_table(
             "wide-ROB size vs 16x1kB-read makespan (cycles)",
-            &exp::ablate_rob_size(&[16, 32, 64, 128, 256]),
+            &exp::ablate_rob_size_with(&[16, 32, 64, 128, 256], &runner),
         ),
         "buffers" => report::ablation_table(
             "router input-buffer depth vs narrow latency under interference",
-            &exp::ablate_buffer_depth(&[1, 2, 4, 8]),
+            &exp::ablate_buffer_depth_with(&[1, 2, 4, 8], &runner),
         ),
         "burst" => report::ablation_table(
             "burst length vs effective wide utilization",
-            &exp::ablate_burst_len(&[0, 1, 3, 7, 15, 31]),
+            &exp::ablate_burst_len_with(&[0, 1, 3, 7, 15, 31], &runner),
         ),
         "mesh" => report::ablation_table(
             "mesh size vs delivered wide bytes/cycle (neighbor ring)",
-            &exp::scale_mesh(&[2, 3, 4, 6]),
+            &exp::scale_mesh_with(&[2, 3, 4, 6], &runner),
         ),
         "output-reg" => report::ablation_table(
             "router output register (0/1) vs zero-load latency",
@@ -278,5 +301,5 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
 fn dse(args: &Args) -> anyhow::Result<()> {
     let n = args.opt_u64("mesh", 4)? as u8;
     let dir = args.opt("artifacts").unwrap_or("artifacts");
-    floonoc::dse::run_dse(n, dir)
+    floonoc::dse::run_dse(n, dir, &runner_from(args)?)
 }

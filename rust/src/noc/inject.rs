@@ -9,7 +9,7 @@
 
 use crate::flit::FlooFlit;
 
-use super::system::{LinkMode, NetCounters, Network, NodeNi, NET_REQ, NET_RSP, NET_WIDE};
+use super::system::{InjectPlan, NetCounters, Network, NodeNi, NET_REQ, NET_RSP, NET_WIDE};
 
 /// Sources that can hold a local-port wormhole lock.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,25 +64,21 @@ fn can_offer(nets: &[Network], net: usize, node_idx: usize) -> bool {
     nets[net].links[lid].can_offer()
 }
 
-/// Schedule this node's injections for one cycle.
+/// Schedule this node's injections for one cycle. The [`InjectPlan`] is
+/// the link mode resolved once at system construction, so this per-node
+/// per-cycle path carries no mode dispatch of its own.
 pub fn inject_node(
-    mode: &LinkMode,
+    plan: InjectPlan,
     node: &mut NodeNi,
     nets: &mut [Network],
     counters: &mut [NetCounters],
     now: u64,
 ) {
     let node_idx = node.target.node.0 as usize;
-    match mode {
-        LinkMode::NarrowWide => {
-            inject_req_net(node, nets, counters, node_idx, now, /*shared_w=*/ false);
-            inject_rsp_net(node, nets, counters, node_idx, now, /*merged=*/ false);
-            inject_wide_net(node, nets, counters, node_idx, now);
-        }
-        LinkMode::WideOnly => {
-            inject_req_net(node, nets, counters, node_idx, now, /*shared_w=*/ true);
-            inject_rsp_net(node, nets, counters, node_idx, now, /*merged=*/ true);
-        }
+    inject_req_net(node, nets, counters, node_idx, now, plan.shared_w);
+    inject_rsp_net(node, nets, counters, node_idx, now, plan.merged_rsp);
+    if plan.has_wide_net {
+        inject_wide_net(node, nets, counters, node_idx, now);
     }
 }
 

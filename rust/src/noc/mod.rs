@@ -20,4 +20,4 @@
 pub mod system;
 pub mod inject;
 
-pub use system::{LinkMode, Network, NocConfig, NocSystem, NET_REQ, NET_RSP, NET_WIDE};
+pub use system::{InjectPlan, LinkMode, Network, NocConfig, NocSystem, NET_REQ, NET_RSP, NET_WIDE};

@@ -90,16 +90,24 @@ impl Router {
         self.outputs[port].forwarded
     }
 
-    /// One cycle: route computation on input-buffer heads, switch
-    /// allocation (wormhole locks honoured, round-robin otherwise), and
-    /// traversal into the output links.
+    /// One cycle, in two explicit phases: **compute** (route lookup on
+    /// every input-buffer head, no state changes) and **commit** (switch
+    /// allocation honouring wormhole locks, then traversal into the output
+    /// links). The split mirrors the deliver/step discipline of the
+    /// engine: all routing decisions observe the same pre-cycle state, and
+    /// only the commit phase mutates links.
     pub fn step(&mut self, links: &mut [Link<FlooFlit>]) {
+        if self.compute_requests(links) {
+            self.commit_switch(links);
+        }
+    }
+
+    /// Compute phase: fill `want[i] = Some(o)` for every input head flit
+    /// requesting output `o`. Returns false when every input is empty —
+    /// the common case in large meshes, letting `step` exit early. The
+    /// scratch buffer lives in the router (no per-cycle allocation).
+    fn compute_requests(&mut self, links: &[Link<FlooFlit>]) -> bool {
         let ports = self.cfg.ports;
-        // Phase 1: route computation — desired output per input head.
-        // `want[i] = Some(o)` when input i's head flit requests output o.
-        // The scratch buffer lives in the router (no per-cycle allocation)
-        // and the step exits early when every input is empty — the common
-        // case in large meshes.
         let mut any_input = false;
         for i in 0..ports {
             self.want[i] = None;
@@ -116,15 +124,23 @@ impl Router {
                 any_input = true;
             }
         }
-        if !any_input {
-            return;
-        }
-        // Phase 2: switch allocation + traversal, one winner per output.
+        any_input
+    }
+
+    /// Commit phase: one winner per output port, wormhole locks honoured,
+    /// round-robin arbitration otherwise; winners traverse into their
+    /// output links.
+    fn commit_switch(&mut self, links: &mut [Link<FlooFlit>]) {
+        let ports = self.cfg.ports;
         let mut any = false;
         for o in 0..ports {
             let Some(out_lid) = self.out_links[o] else { continue };
             if !links[out_lid].can_offer() {
-                continue; // downstream backpressure (ready deasserted)
+                // Downstream backpressure (ready deasserted). A held lock
+                // survives the stall untouched: it is released only by the
+                // packet's `last` flit actually traversing, never by the
+                // output going not-ready mid-packet.
+                continue;
             }
             let want = &self.want;
             let winner = match self.outputs[o].lock {
@@ -132,6 +148,15 @@ impl Router {
                 // next flit hasn't arrived yet the output idles but stays
                 // locked (no interleaving, as in RTL).
                 Some(i) => {
+                    // Mid-packet, the locked input's head (when present)
+                    // must still target the locked output — its packet's
+                    // remaining flits are the only thing it may send. A
+                    // divergent head would deadlock the output silently;
+                    // fail loudly instead.
+                    debug_assert!(
+                        want[i].is_none() || want[i] == Some(o),
+                        "locked input {i} head diverged from output {o} mid-packet"
+                    );
                     if want[i] == Some(o) {
                         Some(i)
                     } else {

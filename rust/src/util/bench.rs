@@ -149,6 +149,67 @@ pub fn time_once<F: FnOnce()>(f: F) -> Duration {
     t0.elapsed()
 }
 
+/// One simulator-throughput measurement: how many simulated cycles per
+/// wall-clock second a step loop sustains.
+#[derive(Debug, Clone, Copy)]
+pub struct CpsResult {
+    pub cycles: u64,
+    pub wall_seconds: f64,
+}
+
+impl CpsResult {
+    pub fn cycles_per_second(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.cycles as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Time `cycles` invocations of `step` (one simulated cycle each).
+pub fn measure_cps<F: FnMut()>(cycles: u64, mut step: F) -> CpsResult {
+    let t0 = Instant::now();
+    for _ in 0..cycles {
+        step();
+    }
+    CpsResult {
+        cycles,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Cycles-per-second regression gate: measures, prints one
+/// machine-readable line (`cps_gate name=<n> cycles_per_second=<v>`), and
+/// panics if the `CPS_FLOOR` env var is set and the measurement falls
+/// below it. Benches run with `harness = false`, so the panic makes
+/// `cargo bench` exit non-zero — CI can pin a throughput floor without a
+/// criterion dependency.
+pub fn cps_gate<F: FnMut()>(name: &str, cycles: u64, step: F) -> CpsResult {
+    let r = measure_cps(cycles, step);
+    println!(
+        "cps_gate name={name} cycles={} wall_s={:.4} cycles_per_second={:.0}",
+        r.cycles,
+        r.wall_seconds,
+        r.cycles_per_second()
+    );
+    if let Ok(raw) = std::env::var("CPS_FLOOR") {
+        // A floor that is set but unparsable must not silently disable
+        // the gate — that ships regressions while CI believes it's
+        // enforced.
+        let floor: f64 = raw
+            .trim()
+            .parse()
+            .unwrap_or_else(|e| panic!("CPS_FLOOR {raw:?} is not a number: {e}"));
+        assert!(
+            r.cycles_per_second() >= floor,
+            "cps regression: {name} ran at {:.0} cycles/s, floor is {floor:.0}",
+            r.cycles_per_second()
+        );
+    }
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,5 +251,23 @@ mod tests {
             std::hint::black_box((0..1000).sum::<u64>());
         });
         assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn cps_counts_every_cycle() {
+        let mut n = 0u64;
+        let r = measure_cps(1_000, || n += 1);
+        assert_eq!(n, 1_000);
+        assert_eq!(r.cycles, 1_000);
+        assert!(r.cycles_per_second() > 0.0);
+    }
+
+    #[test]
+    fn cps_gate_passes_without_floor() {
+        // CPS_FLOOR is unset in unit tests; the gate must only report.
+        let r = cps_gate("unit", 100, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.cycles, 100);
     }
 }

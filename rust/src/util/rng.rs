@@ -19,6 +19,15 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Mix a base seed with a salt into an independent stream seed (SplitMix64
+/// finalizer). Used for deterministic per-point seeding in parallel sweeps:
+/// the derived seed depends only on `(base, salt)`, never on execution
+/// order, so serial and parallel runs see identical streams.
+pub fn mix_seed(base: u64, salt: u64) -> u64 {
+    let mut s = base ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
 impl Rng {
     /// Create a generator from a 64-bit seed (SplitMix64 expansion).
     pub fn new(seed: u64) -> Self {

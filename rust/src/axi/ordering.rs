@@ -49,12 +49,14 @@ pub struct OrderingMonitor {
     writes: HashMap<AxiId, u32>,
     /// All violations observed (tests assert this stays empty).
     pub violations: Vec<Violation>,
-    /// Completed transaction counters.
+    /// Completed read-transaction count.
     pub reads_completed: u64,
+    /// Completed write-transaction count.
     pub writes_completed: u64,
 }
 
 impl OrderingMonitor {
+    /// A fresh monitor with no outstanding state.
     pub fn new() -> Self {
         Self::default()
     }
@@ -143,6 +145,7 @@ impl OrderingMonitor {
             + self.writes.values().map(|&n| n as usize).sum::<usize>()
     }
 
+    /// True when no violation has been observed.
     pub fn ok(&self) -> bool {
         self.violations.is_empty()
     }

@@ -21,21 +21,28 @@ pub enum Burst {
 /// Response code (xRESP).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Resp {
+    /// Normal success.
     Okay,
+    /// Exclusive-access success.
     ExOkay,
+    /// Slave error.
     SlvErr,
+    /// Decode error (no target at the address).
     DecErr,
 }
 
 /// Read/write request descriptor (AR and AW carry the same fields).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AxReq {
+    /// Transaction ID (AxID).
     pub id: AxiId,
+    /// Start byte address (AxADDR).
     pub addr: Addr,
     /// AxLEN: beats = len + 1, 0..=255 (INCR).
     pub len: u8,
     /// AxSIZE: bytes per beat = 1 << size.
     pub size: u8,
+    /// Burst type (AxBURST).
     pub burst: Burst,
     /// Atomic operation marker (AXI5-style ATOP as used by the PULP
     /// ecosystem; the paper's NI stores atomics in separate meta buffers).
@@ -113,29 +120,38 @@ pub struct WBeat {
     /// Beat index within the burst (modelling WDATA; the simulator tracks
     /// payload identity, not bit patterns, except in the compute bridge).
     pub beat: u32,
+    /// WLAST marker.
     pub last: bool,
 }
 
 /// Read-data beat.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RBeat {
+    /// Transaction ID (RID).
     pub id: AxiId,
+    /// Beat index within the burst.
     pub beat: u32,
+    /// RLAST marker.
     pub last: bool,
+    /// Per-beat response code.
     pub resp: Resp,
 }
 
 /// Write response.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BResp {
+    /// Transaction ID (BID).
     pub id: AxiId,
+    /// Response code.
     pub resp: Resp,
 }
 
 /// A complete transaction as observed by generators / scoreboards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dir {
+    /// AR/R transaction.
     Read,
+    /// AW/W/B transaction.
     Write,
 }
 
@@ -146,14 +162,20 @@ pub type TxnTag = u64;
 /// latency statistics.
 #[derive(Debug, Clone)]
 pub struct Txn {
+    /// Scoreboard tag (unique per transaction).
     pub tag: TxnTag,
+    /// Read or write.
     pub dir: Dir,
+    /// The request descriptor.
     pub req: AxReq,
+    /// Issue cycle.
     pub issued_at: u64,
+    /// Completion cycle, once the last beat / B arrived.
     pub completed_at: Option<u64>,
 }
 
 impl Txn {
+    /// Round-trip latency, if completed.
     pub fn latency(&self) -> Option<u64> {
         self.completed_at.map(|c| c - self.issued_at)
     }

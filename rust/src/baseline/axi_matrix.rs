@@ -39,14 +39,20 @@ impl Default for AxiMatrixModel {
 /// Scaling record for one hop count.
 #[derive(Debug, Clone)]
 pub struct MatrixScaling {
+    /// Network diameter in interconnect stages.
     pub hops: u32,
+    /// ID bits at the observation point (grows per stage).
     pub id_bits: u32,
+    /// ID-tracker table entries required.
     pub tracker_entries: u128,
+    /// Gate-count estimate for those trackers.
     pub tracker_gates: u128,
+    /// End-to-end latency at this depth.
     pub latency_cycles: u64,
 }
 
 impl MatrixScaling {
+    /// Serialize for reports.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("hops", Json::Num(self.hops as f64)),

@@ -6,8 +6,9 @@
 //! repro reproduce <exp> [--bidir]     regenerate a paper table/figure:
 //!        tab1 | tab2 | fig5a | fig5b | fig6a | fig6b |
 //!        latency | bandwidth | wires | scaling | all
-//! repro simulate [--config f] [--cycles n] [--txns n] run uniform traffic
-//! repro sweep <rob|buffers|burst|mesh|output-reg>     ablations
+//! repro simulate [--config f] [--topology k] [--txns n] run uniform traffic
+//! repro sweep <rob|buffers|burst|mesh|topology|output-reg>  ablations
+//! repro scale_topology [--mesh n]     mesh vs torus vs ring at equal tiles
 //! repro dse [--mesh n] [--artifacts dir]              analytical model vs sim
 //! ```
 //!
@@ -24,9 +25,13 @@ use anyhow::{bail, Context};
 /// `--flag` options.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The subcommand (first token).
     pub command: String,
+    /// Positional arguments in order.
     pub positional: Vec<String>,
+    /// `--key value` options.
     pub options: HashMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -57,14 +62,17 @@ impl Args {
         Ok(args)
     }
 
+    /// Was the bare flag `--name` given?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name value`, if given.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(String::as_str)
     }
 
+    /// Integer option with a default; errors on non-integer input.
     pub fn opt_u64(&self, name: &str, default: u64) -> crate::Result<u64> {
         match self.opt(name) {
             Some(v) => v
@@ -74,11 +82,13 @@ impl Args {
         }
     }
 
+    /// Positional argument by index.
     pub fn pos(&self, idx: usize) -> Option<&str> {
         self.positional.get(idx).map(String::as_str)
     }
 }
 
+/// The `repro help` text.
 pub const HELP: &str = "\
 FlooNoC reproduction CLI
 
@@ -90,17 +100,24 @@ COMMANDS:
                                tab1 tab2 fig5a fig5b fig6a fig6b latency
                                bandwidth wires scaling all
                                options: --bidir, --levels a,b,c, --jobs <n>
-  simulate                     run uniform-random traffic on a mesh
+  simulate                     run uniform-random traffic on a fabric
                                options: --config <file.json>, --txns <n>,
-                               --mesh <n>, --wide-only
-  sweep <ablation>             rob | buffers | burst | mesh | output-reg
-                               options: --jobs <n>
+                               --mesh <n>, --topology <mesh|torus|ring>,
+                               --wide-only
+  sweep <ablation>             rob | buffers | burst | mesh | topology |
+                               output-reg; options: --jobs <n>
+  scale_topology               compare mesh vs torus vs ring at the same
+                               tile count (uniform-random traffic): mean
+                               hop counts and delivered throughput;
+                               options: --mesh <n> (n*n tiles), --jobs <n>
   dse                          analytical link-load model (PJRT artifact)
                                cross-validated against the simulator, plus
-                               a parallel cycle-accurate point sweep;
-                               options: --mesh <n>, --artifacts <dir>,
-                               --jobs <n>
+                               a parallel cycle-accurate point sweep with
+                               cross-topology rows; options: --mesh <n>,
+                               --artifacts <dir>, --jobs <n>
 
+  --topology <kind>: fabric shape for simulate (mesh is the default;
+              torus adds wraparound rows+columns, ring is a 1-D cycle).
   --jobs <n>: worker threads for sweep points (0/omitted = all cores,
               1 = serial); results are identical for any worker count.
   help                         this text

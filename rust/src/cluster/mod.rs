@@ -24,11 +24,17 @@ use crate::traffic::{GenCfg, Generator};
 /// the reports; the traffic behaviour lives in the generators).
 #[derive(Debug, Clone)]
 pub struct TileSpec {
+    /// RISC-V worker cores (paper: 8).
     pub worker_cores: u32,
+    /// DMA-control cores (paper: 1).
     pub dma_cores: u32,
+    /// Scratchpad memory (paper: 128 kB).
     pub spm_kib: u32,
+    /// Shared instruction cache (paper: 8 kB).
     pub icache_kib: u32,
+    /// Core-bus width in bits.
     pub narrow_data_width: u32,
+    /// DMA-bus width in bits.
     pub wide_data_width: u32,
 }
 
@@ -55,6 +61,7 @@ pub struct TileTraffic {
 }
 
 impl TileTraffic {
+    /// A tile generating no traffic.
     pub fn idle() -> Self {
         TileTraffic {
             core: None,
@@ -75,13 +82,19 @@ impl TileTraffic {
 /// A live compute tile: generators bound to a tile's initiators.
 #[derive(Debug)]
 pub struct ComputeTile {
+    /// The tile's node id.
     pub node: NodeId,
+    /// Static description (cores, SPM, bus widths).
     pub spec: TileSpec,
+    /// Live narrow (core) generator, if any.
     pub core_gen: Option<Generator>,
+    /// Live wide (DMA) generator, if any.
     pub dma_gen: Option<Generator>,
 }
 
 impl ComputeTile {
+    /// Bind a traffic profile to a tile (seeds are decorrelated per
+    /// node).
     pub fn new(node: NodeId, traffic: TileTraffic) -> Self {
         let mk = |cfg: Option<GenCfg>, bus: BusKind| {
             cfg.map(|mut c| {
@@ -109,6 +122,7 @@ impl ComputeTile {
         }
     }
 
+    /// Both generators (where present) have completed.
     pub fn done(&self) -> bool {
         self.core_gen.as_ref().map(Generator::done).unwrap_or(true)
             && self.dma_gen.as_ref().map(Generator::done).unwrap_or(true)
@@ -131,7 +145,9 @@ impl ComputeTile {
 /// A whole mesh of tiles plus its traffic, stepped as one workload.
 /// This is the harness the Fig. 5 experiments and examples drive.
 pub struct TiledWorkload {
+    /// The simulated NoC.
     pub sys: NocSystem,
+    /// One compute tile per topology tile, by node id.
     pub tiles: Vec<ComputeTile>,
 }
 
@@ -155,6 +171,7 @@ impl TiledWorkload {
         }
     }
 
+    /// All tiles' generators have completed.
     pub fn done(&self) -> bool {
         self.tiles.iter().all(ComputeTile::done)
     }

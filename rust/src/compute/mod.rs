@@ -21,6 +21,7 @@ pub struct HostMemory {
 }
 
 impl HostMemory {
+    /// An empty store.
     pub fn new() -> Self {
         Self::default()
     }
@@ -30,10 +31,12 @@ impl HostMemory {
         self.blocks.insert(addr, data);
     }
 
+    /// Borrow the block at `addr`, if present.
     pub fn read(&self, addr: u64) -> Option<&[f32]> {
         self.blocks.get(&addr).map(Vec::as_slice)
     }
 
+    /// Remove and return the block at `addr`.
     pub fn take(&mut self, addr: u64) -> Option<Vec<f32>> {
         self.blocks.remove(&addr)
     }
@@ -42,12 +45,14 @@ impl HostMemory {
 /// The tile-compute engine: wraps the `tile_matmul` and `cluster_compute`
 /// executables with shape bookkeeping.
 pub struct TileCompute {
+    /// Tile matrix dimension the artifacts were lowered for.
     pub dim: usize,
     matmul: Executable,
     cluster: Executable,
 }
 
 impl TileCompute {
+    /// Load the compute executables from a PJRT runtime.
     pub fn new(rt: &Runtime) -> crate::Result<TileCompute> {
         Ok(TileCompute {
             dim: rt.meta.tile_dim,

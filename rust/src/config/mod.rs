@@ -18,8 +18,19 @@
 use anyhow::{bail, Context};
 
 use crate::noc::{LinkMode, NocConfig};
-use crate::topology::MemEdge;
+use crate::topology::{MemEdge, TopologyKind};
 use crate::util::json::Json;
+
+/// Parse a topology name as used by the CLI (`--topology`) and the
+/// config file (`"topology"` key).
+pub fn topology_from_str(s: &str) -> crate::Result<TopologyKind> {
+    Ok(match s {
+        "mesh" => TopologyKind::Mesh,
+        "torus" => TopologyKind::Torus,
+        "ring" => TopologyKind::Ring,
+        other => bail!("unknown topology '{other}' (mesh|torus|ring)"),
+    })
+}
 
 /// Parse a full [`NocConfig`] from JSON text.
 pub fn noc_config_from_json(text: &str) -> crate::Result<NocConfig> {
@@ -30,6 +41,9 @@ pub fn noc_config_from_json(text: &str) -> crate::Result<NocConfig> {
 /// Parse from an already-parsed JSON value.
 pub fn noc_config_from_value(j: &Json) -> crate::Result<NocConfig> {
     let mut cfg = NocConfig::default();
+    if let Some(t) = j.get("topology").and_then(Json::as_str) {
+        cfg.topology = topology_from_str(t)?;
+    }
     if let Some(mesh) = j.get("mesh") {
         if let Some(w) = mesh.get("width").and_then(Json::as_u64) {
             cfg.width = w as u8;
@@ -92,6 +106,9 @@ pub fn noc_config_from_value(j: &Json) -> crate::Result<NocConfig> {
     if cfg.width == 0 || cfg.height == 0 {
         bail!("mesh dimensions must be >= 1");
     }
+    if cfg.topology == TopologyKind::Ring && cfg.height != 1 {
+        bail!("a ring is one-dimensional: height must be 1, got {}", cfg.height);
+    }
     Ok(cfg)
 }
 
@@ -99,6 +116,7 @@ pub fn noc_config_from_value(j: &Json) -> crate::Result<NocConfig> {
 /// experiment records so every result is reproducible from its file).
 pub fn noc_config_to_json(cfg: &NocConfig) -> Json {
     Json::obj(vec![
+        ("topology", Json::Str(cfg.topology.name().to_string())),
         (
             "mesh",
             Json::obj(vec![
@@ -200,6 +218,31 @@ mod tests {
         assert!(noc_config_from_json(r#"{"mesh": {"mem_edge": "north"}}"#).is_err());
         assert!(noc_config_from_json(r#"{"router": {"in_buf_depth": 0}}"#).is_err());
         assert!(noc_config_from_json("not json").is_err());
+    }
+
+    #[test]
+    fn topology_axis_parses() {
+        let torus = r#"{"topology": "torus", "mesh": {"width": 4, "height": 4}}"#;
+        let cfg = noc_config_from_json(torus).unwrap();
+        assert_eq!(cfg.topology, TopologyKind::Torus);
+        let ring = r#"{"topology": "ring", "mesh": {"width": 8, "height": 1}}"#;
+        let cfg = noc_config_from_json(ring).unwrap();
+        assert_eq!((cfg.topology, cfg.width), (TopologyKind::Ring, 8));
+        // Omitted => mesh (backwards compatible).
+        assert_eq!(noc_config_from_json("{}").unwrap().topology, TopologyKind::Mesh);
+        // Invalid name / 2-D ring are rejected.
+        assert!(noc_config_from_json(r#"{"topology": "hypercube"}"#).is_err());
+        let two_d_ring = r#"{"topology": "ring", "mesh": {"width": 4, "height": 2}}"#;
+        assert!(noc_config_from_json(two_d_ring).is_err());
+    }
+
+    #[test]
+    fn topology_roundtrips() {
+        for cfg in [NocConfig::torus(3, 3), NocConfig::ring(6), NocConfig::mesh(2, 2)] {
+            let back = noc_config_from_value(&noc_config_to_json(&cfg)).unwrap();
+            assert_eq!(back.topology, cfg.topology);
+            assert_eq!((back.width, back.height), (cfg.width, cfg.height));
+        }
     }
 
     #[test]

@@ -3,30 +3,40 @@
 use crate::cluster::{TileTraffic, TiledWorkload};
 use crate::dse::parallel::ParallelRunner;
 use crate::flit::NodeId;
-use crate::noc::{LinkMode, NocConfig, NocSystem, NET_RSP, NET_WIDE};
+use crate::noc::{LinkMode, NocConfig, NocSystem, NET_REQ, NET_RSP, NET_WIDE};
 use crate::phys::energy::{Activity, EnergyModel, PowerBreakdown};
-use crate::traffic::{GenCfg, Generator};
+use crate::topology::TopologyKind;
+use crate::traffic::{GenCfg, Generator, Pattern};
 
-/// Workload constants from the paper's Fig. 5 caption.
+/// Narrow transactions of the Fig. 5a probe (the paper's NUMNARROWTRANS).
 pub const NUM_NARROW_TRANS: u64 = 100;
+/// Wide bursts of the Fig. 5b transfer (the paper's NUMWIDETRANS).
 pub const NUM_WIDE_TRANS: u64 = 16;
-pub const BURST_LEN: u8 = 15; // AxLEN for BURSTLEN = 16 beats
+/// AxLEN for the paper's BURSTLEN = 16 beats.
+pub const BURST_LEN: u8 = 15;
 
 /// §VI-A: zero-load round-trip latency of a narrow read to the adjacent
 /// tile. Returns total cycles (paper: 18).
 pub fn zero_load_latency(mode: LinkMode) -> u64 {
     let mut cfg = NocConfig::mesh(2, 1);
     cfg.mode = mode;
+    zero_load_latency_on(cfg, NodeId(0), NodeId(1))
+}
+
+/// Zero-load round-trip latency of a single narrow read from tile `src`
+/// to tile `dst` on an arbitrary fabric — the §VI-A measurement opened
+/// up to the topology axis (a one-wrap-hop ring read must match the
+/// adjacent-tile mesh figure exactly).
+pub fn zero_load_latency_on(cfg: NocConfig, src: NodeId, dst: NodeId) -> u64 {
     let mut sys = NocSystem::new(cfg);
-    let mut g = Generator::new(GenCfg::narrow_probe(NodeId(1), 1), NodeId(0));
+    let mut g = Generator::new(GenCfg::narrow_probe(dst, 1), src);
     // Prime the request before the first cycle so issue aligns with t=0.
     sys.step_generator(&mut g);
-    let start = sys.now;
-    for _ in 0..200 {
+    for _ in 0..400 {
         sys.step();
         sys.step_generator(&mut g);
         if g.done() {
-            return g.latencies.max().max(sys.now - start - 1).min(g.latencies.max());
+            return g.latencies.max();
         }
     }
     panic!("zero-load read did not complete");
@@ -35,12 +45,17 @@ pub fn zero_load_latency(mode: LinkMode) -> u64 {
 /// One point of the Fig. 5a curve.
 #[derive(Debug, Clone)]
 pub struct Fig5aRow {
+    /// Link configuration of this point.
     pub mode: LinkMode,
+    /// Whether a reverse wide stream ran too.
     pub bidir: bool,
     /// Interference level: concurrent outstanding wide bursts (0 = none).
     pub wide_outstanding: u32,
+    /// Mean narrow round-trip latency (cycles).
     pub narrow_mean: f64,
+    /// 99th-percentile narrow latency.
     pub narrow_p99: u64,
+    /// Worst-case narrow latency.
     pub narrow_max: u64,
     /// Degradation vs the zero-interference point of the same config.
     pub slowdown: f64,
@@ -137,7 +152,9 @@ fn fig5a_point(mode: LinkMode, bidir: bool, wide_outstanding: u32) -> (f64, u64,
 /// One point of the Fig. 5b curve.
 #[derive(Debug, Clone)]
 pub struct Fig5bRow {
+    /// Link configuration of this point.
     pub mode: LinkMode,
+    /// Whether a reverse wide stream ran too.
     pub bidir: bool,
     /// Narrow interference: outstanding-transaction budget of the
     /// competing narrow streams (0 = none). The paper's x-axis is the
@@ -293,8 +310,11 @@ pub fn fig6b_power() -> (PowerBreakdown, f64) {
 /// Ablation row: one (parameter, value) → measured outcome.
 #[derive(Debug, Clone)]
 pub struct AblationRow {
+    /// Name of the swept parameter.
     pub param: &'static str,
+    /// The parameter's value at this point.
     pub value: u64,
+    /// The measured outcome (meaning depends on the ablation).
     pub metric: f64,
 }
 
@@ -304,6 +324,7 @@ pub fn ablate_rob_size(slots_options: &[u32]) -> Vec<AblationRow> {
     ablate_rob_size_with(slots_options, &ParallelRunner::default())
 }
 
+/// [`ablate_rob_size`] with an explicit sweep runner.
 pub fn ablate_rob_size_with(
     slots_options: &[u32],
     runner: &ParallelRunner,
@@ -334,6 +355,7 @@ pub fn ablate_buffer_depth(depths: &[usize]) -> Vec<AblationRow> {
     ablate_buffer_depth_with(depths, &ParallelRunner::default())
 }
 
+/// [`ablate_buffer_depth`] with an explicit sweep runner.
 pub fn ablate_buffer_depth_with(depths: &[usize], runner: &ParallelRunner) -> Vec<AblationRow> {
     runner.run(depths, |_, &d| {
         let mut cfg = NocConfig::mesh(4, 1);
@@ -366,6 +388,7 @@ pub fn ablate_burst_len(lens: &[u8]) -> Vec<AblationRow> {
     ablate_burst_len_with(lens, &ParallelRunner::default())
 }
 
+/// [`ablate_burst_len`] with an explicit sweep runner.
 pub fn ablate_burst_len_with(lens: &[u8], runner: &ParallelRunner) -> Vec<AblationRow> {
     runner.run(lens, |_, &len| {
         let sys = NocSystem::new(NocConfig::mesh(2, 1));
@@ -392,6 +415,7 @@ pub fn scale_mesh(sizes: &[u8]) -> Vec<AblationRow> {
     scale_mesh_with(sizes, &ParallelRunner::default())
 }
 
+/// [`scale_mesh`] with an explicit sweep runner.
 pub fn scale_mesh_with(sizes: &[u8], runner: &ParallelRunner) -> Vec<AblationRow> {
     runner.run(sizes, |_, &n| {
         let sys = NocSystem::new(NocConfig::mesh(n, n));
@@ -412,6 +436,96 @@ pub fn scale_mesh_with(sizes: &[u8], runner: &ParallelRunner) -> Vec<AblationRow
             param: "mesh_n",
             value: n as u64,
             metric: beats as f64 * 64.0 / w.sys.now as f64, // bytes/cycle
+        }
+    })
+}
+
+/// One row of the cross-topology comparison: the same tile count
+/// deployed as a mesh, a torus and a ring.
+#[derive(Debug, Clone)]
+pub struct TopologyRow {
+    /// The fabric this row measured.
+    pub kind: TopologyKind,
+    /// Tile count (identical across the three rows of one comparison).
+    pub tiles: usize,
+    /// Analytic mean router-to-router hop count over all ordered tile
+    /// pairs — the expected hop count of uniform-random traffic
+    /// ([`crate::topology::Topology::mean_tile_hops`]).
+    pub mean_hops: f64,
+    /// *Measured* mean hops: router traversals per delivered flit on the
+    /// request network (includes the inject and eject traversals, so it
+    /// sits `+1` above the router-to-router figure).
+    pub measured_hops: f64,
+    /// Delivered transactions per kilocycle (bisection-limited: the ring
+    /// funnels all cross-traffic through 2 links, the mesh through `n`,
+    /// the torus through `2n`).
+    pub txns_per_kcycle: f64,
+    /// Makespan until full drain (cycles).
+    pub cycles: u64,
+}
+
+/// `scale_mesh`-style cross-topology comparison: deploy the **same tile
+/// count** (`n² `) as an `n×n` mesh, an `n×n` torus and an `n²`-node
+/// ring, drive identical uniform-random narrow read traffic on each,
+/// and report analytic + measured hop counts and delivered throughput.
+///
+/// Single-beat narrow reads keep every packet single-flit, so the
+/// comparison is safe on the wrap-around fabrics even without virtual
+/// channels (see `docs/topologies.md` on torus/ring deadlock avoidance);
+/// bounded outstanding transactions keep buffer occupancy far below any
+/// cyclic-wait configuration.
+pub fn scale_topology(n: u8) -> Vec<TopologyRow> {
+    scale_topology_with(n, &ParallelRunner::default())
+}
+
+/// [`scale_topology`] with an explicit sweep runner (the three fabrics
+/// are independent simulations and fan out in parallel).
+pub fn scale_topology_with(n: u8, runner: &ParallelRunner) -> Vec<TopologyRow> {
+    let tiles = n as usize * n as usize;
+    let mut kinds = vec![TopologyKind::Mesh, TopologyKind::Torus];
+    // Only the ring deployment is bounded by u8 node ids; larger sizes
+    // still get the mesh-vs-torus comparison.
+    if tiles <= u8::MAX as usize {
+        kinds.push(TopologyKind::Ring);
+    }
+    runner.run(&kinds, |_, &kind| {
+        let cfg = match kind {
+            TopologyKind::Mesh => NocConfig::mesh(n, n),
+            TopologyKind::Torus => NocConfig::torus(n, n),
+            TopologyKind::Ring => NocConfig::ring(tiles as u8),
+        };
+        let sys = NocSystem::new(cfg);
+        let mean_hops = sys.topo.mean_tile_hops();
+        let profiles: Vec<TileTraffic> = (0..tiles)
+            .map(|i| {
+                let mut c = GenCfg::narrow_probe(NodeId(0), 8);
+                c.pattern = Pattern::UniformTiles;
+                c.max_outstanding = 2;
+                c.seed = 0x5CA1E + i as u64;
+                TileTraffic {
+                    core: Some(c),
+                    dma: None,
+                }
+            })
+            .collect();
+        let mut w = TiledWorkload::new(sys, profiles);
+        assert!(w.run_to_completion(5_000_000), "{} fabric did not drain", kind.name());
+        assert!(w.protocol_ok());
+        let cycles = w.sys.now.max(1);
+        let delivered = w.sys.counters[NET_REQ].ejected.max(1);
+        let measured_hops = w.sys.router_flit_hops(NET_REQ) as f64 / delivered as f64;
+        let txns: u64 = w
+            .tiles
+            .iter()
+            .map(|t| t.core_gen.as_ref().map(|g| g.completed).unwrap_or(0))
+            .sum();
+        TopologyRow {
+            kind,
+            tiles,
+            mean_hops,
+            measured_hops,
+            txns_per_kcycle: txns as f64 * 1000.0 / cycles as f64,
+            cycles,
         }
     })
 }
@@ -510,6 +624,49 @@ mod tests {
         assert!((130.0..=150.0).contains(&p.total_mw), "{:.1} mW", p.total_mw);
         assert!((0.04..=0.10).contains(&p.noc_fraction));
         assert!((pjb - 0.19).abs() < 0.01);
+    }
+
+    /// The acceptance check of the topology axis: at equal tile count,
+    /// uniform-random traffic on a torus takes strictly fewer hops than
+    /// on a mesh — analytically (expected hops over all pairs) *and* as
+    /// measured from router activity of the live uniform-random run.
+    #[test]
+    fn scale_topology_torus_beats_mesh_on_hops() {
+        let rows = scale_topology_with(4, &ParallelRunner::serial());
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| r.tiles == 16), "equal tile count");
+        let get = |k: TopologyKind| rows.iter().find(|r| r.kind == k).unwrap();
+        let mesh = get(TopologyKind::Mesh);
+        let torus = get(TopologyKind::Torus);
+        let ring = get(TopologyKind::Ring);
+        assert!(
+            torus.mean_hops < mesh.mean_hops,
+            "torus {:.3} !< mesh {:.3}",
+            torus.mean_hops,
+            mesh.mean_hops
+        );
+        assert!(
+            torus.measured_hops < mesh.measured_hops,
+            "measured: torus {:.3} !< mesh {:.3}",
+            torus.measured_hops,
+            mesh.measured_hops
+        );
+        // The ring pays for its 2-link bisection with the longest paths.
+        assert!(ring.mean_hops > mesh.mean_hops);
+        assert!(rows.iter().all(|r| r.txns_per_kcycle > 0.0));
+    }
+
+    /// Ring zero-load: one wraparound hop costs exactly what one mesh
+    /// hop costs — the paper's 18-cycle adjacent-tile figure — while the
+    /// same endpoints on a chain without the wrap link pay 2 extra hops.
+    #[test]
+    fn ring_zero_load_wrap_matches_adjacent() {
+        let ring_far = zero_load_latency_on(NocConfig::ring(4), NodeId(0), NodeId(3));
+        let ring_adj = zero_load_latency_on(NocConfig::ring(4), NodeId(0), NodeId(1));
+        let mesh_far = zero_load_latency_on(NocConfig::mesh(4, 1), NodeId(0), NodeId(3));
+        assert_eq!(ring_adj, 18);
+        assert_eq!(ring_far, 18, "0 -> 3 is one wrap hop on a 4-ring");
+        assert!(mesh_far > ring_far, "the chain pays per extra hop");
     }
 
     #[test]

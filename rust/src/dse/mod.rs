@@ -223,11 +223,28 @@ pub fn run_dse(n: u8, artifacts_dir: &str, runner: &ParallelRunner) -> crate::Re
     let _ = analytical;
     // Multi-point cycle-accurate sweep, fanned out across cores. The
     // report is deterministic: identical for any worker count.
-    let points = SweepPoint::grid(
+    let mut points = SweepPoint::grid(
         &[n],
         &[crate::noc::LinkMode::NarrowWide, crate::noc::LinkMode::WideOnly],
         &[3, 15],
     );
+    // Cross-topology rows at the same tile count: the +x-neighbour
+    // workload is a single wrap-closed hop on every fabric, so torus and
+    // ring rows are directly comparable to the mesh baseline.
+    {
+        use crate::topology::TopologyKind;
+        // "xneigh" (not the legacy "ring-" workload prefix): the fabric
+        // kind suffix would otherwise collide with the workload name.
+        let name = format!("xneigh-{n}x{n}-nw-len16");
+        let base = SweepPoint::ring(&name, n, crate::noc::LinkMode::NarrowWide);
+        points.push(base.clone().on_topology(TopologyKind::Torus));
+        // Only the ring deployment is bounded by u8 node ids.
+        if (n as usize) * (n as usize) <= u8::MAX as usize {
+            points.push(base.on_topology(TopologyKind::Ring));
+        } else {
+            println!("(skipping ring row: {n}x{n} = {} tiles > 255)", n as u32 * n as u32);
+        }
+    }
     println!(
         "\n== cycle-accurate sweep: {} points on {} worker thread(s) ==",
         points.len(),

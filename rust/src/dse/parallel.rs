@@ -21,9 +21,10 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::cluster::{TileTraffic, TiledWorkload};
-use crate::flit::NodeId;
+use crate::flit::{Coord, NodeId};
 use crate::noc::{LinkMode, NocConfig, NocSystem, NET_WIDE};
 use crate::router::PORT_E;
+use crate::topology::{MemEdge, Topology, TopologyKind};
 use crate::traffic::GenCfg;
 use crate::util::json::Json;
 use crate::util::rng::mix_seed;
@@ -137,8 +138,16 @@ const _: () = {
 /// length, outstanding budget, mesh size.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Display name of the point (report key).
     pub name: String,
+    /// Fabric shape the point is simulated on. For [`TopologyKind::Mesh`]
+    /// and [`TopologyKind::Torus`] the fabric is `mesh_n × mesh_n`; a
+    /// [`TopologyKind::Ring`] keeps the tile count and lays the same
+    /// `mesh_n²` tiles out as one closed chain.
+    pub topology: TopologyKind,
+    /// Grid side length (the fabric has `mesh_n²` tiles).
     pub mesh_n: u8,
+    /// Link configuration (narrow-wide vs wide-only baseline).
     pub mode: LinkMode,
     /// AxLEN (beats = len + 1).
     pub burst_len: u8,
@@ -146,6 +155,7 @@ pub struct SweepPoint {
     pub bursts_per_tile: u64,
     /// Writes instead of reads.
     pub write: bool,
+    /// Outstanding-transaction budget per tile.
     pub max_outstanding: u32,
     /// Base seed; the effective per-point seed also mixes in the point's
     /// index, and each tile's generator mixes in its node id.
@@ -157,6 +167,7 @@ impl SweepPoint {
     pub fn ring(name: &str, mesh_n: u8, mode: LinkMode) -> Self {
         SweepPoint {
             name: name.to_string(),
+            topology: TopologyKind::Mesh,
             mesh_n,
             mode,
             burst_len: 15,
@@ -189,13 +200,27 @@ impl SweepPoint {
         }
         points
     }
+
+    /// The same point on a different fabric, with the kind appended to
+    /// its name. Ring fabrics keep the tile count (`mesh_n²` tiles in
+    /// one closed chain), so cross-topology rows compare like for like.
+    pub fn on_topology(mut self, kind: TopologyKind) -> Self {
+        self.topology = kind;
+        self.name = format!("{}-{}", self.name, kind.name());
+        self
+    }
 }
 
 /// Measured outcome of one sweep point.
 #[derive(Debug, Clone)]
 pub struct SweepResult {
+    /// The point's display name.
     pub name: String,
+    /// Fabric the point ran on.
+    pub topology: TopologyKind,
+    /// Grid side length of the point.
     pub mesh_n: u8,
+    /// Link configuration of the point.
     pub mode: LinkMode,
     /// Makespan until full drain.
     pub cycles: u64,
@@ -208,16 +233,20 @@ pub struct SweepResult {
     pub e_link_tput: f64,
 }
 
-/// Neighbour-ring DMA profiles: tile `(x, y)` streams to `((x+1) mod n,
-/// y)`. The single home of the ring topology — [`run_point`],
-/// `coordinator::scale_mesh_with` and `dse::simulate_ring_throughput`
-/// all build their workloads through it. `mk(i, dst)` produces tile
-/// `i`'s DMA generator config.
-pub fn ring_profiles(n: usize, mk: impl Fn(usize, NodeId) -> GenCfg) -> Vec<TileTraffic> {
-    (0..n * n)
+/// Neighbour DMA profiles on an arbitrary fabric: every tile streams to
+/// its `+x` neighbour, wrapping at the row end (`(x+1) mod W`). On a
+/// ring fabric this is the true next tile around the chain; on meshes
+/// and tori it reproduces the per-row neighbour rings of the paper's
+/// scaling workload. `mk(i, dst)` produces tile `i`'s DMA generator
+/// config.
+pub fn neighbor_profiles(
+    topo: &Topology,
+    mk: impl Fn(usize, NodeId) -> GenCfg,
+) -> Vec<TileTraffic> {
+    (0..topo.num_tiles)
         .map(|i| {
-            let (y, x) = (i / n, i % n);
-            let dst = NodeId((y * n + (x + 1) % n) as u16);
+            let c = topo.node(NodeId(i as u16)).coord;
+            let dst = topo.tile_at(Coord::new((c.x + 1) % topo.width, c.y));
             TileTraffic {
                 core: None,
                 dma: Some(mk(i, dst)),
@@ -226,17 +255,34 @@ pub fn ring_profiles(n: usize, mk: impl Fn(usize, NodeId) -> GenCfg) -> Vec<Tile
         .collect()
 }
 
+/// Neighbour-ring DMA profiles on an `n × n` grid: tile `(x, y)` streams
+/// to `((x+1) mod n, y)`. The mesh-grid specialization of
+/// [`neighbor_profiles`] (one rule, one home) —
+/// `coordinator::scale_mesh_with` and `dse::simulate_ring_throughput`
+/// build their workloads through it.
+pub fn ring_profiles(n: usize, mk: impl Fn(usize, NodeId) -> GenCfg) -> Vec<TileTraffic> {
+    assert!(n <= u8::MAX as usize, "grid side exceeds u8 coordinates");
+    neighbor_profiles(&Topology::mesh(n as u8, n as u8, MemEdge::None), mk)
+}
+
 /// Execute one sweep point to completion. Pure function of
 /// `(idx, point)`: repeated calls give identical results, which is what
 /// makes the parallel sweep reproducible.
 pub fn run_point(idx: usize, p: &SweepPoint) -> SweepResult {
-    let mut cfg = NocConfig::mesh(p.mesh_n, p.mesh_n);
-    cfg.mode = p.mode;
-    let sys = NocSystem::new(cfg);
     let n = p.mesh_n as usize;
     let tiles = n * n;
+    let mut cfg = match p.topology {
+        TopologyKind::Mesh => NocConfig::mesh(p.mesh_n, p.mesh_n),
+        TopologyKind::Torus => NocConfig::torus(p.mesh_n, p.mesh_n),
+        TopologyKind::Ring => {
+            assert!(tiles <= u8::MAX as usize, "ring point too large: {tiles} tiles");
+            NocConfig::ring(tiles as u8)
+        }
+    };
+    cfg.mode = p.mode;
+    let sys = NocSystem::new(cfg);
     let seed = mix_seed(p.base_seed, idx as u64);
-    let profiles = ring_profiles(n, |i, dst| {
+    let profiles = neighbor_profiles(&sys.topo, |i, dst| {
         let mut c = GenCfg::dma_burst(dst, p.bursts_per_tile, p.write);
         c.burst_len = p.burst_len;
         c.max_outstanding = p.max_outstanding;
@@ -280,6 +326,7 @@ pub fn run_point(idx: usize, p: &SweepPoint) -> SweepResult {
     }
     SweepResult {
         name: p.name.clone(),
+        topology: p.topology,
         mesh_n: p.mesh_n,
         mode: p.mode,
         cycles,
@@ -308,6 +355,7 @@ pub fn sweep_report_json(results: &[SweepResult]) -> Json {
             .map(|r| {
                 Json::obj(vec![
                     ("name", Json::Str(r.name.clone())),
+                    ("topology", Json::Str(r.topology.name().to_string())),
                     ("mesh_n", Json::Num(r.mesh_n as f64)),
                     (
                         "mode",
@@ -372,6 +420,22 @@ mod tests {
             }
             p
         });
+    }
+
+    #[test]
+    fn topology_points_complete_on_all_fabrics() {
+        // The +x-neighbour workload is single-hop on every fabric (the
+        // wrap link closes each row), so it is deadlock-safe even on
+        // torus/ring and must drain everywhere.
+        let base = SweepPoint::ring("xtopo", 2, LinkMode::NarrowWide);
+        for kind in [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::Ring] {
+            let p = base.clone().on_topology(kind);
+            let r = run_point(0, &p);
+            assert_eq!(r.topology, kind);
+            assert!(r.wide_beats > 0, "{}: no data moved", p.name);
+            // 4 tiles x 8 bursts x 16 beats on every fabric.
+            assert_eq!(r.wide_beats, 4 * 8 * 16, "{}: beat count", p.name);
+        }
     }
 
     #[test]

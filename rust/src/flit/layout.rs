@@ -34,6 +34,7 @@ pub struct AxiParams {
 }
 
 impl AxiParams {
+    /// The paper's 64-bit narrow bus parameters.
     pub fn narrow() -> Self {
         AxiParams {
             addr_width: 48,
@@ -43,6 +44,7 @@ impl AxiParams {
         }
     }
 
+    /// The paper's 512-bit wide bus parameters.
     pub fn wide() -> Self {
         AxiParams {
             addr_width: 48,
@@ -104,7 +106,9 @@ impl HeaderLayout {
 /// Complete layout of one physical link.
 #[derive(Debug, Clone, Copy)]
 pub struct LinkLayout {
+    /// Parallel header line widths.
     pub header: HeaderLayout,
+    /// Payload bits (the widest AXI channel mapped to this link).
     pub payload_bits: u32,
 }
 
@@ -130,6 +134,7 @@ pub struct RobParams {
 }
 
 impl RobParams {
+    /// The paper's 2 kB narrow ROB.
     pub fn narrow() -> Self {
         RobParams {
             bytes: 2 * 1024,
@@ -137,6 +142,7 @@ impl RobParams {
         }
     }
 
+    /// The paper's 8 kB wide ROB.
     pub fn wide() -> Self {
         RobParams {
             bytes: 8 * 1024,
@@ -144,10 +150,12 @@ impl RobParams {
         }
     }
 
+    /// Number of allocation granules.
     pub fn slots(&self) -> u32 {
         self.bytes / self.granule
     }
 
+    /// Header bits needed to index a slot.
     pub fn idx_bits(&self) -> u32 {
         u32::BITS - (self.slots() - 1).leading_zeros()
     }
@@ -156,9 +164,13 @@ impl RobParams {
 /// The full narrow-wide NoC layout (all three physical links).
 #[derive(Debug, Clone)]
 pub struct NocLayout {
+    /// Narrow-bus AXI parameters.
     pub narrow: AxiParams,
+    /// Wide-bus AXI parameters.
     pub wide: AxiParams,
+    /// Narrow ROB sizing.
     pub narrow_rob: RobParams,
+    /// Wide ROB sizing.
     pub wide_rob: RobParams,
     /// Coordinate bits per axis (4 ⇒ up to 16×16 meshes).
     pub coord_bits: u32,

@@ -16,11 +16,14 @@ pub struct NodeId(pub u16);
 /// (x, y) mesh coordinate, used by XY routing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Coord {
+    /// Column (0 = west edge).
     pub x: u8,
+    /// Row (0 = south edge).
     pub y: u8,
 }
 
 impl Coord {
+    /// Build a coordinate.
     pub fn new(x: u8, y: u8) -> Self {
         Coord { x, y }
     }
@@ -31,7 +34,9 @@ impl Coord {
 /// ROB), atomic marker, and `last` for wormhole packets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Header {
+    /// Destination node (route-table index).
     pub dst: NodeId,
+    /// Source node (response return address).
     pub src: NodeId,
     /// Slot index into the initiator's ROB, allocated at injection and
     /// echoed by the response (the paper's "unique identifier").
@@ -48,8 +53,11 @@ pub struct Header {
 /// only for latency accounting (not a hardware field).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FlooFlit {
+    /// Parallel header lines.
     pub header: Header,
+    /// The message carried by this flit.
     pub payload: Payload,
+    /// Injection cycle (latency accounting only).
     pub injected_at: u64,
 }
 
@@ -57,22 +65,44 @@ pub struct FlooFlit {
 /// 64-bit AXI bus, `Wide*` from the 512-bit bus.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Payload {
+    /// Narrow read request.
     NarrowAr(AxReq),
+    /// Narrow write request.
     NarrowAw(AxReq),
-    NarrowW { id: AxiId, beat: WBeat },
+    /// Narrow write-data beat.
+    NarrowW {
+        /// Transaction ID the beat belongs to.
+        id: AxiId,
+        /// The data beat.
+        beat: WBeat,
+    },
+    /// Narrow read-data beat.
     NarrowR(RBeat),
+    /// Narrow write response.
     NarrowB(BResp),
+    /// Wide read request.
     WideAr(AxReq),
+    /// Wide write request.
     WideAw(AxReq),
-    WideW { id: AxiId, beat: WBeat },
+    /// Wide write-data beat (512-bit payload).
+    WideW {
+        /// Transaction ID the beat belongs to.
+        id: AxiId,
+        /// The data beat.
+        beat: WBeat,
+    },
+    /// Wide read-data beat (512-bit payload).
     WideR(RBeat),
+    /// Wide write response.
     WideB(BResp),
 }
 
 /// Which AXI bus a payload belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum BusKind {
+    /// The 64-bit core bus.
     Narrow,
+    /// The 512-bit DMA bus.
     Wide,
 }
 
@@ -81,19 +111,25 @@ pub enum BusKind {
 /// over different physical links to prevent message-level deadlocks").
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MsgClass {
+    /// AR/AW/W-class messages.
     Request,
+    /// R/B-class messages.
     Response,
 }
 
 /// The three FlooNoC physical links of Table I.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ChannelClass {
+    /// The 119-bit narrow request link.
     NarrowReq,
+    /// The 103-bit narrow response link.
     NarrowRsp,
+    /// The 603-bit wide link.
     Wide,
 }
 
 impl Payload {
+    /// Which AXI bus this payload originates from.
     pub fn bus(&self) -> BusKind {
         match self {
             Payload::NarrowAr(_)
@@ -105,6 +141,7 @@ impl Payload {
         }
     }
 
+    /// Request- or response-class message.
     pub fn class(&self) -> MsgClass {
         match self {
             Payload::NarrowAr(_)
@@ -149,6 +186,7 @@ impl Payload {
 }
 
 impl FlooFlit {
+    /// Assemble a flit stamped with its injection cycle.
     pub fn new(header: Header, payload: Payload, now: u64) -> Self {
         FlooFlit {
             header,

@@ -14,10 +14,13 @@
 //! * [`ni`] — the paper's key contribution: a fully AXI4-compliant network
 //!   interface with a dynamically allocated reorder buffer (ROB), per-ID
 //!   reorder table, meta FIFOs, and end-to-end flow control;
-//! * [`router`] — configurable-radix single-cycle wormhole routers with XY
-//!   and table-based routing, no virtual channels, multilink operation;
-//! * [`topology`] — 2D meshes of compute tiles with boundary memory
-//!   controllers and a global address map;
+//! * [`router`] — configurable-radix single-cycle wormhole routers with
+//!   pluggable, table-materialized routing rules (XY, wrap-minimizing
+//!   torus dimension-ordered, ring shortest-direction), no virtual
+//!   channels, multilink operation;
+//! * [`topology`] — pluggable fabrics (2D mesh, torus, ring) of compute
+//!   tiles with per-topology memory-controller placement, wraparound
+//!   channel rules and a global address map;
 //! * [`cluster`] — a behavioural Snitch-like compute tile (8 cores + DMA +
 //!   SPM) calibrated to the paper's 18-cycle zero-load round trip;
 //! * [`traffic`] — workload generators for the paper's Fig. 5 experiments
@@ -37,6 +40,8 @@
 //! Python (JAX + Pallas) is used **only at build time** to author and
 //! AOT-lower the compute kernels; the simulator and all experiments run
 //! from this crate alone once `make artifacts` has been executed.
+
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod sim;

@@ -7,7 +7,9 @@
 //! repro reproduce <tab1|tab2|fig5a|fig5b|fig6a|fig6b|latency|bandwidth|
 //!                  wires|scaling|all> [--bidir] [--levels a,b,c] [--jobs n]
 //! repro simulate  [--config f.json] [--mesh n] [--txns n] [--wide-only]
-//! repro sweep     <rob|buffers|burst|mesh|output-reg> [--jobs n]
+//!                 [--topology mesh|torus|ring]
+//! repro sweep     <rob|buffers|burst|mesh|topology|output-reg> [--jobs n]
+//! repro scale_topology [--mesh n] [--jobs n]
 //! repro dse       [--mesh n] [--artifacts dir] [--jobs n]
 //! ```
 //!
@@ -56,6 +58,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         "reproduce" => reproduce(args)?,
         "simulate" => simulate(args)?,
         "sweep" => sweep(args)?,
+        "scale_topology" => scale_topology(args)?,
         "dse" => dse(args)?,
         other => bail!("unknown command '{other}' (try 'repro help')"),
     }
@@ -209,7 +212,19 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         }
         None => {
             let n = args.opt_u64("mesh", 4)? as u8;
-            let mut c = NocConfig::mesh(n, n);
+            let kind = match args.opt("topology") {
+                Some(t) => config::topology_from_str(t)?,
+                None => floonoc::topology::TopologyKind::Mesh,
+            };
+            let mut c = match kind {
+                floonoc::topology::TopologyKind::Ring => {
+                    // `--mesh n` keeps its "n*n tiles" meaning across fabrics.
+                    let tiles = n as u64 * n as u64;
+                    anyhow::ensure!(tiles <= u8::MAX as u64, "ring too large");
+                    NocConfig::ring(tiles as u8)
+                }
+                k => NocConfig::fabric(k, n, n),
+            };
             if args.flag("wide-only") {
                 c = c.wide_only();
             }
@@ -220,6 +235,14 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     println!("config: {}", config::noc_config_to_json(&cfg));
     let sys = NocSystem::new(cfg);
     let tiles = sys.topo.num_tiles;
+    // Wormhole DMA bursts over uniform-random destinations can deadlock
+    // on wraparound fabrics (no virtual channels yet — see
+    // docs/topologies.md): keep the wide traffic single-hop there.
+    // Narrow single-beat reads are single-flit and safe everywhere.
+    let dma_pattern = match sys.topo.kind {
+        floonoc::topology::TopologyKind::Mesh => Pattern::UniformTiles,
+        _ => Pattern::NearestNeighbor,
+    };
     let profiles: Vec<TileTraffic> = (0..tiles)
         .map(|i| TileTraffic {
             core: Some(GenCfg {
@@ -227,7 +250,7 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
                 ..GenCfg::narrow_probe(NodeId(0), txns)
             }),
             dma: Some(GenCfg {
-                pattern: Pattern::UniformTiles,
+                pattern: dma_pattern,
                 seed: 0xD0A + i as u64,
                 ..GenCfg::dma_burst(NodeId(0), (txns / 4).max(1), false)
             }),
@@ -292,9 +315,36 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
             "router output register (0/1) vs zero-load latency",
             &exp::ablate_output_reg(),
         ),
+        "topology" => return scale_topology(args),
         other => bail!("unknown sweep '{other}'"),
     };
     print!("{table}");
+    Ok(())
+}
+
+/// `repro scale_topology`: the cross-fabric comparison at one tile count.
+fn scale_topology(args: &Args) -> anyhow::Result<()> {
+    let n = args.opt_u64("mesh", 4)? as u8;
+    let runner = runner_from(args)?;
+    let rows = exp::scale_topology_with(n, &runner);
+    println!("topology comparison at {} tiles (uniform-random narrow reads)", rows[0].tiles);
+    if rows.len() == 2 {
+        println!("(ring row skipped: {} tiles exceed the 255-node ring bound)", rows[0].tiles);
+    }
+    println!(
+        "{:<8} {:>12} {:>14} {:>16} {:>10}",
+        "fabric", "mean hops", "measured hops", "txns/kcycle", "cycles"
+    );
+    for r in &rows {
+        println!(
+            "{:<8} {:>12.3} {:>14.3} {:>16.2} {:>10}",
+            r.kind.name(),
+            r.mean_hops,
+            r.measured_hops,
+            r.txns_per_kcycle,
+            r.cycles
+        );
+    }
     Ok(())
 }
 

@@ -19,9 +19,13 @@ pub struct MemOp {
     pub src: NodeId,
     /// Echoed ROB index.
     pub rob_idx: u32,
+    /// Whether the response must consult the originator's ROB.
     pub rob_req: bool,
+    /// Atomic-transaction marker.
     pub atomic: bool,
+    /// The request being served.
     pub req: AxReq,
+    /// Read (true) or write (false).
     pub is_read: bool,
     /// Cycle at which the first response beat is ready.
     ready_at: u64,
@@ -32,14 +36,23 @@ pub struct MemOp {
 /// One response beat leaving the memory.
 #[derive(Debug, Clone, Copy)]
 pub struct MemRsp {
+    /// Node the response returns to.
     pub src: NodeId,
+    /// Echoed ROB index.
     pub rob_idx: u32,
+    /// Whether the response must consult the originator's ROB.
     pub rob_req: bool,
+    /// Atomic-transaction marker.
     pub atomic: bool,
+    /// Echoed AXI ID.
     pub id: u16,
+    /// Read-data beat (true) or write response (false).
     pub is_read: bool,
+    /// Beat index within the burst.
     pub beat: u32,
+    /// Last beat of the burst.
     pub last: bool,
+    /// Response code.
     pub resp: Resp,
 }
 
@@ -59,6 +72,7 @@ pub struct MemModel {
 }
 
 impl MemModel {
+    /// A memory port with the given first-beat latency and depth.
     pub fn new(latency: u64, max_outstanding: usize) -> Self {
         MemModel {
             latency,
@@ -68,14 +82,17 @@ impl MemModel {
         }
     }
 
+    /// Accept backpressure: false once `max_outstanding` ops are in.
     pub fn can_accept(&self) -> bool {
         self.ops.len() < self.max_outstanding
     }
 
+    /// Operations currently in flight.
     pub fn outstanding(&self) -> usize {
         self.ops.len()
     }
 
+    /// No operation in flight.
     pub fn is_idle(&self) -> bool {
         self.ops.is_empty()
     }

@@ -17,6 +17,7 @@ use super::rob::RobAllocator;
 /// Static configuration of one initiator (one per bus per tile).
 #[derive(Debug, Clone)]
 pub struct InitiatorCfg {
+    /// Which bus this initiator serves.
     pub bus: BusKind,
     /// Distinct AXI IDs at this port (paper: 4-bit ⇒ 16).
     pub num_ids: usize,
@@ -32,6 +33,7 @@ pub struct InitiatorCfg {
 }
 
 impl InitiatorCfg {
+    /// The paper's narrow (64-bit) initiator sizing.
     pub fn narrow_default() -> Self {
         InitiatorCfg {
             bus: BusKind::Narrow,
@@ -43,6 +45,7 @@ impl InitiatorCfg {
         }
     }
 
+    /// The paper's wide (512-bit) initiator sizing.
     pub fn wide_default() -> Self {
         InitiatorCfg {
             bus: BusKind::Wide,
@@ -67,18 +70,26 @@ struct WStream {
 /// Counters for the experiment harness.
 #[derive(Debug, Clone, Default)]
 pub struct InitiatorStats {
+    /// AR requests accepted.
     pub reads_issued: u64,
+    /// AW requests accepted.
     pub writes_issued: u64,
+    /// Reads fully returned to the bus.
     pub reads_completed: u64,
+    /// Writes whose B reached the bus.
     pub writes_completed: u64,
+    /// Cycles a read could not issue (ROB/credit stall).
     pub read_stall_cycles: u64,
+    /// Cycles a write could not issue.
     pub write_stall_cycles: u64,
 }
 
 /// Initiator-side NI state for one AXI bus.
 #[derive(Debug)]
 pub struct Initiator {
+    /// The sizing this initiator was built with.
     pub cfg: InitiatorCfg,
+    /// The tile this initiator belongs to.
     pub node: NodeId,
     // ----- AXI side (generator <-> NI) -----------------------------------
     /// Read requests from the bus.
@@ -103,10 +114,12 @@ pub struct Initiator {
     w_stream: Option<WStream>,
     /// Round-robin over IDs for ROB drains.
     drain_rr: usize,
+    /// Issue/completion/stall counters.
     pub stats: InitiatorStats,
 }
 
 impl Initiator {
+    /// Build an initiator NI for `node` with the given sizing.
     pub fn new(cfg: InitiatorCfg, node: NodeId) -> Self {
         Initiator {
             node,
@@ -131,6 +144,7 @@ impl Initiator {
         !self.ar_in.is_full()
     }
 
+    /// Convenience for generators: can another write be queued?
     pub fn aw_ready(&self) -> bool {
         !self.aw_in.is_full()
     }
@@ -151,6 +165,7 @@ impl Initiator {
         self.r_table.outstanding() + self.b_table.outstanding()
     }
 
+    /// Nothing tracked, streaming or queued.
     pub fn is_idle(&self) -> bool {
         self.outstanding() == 0
             && self.w_stream.is_none()
@@ -163,10 +178,12 @@ impl Initiator {
         self.r_rob.occupancy()
     }
 
+    /// Peak read-ROB occupancy in slots (sizing ablations).
     pub fn rob_peak_slots(&self) -> u32 {
         self.r_rob.peak_used()
     }
 
+    /// (bypassed, buffered) read-beat counts from the reorder table.
     pub fn reorder_stats(&self) -> (u64, u64) {
         (
             self.r_table.bypassed_beats + self.b_table.bypassed_beats,

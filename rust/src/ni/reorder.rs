@@ -36,8 +36,11 @@ pub enum EntryState {
 /// One outstanding transaction tracked by the reorder table.
 #[derive(Debug, Clone, Copy)]
 pub struct Entry {
+    /// ROB slots reserved for the response.
     pub grant: RobGrant,
+    /// Response beats expected.
     pub beats: u32,
+    /// Progress of the response.
     pub state: EntryState,
 }
 
@@ -60,9 +63,11 @@ pub struct ReorderTable {
     /// Entries currently in `Complete`/`Draining` state (O(1) guard for
     /// the drain scheduler — most responses bypass, so this is usually 0).
     drainable: usize,
-    /// Statistics.
+    /// Beats forwarded straight to AXI (in-order fast path).
     pub bypassed_beats: u64,
+    /// Beats written into ROB storage.
     pub buffered_beats: u64,
+    /// Beats later drained from the ROB to AXI.
     pub drained_beats: u64,
 }
 
@@ -79,6 +84,7 @@ impl ReorderTable {
         }
     }
 
+    /// Number of AXI IDs the table tracks.
     pub fn num_ids(&self) -> usize {
         self.fifos.len()
     }

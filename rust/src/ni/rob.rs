@@ -31,12 +31,14 @@ pub struct RobAllocator {
     used: u32,
     /// High-water mark of `used`.
     peak_used: u32,
-    /// Grant/refusal counters (flow-control visibility).
+    /// Successful allocations (flow-control visibility).
     pub grants: u64,
+    /// Refused allocations (requests issued later instead).
     pub refusals: u64,
 }
 
 impl RobAllocator {
+    /// An allocator over `slots` response-beat slots.
     pub fn new(slots: u32) -> Self {
         assert!(slots > 0);
         RobAllocator {
@@ -55,18 +57,22 @@ impl RobAllocator {
         RobAllocator::new(bytes / granule)
     }
 
+    /// Capacity in slots.
     pub fn total_slots(&self) -> u32 {
         self.slots
     }
 
+    /// Currently allocated slots.
     pub fn used_slots(&self) -> u32 {
         self.used
     }
 
+    /// Currently free slots.
     pub fn free_slots(&self) -> u32 {
         self.slots - self.used
     }
 
+    /// High-water mark of `used_slots`.
     pub fn peak_used(&self) -> u32 {
         self.peak_used
     }

@@ -50,6 +50,7 @@ impl TargetCfg {
         }
     }
 
+    /// The boundary memory-controller timing (DRAM-ish latency).
     pub fn mem_ctrl_default() -> Self {
         TargetCfg {
             mem_latency: 30,
@@ -84,16 +85,22 @@ struct WriteAssembly {
 /// Counters.
 #[derive(Debug, Clone, Default)]
 pub struct TargetStats {
+    /// Read bursts fully served.
     pub reads_served: u64,
+    /// Write bursts fully served.
     pub writes_served: u64,
+    /// Atomic transactions served.
     pub atomics_served: u64,
+    /// Cycles a request flit stalled at the eject port.
     pub req_stall_cycles: u64,
 }
 
 /// Target-side NI state for one node (tile or memory controller).
 #[derive(Debug)]
 pub struct Target {
+    /// The timing/sizing this target was built with.
     pub cfg: TargetCfg,
+    /// The node this target serves.
     pub node: NodeId,
     /// 64-bit port memory.
     pub narrow_mem: MemModel,
@@ -106,10 +113,12 @@ pub struct Target {
     /// Round-robin between narrow-mem and wide-mem for narrow_rsp
     /// injection (wide B competes with narrow R/B there).
     rsp_rr: bool,
+    /// Service counters.
     pub stats: TargetStats,
 }
 
 impl Target {
+    /// Build a target NI for `node`.
     pub fn new(cfg: TargetCfg, node: NodeId) -> Self {
         Target {
             narrow_mem: MemModel::new(cfg.mem_latency, cfg.mem_outstanding),
@@ -123,6 +132,7 @@ impl Target {
         }
     }
 
+    /// No memory op, assembly or atomic in flight.
     pub fn is_idle(&self) -> bool {
         self.narrow_mem.is_idle()
             && self.wide_mem.is_idle()

@@ -27,12 +27,15 @@ pub enum Src {
 /// Per-node injection state: one lock slot per network + fairness bits.
 #[derive(Debug)]
 pub struct InjectState {
+    /// Per-network wormhole source lock (an NI stream holds its
+    /// network until its packet's last flit).
     pub locks: [Option<Src>; 3],
     /// Alternation between narrow and wide initiators on the request net.
     rr_init: bool,
 }
 
 impl InjectState {
+    /// Fresh state: no locks held.
     pub fn new() -> Self {
         InjectState {
             locks: [None; 3],

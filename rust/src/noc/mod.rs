@@ -1,11 +1,13 @@
 //! The complete NoC system: networks, routers, NIs, tiles and memories
 //! wired together and stepped cycle by cycle.
 //!
-//! This is where the paper's architecture becomes executable: a `W×H`
-//! mesh where every tile hosts a multilink router (one router per
-//! physical network), an AXI4 NI (narrow + wide initiator halves and
-//! one target), and boundary memory controllers hang off the free
-//! cardinal ports.
+//! This is where the paper's architecture becomes executable: a fabric
+//! of tiles (mesh, torus or ring — see `crate::topology`) where every
+//! tile hosts a multilink router (one router per physical network), an
+//! AXI4 NI (narrow + wide initiator halves and one target), and memory
+//! controllers hang off otherwise-unused router ports (free boundary
+//! ports on meshes, the dedicated sixth port on tori, north ports on
+//! rings).
 //!
 //! Two link configurations are supported, selected by `LinkMode`:
 //!

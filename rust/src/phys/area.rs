@@ -52,18 +52,28 @@ impl Default for AreaModel {
 /// One Fig. 6a slice, in GE.
 #[derive(Debug, Clone)]
 pub struct AreaBreakdown {
+    /// Worker + DMA cores.
     pub cores: f64,
+    /// Scratchpad memory.
     pub spm: f64,
+    /// Shared instruction cache.
     pub icache: f64,
+    /// DMA engine.
     pub dma: f64,
+    /// Cluster-internal interconnect.
     pub cluster_ic: f64,
+    /// The tile's NoC routers (all physical networks).
     pub routers: f64,
+    /// NI control logic.
     pub ni: f64,
+    /// ROB storage (SCM).
     pub rob: f64,
+    /// Link buffer islands along the routing channel.
     pub buffer_islands: f64,
 }
 
 impl AreaBreakdown {
+    /// Compute-cluster GE (everything but the NoC).
     pub fn cluster_total(&self) -> f64 {
         self.cores + self.spm + self.icache + self.dma + self.cluster_ic
     }
@@ -74,14 +84,17 @@ impl AreaBreakdown {
         self.routers + self.ni + self.rob + self.buffer_islands
     }
 
+    /// Whole-tile GE.
     pub fn tile_total(&self) -> f64 {
         self.cluster_total() + self.noc_total()
     }
 
+    /// NoC share of the tile (paper: ~10 %).
     pub fn noc_fraction(&self) -> f64 {
         self.noc_total() / self.tile_total()
     }
 
+    /// Serialize for reports (kGE units).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("cores_kge", Json::Num(self.cores / 1e3)),

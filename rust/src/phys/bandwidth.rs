@@ -6,7 +6,9 @@ use crate::flit::NocLayout;
 /// Peak-bandwidth model at a given clock.
 #[derive(Debug, Clone)]
 pub struct BandwidthModel {
+    /// Clock frequency the links run at.
     pub freq_ghz: f64,
+    /// The link layout the widths come from.
     pub layout: NocLayout,
 }
 

@@ -60,16 +60,22 @@ pub struct Activity {
 /// Fig. 6b output.
 #[derive(Debug, Clone)]
 pub struct PowerBreakdown {
+    /// Compute-cluster power.
     pub cluster_mw: f64,
+    /// NoC switching power over the window.
     pub noc_dynamic_mw: f64,
+    /// NoC idle/leakage power.
     pub noc_idle_mw: f64,
+    /// Total tile power.
     pub total_mw: f64,
+    /// NoC share of the total (paper: 4-10 %).
     pub noc_fraction: f64,
     /// Total NoC dynamic energy in pJ over the window.
     pub noc_dynamic_pj: f64,
 }
 
 impl PowerBreakdown {
+    /// Serialize for reports.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("cluster_mw", Json::Num(self.cluster_mw)),

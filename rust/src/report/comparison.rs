@@ -9,13 +9,18 @@ use crate::phys::BandwidthModel;
 /// Feature flags as printed in Table II.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Support {
+    /// Fully supported.
     Yes,
+    /// Not supported.
     No,
+    /// Partially supported (with the paper's annotation).
     Partial(&'static str),
+    /// Not disclosed by the publication.
     Unknown,
 }
 
 impl Support {
+    /// The cell text used in the rendered table.
     pub fn glyph(&self) -> String {
         match self {
             Support::Yes => "yes".to_string(),
@@ -29,6 +34,7 @@ impl Support {
 /// One comparison row.
 #[derive(Debug, Clone)]
 pub struct NocEntry {
+    /// Design name with the paper's citation tag.
     pub name: &'static str,
     /// Link width in bits (as published; `0` = not disclosed).
     pub link_bits: &'static str,
@@ -36,9 +42,13 @@ pub struct NocEntry {
     pub freq_ghz: f64,
     /// Peak link bandwidth in Gbps (0.0 = not disclosed).
     pub link_gbps: f64,
+    /// Open-source availability.
     pub open_source: Support,
+    /// Multiple-outstanding-transaction support.
     pub outstanding_txns: Support,
+    /// Full AXI4 compliance (bursts, IDs, ordering).
     pub axi4_compliant: Support,
+    /// Physically implemented (not just RTL/simulation).
     pub physical_impl: Support,
 }
 

@@ -9,6 +9,7 @@ pub struct RoundRobin {
 }
 
 impl RoundRobin {
+    /// An `n`-requestor arbiter; index 0 wins the first tie.
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
         RoundRobin { n, next: 0 }

@@ -16,13 +16,17 @@
 //! * **optional output register** ("elastic buffer") — trades one extra
 //!   cycle for relaxed link timing; the paper's physical implementation
 //!   uses this two-cycle variant, and so does our calibrated default;
-//! * **static routing** — dimension-ordered XY or table-based; the
-//!   decision logic is a pluggable function of (router, dst).
+//! * **static routing** — a pluggable [`RoutingAlgorithm`] (XY for
+//!   meshes, wrap-minimizing dimension-ordered for tori, shortest
+//!   direction for rings) generates per-router destination-indexed
+//!   tables; the hot loop only ever does table lookups.
 
 pub mod router;
 pub mod routing;
 pub mod arbiter;
 
 pub use arbiter::RoundRobin;
-pub use router::{Router, RouterCfg, PORT_LOCAL, PORT_N, PORT_E, PORT_S, PORT_W};
-pub use routing::{xy_route, RouteTable};
+pub use router::{
+    Router, RouterCfg, PORT_E, PORT_LOCAL, PORT_MEM, PORT_N, PORT_S, PORT_W,
+};
+pub use routing::{ring_route, torus_route, xy_route, RouteTable, RoutingAlgorithm};

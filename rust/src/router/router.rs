@@ -6,12 +6,21 @@ use crate::sim::{Link, LinkId};
 use super::arbiter::RoundRobin;
 use super::routing::RouteTable;
 
-/// Canonical port numbering for the 5×5 mesh router.
+/// Canonical port numbering: the tile-facing local port of the 5×5 router.
 pub const PORT_LOCAL: usize = 0;
+/// Cardinal port towards +y.
 pub const PORT_N: usize = 1;
+/// Cardinal port towards +x.
 pub const PORT_E: usize = 2;
+/// Cardinal port towards -y.
 pub const PORT_S: usize = 3;
+/// Cardinal port towards -x.
 pub const PORT_W: usize = 4;
+/// Dedicated memory-controller attach port on radix-6 torus routers:
+/// every cardinal port of a torus router is taken by a neighbour (the
+/// wraparound closes each row and column), so controllers get their own
+/// sixth port instead of a free boundary port.
+pub const PORT_MEM: usize = 5;
 
 /// Static router configuration.
 #[derive(Debug, Clone)]
@@ -48,6 +57,7 @@ struct OutputState {
 /// entries are unconnected ports (mesh boundary).
 #[derive(Debug)]
 pub struct Router {
+    /// Radix and buffering parameters this router was built with.
     pub cfg: RouterCfg,
     /// Input link per port (delivers into this router's input buffers).
     pub in_links: Vec<Option<LinkId>>,
@@ -65,6 +75,8 @@ pub struct Router {
 }
 
 impl Router {
+    /// Build a router with all ports unconnected and the given static
+    /// route table; the network builder wires `in_links`/`out_links`.
     pub fn new(cfg: RouterCfg, table: RouteTable) -> Self {
         let outputs = (0..cfg.ports)
             .map(|_| OutputState {

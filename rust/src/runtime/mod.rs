@@ -25,12 +25,16 @@ use crate::util::json::Json;
 /// Artifact metadata (the `meta.json` contract emitted by `compile.aot`).
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Tile matrix dimension the kernels were lowered for.
     pub tile_dim: usize,
+    /// Mesh size the `noc_perf` artifact is specialized to.
     pub dse_mesh_n: usize,
+    /// `(name, input_shapes)` per compiled executable.
     pub entries: Vec<(String, Vec<Vec<usize>>)>,
 }
 
 impl ArtifactMeta {
+    /// Parse `meta.json` from an artifacts directory.
     pub fn load(dir: &Path) -> crate::Result<ArtifactMeta> {
         let text = std::fs::read_to_string(dir.join("meta.json"))
             .with_context(|| format!("reading {}/meta.json (run `make artifacts`)", dir.display()))?;
@@ -95,7 +99,9 @@ mod backend {
     /// A compiled model: PJRT executable + its input-shape contract.
     pub struct Executable {
         exe: xla::PjRtLoadedExecutable,
+        /// Artifact name (`meta.json` key).
         pub name: String,
+        /// Input-shape contract from `meta.json`.
         pub input_shapes: Vec<Vec<usize>>,
     }
 
@@ -143,6 +149,7 @@ mod backend {
     /// The runtime: a PJRT CPU client plus compiled executables.
     pub struct Runtime {
         client: xla::PjRtClient,
+        /// Parsed artifact metadata.
         pub meta: ArtifactMeta,
         dir: PathBuf,
     }
@@ -156,6 +163,7 @@ mod backend {
             Ok(Runtime { client, meta, dir })
         }
 
+        /// PJRT platform name (diagnostics).
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -201,11 +209,14 @@ mod backend {
     /// Stub with the same API as the PJRT-backed executable; never
     /// constructible because [`Runtime::new`] always errors.
     pub struct Executable {
+        /// Artifact name (`meta.json` key).
         pub name: String,
+        /// Input-shape contract from `meta.json`.
         pub input_shapes: Vec<Vec<usize>>,
     }
 
     impl Executable {
+        /// Always errors: the stub cannot execute.
         pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> crate::Result<Vec<Vec<f32>>> {
             bail!("{UNAVAILABLE}");
         }
@@ -213,19 +224,23 @@ mod backend {
 
     /// Stub runtime: carries the metadata type so signatures line up.
     pub struct Runtime {
+        /// Parsed artifact metadata (never populated by the stub).
         pub meta: ArtifactMeta,
     }
 
     impl Runtime {
+        /// Always errors with wiring instructions (see the `pjrt` feature).
         pub fn new(dir: impl AsRef<Path>) -> crate::Result<Runtime> {
             let _ = dir.as_ref();
             bail!("{UNAVAILABLE}");
         }
 
+        /// The stub's platform name.
         pub fn platform(&self) -> String {
             "unavailable".to_string()
         }
 
+        /// Always errors: no artifacts exist in the stub build.
         pub fn load(&self, name: &str) -> crate::Result<Executable> {
             bail!("{UNAVAILABLE} (artifact '{name}')");
         }

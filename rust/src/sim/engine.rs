@@ -31,12 +31,16 @@ impl SimStats {
 /// The clocking engine. `S` is the complete simulated system; `step`
 /// advances it one cycle.
 pub struct Engine<S> {
+    /// The simulated system.
     pub system: S,
+    /// Current cycle.
     pub now: Cycle,
+    /// Wall-clock throughput statistics.
     pub stats: SimStats,
 }
 
 impl<S> Engine<S> {
+    /// Wrap a system at cycle 0.
     pub fn new(system: S) -> Self {
         Engine {
             system,

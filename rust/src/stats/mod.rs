@@ -16,19 +16,23 @@ pub struct LatencyRecorder {
 }
 
 impl LatencyRecorder {
+    /// An empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one sample.
     pub fn record(&mut self, latency: u64) {
         self.samples.push(latency);
         self.sorted = false;
     }
 
+    /// Number of samples recorded.
     pub fn count(&self) -> usize {
         self.samples.len()
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -36,10 +40,12 @@ impl LatencyRecorder {
         self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
     }
 
+    /// Smallest sample (0 when empty).
     pub fn min(&self) -> u64 {
         self.samples.iter().copied().min().unwrap_or(0)
     }
 
+    /// Largest sample (0 when empty).
     pub fn max(&self) -> u64 {
         self.samples.iter().copied().max().unwrap_or(0)
     }
@@ -61,18 +67,22 @@ impl LatencyRecorder {
         self.samples[rank.min(self.samples.len() - 1)]
     }
 
+    /// Median (nearest-rank).
     pub fn p50(&mut self) -> u64 {
         self.percentile(50.0)
     }
 
+    /// 95th percentile (nearest-rank).
     pub fn p95(&mut self) -> u64 {
         self.percentile(95.0)
     }
 
+    /// 99th percentile (nearest-rank).
     pub fn p99(&mut self) -> u64 {
         self.percentile(99.0)
     }
 
+    /// Serialize summary statistics for reports.
     pub fn to_json(&mut self) -> Json {
         Json::obj(vec![
             ("count", Json::Num(self.count() as f64)),
@@ -97,12 +107,14 @@ pub struct BandwidthMeter {
     pub payload_bits: u64,
     /// Flits observed.
     pub flits: u64,
-    /// First/last observation cycles (measurement window).
+    /// First observation cycle (start of the measurement window).
     pub first_cycle: Option<u64>,
+    /// Last observation cycle (end of the measurement window).
     pub last_cycle: u64,
 }
 
 impl BandwidthMeter {
+    /// A meter for a link with `link_bits` of peak payload per cycle.
     pub fn new(link_bits: u32) -> Self {
         BandwidthMeter {
             link_bits,
@@ -113,6 +125,7 @@ impl BandwidthMeter {
         }
     }
 
+    /// Record one delivered flit carrying `payload_bits` useful bits.
     pub fn observe(&mut self, now: u64, payload_bits: u32) {
         self.payload_bits += payload_bits as u64;
         self.flits += 1;
@@ -149,6 +162,7 @@ impl BandwidthMeter {
         (self.payload_bits as f64 / w as f64) * freq_ghz
     }
 
+    /// Serialize for reports.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("flits", Json::Num(self.flits as f64)),

@@ -1,66 +1,140 @@
-//! Mesh topology, node naming, address map and route-table generation.
+//! Fabric topologies, node naming, address map and route-table generation.
 //!
-//! A deployment is a `W×H` mesh of compute tiles (one multilink router +
-//! NI each) plus memory controllers attached to the free cardinal ports of
-//! boundary routers (paper Fig. 4a: "Memory controllers can be placed on
-//! the mesh boundary and connected to the NoC").
+//! A deployment is a [`TopologyKind`] fabric of compute tiles (one
+//! multilink router + NI each) plus memory controllers attached to
+//! otherwise-unused router ports:
+//!
+//! * **mesh** — the paper's `W×H` grid (Fig. 4a); controllers sit on the
+//!   free cardinal ports of boundary routers ("Memory controllers can be
+//!   placed on the mesh boundary and connected to the NoC");
+//! * **torus** — the same grid with wraparound links closing every row
+//!   and column; no boundary exists, so routers grow a dedicated sixth
+//!   port ([`PORT_MEM`]) for controllers;
+//! * **ring** — a 1-D chain of `W` tiles closed by one wraparound link;
+//!   the unused north ports host controllers.
+//!
+//! Routing is table-driven everywhere: [`Topology::route_table`]
+//! materializes the fabric's [`RoutingAlgorithm`] into a per-router
+//! destination-indexed table, so the router hot loop is identical for
+//! all three fabrics. Link construction consumes [`Topology::channels`],
+//! the single home of the wraparound rules.
 
 use crate::flit::{Coord, NodeId};
-use crate::router::{xy_route, RouteTable, PORT_E, PORT_LOCAL, PORT_N, PORT_S, PORT_W};
+use crate::router::{
+    RouteTable, RoutingAlgorithm, PORT_E, PORT_LOCAL, PORT_MEM, PORT_N, PORT_S, PORT_W,
+};
+
+/// The fabric shapes the simulator can build (the `--topology` axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// `W×H` grid, no wraparound; XY routing.
+    Mesh,
+    /// `W×H` grid with wraparound in both dimensions; wrap-minimizing
+    /// dimension-ordered routing on radix-6 routers.
+    Torus,
+    /// 1-D chain of `W` tiles closed into a cycle; shortest-direction
+    /// routing. Requires `height == 1`.
+    Ring,
+}
+
+impl TopologyKind {
+    /// Stable lowercase name (CLI/config/report vocabulary).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Mesh => "mesh",
+            TopologyKind::Torus => "torus",
+            TopologyKind::Ring => "ring",
+        }
+    }
+}
 
 /// What kind of endpoint a node is.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NodeKind {
-    /// Compute tile at its own mesh coordinate.
+    /// Compute tile at its own fabric coordinate.
     Tile,
-    /// Memory controller attached to the boundary router at `host` via
-    /// `attach_port` (the otherwise-unused cardinal port).
-    MemCtrl { attach_port: usize },
+    /// Memory controller attached to the router at `host` via
+    /// `attach_port` (an otherwise-unused router port: a free boundary
+    /// port on meshes, [`PORT_N`] on rings, [`PORT_MEM`] on tori).
+    MemCtrl {
+        /// Host-router port the controller hangs off.
+        attach_port: usize,
+    },
 }
 
 /// Static description of one node.
 #[derive(Debug, Clone, Copy)]
 pub struct Node {
+    /// Global node id (tiles first, then memory controllers).
     pub id: NodeId,
+    /// Tile or memory controller.
     pub kind: NodeKind,
-    /// Mesh coordinate: own coordinate for tiles, the host router's
+    /// Fabric coordinate: own coordinate for tiles, the host router's
     /// coordinate for memory controllers.
     pub coord: Coord,
 }
 
-/// Which mesh edges get memory controllers.
+/// Which positions get memory controllers, interpreted per topology:
+///
+/// | | mesh | torus | ring |
+/// |---|---|---|---|
+/// | `West` | west edge (free W ports) | column `x = 0` ([`PORT_MEM`]) | node `x = 0` ([`PORT_N`]) |
+/// | `EastWest` | west + east edges | columns `0` and `W/2` (opposite arcs) | nodes `0` and `W/2` (opposite arcs) |
+/// | `All` | all four edges | every router | every node |
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MemEdge {
+    /// No memory controllers.
     None,
+    /// One column/position of controllers.
     West,
+    /// Two opposite columns/positions (bisection-balanced).
     EastWest,
+    /// The maximum placement the fabric supports.
     All,
 }
 
-/// Global address-map constants. Each node owns a contiguous window; the
-/// paper's tile has a 128 kB SPM, memory controllers front large DRAM
-/// regions.
-pub const TILE_SPAN: u64 = 1 << 24; // 16 MB window per tile (SPM + MMIO)
+/// Per-tile address window: 16 MB (SPM + MMIO).
+pub const TILE_SPAN: u64 = 1 << 24;
+/// Scratchpad bytes per tile (the paper's 128 kB SPM).
 pub const SPM_BYTES: u64 = 128 * 1024;
-pub const MEM_BASE: u64 = 1 << 40; // memory controllers live high
-pub const MEM_SPAN: u64 = 1 << 32; // 4 GB window per controller
+/// Base of the memory-controller region (controllers live high).
+pub const MEM_BASE: u64 = 1 << 40;
+/// Address window per memory controller (4 GB of fronted DRAM).
+pub const MEM_SPAN: u64 = 1 << 32;
 
 /// A full topology: tiles in row-major order, then memory controllers.
 #[derive(Debug, Clone)]
 pub struct Topology {
+    /// Fabric shape (decides routing rule, wraparound links, radix and
+    /// memory-controller attachment).
+    pub kind: TopologyKind,
+    /// Tiles per row.
     pub width: u8,
+    /// Rows (always 1 for rings).
     pub height: u8,
+    /// All nodes: tiles at ids `0..num_tiles`, then controllers.
     pub nodes: Vec<Node>,
     /// Number of tile nodes (tiles occupy ids `0..num_tiles`).
     pub num_tiles: usize,
 }
 
 impl Topology {
-    /// Build a `width × height` tile mesh with memory controllers on the
-    /// chosen edges (one per boundary router on that edge).
-    pub fn mesh(width: u8, height: u8, mem: MemEdge) -> Self {
+    /// Build a fabric of `kind` with `width × height` tiles and memory
+    /// controllers at the [`MemEdge`] positions.
+    ///
+    /// ```
+    /// use floonoc::topology::{MemEdge, Topology, TopologyKind};
+    /// let t = Topology::new(TopologyKind::Torus, 4, 4, MemEdge::West);
+    /// assert_eq!(t.num_tiles, 16);
+    /// assert_eq!(t.mem_ctrls().len(), 4); // column x = 0
+    /// ```
+    pub fn new(kind: TopologyKind, width: u8, height: u8, mem: MemEdge) -> Self {
         assert!(width >= 1 && height >= 1);
         assert!(width as usize * height as usize <= u16::MAX as usize);
+        assert!(
+            kind != TopologyKind::Ring || height == 1,
+            "a ring is one-dimensional: height must be 1, got {height}"
+        );
         let mut nodes = Vec::new();
         for y in 0..height {
             for x in 0..width {
@@ -81,26 +155,62 @@ impl Topology {
             });
             next_id += 1;
         };
-        let west = matches!(mem, MemEdge::West | MemEdge::EastWest | MemEdge::All);
-        let east = matches!(mem, MemEdge::EastWest | MemEdge::All);
-        let north_south = matches!(mem, MemEdge::All);
-        if west {
-            for y in 0..height {
-                add_mem(Coord::new(0, y), PORT_W, &mut nodes);
+        match kind {
+            TopologyKind::Mesh => {
+                let west = matches!(mem, MemEdge::West | MemEdge::EastWest | MemEdge::All);
+                let east = matches!(mem, MemEdge::EastWest | MemEdge::All);
+                let north_south = matches!(mem, MemEdge::All);
+                if west {
+                    for y in 0..height {
+                        add_mem(Coord::new(0, y), PORT_W, &mut nodes);
+                    }
+                }
+                if east {
+                    for y in 0..height {
+                        add_mem(Coord::new(width - 1, y), PORT_E, &mut nodes);
+                    }
+                }
+                if north_south {
+                    for x in 0..width {
+                        add_mem(Coord::new(x, height - 1), PORT_N, &mut nodes);
+                        add_mem(Coord::new(x, 0), PORT_S, &mut nodes);
+                    }
+                }
             }
-        }
-        if east {
-            for y in 0..height {
-                add_mem(Coord::new(width - 1, y), PORT_E, &mut nodes);
+            TopologyKind::Torus => {
+                // No boundary exists; controllers use the dedicated
+                // radix-6 attach port, at most one per router.
+                let mut columns: Vec<u8> = match mem {
+                    MemEdge::None => vec![],
+                    MemEdge::West => vec![0],
+                    // Opposite arcs of the row rings: columns 0 and W-1
+                    // would be wrap-adjacent on a torus.
+                    MemEdge::EastWest => vec![0, width / 2],
+                    MemEdge::All => (0..width).collect(),
+                };
+                columns.dedup();
+                for x in columns {
+                    for y in 0..height {
+                        add_mem(Coord::new(x, y), PORT_MEM, &mut nodes);
+                    }
+                }
             }
-        }
-        if north_south {
-            for x in 0..width {
-                add_mem(Coord::new(x, height - 1), PORT_N, &mut nodes);
-                add_mem(Coord::new(x, 0), PORT_S, &mut nodes);
+            TopologyKind::Ring => {
+                // North ports are free on the 1-D chain.
+                let mut xs: Vec<u8> = match mem {
+                    MemEdge::None => vec![],
+                    MemEdge::West => vec![0],
+                    MemEdge::EastWest => vec![0, width / 2],
+                    MemEdge::All => (0..width).collect(),
+                };
+                xs.dedup();
+                for x in xs {
+                    add_mem(Coord::new(x, 0), PORT_N, &mut nodes);
+                }
             }
         }
         Topology {
+            kind,
             width,
             height,
             nodes,
@@ -108,15 +218,40 @@ impl Topology {
         }
     }
 
+    /// Build a `width × height` tile mesh with memory controllers on the
+    /// chosen edges (one per boundary router on that edge).
+    ///
+    /// ```
+    /// use floonoc::topology::{MemEdge, Topology};
+    /// let t = Topology::mesh(4, 4, MemEdge::West);
+    /// assert_eq!((t.num_tiles, t.mem_ctrls().len()), (16, 4));
+    /// ```
+    pub fn mesh(width: u8, height: u8, mem: MemEdge) -> Self {
+        Topology::new(TopologyKind::Mesh, width, height, mem)
+    }
+
+    /// Build a `width × height` torus (wraparound in both dimensions).
+    pub fn torus(width: u8, height: u8, mem: MemEdge) -> Self {
+        Topology::new(TopologyKind::Torus, width, height, mem)
+    }
+
+    /// Build a ring of `n` tiles (a 1-D chain closed by a wraparound
+    /// link).
+    pub fn ring(n: u8, mem: MemEdge) -> Self {
+        Topology::new(TopologyKind::Ring, n, 1, mem)
+    }
+
+    /// Total node count (tiles + memory controllers).
     pub fn num_nodes(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Static description of a node.
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id.0 as usize]
     }
 
-    /// Tile id at mesh coordinate.
+    /// Tile id at a fabric coordinate.
     pub fn tile_at(&self, c: Coord) -> NodeId {
         debug_assert!(c.x < self.width && c.y < self.height);
         NodeId((c.y as u16) * self.width as u16 + c.x as u16)
@@ -127,9 +262,61 @@ impl Topology {
         self.nodes[self.num_tiles..].iter().map(|n| n.id).collect()
     }
 
-    /// Router index for a mesh coordinate (routers exist per tile).
+    /// Router index for a fabric coordinate (routers exist per tile).
     pub fn router_index(&self, c: Coord) -> usize {
         (c.y as usize) * self.width as usize + c.x as usize
+    }
+
+    /// Router radix this fabric needs: 5 (local + 4 cardinal) for mesh
+    /// and ring, 6 for torus (the [`PORT_MEM`] attach port).
+    pub fn router_radix(&self) -> usize {
+        match self.kind {
+            TopologyKind::Mesh | TopologyKind::Ring => 5,
+            TopologyKind::Torus => 6,
+        }
+    }
+
+    /// Bidirectional neighbour channels as
+    /// `(router_a, port_on_a, router_b, port_on_b)`: `a`'s port faces
+    /// `b` and vice versa, each physical channel listed exactly once.
+    /// This is the single place that knows which wraparound links exist:
+    ///
+    /// * mesh — grid-adjacent pairs only;
+    /// * torus — grid pairs plus a wrap pair closing every row (last E →
+    ///   first W) and every column (last N → first S);
+    /// * ring — the chain pairs plus the single closing wrap pair.
+    pub fn channels(&self) -> Vec<(usize, usize, usize, usize)> {
+        let w = self.width as usize;
+        let h = self.height as usize;
+        let idx = |x: usize, y: usize| y * w + x;
+        let mut out = Vec::new();
+        for y in 0..h {
+            for x in 0..w {
+                let me = idx(x, y);
+                if x + 1 < w {
+                    out.push((me, PORT_E, idx(x + 1, y), PORT_W));
+                }
+                if y + 1 < h {
+                    out.push((me, PORT_N, idx(x, y + 1), PORT_S));
+                }
+            }
+        }
+        let wrap_x = match self.kind {
+            TopologyKind::Mesh => false,
+            TopologyKind::Torus | TopologyKind::Ring => w > 1,
+        };
+        let wrap_y = self.kind == TopologyKind::Torus && h > 1;
+        if wrap_x {
+            for y in 0..h {
+                out.push((idx(w - 1, y), PORT_E, idx(0, y), PORT_W));
+            }
+        }
+        if wrap_y {
+            for x in 0..w {
+                out.push((idx(x, h - 1), PORT_N, idx(x, 0), PORT_S));
+            }
+        }
+        out
     }
 
     // ------------------------------------------------------------ addresses
@@ -158,11 +345,25 @@ impl Topology {
 
     // -------------------------------------------------------------- routing
 
-    /// Generate the XY route table for the router at `me`: for each
-    /// destination node, the output port a flit should take. Memory
-    /// controllers route like their host router, plus the final attach-port
-    /// exit at the host itself.
-    pub fn xy_table(&self, me: Coord) -> RouteTable {
+    /// The route-generator rule for this fabric.
+    pub fn algorithm(&self) -> RoutingAlgorithm {
+        match self.kind {
+            TopologyKind::Mesh => RoutingAlgorithm::Xy,
+            TopologyKind::Torus => RoutingAlgorithm::TorusXy {
+                width: self.width,
+                height: self.height,
+            },
+            TopologyKind::Ring => RoutingAlgorithm::RingShortest { nodes: self.width },
+        }
+    }
+
+    /// Generate the route table for the router at `me`: for each
+    /// destination node, the output port a flit should take, per the
+    /// fabric's [`RoutingAlgorithm`]. Memory controllers route like
+    /// their host router, plus the final attach-port exit at the host
+    /// itself.
+    pub fn route_table(&self, me: Coord) -> RouteTable {
+        let alg = self.algorithm();
         let ports = self
             .nodes
             .iter()
@@ -173,18 +374,39 @@ impl Topology {
                         NodeKind::MemCtrl { attach_port } => attach_port as u8,
                     }
                 } else {
-                    xy_route(me, n.coord) as u8
+                    alg.step(me, n.coord) as u8
                 }
             })
             .collect();
         RouteTable::new(ports)
     }
 
-    /// XY hop count between two nodes' host routers (for analytical checks).
+    /// Shortest-path hop count between two nodes' host routers under the
+    /// fabric's routing rule (for analytical checks): Manhattan distance
+    /// on meshes, per-dimension ring distance on tori and rings.
     pub fn hops(&self, a: NodeId, b: NodeId) -> u32 {
-        let ca = self.node(a).coord;
-        let cb = self.node(b).coord;
-        (ca.x.abs_diff(cb.x) + ca.y.abs_diff(cb.y)) as u32
+        self.algorithm().distance(self.node(a).coord, self.node(b).coord)
+    }
+
+    /// Mean router-to-router hop count over all ordered pairs of
+    /// distinct tiles — the expected hop count of uniform-random
+    /// tile-to-tile traffic, and the analytic quantity behind the
+    /// `scale_topology` comparison (a torus halves the worst-case
+    /// distance of the equally-sized mesh).
+    pub fn mean_tile_hops(&self) -> f64 {
+        let n = self.num_tiles;
+        if n < 2 {
+            return 0.0;
+        }
+        let mut total = 0u64;
+        for a in 0..n {
+            for b in 0..n {
+                if a != b {
+                    total += self.hops(NodeId(a as u16), NodeId(b as u16)) as u64;
+                }
+            }
+        }
+        total as f64 / (n * (n - 1)) as f64
     }
 }
 
@@ -239,7 +461,7 @@ mod tests {
                 let mut cur = src.coord;
                 let mut hops = 0;
                 loop {
-                    let table = t.xy_table(cur);
+                    let table = t.route_table(cur);
                     let port = table.lookup(dst.id);
                     match port {
                         PORT_LOCAL => {
@@ -293,5 +515,120 @@ mod tests {
         assert_eq!(t.hops(NodeId(0), NodeId(15)), 6);
         assert_eq!(t.hops(NodeId(0), NodeId(1)), 1);
         assert_eq!(t.hops(NodeId(5), NodeId(5)), 0);
+    }
+
+    #[test]
+    fn torus_hops_wrap() {
+        let t = Topology::torus(4, 4, MemEdge::None);
+        // Opposite corner: one wrap hop per dimension.
+        assert_eq!(t.hops(NodeId(0), NodeId(15)), 2);
+        assert_eq!(t.hops(NodeId(0), NodeId(3)), 1, "row wrap");
+        assert_eq!(t.hops(NodeId(0), NodeId(12)), 1, "column wrap");
+    }
+
+    #[test]
+    fn ring_hops_wrap() {
+        let t = Topology::ring(6, MemEdge::None);
+        assert_eq!(t.hops(NodeId(0), NodeId(5)), 1, "wraparound is shorter");
+        assert_eq!(t.hops(NodeId(0), NodeId(3)), 3, "diameter");
+        assert_eq!(t.hops(NodeId(1), NodeId(4)), 3);
+    }
+
+    #[test]
+    fn torus_mem_ctrls_use_dedicated_port() {
+        let t = Topology::torus(3, 3, MemEdge::West);
+        assert_eq!(t.router_radix(), 6);
+        let mems = t.mem_ctrls();
+        assert_eq!(mems.len(), 3, "one per router of column 0");
+        for m in mems {
+            assert!(matches!(t.node(m).kind, NodeKind::MemCtrl { attach_port: PORT_MEM }));
+            assert_eq!(t.node(m).coord.x, 0);
+        }
+    }
+
+    #[test]
+    fn ring_mem_ctrls_on_north_ports() {
+        let t = Topology::ring(8, MemEdge::EastWest);
+        let mems = t.mem_ctrls();
+        assert_eq!(mems.len(), 2);
+        let xs: Vec<u8> = mems.iter().map(|&m| t.node(m).coord.x).collect();
+        assert_eq!(xs, vec![0, 4], "opposite arcs of the ring");
+        for m in t.mem_ctrls() {
+            assert!(matches!(t.node(m).kind, NodeKind::MemCtrl { attach_port: PORT_N }));
+        }
+    }
+
+    #[test]
+    fn channel_counts_per_topology() {
+        // W*H tiles: a mesh has W*(H-1) + H*(W-1) channels; the torus
+        // closes every row and column (+W +H); the ring adds exactly 1.
+        let mesh = Topology::mesh(4, 3, MemEdge::None);
+        assert_eq!(mesh.channels().len(), 4 * 2 + 3 * 3);
+        let torus = Topology::torus(4, 3, MemEdge::None);
+        assert_eq!(torus.channels().len(), 4 * 2 + 3 * 3 + 4 + 3);
+        let ring = Topology::ring(5, MemEdge::None);
+        assert_eq!(ring.channels().len(), 4 + 1);
+        // The ring's wrap pair connects the chain ends.
+        assert!(ring.channels().contains(&(4, PORT_E, 0, PORT_W)));
+    }
+
+    #[test]
+    fn torus_tables_deliver_everywhere_with_wrap() {
+        // Walk the generated tables with wraparound coordinate movement;
+        // every pair must arrive in exactly the analytic hop count.
+        let t = Topology::torus(4, 3, MemEdge::West);
+        let (w, h) = (t.width, t.height);
+        for src in &t.nodes {
+            for dst in &t.nodes {
+                if src.id == dst.id {
+                    continue;
+                }
+                let mut cur = src.coord;
+                let mut hops = 0;
+                loop {
+                    let port = t.route_table(cur).lookup(dst.id);
+                    match port {
+                        PORT_LOCAL => {
+                            assert_eq!(cur, dst.coord);
+                            break;
+                        }
+                        PORT_MEM => {
+                            assert!(matches!(dst.kind, NodeKind::MemCtrl { .. }));
+                            assert_eq!(cur, dst.coord);
+                            break;
+                        }
+                        PORT_N => cur.y = (cur.y + 1) % h,
+                        PORT_S => cur.y = (cur.y + h - 1) % h,
+                        PORT_E => cur.x = (cur.x + 1) % w,
+                        PORT_W => cur.x = (cur.x + w - 1) % w,
+                        p => panic!("unexpected port {p}"),
+                    }
+                    hops += 1;
+                    assert!(hops <= t.hops(src.id, dst.id), "non-minimal path");
+                }
+                assert_eq!(hops, t.hops(src.id, dst.id));
+            }
+        }
+    }
+
+    #[test]
+    fn torus_beats_mesh_on_mean_hops() {
+        for n in [4u8, 5, 6] {
+            let mesh = Topology::mesh(n, n, MemEdge::None);
+            let torus = Topology::torus(n, n, MemEdge::None);
+            assert!(
+                torus.mean_tile_hops() < mesh.mean_tile_hops(),
+                "{n}x{n}: torus {:.3} !< mesh {:.3}",
+                torus.mean_tile_hops(),
+                mesh.mean_tile_hops()
+            );
+        }
+        // Spot values against the closed forms: 4x4 mesh sums 320 hops
+        // per dimension over 240 ordered pairs (640/240 = 8/3); the 4x4
+        // torus halves the per-dimension mean (512/240 = 32/15).
+        let mesh = Topology::mesh(4, 4, MemEdge::None);
+        assert!((mesh.mean_tile_hops() - 8.0 / 3.0).abs() < 1e-9);
+        let torus = Topology::torus(4, 4, MemEdge::None);
+        assert!((torus.mean_tile_hops() - 32.0 / 15.0).abs() < 1e-9);
     }
 }

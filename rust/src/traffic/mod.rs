@@ -34,12 +34,26 @@ pub enum Pattern {
     Neighbor,
     /// Uniformly random among boundary memory controllers.
     MemCtrls,
+    /// Tornado: the tile half-way around each wrapping dimension
+    /// (`x + W/2 mod W`, and `y + H/2 mod H` when `H > 1`). On a torus
+    /// or ring this is the classic adversarial pattern for minimal
+    /// routing — every flow travels the fabric diameter and the
+    /// wraparound links carry half of it; on a mesh the same flows have
+    /// no wrap links to use and pile onto the center.
+    Tornado,
+    /// Uniformly random among the wrapping ±x (and, when `H > 1`, ±y)
+    /// neighbours. Unlike [`Pattern::Neighbor`] the -x direction is
+    /// exercised too, so on a ring/torus *both* directions of every
+    /// wraparound link see traffic.
+    NearestNeighbor,
 }
 
 /// Generator configuration.
 #[derive(Debug, Clone)]
 pub struct GenCfg {
+    /// Which of the tile's two initiators (narrow/wide) this drives.
     pub bus: BusKind,
+    /// Destination selection rule.
     pub pattern: Pattern,
     /// Total transactions to issue; `u64::MAX` = run until stopped.
     pub num_txns: u64,
@@ -55,6 +69,7 @@ pub struct GenCfg {
     pub max_outstanding: u32,
     /// Number of distinct AXI IDs to rotate through.
     pub ids: u16,
+    /// RNG seed (mixed with the node id for decorrelated streams).
     pub seed: u64,
 }
 
@@ -105,10 +120,14 @@ struct PendingRead {
 /// One traffic generator attached to one initiator port.
 #[derive(Debug)]
 pub struct Generator {
+    /// The workload parameters.
     pub cfg: GenCfg,
+    /// Tile this generator injects from.
     pub node: NodeId,
     rng: Rng,
+    /// Transactions issued so far.
     pub issued: u64,
+    /// Transactions fully completed (last beat / B received).
     pub completed: u64,
     outstanding: u32,
     /// Cycle before which no new issue may happen (rate limiting).
@@ -123,6 +142,7 @@ pub struct Generator {
 }
 
 impl Generator {
+    /// Bind a workload config to a source tile.
     pub fn new(cfg: GenCfg, node: NodeId) -> Self {
         let rng = Rng::new(cfg.seed ^ (node.0 as u64) << 32);
         let ids = cfg.ids as usize;
@@ -147,6 +167,7 @@ impl Generator {
         self.issued >= self.cfg.num_txns && self.outstanding == 0
     }
 
+    /// Transactions in flight right now.
     pub fn outstanding(&self) -> u32 {
         self.outstanding
     }
@@ -173,6 +194,42 @@ impl Generator {
                 let mems = topo.mem_ctrls();
                 assert!(!mems.is_empty(), "MemCtrls pattern needs controllers");
                 *self.rng.choose(&mems)
+            }
+            Pattern::Tornado => {
+                let c = topo.node(self.node).coord;
+                let w = topo.width as usize;
+                let h = topo.height as usize;
+                let nx = ((c.x as usize + w / 2) % w) as u8;
+                let ny = if h > 1 {
+                    ((c.y as usize + h / 2) % h) as u8
+                } else {
+                    c.y
+                };
+                let dst = topo.tile_at(crate::flit::Coord::new(nx, ny));
+                assert!(dst != self.node, "tornado is degenerate on a 1x1 fabric");
+                dst
+            }
+            Pattern::NearestNeighbor => {
+                let c = topo.node(self.node).coord;
+                let (w, h) = (topo.width, topo.height);
+                // Widened arithmetic: `x + w - 1` overflows u8 for large
+                // rings (w can be up to 255). Fixed buffer: pick_dst runs
+                // once per issued transaction — no heap allocation.
+                let dec = |v: u8, n: u8| ((v as u16 + n as u16 - 1) % n as u16) as u8;
+                let mut cands = [c; 4];
+                let mut k = 0;
+                if w > 1 {
+                    cands[k] = crate::flit::Coord::new((c.x + 1) % w, c.y);
+                    cands[k + 1] = crate::flit::Coord::new(dec(c.x, w), c.y);
+                    k += 2;
+                }
+                if h > 1 {
+                    cands[k] = crate::flit::Coord::new(c.x, (c.y + 1) % h);
+                    cands[k + 1] = crate::flit::Coord::new(c.x, dec(c.y, h));
+                    k += 2;
+                }
+                assert!(k > 0, "nearest-neighbor needs > 1 tile");
+                topo.tile_at(*self.rng.choose(&cands[..k]))
             }
         }
     }
@@ -359,6 +416,78 @@ mod tests {
         // Tile 1 of a 2×2 mesh: neighbour wraps to tile 0 (x: 1 -> 0).
         let g = run_gen(cfg, NodeId(1), 5_000);
         assert!(g.done());
+    }
+
+    #[test]
+    fn tornado_targets_half_way_around() {
+        // On a 4-ring, every tile's tornado destination is x + 2 mod 4.
+        let topo = crate::topology::Topology::ring(4, MemEdge::None);
+        for x in 0..4u16 {
+            let mut g = Generator::new(
+                GenCfg {
+                    pattern: Pattern::Tornado,
+                    ..GenCfg::narrow_probe(NodeId(0), 1)
+                },
+                NodeId(x),
+            );
+            assert_eq!(g.pick_dst(&topo), NodeId((x + 2) % 4));
+        }
+        // On a 4x4 torus it shifts both dimensions.
+        let topo = crate::topology::Topology::torus(4, 4, MemEdge::None);
+        let mut g = Generator::new(
+            GenCfg {
+                pattern: Pattern::Tornado,
+                ..GenCfg::narrow_probe(NodeId(0), 1)
+            },
+            NodeId(5), // (1, 1)
+        );
+        assert_eq!(g.pick_dst(&topo), NodeId(15)); // (3, 3)
+    }
+
+    #[test]
+    fn nearest_neighbor_picks_wrapping_neighbors_only() {
+        let topo = crate::topology::Topology::ring(6, MemEdge::None);
+        let mut g = Generator::new(
+            GenCfg {
+                pattern: Pattern::NearestNeighbor,
+                ..GenCfg::narrow_probe(NodeId(0), 1)
+            },
+            NodeId(0),
+        );
+        for _ in 0..50 {
+            let d = g.pick_dst(&topo);
+            assert!(
+                d == NodeId(1) || d == NodeId(5),
+                "ring neighbours of 0 are 1 and 5 (via wrap), got {d:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn tornado_completes_on_torus() {
+        // Live run: tornado over a 4x4 torus, single-beat narrow reads,
+        // low outstanding budget (the wrap links see real traffic).
+        let mut sys = NocSystem::new(crate::noc::NocConfig::torus(4, 4));
+        let mut gens: Vec<Generator> = (0..16)
+            .map(|i| {
+                let mut c = GenCfg::narrow_probe(NodeId(0), 8);
+                c.pattern = Pattern::Tornado;
+                c.max_outstanding = 2;
+                c.seed = 0x70AD0 + i as u64;
+                Generator::new(c, NodeId(i as u16))
+            })
+            .collect();
+        for _ in 0..50_000 {
+            sys.step();
+            for g in &mut gens {
+                sys.step_generator(g);
+            }
+            if gens.iter().all(Generator::done) {
+                break;
+            }
+        }
+        assert!(gens.iter().all(Generator::done), "tornado must drain");
+        assert!(gens.iter().all(|g| g.monitor.ok()));
     }
 }
 pub mod trace;

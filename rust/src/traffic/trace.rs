@@ -21,17 +21,26 @@ use crate::util::json::Json;
 pub struct TraceEvent {
     /// Issue cycle (relative to trace start).
     pub cycle: u64,
+    /// Issuing tile.
     pub src: NodeId,
+    /// Destination node.
     pub dst: NodeId,
+    /// Narrow or wide bus.
     pub bus: BusKind,
+    /// Write (true) or read (false).
     pub is_write: bool,
+    /// AXI transaction ID.
     pub id: u16,
+    /// AxLEN (beats - 1).
     pub len: u8,
+    /// AxSIZE (log2 bytes per beat).
     pub size: u8,
+    /// Start byte address.
     pub addr: u64,
 }
 
 impl TraceEvent {
+    /// Serialize as one JSON object (one line of a trace file).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("cycle", Json::Num(self.cycle as f64)),
@@ -55,6 +64,7 @@ impl TraceEvent {
         ])
     }
 
+    /// Parse one JSON trace line.
     pub fn from_json(j: &Json) -> crate::Result<TraceEvent> {
         let get_u64 = |k: &str| {
             j.get(k)
@@ -82,6 +92,7 @@ impl TraceEvent {
         })
     }
 
+    /// Convert to the AXI request this event describes.
     pub fn to_req(&self) -> AxReq {
         AxReq {
             id: self.id,
@@ -97,18 +108,22 @@ impl TraceEvent {
 /// Collects events; serializes one JSON object per line.
 #[derive(Debug, Default)]
 pub struct TraceRecorder {
+    /// The recorded events, in record order.
     pub events: Vec<TraceEvent>,
 }
 
 impl TraceRecorder {
+    /// An empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one event.
     pub fn record(&mut self, ev: TraceEvent) {
         self.events.push(ev);
     }
 
+    /// Write the trace as JSON lines.
     pub fn write_to(&self, w: &mut impl Write) -> crate::Result<()> {
         for ev in &self.events {
             writeln!(w, "{}", ev.to_json())?;
@@ -116,6 +131,7 @@ impl TraceRecorder {
         Ok(())
     }
 
+    /// Parse a JSON-lines trace.
     pub fn read_from(r: impl BufRead) -> crate::Result<TraceRecorder> {
         let mut events = Vec::new();
         for (no, line) in r.lines().enumerate() {
@@ -136,12 +152,16 @@ impl TraceRecorder {
 pub struct TraceWorkload {
     events: Vec<TraceEvent>,
     next: usize,
+    /// Events issued so far.
     pub issued: u64,
+    /// Read transactions completed.
     pub completed_reads: u64,
+    /// Write transactions completed.
     pub completed_writes: u64,
 }
 
 impl TraceWorkload {
+    /// Sort events by cycle and prepare for replay.
     pub fn new(mut events: Vec<TraceEvent>) -> Self {
         events.sort_by_key(|e| e.cycle);
         TraceWorkload {
@@ -153,6 +173,7 @@ impl TraceWorkload {
         }
     }
 
+    /// Every event has been issued.
     pub fn done_issuing(&self) -> bool {
         self.next >= self.events.len()
     }

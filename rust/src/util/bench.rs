@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 /// One benchmark measurement series.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
     /// Per-iteration wall time, sorted ascending.
     pub samples_ns: Vec<u64>,
@@ -17,14 +18,17 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Median per-iteration wall time.
     pub fn median_ns(&self) -> u64 {
         self.samples_ns[self.samples_ns.len() / 2]
     }
 
+    /// 10th-percentile per-iteration wall time.
     pub fn p10_ns(&self) -> u64 {
         self.samples_ns[self.samples_ns.len() / 10]
     }
 
+    /// 90th-percentile per-iteration wall time.
     pub fn p90_ns(&self) -> u64 {
         self.samples_ns[self.samples_ns.len() * 9 / 10]
     }
@@ -83,7 +87,9 @@ fn fmt_count(x: f64) -> String {
 
 /// Bench runner with fixed warmup/sample counts.
 pub struct Bencher {
+    /// Untimed warmup iterations before sampling.
     pub warmup: u32,
+    /// Timed samples per benchmark.
     pub samples: u32,
     results: Vec<BenchResult>,
 }
@@ -104,6 +110,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// A bencher with explicit warmup/sample counts.
     pub fn new(warmup: u32, samples: u32) -> Self {
         Bencher {
             warmup,
@@ -153,11 +160,14 @@ pub fn time_once<F: FnOnce()>(f: F) -> Duration {
 /// wall-clock second a step loop sustains.
 #[derive(Debug, Clone, Copy)]
 pub struct CpsResult {
+    /// Simulated cycles executed.
     pub cycles: u64,
+    /// Wall-clock time taken.
     pub wall_seconds: f64,
 }
 
 impl CpsResult {
+    /// Simulated cycles per wall-clock second.
     pub fn cycles_per_second(&self) -> f64 {
         if self.wall_seconds > 0.0 {
             self.cycles as f64 / self.wall_seconds

@@ -27,21 +27,25 @@ impl<T> Fifo<T> {
         }
     }
 
+    /// Capacity in entries.
     #[inline]
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
+    /// Current occupancy.
     #[inline]
     pub fn len(&self) -> usize {
         self.q.len()
     }
 
+    /// True when no entry is queued.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.q.is_empty()
     }
 
+    /// True when at capacity (ready deasserted).
     #[inline]
     pub fn is_full(&self) -> bool {
         self.q.len() >= self.cap
@@ -79,16 +83,19 @@ impl<T> Fifo<T> {
         }
     }
 
+    /// Pop the front entry, if any.
     #[inline]
     pub fn pop(&mut self) -> Option<T> {
         self.q.pop_front()
     }
 
+    /// Borrow the front entry, if any.
     #[inline]
     pub fn front(&self) -> Option<&T> {
         self.q.front()
     }
 
+    /// Mutably borrow the front entry, if any.
     #[inline]
     pub fn front_mut(&mut self) -> Option<&mut T> {
         self.q.front_mut()
@@ -104,6 +111,7 @@ impl<T> Fifo<T> {
         self.q.iter_mut()
     }
 
+    /// Drop every queued entry.
     pub fn clear(&mut self) {
         self.q.clear();
     }

@@ -12,18 +12,26 @@ use std::fmt;
 /// A JSON value. Objects use `BTreeMap` so serialization is deterministic.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (f64, like JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with sorted keys.
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset for diagnostics.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset of the error.
     pub at: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -38,6 +46,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     // ------------------------------------------------------------ accessors
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -45,6 +54,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integer value, if exactly representable.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|f| {
             if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 {
@@ -55,10 +65,12 @@ impl Json {
         })
     }
 
+    /// [`Self::as_u64`] narrowed to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|v| v as usize)
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -66,6 +78,7 @@ impl Json {
         }
     }
 
+    /// String slice, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -73,6 +86,7 @@ impl Json {
         }
     }
 
+    /// Array slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -80,6 +94,7 @@ impl Json {
         }
     }
 
+    /// Key map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),

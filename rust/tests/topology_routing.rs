@@ -1,0 +1,257 @@
+//! Route-table property tests across the three fabrics (in-repo prop
+//! driver; see `util::prop` — proptest is unavailable offline).
+//!
+//! For random fabric sizes and every src/dst pair, the generated tables
+//! must (1) terminate at the destination, (2) take exactly the analytic
+//! shortest-path hop count, and (3) on tori, cross a wraparound link iff
+//! the wrap arc is shorter than the direct one (checked on odd sizes,
+//! where no ties exist).
+
+use floonoc::flit::{Coord, NodeId};
+use floonoc::noc::NocConfig;
+use floonoc::prop_assert;
+use floonoc::router::{PORT_E, PORT_LOCAL, PORT_MEM, PORT_N, PORT_S, PORT_W};
+use floonoc::topology::{MemEdge, NodeKind, Topology, TopologyKind};
+use floonoc::util::prop::{check, PropConfig};
+
+/// Walk the per-router tables from `src` towards `dst`, moving with the
+/// fabric's wraparound semantics. Returns `(hops, wrapped_x, wrapped_y)`
+/// where `wrapped_*` records whether a dateline (the `W-1 -> 0` edge in
+/// either direction) was crossed in that dimension. Errors out instead
+/// of looping forever if the path exceeds the node count.
+fn walk(t: &Topology, src: NodeId, dst: NodeId) -> Result<(u32, bool, bool), String> {
+    let (w, h) = (t.width, t.height);
+    let mut cur = t.node(src).coord;
+    let goal = t.node(dst).coord;
+    let mut hops = 0u32;
+    let mut wrapped_x = false;
+    let mut wrapped_y = false;
+    let limit = t.num_nodes() as u32 + 2;
+    loop {
+        let port = t.route_table(cur).lookup(dst);
+        match port {
+            PORT_LOCAL => {
+                if !matches!(t.node(dst).kind, NodeKind::Tile) || cur != goal {
+                    return Err(format!("local exit at {cur:?} but dst {dst:?}"));
+                }
+                return Ok((hops, wrapped_x, wrapped_y));
+            }
+            PORT_E => {
+                if cur.x == w - 1 {
+                    wrapped_x = true;
+                }
+                cur.x = (cur.x + 1) % w;
+            }
+            PORT_W => {
+                // Mesh memory controllers exit west off-fabric at x = 0.
+                if t.kind == TopologyKind::Mesh {
+                    if let NodeKind::MemCtrl { attach_port: PORT_W } = t.node(dst).kind {
+                        if cur == goal && cur.x == 0 {
+                            return Ok((hops, wrapped_x, wrapped_y));
+                        }
+                    }
+                    if cur.x == 0 {
+                        return Err(format!("fell off the west edge at {cur:?}"));
+                    }
+                }
+                if cur.x == 0 {
+                    wrapped_x = true;
+                }
+                cur.x = (cur.x + w - 1) % w;
+            }
+            PORT_N => {
+                if t.kind == TopologyKind::Ring {
+                    // Ring controllers hang off the north ports.
+                    if let NodeKind::MemCtrl { attach_port: PORT_N } = t.node(dst).kind {
+                        if cur == goal {
+                            return Ok((hops, wrapped_x, wrapped_y));
+                        }
+                    }
+                    return Err(format!("ring routed north at {cur:?}"));
+                }
+                if t.kind == TopologyKind::Mesh {
+                    if let NodeKind::MemCtrl { attach_port: PORT_N } = t.node(dst).kind {
+                        if cur == goal && cur.y == h - 1 {
+                            return Ok((hops, wrapped_x, wrapped_y));
+                        }
+                    }
+                    if cur.y == h - 1 {
+                        return Err(format!("fell off the north edge at {cur:?}"));
+                    }
+                }
+                if cur.y == h - 1 {
+                    wrapped_y = true;
+                }
+                cur.y = (cur.y + 1) % h;
+            }
+            PORT_S => {
+                if t.kind == TopologyKind::Mesh {
+                    if let NodeKind::MemCtrl { attach_port: PORT_S } = t.node(dst).kind {
+                        if cur == goal && cur.y == 0 {
+                            return Ok((hops, wrapped_x, wrapped_y));
+                        }
+                    }
+                    if cur.y == 0 {
+                        return Err(format!("fell off the south edge at {cur:?}"));
+                    }
+                }
+                if cur.y == 0 {
+                    wrapped_y = true;
+                }
+                cur.y = (cur.y + h - 1) % h;
+            }
+            PORT_MEM => {
+                if let NodeKind::MemCtrl { attach_port: PORT_MEM } = t.node(dst).kind {
+                    if cur == goal {
+                        return Ok((hops, wrapped_x, wrapped_y));
+                    }
+                }
+                return Err(format!("spurious PORT_MEM exit at {cur:?}"));
+            }
+            p => return Err(format!("unexpected port {p}")),
+        }
+        hops += 1;
+        if hops > limit {
+            return Err(format!("no termination after {hops} hops {src:?}->{dst:?}"));
+        }
+    }
+}
+
+/// Handle mesh memory controllers that exit east: their walk ends one
+/// step off-fabric, which `walk` cannot represent; route to the host
+/// router instead and count the attach exit separately.
+fn mesh_east_mem(t: &Topology, dst: NodeId) -> bool {
+    t.kind == TopologyKind::Mesh
+        && matches!(t.node(dst).kind, NodeKind::MemCtrl { attach_port: PORT_E })
+}
+
+fn all_pairs_terminate_minimal(t: &Topology) -> Result<(), String> {
+    for src in &t.nodes {
+        for dst in &t.nodes {
+            if src.id == dst.id || mesh_east_mem(t, dst.id) {
+                continue;
+            }
+            let (hops, _, _) = walk(t, src.id, dst.id)?;
+            let want = t.hops(src.id, dst.id);
+            if hops != want {
+                return Err(format!(
+                    "{:?}->{:?} took {hops} hops, analytic {want} ({:?})",
+                    src.id,
+                    dst.id,
+                    t.kind
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Every src/dst pair terminates and the walked hop count equals the
+/// analytic shortest-path distance, on random sizes of all three fabrics
+/// with random memory-controller placements.
+#[test]
+fn prop_route_tables_terminate_minimally() {
+    let edges = [MemEdge::None, MemEdge::West, MemEdge::EastWest, MemEdge::All];
+    check("route-tables-minimal", &PropConfig::default(), |rng| {
+        let w = 2 + rng.below(5) as u8; // 2..=6
+        let h = 1 + rng.below(5) as u8; // 1..=5
+        let mem = edges[rng.below(4) as usize];
+        all_pairs_terminate_minimal(&Topology::mesh(w, h, mem))?;
+        all_pairs_terminate_minimal(&Topology::torus(w, h, mem))?;
+        all_pairs_terminate_minimal(&Topology::ring(w, mem))?;
+        Ok(())
+    });
+}
+
+/// On odd-size tori no direction ties exist, so the wraparound link of a
+/// dimension is crossed **iff** the wrap arc is strictly shorter than
+/// the direct one.
+#[test]
+fn prop_torus_wraps_iff_shorter() {
+    check("torus-wrap-iff-shorter", &PropConfig::default(), |rng| {
+        let w = [3u8, 5, 7][rng.below(3) as usize];
+        let h = [3u8, 5, 7][rng.below(3) as usize];
+        let t = Topology::torus(w, h, MemEdge::None);
+        for src in &t.nodes {
+            for dst in &t.nodes {
+                if src.id == dst.id {
+                    continue;
+                }
+                let (_, wx, wy) = walk(&t, src.id, dst.id)?;
+                let (a, b) = (src.coord, dst.coord);
+                let direct_x = a.x.abs_diff(b.x) as u16;
+                let want_wx = direct_x != 0 && (w as u16 - direct_x) < direct_x;
+                let direct_y = a.y.abs_diff(b.y) as u16;
+                let want_wy = direct_y != 0 && (h as u16 - direct_y) < direct_y;
+                prop_assert!(
+                    wx == want_wx && wy == want_wy,
+                    "{a:?}->{b:?} on {w}x{h}: wrapped ({wx},{wy}), want \
+                     ({want_wx},{want_wy})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Same property on odd rings: the single wrap link is used iff the
+/// wrap arc is strictly shorter.
+#[test]
+fn prop_ring_wraps_iff_shorter() {
+    check("ring-wrap-iff-shorter", &PropConfig::default(), |rng| {
+        let n = [3u8, 5, 7, 9, 11][rng.below(5) as usize];
+        let t = Topology::ring(n, MemEdge::None);
+        for src in 0..n as u16 {
+            for dst in 0..n as u16 {
+                if src == dst {
+                    continue;
+                }
+                let (hops, wx, _) = walk(&t, NodeId(src), NodeId(dst))?;
+                let direct = (src as i32 - dst as i32).unsigned_abs() as u16;
+                let want_wrap = (n as u16 - direct) < direct;
+                prop_assert!(wx == want_wrap, "{src}->{dst} on {n}-ring");
+                prop_assert!(
+                    hops == t.hops(NodeId(src), NodeId(dst)),
+                    "{src}->{dst} on {n}-ring took {hops} hops"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The east-exiting mesh controllers excluded from the generic walk
+/// still route minimally: the table at the host router exits east.
+#[test]
+fn mesh_east_mem_ctrls_exit_east() {
+    let t = Topology::mesh(3, 2, MemEdge::EastWest);
+    for dst in t.mem_ctrls() {
+        if !mesh_east_mem(&t, dst) {
+            continue;
+        }
+        let host = t.node(dst).coord;
+        assert_eq!(t.route_table(host).lookup(dst), PORT_E);
+        // One step west of the host, the table still heads east.
+        let west = Coord::new(host.x - 1, host.y);
+        assert_eq!(t.route_table(west).lookup(dst), PORT_E);
+    }
+}
+
+/// A torus system is buildable at every radix-sensitive corner the
+/// property sizes can hit (1-wide rows/columns have no wrap channels).
+#[test]
+fn degenerate_sizes_build() {
+    for (w, h) in [(1u8, 1u8), (2, 1), (1, 3), (2, 2)] {
+        let t = Topology::torus(w, h, MemEdge::West);
+        assert_eq!(t.num_tiles, w as usize * h as usize);
+        // No self-links: every channel connects two distinct ports.
+        for (a, pa, b, pb) in t.channels() {
+            assert!(a != b || pa != pb, "self-channel at router {a}");
+        }
+    }
+    // Building the live systems exercises the debug asserts in
+    // build_network (port collisions) for all fabrics.
+    let _ = floonoc::noc::NocSystem::new(NocConfig::torus(2, 2));
+    let _ = floonoc::noc::NocSystem::new(NocConfig::ring(2));
+    let _ = floonoc::noc::NocSystem::new(NocConfig::mesh(1, 1));
+}

@@ -1,47 +1,29 @@
 //! End-to-end simulator throughput: full meshes under load — the number
 //! that gates how big a sweep we can afford (L3 perf deliverable).
 //!
-//! Reports simulated cycles/s and router-flit-events/s, runs the
-//! `cycles_per_second` regression gate (pin a floor with `CPS_FLOOR=<n>`),
-//! and measures the parallel sweep runner against its serial reference:
-//! same points, byte-identical report, wall-clock speedup printed.
+//! Everything measured here is implemented in `floonoc::perf` (shared
+//! with `repro bench`, so CI and developers measure identical code):
+//!
+//! * classic per-mesh-size iteration timings (2×2 / 4×4 / 8×8 saturated);
+//! * activity-gated vs dense-reference cycles/s on the sparse-trace and
+//!   saturated scenarios;
+//! * the `cycles_per_second` regression gate (pin a floor with
+//!   `CPS_FLOOR=<n>` or `CPS_FLOOR_4X4_SATURATED=<n>`; CI does);
+//! * the parallel sweep runner against its serial reference (same
+//!   points, byte-identical report, wall-clock speedup printed);
+//! * the `BENCH_e2e.json` trajectory file at the repository root
+//!   (override the location with `BENCH_OUT=<path>`; `BENCH_QUICK=1`
+//!   shrinks cycle counts for smoke runs).
 
-use floonoc::cluster::{TileTraffic, TiledWorkload};
-use floonoc::dse::parallel::{run_sweep, sweep_report_json, ParallelRunner, SweepPoint};
-use floonoc::flit::NodeId;
-use floonoc::noc::{LinkMode, NocConfig, NocSystem};
-use floonoc::traffic::{GenCfg, Pattern};
-use floonoc::util::bench::{cps_gate, time_once, Bencher};
-use floonoc::util::json::pretty;
-
-fn saturated_workload(n: u8) -> TiledWorkload {
-    let sys = NocSystem::new(NocConfig::mesh(n, n));
-    let tiles = sys.topo.num_tiles;
-    let profiles: Vec<TileTraffic> = (0..tiles)
-        .map(|i| TileTraffic {
-            core: Some(GenCfg {
-                pattern: Pattern::UniformTiles,
-                num_txns: u64::MAX,
-                seed: i as u64,
-                ..GenCfg::narrow_probe(NodeId(0), 1)
-            }),
-            dma: Some(GenCfg {
-                pattern: Pattern::UniformTiles,
-                num_txns: u64::MAX,
-                seed: 100 + i as u64,
-                ..GenCfg::dma_burst(NodeId(0), 1, false)
-            }),
-        })
-        .collect();
-    TiledWorkload::new(sys, profiles)
-}
+use floonoc::perf;
+use floonoc::sim::SimMode;
+use floonoc::util::bench::Bencher;
 
 fn bench_mesh(b: &mut Bencher, n: u8, label: &str) {
     const CYCLES: u64 = 20_000;
     let mut flits = 0u64;
-    let mut w = saturated_workload(n);
     b.bench(&format!("{label}: {CYCLES} cycles saturated"), Some(CYCLES), || {
-        w = saturated_workload(n);
+        let mut w = perf::saturated_workload(n, SimMode::Gated);
         for _ in 0..CYCLES {
             w.step();
         }
@@ -53,54 +35,6 @@ fn bench_mesh(b: &mut Bencher, n: u8, label: &str) {
     println!("    ({flits} flit-hops total, {per_cycle:.1} per cycle)");
 }
 
-/// The sweep used for the serial-vs-parallel comparison: independent
-/// ring-DMA points across mesh sizes and link modes, sized so one point
-/// is a nontrivial simulation.
-fn speedup_points() -> Vec<SweepPoint> {
-    let mut points = SweepPoint::grid(
-        &[4, 6],
-        &[LinkMode::NarrowWide, LinkMode::WideOnly],
-        &[7, 15],
-    );
-    for p in &mut points {
-        p.bursts_per_tile = 24;
-    }
-    points
-}
-
-fn bench_parallel_sweep() {
-    let points = speedup_points();
-    let cores = ParallelRunner::default().threads();
-    println!(
-        "\n== parallel sweep: {} points, {} cores ==",
-        points.len(),
-        cores
-    );
-    let mut serial_results = Vec::new();
-    let serial = time_once(|| {
-        serial_results = run_sweep(&points, &ParallelRunner::serial());
-    });
-    let mut parallel_results = Vec::new();
-    let parallel = time_once(|| {
-        parallel_results = run_sweep(&points, &ParallelRunner::default());
-    });
-    let serial_json = pretty(&sweep_report_json(&serial_results));
-    let parallel_json = pretty(&sweep_report_json(&parallel_results));
-    assert_eq!(
-        serial_json, parallel_json,
-        "parallel sweep must be byte-identical to serial"
-    );
-    let speedup = serial.as_secs_f64() / parallel.as_secs_f64().max(1e-9);
-    println!(
-        "serial {:.2}s, parallel {:.2}s => speedup {speedup:.2}x (byte-identical reports)",
-        serial.as_secs_f64(),
-        parallel.as_secs_f64()
-    );
-    if cores >= 4 && speedup < 2.0 {
-        println!("    WARNING: expected >= 2x on >= 4 cores, got {speedup:.2}x");
-    }
-}
-
 fn main() {
     println!("== bench_e2e: whole-system simulation throughput ==");
     let mut b = Bencher::new(1, 5);
@@ -108,10 +42,11 @@ fn main() {
     bench_mesh(&mut b, 4, "4x4 mesh");
     bench_mesh(&mut b, 8, "8x8 mesh");
 
-    // cycles/s regression gate over the 4x4 saturated mesh (the sweep
-    // workhorse size). Pin a floor in CI with CPS_FLOOR=<cycles/s>.
-    let mut w = saturated_workload(4);
-    cps_gate("4x4-saturated", 20_000, || w.step());
-
-    bench_parallel_sweep();
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let report = perf::run_e2e(quick);
+    let path = match std::env::var("BENCH_OUT") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => perf::default_report_path(),
+    };
+    perf::write_report(&report, &path).expect("bench report must be writable");
 }

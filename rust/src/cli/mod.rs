@@ -10,6 +10,7 @@
 //! repro sweep <rob|buffers|burst|mesh|topology|output-reg>  ablations
 //! repro scale_topology [--mesh n]     mesh vs torus vs ring at equal tiles
 //! repro dse [--mesh n] [--artifacts dir]              analytical model vs sim
+//! repro bench [--out path] [--quick]  e2e perf scenarios -> BENCH_e2e.json
 //! ```
 //!
 //! Sweep-style commands (`reproduce fig5a|fig5b`, `sweep`, `dse`) accept
@@ -115,6 +116,11 @@ COMMANDS:
                                a parallel cycle-accurate point sweep with
                                cross-topology rows; options: --mesh <n>,
                                --artifacts <dir>, --jobs <n>
+  bench                        end-to-end performance scenarios (activity-
+                               gated vs dense cycles/s on sparse + saturated
+                               workloads, parallel-sweep speedup, cps gate)
+                               written to BENCH_e2e.json at the repo root;
+                               options: --out <path>, --quick
 
   --topology <kind>: fabric shape for simulate (mesh is the default;
               torus adds wraparound rows+columns, ring is a 1-D cycle).

@@ -18,6 +18,7 @@
 use anyhow::{bail, Context};
 
 use crate::noc::{LinkMode, NocConfig};
+use crate::sim::SimMode;
 use crate::topology::{MemEdge, TopologyKind};
 use crate::util::json::Json;
 
@@ -66,6 +67,13 @@ pub fn noc_config_from_value(j: &Json) -> crate::Result<NocConfig> {
             "narrow_wide" => LinkMode::NarrowWide,
             "wide_only" => LinkMode::WideOnly,
             other => bail!("unknown mode '{other}'"),
+        };
+    }
+    if let Some(sim) = j.get("sim_mode").and_then(Json::as_str) {
+        cfg.sim_mode = match sim {
+            "gated" => SimMode::Gated,
+            "dense" => SimMode::Dense,
+            other => bail!("unknown sim_mode '{other}' (gated|dense)"),
         };
     }
     if let Some(r) = j.get("router") {
@@ -146,6 +154,7 @@ pub fn noc_config_to_json(cfg: &NocConfig) -> Json {
                 .to_string(),
             ),
         ),
+        ("sim_mode", Json::Str(cfg.sim_mode.name().to_string())),
         (
             "router",
             Json::obj(vec![
@@ -234,6 +243,25 @@ mod tests {
         assert!(noc_config_from_json(r#"{"topology": "hypercube"}"#).is_err());
         let two_d_ring = r#"{"topology": "ring", "mesh": {"width": 4, "height": 2}}"#;
         assert!(noc_config_from_json(two_d_ring).is_err());
+    }
+
+    #[test]
+    fn sim_mode_axis_parses() {
+        assert_eq!(
+            noc_config_from_json(r#"{"sim_mode": "dense"}"#).unwrap().sim_mode,
+            SimMode::Dense
+        );
+        assert_eq!(
+            noc_config_from_json(r#"{"sim_mode": "gated"}"#).unwrap().sim_mode,
+            SimMode::Gated
+        );
+        // Omitted => gated (the fast default, backwards compatible).
+        assert_eq!(noc_config_from_json("{}").unwrap().sim_mode, SimMode::Gated);
+        assert!(noc_config_from_json(r#"{"sim_mode": "warp"}"#).is_err());
+        // Round-trips through serialization.
+        let cfg = NocConfig::mesh(3, 3).dense();
+        let back = noc_config_from_value(&noc_config_to_json(&cfg)).unwrap();
+        assert_eq!(back.sim_mode, SimMode::Dense);
     }
 
     #[test]

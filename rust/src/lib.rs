@@ -35,7 +35,9 @@
 //!   compute and the analytical NoC model from the Rust side;
 //! * [`coordinator`] — experiment orchestration reproducing every table and
 //!   figure of the paper's evaluation;
-//! * [`report`] — table/figure formatters, incl. the Table-II comparison.
+//! * [`report`] — table/figure formatters, incl. the Table-II comparison;
+//! * [`perf`] — end-to-end simulator-throughput scenarios (activity-gated
+//!   vs dense reference) and the `BENCH_e2e.json` trajectory writer.
 //!
 //! Python (JAX + Pallas) is used **only at build time** to author and
 //! AOT-lower the compute kernels; the simulator and all experiments run
@@ -63,6 +65,7 @@ pub mod compute;
 pub mod dse;
 pub mod coordinator;
 pub mod report;
+pub mod perf;
 pub mod cli;
 
 /// Crate-wide result type.

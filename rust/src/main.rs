@@ -11,6 +11,7 @@
 //! repro sweep     <rob|buffers|burst|mesh|topology|output-reg> [--jobs n]
 //! repro scale_topology [--mesh n] [--jobs n]
 //! repro dse       [--mesh n] [--artifacts dir] [--jobs n]
+//! repro bench     [--out path] [--quick]
 //! ```
 //!
 //! `--jobs n` controls the parallel sweep runner: every sweep/ablation
@@ -60,6 +61,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         "sweep" => sweep(args)?,
         "scale_topology" => scale_topology(args)?,
         "dse" => dse(args)?,
+        "bench" => bench(args)?,
         other => bail!("unknown command '{other}' (try 'repro help')"),
     }
     Ok(())
@@ -352,4 +354,16 @@ fn dse(args: &Args) -> anyhow::Result<()> {
     let n = args.opt_u64("mesh", 4)? as u8;
     let dir = args.opt("artifacts").unwrap_or("artifacts");
     floonoc::dse::run_dse(n, dir, &runner_from(args)?)
+}
+
+/// `repro bench`: the end-to-end performance scenarios of
+/// `cargo bench --bench bench_e2e`, runnable from the installed binary,
+/// writing the `BENCH_e2e.json` trajectory file.
+fn bench(args: &Args) -> anyhow::Result<()> {
+    let report = floonoc::perf::run_e2e(args.flag("quick"));
+    let path = match args.opt("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => floonoc::perf::default_report_path(),
+    };
+    floonoc::perf::write_report(&report, &path)
 }

@@ -59,6 +59,10 @@ fn offer(
 ) {
     let lid = nets[net].inject[node_idx];
     nets[net].links[lid].offer(flit);
+    // Commit-time wake edge (NI inject → local link): the gated step
+    // loop must visit this link next cycle or the flit would be
+    // stranded in a "clock-gated" inject register forever.
+    nets[net].wake_link(lid);
     counters[net].injected += 1;
 }
 

@@ -3,9 +3,10 @@
 use crate::flit::{ChannelClass, FlooFlit, MsgClass, NodeId, Payload};
 use crate::ni::{Initiator, InitiatorCfg, Target, TargetCfg};
 use crate::router::{Router, RouterCfg, PORT_LOCAL};
-use crate::sim::{Link, LinkId};
+use crate::sim::{Link, LinkId, SimMode};
 use crate::stats::BandwidthMeter;
 use crate::topology::{MemEdge, NodeKind, Topology, TopologyKind};
+use crate::util::activeset::ActiveSet;
 
 use super::inject::InjectState;
 
@@ -97,6 +98,10 @@ pub struct NocConfig {
     pub mem_edge: MemEdge,
     /// Physical-link configuration under evaluation.
     pub mode: LinkMode,
+    /// Step-loop strategy: activity-gated (default) or the dense
+    /// reference sweep. Cycle-accurate equivalence between the two is
+    /// pinned by `tests/gated_equivalence.rs`.
+    pub sim_mode: SimMode,
     /// Router input-buffer depth (flits).
     pub in_buf_depth: usize,
     /// Output register on router links ("elastic buffer", §III-C): the
@@ -120,6 +125,7 @@ impl Default for NocConfig {
             height: 1,
             mem_edge: MemEdge::None,
             mode: LinkMode::NarrowWide,
+            sim_mode: SimMode::Gated,
             in_buf_depth: 2,
             output_reg: true,
             narrow_init: InitiatorCfg::narrow_default(),
@@ -189,6 +195,17 @@ impl NocConfig {
         self.mem_edge = edge;
         self
     }
+
+    /// Select the step-loop strategy (gated vs dense reference).
+    pub fn with_sim_mode(mut self, mode: SimMode) -> Self {
+        self.sim_mode = mode;
+        self
+    }
+
+    /// Switch to the dense reference step loop (differential testing).
+    pub fn dense(self) -> Self {
+        self.with_sim_mode(SimMode::Dense)
+    }
 }
 
 /// One physical network: one router per tile, the fabric's channels
@@ -203,6 +220,136 @@ pub struct Network {
     pub inject: Vec<LinkId>,
     /// Per node: router -> NI link.
     pub eject: Vec<LinkId>,
+    /// Consumer router per link (`None` for eject links, whose consumer
+    /// is the node's NI). This is the static wake-edge table of the
+    /// gated step loop: when a link's deliver leaves its input buffer
+    /// non-empty, the sink router is woken for this cycle.
+    link_sink: Vec<Option<usize>>,
+    /// Clock-gating bitmap: links that may hold flits. Invariant — every
+    /// link with `occupancy() > 0` has its bit set (the set may lag on
+    /// the quiescent side; stale bits are pruned by the next sweep).
+    link_active: ActiveSet,
+    /// Routers to step *this* cycle; rebuilt from link wake edges every
+    /// cycle (a router runs iff one of its input buffers holds a flit).
+    router_wake: ActiveSet,
+}
+
+impl Network {
+    /// Mark a link as holding flits (wake edge at commit time). Called
+    /// for every producer-side [`Link::offer`]: router commits wake
+    /// their output links internally via [`Network::step_gated`]; NI
+    /// injection calls this directly.
+    #[inline]
+    pub(crate) fn wake_link(&mut self, lid: LinkId) {
+        self.link_active.insert(lid);
+    }
+
+    /// Number of links currently in the active set (instrumentation:
+    /// the activity factor the gated loop actually pays for).
+    pub fn active_link_count(&self) -> usize {
+        self.link_active.count()
+    }
+
+    /// Is `lid` currently in the active set? (test/instrumentation)
+    pub fn link_is_active(&self, lid: LinkId) -> bool {
+        self.link_active.contains(lid)
+    }
+
+    /// One activity-gated cycle of this network, equivalent to
+    /// [`Network::step_dense`] by construction:
+    ///
+    /// 1. **link sweep** — only links in the active set deliver. A link
+    ///    whose buffer holds flits afterwards wakes its sink router; a
+    ///    link left with zero occupancy is pruned from the set (it can
+    ///    only re-enter via an offer-time wake edge).
+    /// 2. **router sweep** — only woken routers step. Every output port
+    ///    that accepted a flit during commit wakes its output link so
+    ///    next cycle's link sweep visits it.
+    ///
+    /// Skipped components are exactly those whose step would have been
+    /// a no-op (empty links return immediately; routers with empty
+    /// input buffers never pass the compute phase), so all statistics
+    /// are byte-identical to dense stepping.
+    pub(crate) fn step_gated(&mut self) {
+        let Network {
+            links,
+            routers,
+            link_sink,
+            link_active,
+            router_wake,
+            ..
+        } = self;
+        // Gating invariant (debug builds): no occupied link may be
+        // missing from the active set — a violation means an offer path
+        // without a wake edge, which would strand flits silently.
+        #[cfg(debug_assertions)]
+        for (lid, l) in links.iter().enumerate() {
+            debug_assert!(
+                l.is_quiescent() || link_active.contains(lid),
+                "occupied link {lid} missing from the active set"
+            );
+        }
+        router_wake.clear();
+        for wi in 0..link_active.num_words() {
+            // Copy the word, then walk its set bits: the sweep only
+            // removes bits of links it has already visited, so mutating
+            // the live set underneath the copy is safe.
+            let mut w = link_active.word(wi);
+            while w != 0 {
+                let lid = (wi << 6) + w.trailing_zeros() as usize;
+                w &= w - 1;
+                let s = links[lid].deliver();
+                if s.consumer_ready {
+                    if let Some(r) = link_sink[lid] {
+                        router_wake.insert(r);
+                    }
+                }
+                if !s.still_active {
+                    link_active.remove(lid);
+                }
+            }
+        }
+        // Wake-completeness invariant (debug builds): every router with
+        // a non-empty input buffer must have been woken by the link
+        // sweep — a miss here means a consumer_ready edge was lost and
+        // a flit would rot in an input buffer.
+        #[cfg(debug_assertions)]
+        for (r, router) in routers.iter().enumerate() {
+            debug_assert!(
+                router.is_quiescent(links) || router_wake.contains(r),
+                "router {r} has buffered input but was not woken"
+            );
+        }
+        // The router sweep never mutates `router_wake` itself (only
+        // `link_active` and the routers), so plain iteration is safe.
+        for r in router_wake.iter() {
+            let act = routers[r].step(links);
+            // Wake-precision converse: the link sweep only wakes routers
+            // whose input buffers hold flits, so a woken router must see
+            // at least one input. A spurious wake is harmless for stats
+            // (the step no-ops) but means an edge fired wrongly.
+            debug_assert!(act.any_input, "woken router {r} saw no input");
+            let mut m = act.woke_outputs;
+            while m != 0 {
+                let o = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let lid = routers[r].out_links[o]
+                    .expect("commit woke an unconnected output port");
+                link_active.insert(lid);
+            }
+        }
+    }
+
+    /// One dense reference cycle: every link delivers, every router
+    /// steps. The oracle for differential testing of the gated loop.
+    pub(crate) fn step_dense(&mut self) {
+        for l in &mut self.links {
+            l.deliver();
+        }
+        for r in &mut self.routers {
+            r.step(&mut self.links);
+        }
+    }
 }
 
 /// Per-node NI bundle: initiators exist on tiles only.
@@ -333,24 +480,27 @@ impl NocSystem {
     /// Advance one clock cycle.
     pub fn step(&mut self) {
         let now = self.now;
-        // Phases 1+2 per network, skipping provably idle networks: a
-        // network with no flit in flight (see [`Self::in_flight`]) has
+        // Phases 1+2 per network. Gated mode (default) sweeps only the
+        // active-set bits — cost tracks activity, not fabric size; its
+        // empty-set case subsumes the whole-network idle skip. Dense
+        // mode is the reference sweep, still guarded by the
+        // flit-conservation skip (a network with no flit in flight has
         // nothing to deliver and every router's compute phase would see
-        // empty inputs — both sweeps are no-ops by construction. Wormhole
-        // locks and arbiter state are untouched by the skip, exactly as
-        // they would be by the no-op sweeps.
-        for n in 0..self.nets.len() {
-            if self.in_flight(n) == 0 {
-                continue;
+        // empty inputs — both sweeps are no-ops by construction;
+        // wormhole locks and arbiter state are untouched either way).
+        match self.cfg.sim_mode {
+            SimMode::Gated => {
+                for net in &mut self.nets {
+                    net.step_gated();
+                }
             }
-            let net = &mut self.nets[n];
-            // Phase 1: links deliver registered flits into input buffers.
-            for l in &mut net.links {
-                l.deliver();
-            }
-            // Phase 2: routers switch.
-            for r in &mut net.routers {
-                r.step(&mut net.links);
+            SimMode::Dense => {
+                for n in 0..self.nets.len() {
+                    if self.in_flight(n) == 0 {
+                        continue;
+                    }
+                    self.nets[n].step_dense();
+                }
             }
         }
         // Phase 3: NIs terminate and inject.
@@ -514,7 +664,10 @@ fn build_network(topo: &Topology, cfg: &NocConfig) -> Network {
 
     // Neighbour channels — grid-adjacent pairs plus the fabric's
     // wraparound links — as two directed links each (router outputs are
-    // pipelined when output_reg is set: the two-cycle router).
+    // pipelined when output_reg is set: the two-cycle router). Each
+    // link's consuming router is recorded in `link_sink`: the gated
+    // step loop's static wake-edge table.
+    let mut link_sink: Vec<Option<usize>> = Vec::new();
     for (a, port_a, b, port_b) in topo.channels() {
         debug_assert!(
             routers[a].out_links[port_a].is_none() && routers[b].in_links[port_b].is_none(),
@@ -523,9 +676,11 @@ fn build_network(topo: &Topology, cfg: &NocConfig) -> Network {
         let l = new_link(&mut links, true);
         routers[a].out_links[port_a] = Some(l);
         routers[b].in_links[port_b] = Some(l);
+        link_sink.push(Some(b));
         let l = new_link(&mut links, true);
         routers[b].out_links[port_b] = Some(l);
         routers[a].in_links[port_a] = Some(l);
+        link_sink.push(Some(a));
     }
 
     // Local ports: tiles on PORT_LOCAL, memory controllers on their attach
@@ -545,16 +700,26 @@ fn build_network(topo: &Topology, cfg: &NocConfig) -> Network {
         let inj = new_link(&mut links, false);
         routers[r].in_links[port] = Some(inj);
         inject[node.id.0 as usize] = inj;
+        link_sink.push(Some(r));
         let ej = new_link(&mut links, true);
         routers[r].out_links[port] = Some(ej);
         eject[node.id.0 as usize] = ej;
+        // Eject links are consumed by the node's NI, which is stepped
+        // every cycle in phase 3 — no router wake edge.
+        link_sink.push(None);
     }
 
+    debug_assert_eq!(link_sink.len(), links.len());
+    let num_links = links.len();
+    let num_routers = routers.len();
     Network {
         links,
         routers,
         inject,
         eject,
+        link_sink,
+        link_active: ActiveSet::new(num_links),
+        router_wake: ActiveSet::new(num_routers),
     }
 }
 
@@ -833,6 +998,104 @@ mod tests {
         }
         assert_eq!(beats, 8);
         assert!(sys.run_until_idle(20));
+    }
+
+    /// The gated and dense step loops must agree on the calibrated
+    /// zero-load number exactly: same round-trip latency, same total
+    /// cycles to drain, same router activity. A one-cycle divergence
+    /// here means a wake edge fires a cycle early or late.
+    #[test]
+    fn gated_matches_dense_zero_load() {
+        use crate::sim::SimMode;
+        let run = |mode: SimMode| {
+            let mut sys = NocSystem::new(NocConfig::mesh(2, 1).with_sim_mode(mode));
+            sys.narrow_init(NodeId(0))
+                .push_ar(rd(1, 0, 3, TILE_SPAN + 0x100), NodeId(1));
+            let mut completed_at = None;
+            for _ in 0..100 {
+                sys.step();
+                if sys.narrow_init(NodeId(0)).r_out.pop().is_some() {
+                    completed_at = Some(sys.now);
+                    break;
+                }
+            }
+            assert!(sys.run_until_idle(10));
+            (
+                completed_at.expect("read completes"),
+                sys.now,
+                sys.router_flit_hops(NET_REQ),
+                sys.router_flit_hops(NET_RSP),
+            )
+        };
+        assert_eq!(run(SimMode::Gated), run(SimMode::Dense));
+    }
+
+    /// Activity tracking: after a gated system drains, its active sets
+    /// prune back to (near-)empty — at most the one-sweep lag of links
+    /// drained by the final pops — and a fresh injection re-populates
+    /// them via the inject wake edge.
+    #[test]
+    fn gated_active_set_prunes_and_rewakes() {
+        let mut sys = NocSystem::new(NocConfig::mesh(2, 2));
+        sys.narrow_init(NodeId(0))
+            .push_ar(rd(1, 0, 3, TILE_SPAN + 0x100), NodeId(1));
+        let mut done = false;
+        for _ in 0..100 {
+            sys.step();
+            if sys.narrow_init(NodeId(0)).r_out.pop().is_some() {
+                done = true;
+                break;
+            }
+        }
+        assert!(done);
+        assert!(sys.run_until_idle(20));
+        // Two extra steps prune any stale (drained-by-pop) bits.
+        sys.step();
+        sys.step();
+        for net in &sys.nets {
+            assert_eq!(net.active_link_count(), 0, "drained fabric fully gated off");
+        }
+        // A new injection must wake the local link the same cycle.
+        sys.narrow_init(NodeId(0))
+            .push_ar(rd(2, 0, 3, TILE_SPAN + 0x140), NodeId(1));
+        sys.step(); // injection happens in phase 3 of this step
+        let inj = sys.nets[NET_REQ].inject[0];
+        assert!(
+            sys.nets[NET_REQ].link_is_active(inj),
+            "inject wake edge marks the local link active"
+        );
+        let mut done = false;
+        for _ in 0..100 {
+            sys.step();
+            if sys.narrow_init(NodeId(0)).r_out.pop().is_some() {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "second read completes after re-wake");
+        assert!(sys.run_until_idle(20));
+    }
+
+    /// Dense reference mode stays fully functional (it is the
+    /// differential oracle, so it must keep passing the same workloads).
+    #[test]
+    fn dense_reference_mode_functional() {
+        let mut sys = NocSystem::new(NocConfig::mesh(2, 1).dense());
+        assert_eq!(sys.cfg.sim_mode, crate::sim::SimMode::Dense);
+        sys.wide_init(NodeId(0))
+            .push_ar(rd(2, 15, 6, TILE_SPAN), NodeId(1));
+        let mut beats = 0;
+        for _ in 0..200 {
+            sys.step();
+            while sys.wide_init(NodeId(0)).r_out.pop().is_some() {
+                beats += 1;
+            }
+            if beats == 16 {
+                break;
+            }
+        }
+        assert_eq!(beats, 16);
+        assert!(sys.run_until_idle(10));
     }
 
     /// Two concurrent wide writes from different tiles to the same target

@@ -1,0 +1,453 @@
+//! End-to-end simulator-performance scenarios and the recorded benchmark
+//! trajectory (`BENCH_e2e.json`).
+//!
+//! This module is the single implementation behind two entry points —
+//! `cargo bench --bench bench_e2e` and `repro bench` — so the numbers
+//! the CI gate sees and the numbers a developer reproduces locally come
+//! from identical code. Each run measures:
+//!
+//! * **sparse_trace** — a PATRONoC-style trace workload on an 8×8 mesh
+//!   where a handful of nodes exchange traffic and most of the fabric is
+//!   quiet most cycles: the activity-gated step loop's home turf (the
+//!   tentpole bar is ≥ 2× dense here);
+//! * **saturated** — every tile of a 4×4 mesh injecting uniform-random
+//!   narrow + wide traffic at full rate: the gated loop's worst case
+//!   (bar: within 5% of dense — the active set is allowed to cost its
+//!   bookkeeping only when it buys nothing);
+//! * **parallel sweep** — the serial-vs-parallel `ParallelRunner`
+//!   speedup on identical points with a byte-identical-report check;
+//! * **cps gate** — [`crate::util::bench::cps_gate`] over the gated
+//!   saturated workload, enforcing the pinned `CPS_FLOOR` when CI sets
+//!   one.
+//!
+//! Results are written as `BENCH_e2e.json` at the repository root so the
+//! performance trajectory is recorded PR-over-PR (see
+//! `docs/performance.md` for how to read the file).
+
+use std::path::{Path, PathBuf};
+
+use crate::cluster::{TileTraffic, TiledWorkload};
+use crate::dse::parallel::{run_sweep, sweep_report_json, ParallelRunner, SweepPoint};
+use crate::flit::NodeId;
+use crate::noc::{LinkMode, NocConfig, NocSystem};
+use crate::sim::SimMode;
+use crate::traffic::{GenCfg, Pattern};
+use crate::util::bench::{cps_floor, cps_gate, measure_cps, time_once, CpsResult};
+use crate::util::json::{pretty, Json};
+
+/// Every tile injecting uniform-random narrow + wide traffic at full
+/// rate on an `n × n` mesh — the saturation scenario (and the historic
+/// `bench_e2e` workload).
+pub fn saturated_workload(n: u8, mode: SimMode) -> TiledWorkload {
+    let sys = NocSystem::new(NocConfig::mesh(n, n).with_sim_mode(mode));
+    let tiles = sys.topo.num_tiles;
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                num_txns: u64::MAX,
+                seed: i as u64,
+                ..GenCfg::narrow_probe(NodeId(0), 1)
+            }),
+            dma: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                num_txns: u64::MAX,
+                seed: 100 + i as u64,
+                ..GenCfg::dma_burst(NodeId(0), 1, false)
+            }),
+        })
+        .collect();
+    TiledWorkload::new(sys, profiles)
+}
+
+/// A sparse trace-style workload on an `n × n` mesh (PATRONoC-style,
+/// arXiv 2308.00154): one DMA producer streaming occasional bursts to
+/// the far corner, one probing core, everything else idle. Flits are in
+/// flight on a thin path most cycles — so the dense loop cannot use its
+/// whole-network idle skip — while > 95% of links and routers are
+/// quiescent: exactly the regime activity gating is built for.
+pub fn sparse_trace_workload(n: u8, mode: SimMode) -> TiledWorkload {
+    let sys = NocSystem::new(NocConfig::mesh(n, n).with_sim_mode(mode));
+    let tiles = sys.topo.num_tiles;
+    let far = NodeId((tiles - 1) as u16);
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| {
+            if i == 0 {
+                TileTraffic {
+                    core: Some(GenCfg {
+                        rate: 0.05,
+                        num_txns: u64::MAX,
+                        seed: 0x5AFE,
+                        ..GenCfg::narrow_probe(far, 1)
+                    }),
+                    dma: Some(GenCfg {
+                        rate: 0.02,
+                        num_txns: u64::MAX,
+                        max_outstanding: 2,
+                        seed: 0x50DA,
+                        ..GenCfg::dma_burst(far, 1, false)
+                    }),
+                }
+            } else if i == tiles / 2 {
+                TileTraffic {
+                    core: Some(GenCfg {
+                        rate: 0.03,
+                        num_txns: u64::MAX,
+                        seed: 0x7ACE,
+                        ..GenCfg::narrow_probe(NodeId(0), 1)
+                    }),
+                    dma: None,
+                }
+            } else {
+                TileTraffic::idle()
+            }
+        })
+        .collect();
+    TiledWorkload::new(sys, profiles)
+}
+
+/// One gated-vs-dense throughput comparison of a scenario.
+#[derive(Debug, Clone)]
+pub struct ModeComparison {
+    /// Scenario name (JSON key in the report).
+    pub name: String,
+    /// Simulated cycles per measured run.
+    pub cycles: u64,
+    /// Dense-reference cycles/second.
+    pub dense_cps: f64,
+    /// Activity-gated cycles/second.
+    pub gated_cps: f64,
+}
+
+impl ModeComparison {
+    /// Gated speedup over dense (> 1 means gating wins).
+    pub fn speedup(&self) -> f64 {
+        if self.dense_cps > 0.0 {
+            self.gated_cps / self.dense_cps
+        } else {
+            0.0
+        }
+    }
+
+    /// JSON object for the report file.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cycles", Json::Num(self.cycles as f64)),
+            ("dense_cps", Json::Num(self.dense_cps)),
+            ("gated_cps", Json::Num(self.gated_cps)),
+            ("gated_speedup", Json::Num(self.speedup())),
+        ])
+    }
+}
+
+/// Measure a scenario in both [`SimMode`]s. `mk` must build a fresh,
+/// identically-seeded workload per mode (warm construction is excluded
+/// from the timed region).
+pub fn compare_modes<F>(name: &str, cycles: u64, mk: F) -> ModeComparison
+where
+    F: Fn(SimMode) -> TiledWorkload,
+{
+    let mut dense_w = mk(SimMode::Dense);
+    let dense = measure_cps(cycles, || dense_w.step());
+    let mut gated_w = mk(SimMode::Gated);
+    let gated = measure_cps(cycles, || gated_w.step());
+    let r = ModeComparison {
+        name: name.to_string(),
+        cycles,
+        dense_cps: dense.cycles_per_second(),
+        gated_cps: gated.cycles_per_second(),
+    };
+    println!(
+        "{:<24} dense {:>12.0} c/s | gated {:>12.0} c/s | speedup {:.2}x",
+        r.name,
+        r.dense_cps,
+        r.gated_cps,
+        r.speedup()
+    );
+    r
+}
+
+/// Serial-vs-parallel sweep comparison (byte-identical reports checked).
+#[derive(Debug, Clone)]
+pub struct SweepComparison {
+    /// Independent sweep points executed.
+    pub points: usize,
+    /// Worker threads of the parallel run.
+    pub threads: usize,
+    /// Serial wall time in seconds.
+    pub serial_seconds: f64,
+    /// Parallel wall time in seconds.
+    pub parallel_seconds: f64,
+}
+
+impl SweepComparison {
+    /// Parallel speedup over serial.
+    pub fn speedup(&self) -> f64 {
+        self.serial_seconds / self.parallel_seconds.max(1e-9)
+    }
+
+    /// JSON object for the report file.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("points", Json::Num(self.points as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("serial_seconds", Json::Num(self.serial_seconds)),
+            ("parallel_seconds", Json::Num(self.parallel_seconds)),
+            ("parallel_speedup", Json::Num(self.speedup())),
+        ])
+    }
+}
+
+/// The sweep used for the serial-vs-parallel comparison: independent
+/// ring-DMA points across mesh sizes and link modes, sized so one point
+/// is a nontrivial simulation (smaller under `quick`).
+fn speedup_points(quick: bool) -> Vec<SweepPoint> {
+    let mut points = if quick {
+        SweepPoint::grid(&[4], &[LinkMode::NarrowWide, LinkMode::WideOnly], &[7, 15])
+    } else {
+        SweepPoint::grid(
+            &[4, 6],
+            &[LinkMode::NarrowWide, LinkMode::WideOnly],
+            &[7, 15],
+        )
+    };
+    for p in &mut points {
+        p.bursts_per_tile = if quick { 8 } else { 24 };
+    }
+    points
+}
+
+/// Run the serial-vs-parallel sweep comparison, asserting byte-identical
+/// reports (determinism is part of the contract, not just speed).
+pub fn sweep_speedup(quick: bool) -> SweepComparison {
+    let points = speedup_points(quick);
+    let threads = ParallelRunner::default().threads();
+    let mut serial_results = Vec::new();
+    let serial = time_once(|| {
+        serial_results = run_sweep(&points, &ParallelRunner::serial());
+    });
+    let mut parallel_results = Vec::new();
+    let parallel = time_once(|| {
+        parallel_results = run_sweep(&points, &ParallelRunner::default());
+    });
+    assert_eq!(
+        pretty(&sweep_report_json(&serial_results)),
+        pretty(&sweep_report_json(&parallel_results)),
+        "parallel sweep must be byte-identical to serial"
+    );
+    let r = SweepComparison {
+        points: points.len(),
+        threads,
+        serial_seconds: serial.as_secs_f64(),
+        parallel_seconds: parallel.as_secs_f64(),
+    };
+    println!(
+        "parallel sweep: {} points on {} threads, serial {:.2}s / parallel {:.2}s => {:.2}x (byte-identical)",
+        r.points,
+        r.threads,
+        r.serial_seconds,
+        r.parallel_seconds,
+        r.speedup()
+    );
+    r
+}
+
+/// One full end-to-end performance report (the content of
+/// `BENCH_e2e.json`).
+#[derive(Debug, Clone)]
+pub struct E2eReport {
+    /// Sparse trace scenario (gating's target regime; bar: ≥ 2×).
+    pub sparse: ModeComparison,
+    /// Saturated scenario (gating's worst case; bar: ≥ 0.95×).
+    pub saturated: ModeComparison,
+    /// Serial-vs-parallel sweep runner comparison.
+    pub sweep: SweepComparison,
+    /// The regression-gate measurement (gated saturated workload).
+    pub gate: CpsResult,
+    /// The pinned floor the gate enforced, if CI set one.
+    pub gate_floor: Option<f64>,
+}
+
+/// The name the cps regression gate runs under (also the suffix of its
+/// per-gate floor env var, `CPS_FLOOR_4X4_SATURATED`).
+pub const GATE_NAME: &str = "4x4-saturated";
+
+/// Run every scenario. `quick` shrinks cycle counts and sweep sizes for
+/// CI smoke runs; the measured *ratios* stay meaningful, absolute
+/// cycles/s less so.
+pub fn run_e2e(quick: bool) -> E2eReport {
+    let (sparse_cycles, sat_cycles) = if quick {
+        (20_000, 8_000)
+    } else {
+        (60_000, 20_000)
+    };
+    println!("== e2e performance: activity-gated vs dense reference ==");
+    let sparse = compare_modes("sparse_trace_8x8", sparse_cycles, |m| {
+        sparse_trace_workload(8, m)
+    });
+    let saturated = compare_modes("saturated_4x4", sat_cycles, |m| saturated_workload(4, m));
+    if sparse.speedup() < 2.0 {
+        println!(
+            "    WARNING: sparse-trace gated speedup {:.2}x below the 2x tentpole bar",
+            sparse.speedup()
+        );
+    }
+    if saturated.speedup() < 0.95 {
+        println!(
+            "    WARNING: saturated gated throughput {:.2}x dense — more than 5% regression",
+            saturated.speedup()
+        );
+    }
+    // Regression gate over the gated saturated mesh (the sweep workhorse).
+    let mut w = saturated_workload(4, SimMode::Gated);
+    let gate = cps_gate(GATE_NAME, sat_cycles, || w.step());
+    let gate_floor = cps_floor(GATE_NAME);
+    let sweep = sweep_speedup(quick);
+    E2eReport {
+        sparse,
+        saturated,
+        sweep,
+        gate,
+        gate_floor,
+    }
+}
+
+/// Serialize a report to the `BENCH_e2e.json` schema.
+pub fn report_to_json(r: &E2eReport) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("floonoc-bench-e2e/1".into())),
+        ("provenance", Json::Str("measured".into())),
+        (
+            "scenarios",
+            Json::obj(vec![
+                (r.sparse.name.as_str(), r.sparse.to_json()),
+                (r.saturated.name.as_str(), r.saturated.to_json()),
+                ("parallel_sweep", r.sweep.to_json()),
+            ]),
+        ),
+        (
+            "cps_gate",
+            Json::obj(vec![
+                ("name", Json::Str(GATE_NAME.into())),
+                ("cycles", Json::Num(r.gate.cycles as f64)),
+                ("cycles_per_second", Json::Num(r.gate.cycles_per_second())),
+                (
+                    "floor",
+                    match r.gate_floor {
+                        Some(f) => Json::Num(f),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// Default location of the trajectory file: the repository root, so the
+/// result is recorded PR-over-PR next to `CHANGES.md`.
+pub fn default_report_path() -> PathBuf {
+    // CARGO_MANIFEST_DIR of this crate *is* the repository root (the
+    // manifest lives there; sources are under rust/) — but it is baked
+    // in at build time, so an installed/relocated `repro` binary may
+    // point at a directory that no longer exists. Fall back to the
+    // working directory rather than failing after minutes of
+    // measurement (or silently writing into a stale checkout).
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    if repo_root.is_dir() {
+        repo_root.join("BENCH_e2e.json")
+    } else {
+        PathBuf::from("BENCH_e2e.json")
+    }
+}
+
+/// Write a report as pretty JSON to `path`.
+pub fn write_report(r: &E2eReport, path: &Path) -> crate::Result<()> {
+    use anyhow::Context;
+    let text = format!("{}\n", pretty(&report_to_json(r)));
+    std::fs::write(path, text)
+        .with_context(|| format!("writing bench report to {}", path.display()))?;
+    println!("bench report written to {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The sparse workload really is sparse: after a settle-in period
+    /// the gated active set stays a small fraction of the fabric.
+    #[test]
+    fn sparse_workload_keeps_most_links_gated_off() {
+        let mut w = sparse_trace_workload(8, SimMode::Gated);
+        let mut max_active = 0usize;
+        let mut total_links = 0usize;
+        for _ in 0..2_000 {
+            w.step();
+            let active: usize = w.sys.nets.iter().map(|n| n.active_link_count()).sum();
+            max_active = max_active.max(active);
+        }
+        for n in &w.sys.nets {
+            total_links += n.links.len();
+        }
+        assert!(
+            max_active * 4 < total_links,
+            "sparse scenario must keep >75% of links quiescent: {max_active}/{total_links}"
+        );
+    }
+
+    /// Both scenario constructors are deterministic per mode: two builds
+    /// stepped the same number of cycles agree on injected-flit counts.
+    #[test]
+    fn scenarios_deterministic() {
+        for mk in [sparse_trace_workload, saturated_workload] {
+            let count = |mode: SimMode| {
+                let mut w = mk(4, mode);
+                for _ in 0..500 {
+                    w.step();
+                }
+                (0..w.sys.nets.len()).map(|n| w.sys.counters[n].injected).sum::<u64>()
+            };
+            assert_eq!(count(SimMode::Gated), count(SimMode::Gated));
+            assert_eq!(count(SimMode::Gated), count(SimMode::Dense));
+        }
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = E2eReport {
+            sparse: ModeComparison {
+                name: "sparse_trace_8x8".into(),
+                cycles: 10,
+                dense_cps: 100.0,
+                gated_cps: 400.0,
+            },
+            saturated: ModeComparison {
+                name: "saturated_4x4".into(),
+                cycles: 10,
+                dense_cps: 100.0,
+                gated_cps: 99.0,
+            },
+            sweep: SweepComparison {
+                points: 4,
+                threads: 2,
+                serial_seconds: 2.0,
+                parallel_seconds: 1.0,
+            },
+            gate: crate::util::bench::CpsResult {
+                cycles: 10,
+                wall_seconds: 0.1,
+            },
+            gate_floor: None,
+        };
+        let j = report_to_json(&r);
+        assert_eq!(
+            j.get("schema").and_then(Json::as_str),
+            Some("floonoc-bench-e2e/1")
+        );
+        let sparse = j.get("scenarios").and_then(|s| s.get("sparse_trace_8x8")).unwrap();
+        assert_eq!(sparse.get("gated_speedup").and_then(Json::as_f64), Some(4.0));
+        let gate = j.get("cps_gate").unwrap();
+        assert_eq!(gate.get("name").and_then(Json::as_str), Some(GATE_NAME));
+        assert!(matches!(gate.get("floor"), Some(Json::Null)));
+    }
+}

@@ -27,6 +27,6 @@ pub mod arbiter;
 
 pub use arbiter::RoundRobin;
 pub use router::{
-    Router, RouterCfg, PORT_E, PORT_LOCAL, PORT_MEM, PORT_N, PORT_S, PORT_W,
+    Router, RouterActivity, RouterCfg, PORT_E, PORT_LOCAL, PORT_MEM, PORT_N, PORT_S, PORT_W,
 };
 pub use routing::{ring_route, torus_route, xy_route, RouteTable, RoutingAlgorithm};

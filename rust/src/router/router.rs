@@ -40,6 +40,21 @@ impl Default for RouterCfg {
     }
 }
 
+/// What a [`Router::step`] call did, for the activity-gated step loop:
+/// which output links received a flit this cycle (a wake-up edge per
+/// offered output — those links must enter the active set so next
+/// cycle's link sweep delivers them), and whether any input held a flit
+/// at all (false means the whole step was a no-op).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouterActivity {
+    /// At least one input buffer held a head flit this cycle.
+    pub any_input: bool,
+    /// Bitmask over *output ports* (not link ids) that accepted a flit
+    /// during commit. Radix is ≤ 6 in every supported fabric, so a u32
+    /// is comfortable headroom.
+    pub woke_outputs: u32,
+}
+
 /// Per-output wormhole/arbitration state.
 #[derive(Debug, Clone)]
 struct OutputState {
@@ -108,9 +123,17 @@ impl Router {
     /// links). The split mirrors the deliver/step discipline of the
     /// engine: all routing decisions observe the same pre-cycle state, and
     /// only the commit phase mutates links.
-    pub fn step(&mut self, links: &mut [Link<FlooFlit>]) {
+    ///
+    /// Returns a [`RouterActivity`] summary for the gated step loop;
+    /// dense-mode and unit-test callers are free to ignore it.
+    pub fn step(&mut self, links: &mut [Link<FlooFlit>]) -> RouterActivity {
         if self.compute_requests(links) {
-            self.commit_switch(links);
+            RouterActivity {
+                any_input: true,
+                woke_outputs: self.commit_switch(links),
+            }
+        } else {
+            RouterActivity::default()
         }
     }
 
@@ -141,9 +164,11 @@ impl Router {
 
     /// Commit phase: one winner per output port, wormhole locks honoured,
     /// round-robin arbitration otherwise; winners traverse into their
-    /// output links.
-    fn commit_switch(&mut self, links: &mut [Link<FlooFlit>]) {
+    /// output links. Returns the bitmask of output ports that accepted a
+    /// flit (the gated loop's router→output-link wake edges).
+    fn commit_switch(&mut self, links: &mut [Link<FlooFlit>]) -> u32 {
         let ports = self.cfg.ports;
+        let mut woke: u32 = 0;
         let mut any = false;
         for o in 0..ports {
             let Some(out_lid) = self.out_links[o] else { continue };
@@ -185,11 +210,13 @@ impl Router {
             self.outputs[o].forwarded += 1;
             self.forwarded += 1;
             self.want[i] = None; // an input feeds at most one output per cycle
+            woke |= 1 << o;
             any = true;
         }
         if any {
             self.active_cycles += 1;
         }
+        woke
     }
 
     /// True when all input buffers this router reads from are empty and no
@@ -201,6 +228,19 @@ impl Router {
                 .iter()
                 .flatten()
                 .all(|&lid| links[lid].peek().is_none())
+    }
+
+    /// Clock-gating predicate: true when stepping this router would be a
+    /// no-op — every input buffer it reads from is empty. Wormhole locks
+    /// are deliberately ignored: a locked output with no pending input
+    /// flit idles (and stays locked) whether or not the router is
+    /// stepped, so a lock alone never requires a clock. The gated loop
+    /// wakes a router the cycle any of its input links delivers a flit.
+    pub fn is_quiescent(&self, links: &[Link<FlooFlit>]) -> bool {
+        self.in_links
+            .iter()
+            .flatten()
+            .all(|&lid| links[lid].buffered() == 0)
     }
 }
 

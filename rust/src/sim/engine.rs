@@ -65,11 +65,19 @@ impl<S> Engine<S> {
 
     /// Run until `done` returns true or `max_cycles` elapse. Returns true
     /// when the predicate fired (i.e. the run completed, not timed out).
+    ///
+    /// A run that is already `done` at entry executes zero steps and
+    /// charges **nothing** to [`SimStats`] — neither cycles nor wall
+    /// time. Throughput numbers (`cycles_per_second`) would otherwise be
+    /// silently diluted by no-op calls from completion-polling loops.
     pub fn run_until<F, D>(&mut self, max_cycles: Cycle, mut step: F, mut done: D) -> bool
     where
         F: FnMut(&mut S, Cycle),
         D: FnMut(&S, Cycle) -> bool,
     {
+        if done(&self.system, self.now) {
+            return true;
+        }
         let t0 = std::time::Instant::now();
         let start = self.now;
         let mut completed = false;
@@ -119,6 +127,44 @@ mod tests {
         let ok = e.run_until(5, |s, _| s.v += 1, |_, _| false);
         assert!(!ok);
         assert_eq!(e.now, 5);
+    }
+
+    /// Timing edge: `done` already true at entry. Zero steps run and
+    /// zero cycles AND zero wall time are charged to the stats — a
+    /// completion-polling caller must not dilute the throughput figure.
+    #[test]
+    fn run_until_done_at_entry_charges_nothing() {
+        let mut e = Engine::new(Counter { v: 7 });
+        let mut steps = 0u64;
+        let ok = e.run_until(
+            1000,
+            |s, _| {
+                s.v += 1;
+                steps += 1;
+            },
+            |s, _| s.v == 7,
+        );
+        assert!(ok, "predicate true at entry reports completion");
+        assert_eq!(steps, 0, "no step may run");
+        assert_eq!(e.now, 0, "time does not advance");
+        assert_eq!(e.system.v, 7, "system untouched");
+        assert_eq!(e.stats.cycles, 0, "zero cycles charged");
+        assert_eq!(e.stats.wall_seconds, 0.0, "zero wall time charged");
+        // A subsequent real run still accounts normally.
+        let ok = e.run_until(1000, |s, _| s.v += 1, |s, _| s.v == 10);
+        assert!(ok);
+        assert_eq!(e.stats.cycles, 3);
+    }
+
+    /// `max_cycles == 0` with `done` false is a degenerate timeout: no
+    /// steps, no charge, and the call reports not-completed.
+    #[test]
+    fn run_until_zero_budget_times_out_cleanly() {
+        let mut e = Engine::new(Counter { v: 0 });
+        let ok = e.run_until(0, |s, _| s.v += 1, |_, _| false);
+        assert!(!ok);
+        assert_eq!(e.system.v, 0);
+        assert_eq!(e.stats.cycles, 0);
     }
 
     #[test]

@@ -7,6 +7,23 @@ use crate::util::fifo::Fifo;
 /// Opaque link identifier (index into the engine's link table).
 pub type LinkId = usize;
 
+/// What a [`Link::deliver`] call did, for the activity-gated step loop
+/// (see `docs/performance.md`): whether the link still holds flits (it
+/// must stay in the active set — a flit parked in the last pipeline
+/// stage or stalled in the register keeps the link "clocked" until it
+/// is delivered *and* consumed), and whether the consumer's input
+/// buffer now holds at least one flit (the wake-up edge towards the
+/// downstream router / NI).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeliverSummary {
+    /// Flits remain anywhere in the link (register, pipeline or buffer)
+    /// after this deliver — keep the link in the active set.
+    pub still_active: bool,
+    /// The consumer's input buffer is non-empty after this deliver —
+    /// wake the component that reads this link.
+    pub consumer_ready: bool,
+}
+
 /// A unidirectional link: `reg` models the wire + output register of the
 /// producer, `buf` models the consumer's input buffer. Transfer from `reg`
 /// to `buf` happens in the engine's deliver phase, one cycle after the
@@ -94,11 +111,15 @@ impl<T> Link<T> {
     /// flit traverse pipeline stage *and* register-to-buffer in one cycle,
     /// shortening the link's latency by one and breaking the two-cycle
     /// router calibration.
-    pub fn deliver(&mut self) {
+    ///
+    /// Returns a [`DeliverSummary`] for the gated step loop; dense-mode
+    /// and unit-test callers are free to ignore it.
+    pub fn deliver(&mut self) -> DeliverSummary {
         // Fast path: an empty link has nothing to move. The common case on
-        // large meshes — most links idle most cycles.
+        // large meshes — most links idle most cycles. (The gated step
+        // loop hoists this check entirely by never visiting such links.)
         if self.occupancy == 0 {
-            return;
+            return DeliverSummary::default();
         }
         // Phase 1: commit the head register into the input buffer.
         if self.reg.is_some() {
@@ -120,6 +141,13 @@ impl<T> Link<T> {
                     self.pipe[i - 1] = self.pipe[i].take();
                 }
             }
+        }
+        // Deliver moves flits *within* the link, so occupancy is exactly
+        // what it was at entry (> 0): the link stays active until the
+        // consumer pops the buffer dry.
+        DeliverSummary {
+            still_active: true,
+            consumer_ready: !self.buf.is_empty(),
         }
     }
 
@@ -161,6 +189,16 @@ impl<T> Link<T> {
     #[inline]
     pub fn occupancy(&self) -> u32 {
         self.occupancy
+    }
+
+    /// Clock-gating predicate: true when stepping this link would be a
+    /// no-op (no flit anywhere inside it). The gated step loop drops
+    /// quiescent links from the active set; unlike [`Self::is_idle`]
+    /// this is the raw counter check with no debug cross-validation, so
+    /// it stays branch-cheap inside per-cycle sweeps.
+    #[inline]
+    pub fn is_quiescent(&self) -> bool {
+        self.occupancy == 0
     }
 
     /// Total pipeline latency of the link in cycles (1 + extra stages).
@@ -287,6 +325,52 @@ mod tests {
         }
         assert_eq!(got.last(), Some(&19));
         assert!(l.is_idle());
+    }
+
+    /// Gated-stepping contract on a multi-stage link: the deliver summary
+    /// must report `still_active` every cycle a flit is anywhere in the
+    /// pipeline — including the cycles where it has not yet reached the
+    /// consumer buffer — and must only report `consumer_ready` once the
+    /// flit lands. Dropping the link from the active set on any earlier
+    /// cycle would strand the flit mid-pipeline forever.
+    #[test]
+    fn pipeline_flit_keeps_link_active_until_delivered() {
+        let mut l: Link<u32> = Link::with_pipeline(2, 3);
+        l.offer(77);
+        // Cycles 1..=3: the flit walks the pipeline towards the register;
+        // nothing is in the buffer yet but the link must stay active.
+        for cycle in 1..=3u32 {
+            let s = l.deliver();
+            assert!(s.still_active, "mid-pipeline at cycle {cycle}");
+            assert!(!s.consumer_ready, "not yet delivered at cycle {cycle}");
+            assert!(!l.is_quiescent());
+        }
+        // Cycle 4: the register commits into the buffer — consumer wake.
+        let s = l.deliver();
+        assert!(s.still_active && s.consumer_ready, "delivery cycle wakes consumer");
+        // The consumer pops; only now may the link leave the active set.
+        assert_eq!(l.pop(), Some(77));
+        assert!(l.is_quiescent());
+        let s = l.deliver();
+        assert!(!s.still_active && !s.consumer_ready, "empty link reports quiescent");
+    }
+
+    /// An unpopped delivered flit also keeps the link active: the summary
+    /// must keep reporting both flags while the buffer holds it (a stalled
+    /// consumer must keep being woken until it drains the buffer).
+    #[test]
+    fn buffered_flit_keeps_link_active_while_unconsumed() {
+        let mut l: Link<u32> = Link::new(2);
+        l.offer(5);
+        let s = l.deliver();
+        assert!(s.still_active && s.consumer_ready);
+        for _ in 0..3 {
+            // Consumer stalls: repeated delivers keep signalling.
+            let s = l.deliver();
+            assert!(s.still_active && s.consumer_ready);
+        }
+        assert_eq!(l.pop(), Some(5));
+        assert!(l.is_quiescent());
     }
 
     /// Backpressure capacity: a stalled consumer lets the link absorb

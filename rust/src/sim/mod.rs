@@ -26,7 +26,45 @@ pub mod link;
 pub mod engine;
 
 pub use engine::{Engine, SimStats};
-pub use link::{Link, LinkId};
+pub use link::{DeliverSummary, Link, LinkId};
 
 /// Simulation time in clock cycles.
 pub type Cycle = u64;
+
+/// How the per-cycle step loop visits components.
+///
+/// Both modes are cycle-accurate and produce **byte-identical statistics**
+/// (pinned by `tests/gated_equivalence.rs`); they differ only in which
+/// components are *visited*, never in what a visited component does.
+///
+/// * [`SimMode::Gated`] — the default: per-network active-set bitmaps
+///   (one bit per link, one per router) model clock gating. A component
+///   is stepped only when it held flits last cycle or was written this
+///   cycle; wake-up edges propagate at commit time (link → downstream
+///   router, router → output link, NI inject → local link). Under sparse
+///   traffic most of the fabric is quiescent most cycles, and the loop
+///   cost tracks *activity* instead of *fabric size*.
+/// * [`SimMode::Dense`] — the reference: every link delivers and every
+///   router steps every cycle (a whole network is skipped only when its
+///   flit-conservation counter proves it empty). Kept as the
+///   differential-testing oracle and for debugging the gating itself.
+///
+/// See `docs/performance.md` for the design and the equivalence argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimMode {
+    /// Activity-gated stepping (active-set bitmaps; the fast default).
+    #[default]
+    Gated,
+    /// Dense reference stepping (every component, every cycle).
+    Dense,
+}
+
+impl SimMode {
+    /// Stable lowercase name (config files, CLI, bench reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimMode::Gated => "gated",
+            SimMode::Dense => "dense",
+        }
+    }
+}

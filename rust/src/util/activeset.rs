@@ -1,0 +1,187 @@
+//! Fixed-size bitmap of active component indices — the simulator's model
+//! of clock gating.
+//!
+//! The activity-gated step loop (see `docs/performance.md`) keeps one
+//! [`ActiveSet`] per component class per network: a bit per link and a
+//! bit per router. A component is *stepped* only while its bit is set;
+//! everything else is skipped exactly as a clock-gated hardware block
+//! holds its state. Correctness rests on a single invariant maintained
+//! by the wake edges: **every component whose step would not be a no-op
+//! has its bit set.** The set may conservatively contain quiescent
+//! components (they step as no-ops and are pruned), but never the
+//! reverse.
+//!
+//! Iteration is in ascending index order over `u64` words with
+//! `trailing_zeros`, so a sweep over the set is deterministic and costs
+//! O(words + set bits) rather than O(components).
+
+/// A bitmap over `0..len` component indices.
+#[derive(Debug, Clone)]
+pub struct ActiveSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl ActiveSet {
+    /// An empty set over the index domain `0..len`.
+    pub fn new(len: usize) -> Self {
+        ActiveSet {
+            // (len + 63) / 64 — `div_ceil` needs Rust 1.73, MSRV is 1.70.
+            words: vec![0; (len + 63) / 64],
+            len,
+        }
+    }
+
+    /// Size of the index domain (not the number of set bits).
+    #[inline]
+    pub fn domain(&self) -> usize {
+        self.len
+    }
+
+    /// Mark `idx` active. Idempotent; returns true when the bit was
+    /// newly set (an actual wake-up edge, useful for instrumentation).
+    #[inline]
+    pub fn insert(&mut self, idx: usize) -> bool {
+        debug_assert!(idx < self.len, "index {idx} outside domain {}", self.len);
+        let w = &mut self.words[idx >> 6];
+        let bit = 1u64 << (idx & 63);
+        let newly = *w & bit == 0;
+        *w |= bit;
+        newly
+    }
+
+    /// Clear `idx` (component went quiescent).
+    #[inline]
+    pub fn remove(&mut self, idx: usize) {
+        debug_assert!(idx < self.len, "index {idx} outside domain {}", self.len);
+        self.words[idx >> 6] &= !(1u64 << (idx & 63));
+    }
+
+    /// Is `idx` active?
+    #[inline]
+    pub fn contains(&self, idx: usize) -> bool {
+        debug_assert!(idx < self.len, "index {idx} outside domain {}", self.len);
+        self.words[idx >> 6] & (1u64 << (idx & 63)) != 0
+    }
+
+    /// Deactivate everything.
+    #[inline]
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// True when no component is active.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Number of active components (popcount).
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Number of backing words (for word-wise sweeps).
+    #[inline]
+    pub fn num_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// The `i`-th backing word. Sweeps copy a word, then walk its set
+    /// bits with `trailing_zeros` while mutating the set itself — safe
+    /// as long as the sweep only *clears* bits it has already visited
+    /// (wake-ups during a sweep land in a different set or in bits the
+    /// copied word no longer observes, by construction of the two-phase
+    /// step loop).
+    #[inline]
+    pub fn word(&self, i: usize) -> u64 {
+        self.words[i]
+    }
+
+    /// Iterate active indices in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &word)| {
+            std::iter::successors(
+                if word != 0 { Some(word) } else { None },
+                |w| {
+                    let next = w & (w - 1);
+                    if next != 0 {
+                        Some(next)
+                    } else {
+                        None
+                    }
+                },
+            )
+            .map(move |w| (wi << 6) + w.trailing_zeros() as usize)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut s = ActiveSet::new(200);
+        assert!(s.is_empty());
+        assert!(s.insert(0));
+        assert!(s.insert(63));
+        assert!(s.insert(64));
+        assert!(s.insert(199));
+        assert!(!s.insert(64), "re-insert is not a wake edge");
+        assert!(s.contains(63) && s.contains(64) && s.contains(199));
+        assert!(!s.contains(1));
+        assert_eq!(s.count(), 4);
+        s.remove(63);
+        assert!(!s.contains(63));
+        assert_eq!(s.count(), 3);
+    }
+
+    #[test]
+    fn iterates_ascending_across_words() {
+        let mut s = ActiveSet::new(300);
+        for &i in &[5usize, 0, 255, 64, 63, 128, 299] {
+            s.insert(i);
+        }
+        let got: Vec<usize> = s.iter().collect();
+        assert_eq!(got, vec![0, 5, 63, 64, 128, 255, 299]);
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut s = ActiveSet::new(70);
+        s.insert(3);
+        s.insert(69);
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.iter().count(), 0);
+    }
+
+    #[test]
+    fn word_sweep_matches_iter() {
+        let mut s = ActiveSet::new(130);
+        for i in (0..130).step_by(7) {
+            s.insert(i);
+        }
+        let mut via_words = Vec::new();
+        for wi in 0..s.num_words() {
+            let mut w = s.word(wi);
+            while w != 0 {
+                via_words.push((wi << 6) + w.trailing_zeros() as usize);
+                w &= w - 1;
+            }
+        }
+        let via_iter: Vec<usize> = s.iter().collect();
+        assert_eq!(via_words, via_iter);
+    }
+
+    #[test]
+    fn empty_domain_is_fine() {
+        let s = ActiveSet::new(0);
+        assert!(s.is_empty());
+        assert_eq!(s.num_words(), 0);
+        assert_eq!(s.iter().count(), 0);
+    }
+}

@@ -1,18 +1,97 @@
 //! Bounded FIFO used throughout the simulator for input buffers, reorder
 //! table entries and meta FIFOs.
 //!
-//! A thin wrapper over `VecDeque` that makes capacity a first-class,
-//! *enforced* property — RTL FIFOs cannot silently grow, and neither can
-//! these. Pushing into a full FIFO is a modelling bug and panics.
+//! Capacity is a first-class, *enforced* property — RTL FIFOs cannot
+//! silently grow, and neither can these. Pushing into a full FIFO is a
+//! modelling bug and panics.
+//!
+//! ## Storage
+//!
+//! The queue is a fixed-capacity ring buffer over power-of-two storage:
+//! wrap-around is a bitmask (`idx & mask`), not a modulo, and the storage
+//! is allocated exactly once at construction — there is **no per-push heap
+//! traffic**, unlike a growable `VecDeque`. FIFOs with capacity up to
+//! [`INLINE_SLOTS`] (which covers every link input buffer and NI port
+//! FIFO at default sizing) keep their slots *inline* in the struct, so the
+//! hot-path buffers of a large mesh involve no pointer chase at all.
+//!
+//! ## High-water mark semantics
+//!
+//! [`Fifo::peak`] is the highest occupancy ever observed **over the
+//! FIFO's lifetime**: it deliberately survives [`Fifo::clear`], because
+//! sizing reports answer "how deep did this structure ever need to be",
+//! and a cleared-and-reused ROB entry still occupied its peak depth while
+//! it was live. Callers that want per-window reporting (peak since a
+//! specific point, e.g. per reuse of a ROB slot) call
+//! [`Fifo::reset_peak`] explicitly at the window boundary.
 
-use std::collections::VecDeque;
+/// Capacities up to this many slots are stored inline (no heap
+/// allocation at all). 8 covers the default link input buffers (2), NI
+/// port FIFOs (4) and per-ID reorder FIFOs (4).
+pub const INLINE_SLOTS: usize = 8;
 
-/// Bounded FIFO with RTL-like semantics.
+/// Ring-buffer slot storage: inline arrays for small FIFOs, a single
+/// one-time heap allocation for larger ones. Slot count is always a
+/// power of two so wrap-around is a mask. Two inline tiers keep the
+/// waste bounded: the hot per-link input buffers (default capacity 2)
+/// carry at most two padding slots, not six — with hundreds of links
+/// per fabric the padding would otherwise dominate the link arena's
+/// cache footprint.
+#[derive(Debug, Clone)]
+enum Slots<T> {
+    /// Up to 4 slots in the struct itself (capacities 1–4).
+    Inline4([Option<T>; 4]),
+    /// Up to [`INLINE_SLOTS`] slots in the struct itself (capacities 5–8).
+    Inline8([Option<T>; INLINE_SLOTS]),
+    /// `cap.next_power_of_two()` slots, allocated once at construction.
+    Heap(Box<[Option<T>]>),
+}
+
+impl<T> Slots<T> {
+    fn for_capacity(cap: usize) -> Self {
+        if cap <= 4 {
+            Slots::Inline4(std::array::from_fn(|_| None))
+        } else if cap <= INLINE_SLOTS {
+            Slots::Inline8(std::array::from_fn(|_| None))
+        } else {
+            Slots::Heap((0..cap.next_power_of_two()).map(|_| None).collect())
+        }
+    }
+
+    #[inline]
+    fn slice(&self) -> &[Option<T>] {
+        match self {
+            Slots::Inline4(a) => a,
+            Slots::Inline8(a) => a,
+            Slots::Heap(b) => b,
+        }
+    }
+
+    #[inline]
+    fn slice_mut(&mut self) -> &mut [Option<T>] {
+        match self {
+            Slots::Inline4(a) => a,
+            Slots::Inline8(a) => a,
+            Slots::Heap(b) => b,
+        }
+    }
+}
+
+/// Bounded FIFO with RTL-like semantics over masked ring-buffer storage.
 #[derive(Debug, Clone)]
 pub struct Fifo<T> {
-    q: VecDeque<T>,
+    slots: Slots<T>,
+    /// Index of the front element (always `< slots.len()`).
+    head: usize,
+    /// Occupancy.
+    len: usize,
+    /// `slots.len() - 1`; slot count is a power of two.
+    mask: usize,
+    /// Logical capacity in entries (enforced; `<=` slot count).
     cap: usize,
-    /// High-water mark, for sizing reports.
+    /// High-water mark, for sizing reports. Survives [`Fifo::clear`]
+    /// (lifetime semantics — see the module docs); reset explicitly with
+    /// [`Fifo::reset_peak`].
     peak: usize,
 }
 
@@ -20,8 +99,14 @@ impl<T> Fifo<T> {
     /// Create a FIFO with `cap` entries (`cap >= 1`).
     pub fn new(cap: usize) -> Self {
         assert!(cap >= 1, "zero-capacity fifo");
+        let slots = Slots::for_capacity(cap);
+        let mask = slots.slice().len() - 1;
+        debug_assert!(slots.slice().len().is_power_of_two());
         Fifo {
-            q: VecDeque::with_capacity(cap),
+            slots,
+            head: 0,
+            len: 0,
+            mask,
             cap,
             peak: 0,
         }
@@ -36,31 +121,42 @@ impl<T> Fifo<T> {
     /// Current occupancy.
     #[inline]
     pub fn len(&self) -> usize {
-        self.q.len()
+        self.len
     }
 
     /// True when no entry is queued.
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.q.is_empty()
+        self.len == 0
     }
 
     /// True when at capacity (ready deasserted).
     #[inline]
     pub fn is_full(&self) -> bool {
-        self.q.len() >= self.cap
+        self.len >= self.cap
     }
 
     /// Free slots remaining.
     #[inline]
     pub fn space(&self) -> usize {
-        self.cap - self.q.len()
+        self.cap - self.len
     }
 
-    /// Highest occupancy ever observed.
+    /// Highest occupancy ever observed since construction or the last
+    /// [`Fifo::reset_peak`]. Intentionally survives [`Fifo::clear`]: a
+    /// sizing report must see the depth a reused entry reached in *any*
+    /// window of its lifetime.
     #[inline]
     pub fn peak(&self) -> usize {
         self.peak
+    }
+
+    /// Start a new high-water window: the peak restarts from the current
+    /// occupancy. Use at reuse boundaries (e.g. when a ROB entry is
+    /// recycled) for per-window sizing reports.
+    #[inline]
+    pub fn reset_peak(&mut self) {
+        self.peak = self.len;
     }
 
     /// Push; panics when full (callers must check `is_full`/`space` first —
@@ -68,8 +164,11 @@ impl<T> Fifo<T> {
     #[inline]
     pub fn push(&mut self, item: T) {
         assert!(!self.is_full(), "push into full fifo (missing ready check)");
-        self.q.push_back(item);
-        self.peak = self.peak.max(self.q.len());
+        let idx = (self.head + self.len) & self.mask;
+        debug_assert!(self.slots.slice()[idx].is_none(), "slot collision");
+        self.slots.slice_mut()[idx] = Some(item);
+        self.len += 1;
+        self.peak = self.peak.max(self.len);
     }
 
     /// Try-push variant returning the item when full.
@@ -86,34 +185,77 @@ impl<T> Fifo<T> {
     /// Pop the front entry, if any.
     #[inline]
     pub fn pop(&mut self) -> Option<T> {
-        self.q.pop_front()
+        if self.len == 0 {
+            return None;
+        }
+        let item = self.slots.slice_mut()[self.head].take();
+        debug_assert!(item.is_some(), "occupied slot was empty");
+        self.head = (self.head + 1) & self.mask;
+        self.len -= 1;
+        item
     }
 
     /// Borrow the front entry, if any.
     #[inline]
     pub fn front(&self) -> Option<&T> {
-        self.q.front()
+        if self.len == 0 {
+            None
+        } else {
+            self.slots.slice()[self.head].as_ref()
+        }
     }
 
     /// Mutably borrow the front entry, if any.
     #[inline]
     pub fn front_mut(&mut self) -> Option<&mut T> {
-        self.q.front_mut()
+        if self.len == 0 {
+            None
+        } else {
+            let head = self.head;
+            self.slots.slice_mut()[head].as_mut()
+        }
     }
 
     /// Iterate front→back without consuming.
     pub fn iter(&self) -> impl Iterator<Item = &T> {
-        self.q.iter()
+        let slots = self.slots.slice();
+        let (head, mask) = (self.head, self.mask);
+        (0..self.len).map(move |i| {
+            slots[(head + i) & mask]
+                .as_ref()
+                .expect("occupied ring slot is Some")
+        })
     }
 
     /// Mutable iteration front→back (reorder-table style in-place updates).
     pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut T> {
-        self.q.iter_mut()
+        let (front, back) = self.occupied_slices_mut();
+        front
+            .iter_mut()
+            .chain(back.iter_mut())
+            .map(|slot| slot.as_mut().expect("occupied ring slot is Some"))
     }
 
-    /// Drop every queued entry.
+    /// Drop every queued entry. The high-water mark survives (see the
+    /// module docs); use [`Fifo::reset_peak`] to start a new window.
     pub fn clear(&mut self) {
-        self.q.clear();
+        while self.pop().is_some() {}
+        self.head = 0;
+    }
+
+    /// The occupied region as (first, second) mutable slices in
+    /// front→back order; `second` is empty unless the region wraps.
+    fn occupied_slices_mut(&mut self) -> (&mut [Option<T>], &mut [Option<T>]) {
+        let slot_count = self.mask + 1;
+        let (head, len) = (self.head, self.len);
+        let slots = self.slots.slice_mut();
+        if head + len <= slot_count {
+            (&mut slots[head..head + len], &mut [])
+        } else {
+            let wrapped = head + len - slot_count;
+            let (front_of_store, back_of_store) = slots.split_at_mut(head);
+            (back_of_store, &mut front_of_store[..wrapped])
+        }
     }
 }
 
@@ -164,5 +306,135 @@ mod tests {
         }
         f.push(9);
         assert_eq!(f.peak(), 5);
+    }
+
+    /// The ring wraps correctly at every head position: a long push/pop
+    /// stream through a small FIFO (head circles the storage many times)
+    /// preserves order and capacity accounting.
+    #[test]
+    fn masked_wrap_long_stream() {
+        let mut f = Fifo::new(3); // non-power-of-two cap: storage is 4 (inline)
+        let mut next_in = 0u32;
+        let mut next_out = 0u32;
+        for round in 0..100 {
+            while !f.is_full() {
+                f.push(next_in);
+                next_in += 1;
+            }
+            assert_eq!(f.len(), 3, "round {round}");
+            let drain = if round % 2 == 0 { 1 } else { 3 };
+            for _ in 0..drain {
+                assert_eq!(f.pop(), Some(next_out));
+                next_out += 1;
+            }
+        }
+        while let Some(v) = f.pop() {
+            assert_eq!(v, next_out);
+            next_out += 1;
+        }
+        assert_eq!(next_in, next_out);
+        assert_eq!(f.peak(), 3);
+    }
+
+    /// Heap-backed capacities (> INLINE_SLOTS) behave identically,
+    /// including the power-of-two rounding of the storage.
+    #[test]
+    fn heap_backed_large_capacity() {
+        let mut f = Fifo::new(100); // storage 128, logical cap 100
+        assert_eq!(f.capacity(), 100);
+        for i in 0..100 {
+            f.push(i);
+        }
+        assert!(f.is_full());
+        assert_eq!(f.space(), 0);
+        for i in 0..60 {
+            assert_eq!(f.pop(), Some(i));
+        }
+        for i in 100..160 {
+            f.push(i); // wraps through the 128-slot storage
+        }
+        for i in 60..160 {
+            assert_eq!(f.pop(), Some(i));
+        }
+        assert!(f.is_empty());
+        assert_eq!(f.peak(), 100);
+    }
+
+    /// Front/iter views agree with pop order across a wrapped region.
+    #[test]
+    fn iterators_front_to_back_across_wrap() {
+        let mut f = Fifo::new(4);
+        for i in 0..4 {
+            f.push(i);
+        }
+        f.pop();
+        f.pop();
+        f.push(4);
+        f.push(5); // occupied region now wraps the 4-slot inline storage
+        assert_eq!(f.front(), Some(&2));
+        let seen: Vec<i32> = f.iter().copied().collect();
+        assert_eq!(seen, vec![2, 3, 4, 5]);
+        for v in f.iter_mut() {
+            *v += 10;
+        }
+        assert_eq!(f.pop(), Some(12));
+        assert_eq!(f.front_mut().map(|v| *v), Some(13));
+    }
+
+    /// Documented lifetime semantics: `clear` drops the entries but the
+    /// high-water mark survives — a reused ROB entry's sizing report must
+    /// still show the depth it reached before the clear.
+    #[test]
+    fn clear_preserves_peak() {
+        let mut f = Fifo::new(8);
+        for i in 0..6 {
+            f.push(i);
+        }
+        f.clear();
+        assert!(f.is_empty());
+        assert_eq!(f.len(), 0);
+        assert_eq!(f.peak(), 6, "peak survives clear (lifetime high-water)");
+        // The FIFO is fully reusable after a clear.
+        f.push(42);
+        assert_eq!(f.front(), Some(&42));
+        assert_eq!(f.peak(), 6, "shallower reuse does not move the peak");
+    }
+
+    /// Per-window reporting: `reset_peak` starts a new high-water window
+    /// at the current occupancy.
+    #[test]
+    fn reset_peak_starts_new_window() {
+        let mut f = Fifo::new(8);
+        for i in 0..7 {
+            f.push(i);
+        }
+        for _ in 0..5 {
+            f.pop();
+        }
+        assert_eq!(f.peak(), 7);
+        f.reset_peak();
+        assert_eq!(f.peak(), 2, "window restarts at current occupancy");
+        f.push(9);
+        assert_eq!(f.peak(), 3);
+        f.clear();
+        f.reset_peak();
+        assert_eq!(f.peak(), 0, "clear + reset gives a fresh-window zero");
+    }
+
+    /// Clear followed by pushes must not resurrect stale slots (the ring
+    /// indices restart cleanly).
+    #[test]
+    fn clear_then_refill_to_capacity() {
+        let mut f = Fifo::new(5);
+        for i in 0..5 {
+            f.push(i);
+        }
+        f.clear();
+        for i in 10..15 {
+            f.push(i);
+        }
+        assert!(f.is_full());
+        let seen: Vec<i32> = f.iter().copied().collect();
+        assert_eq!(seen, vec![10, 11, 12, 13, 14]);
     }
 }

@@ -10,3 +10,4 @@ pub mod json;
 pub mod prop;
 pub mod bench;
 pub mod fifo;
+pub mod activeset;

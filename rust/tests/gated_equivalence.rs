@@ -1,0 +1,248 @@
+//! Differential proof that activity-gated stepping ([`SimMode::Gated`])
+//! is cycle-accurately **byte-identical** to the dense reference sweep
+//! ([`SimMode::Dense`]).
+//!
+//! Methodology (see `docs/performance.md`): the same seeded workload is
+//! run to completion twice — once per [`SimMode`] — and every observable
+//! counter in the system is serialized into one digest string: total
+//! cycles, per-network flit-conservation counters, per-link
+//! delivered/stall/busy counters, per-router-per-port forwarding
+//! counters, per-node target statistics and per-tile generator
+//! completions and latency aggregates. The two digests must be equal to
+//! the byte. Any divergence — a component skipped while it had work, a
+//! wake edge firing a cycle early or late — shows up as a counter
+//! mismatch somewhere in this digest.
+//!
+//! The grid covers all three fabrics × three traffic patterns (uniform
+//! random, tornado, nearest-neighbor), which together exercise XY mesh
+//! routing, both directions of every wraparound link, wormhole bursts
+//! across pipelined links, and long quiescent stretches between bursts.
+
+use floonoc::cluster::{TileTraffic, TiledWorkload};
+use floonoc::flit::NodeId;
+use floonoc::noc::{NocConfig, NocSystem};
+use floonoc::sim::SimMode;
+use floonoc::topology::TopologyKind;
+use floonoc::traffic::{GenCfg, Pattern};
+
+/// 9-tile fabric of `kind` (3×3 for mesh/torus, 9-ring), mode selected.
+fn fabric(kind: TopologyKind, mode: SimMode) -> NocSystem {
+    NocSystem::new(NocConfig::fabric(kind, 3, 3).with_sim_mode(mode))
+}
+
+/// The differential workload: every tile runs seeded narrow traffic with
+/// the pattern under test plus a few nearest-neighbor wide DMA bursts
+/// (single-hop wide wormholes are deadlock-safe on wrap fabrics without
+/// VCs — see docs/topologies.md). Bursty-with-gaps by construction: the
+/// narrow generators finish at different times, leaving long quiescent
+/// stretches that exercise the gating/pruning paths, not just saturation.
+fn workload(kind: TopologyKind, pattern: Pattern, mode: SimMode) -> TiledWorkload {
+    let sys = fabric(kind, mode);
+    let tiles = sys.topo.num_tiles;
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern,
+                num_txns: 12,
+                seed: 0xBEEF + i as u64,
+                ..GenCfg::narrow_probe(NodeId(0), 12)
+            }),
+            dma: Some(GenCfg {
+                pattern: Pattern::NearestNeighbor,
+                num_txns: 3,
+                burst_len: 7,
+                seed: 0xD0A + i as u64,
+                ..GenCfg::dma_burst(NodeId(0), 3, false)
+            }),
+        })
+        .collect();
+    TiledWorkload::new(sys, profiles)
+}
+
+/// Serialize every observable counter of a drained workload. Two runs
+/// are equivalent iff their digests are byte-identical.
+fn digest(w: &mut TiledWorkload) -> String {
+    use std::fmt::Write;
+    let mut d = String::new();
+    writeln!(d, "cycles={}", w.sys.now).unwrap();
+    for (n, c) in w.sys.counters.iter().enumerate() {
+        writeln!(d, "net{n} injected={} ejected={}", c.injected, c.ejected).unwrap();
+    }
+    for (n, net) in w.sys.nets.iter().enumerate() {
+        for (lid, l) in net.links.iter().enumerate() {
+            // Skip never-touched links to keep the digest readable; a
+            // link touched in one mode but not the other still diverges
+            // (its line exists on one side only).
+            if l.delivered == 0 && l.busy_cycles == 0 {
+                continue;
+            }
+            writeln!(
+                d,
+                "net{n} link{lid} delivered={} stall={} busy={}",
+                l.delivered, l.stall_cycles, l.busy_cycles
+            )
+            .unwrap();
+        }
+        for (rid, r) in net.routers.iter().enumerate() {
+            if r.forwarded == 0 {
+                continue;
+            }
+            let per_port: Vec<String> = (0..r.cfg.ports)
+                .map(|p| r.forwarded_on(p).to_string())
+                .collect();
+            writeln!(
+                d,
+                "net{n} router{rid} forwarded={} active={} ports=[{}]",
+                r.forwarded,
+                r.active_cycles,
+                per_port.join(",")
+            )
+            .unwrap();
+        }
+    }
+    for (idx, node) in w.sys.nodes.iter().enumerate() {
+        let s = &node.target.stats;
+        writeln!(
+            d,
+            "node{idx} reads={} writes={} atomics={} req_stalls={}",
+            s.reads_served, s.writes_served, s.atomics_served, s.req_stall_cycles
+        )
+        .unwrap();
+    }
+    for t in &mut w.tiles {
+        for (tag, g) in [
+            ("core", t.core_gen.as_mut()),
+            ("dma", t.dma_gen.as_mut()),
+        ] {
+            let Some(g) = g else { continue };
+            writeln!(
+                d,
+                "tile{} {tag} issued={} completed={} lat_count={} lat_mean={:.6} lat_min={} lat_max={} lat_p50={}",
+                t.node.0,
+                g.issued,
+                g.completed,
+                g.latencies.count(),
+                g.latencies.mean(),
+                g.latencies.min(),
+                g.latencies.max(),
+                g.latencies.p50(),
+            )
+            .unwrap();
+        }
+    }
+    d
+}
+
+/// Run one (fabric, pattern, mode) cell to completion and digest it.
+fn run_cell(kind: TopologyKind, pattern: Pattern, mode: SimMode) -> String {
+    let mut w = workload(kind, pattern, mode);
+    assert!(
+        w.run_to_completion(2_000_000),
+        "{kind:?}/{pattern:?}/{mode:?} must drain"
+    );
+    assert!(w.protocol_ok(), "{kind:?}/{pattern:?}/{mode:?} protocol clean");
+    digest(&mut w)
+}
+
+fn assert_equivalent(kind: TopologyKind, pattern: Pattern) {
+    let gated = run_cell(kind, pattern, SimMode::Gated);
+    let dense = run_cell(kind, pattern, SimMode::Dense);
+    assert!(
+        gated == dense,
+        "gated != dense for {kind:?}/{pattern:?}\n--- gated ---\n{gated}\n--- dense ---\n{dense}"
+    );
+}
+
+const PATTERNS: [Pattern; 3] = [
+    Pattern::UniformTiles,
+    Pattern::Tornado,
+    Pattern::NearestNeighbor,
+];
+
+#[test]
+fn mesh_gated_equals_dense_across_patterns() {
+    for p in PATTERNS {
+        assert_equivalent(TopologyKind::Mesh, p);
+    }
+}
+
+#[test]
+fn torus_gated_equals_dense_across_patterns() {
+    for p in PATTERNS {
+        assert_equivalent(TopologyKind::Torus, p);
+    }
+}
+
+#[test]
+fn ring_gated_equals_dense_across_patterns() {
+    for p in PATTERNS {
+        assert_equivalent(TopologyKind::Ring, p);
+    }
+}
+
+/// Wide-only baseline link configuration through the same differential
+/// harness: the gating must be mode-agnostic (two networks, merged
+/// response classes, W beats on the request net).
+#[test]
+fn wide_only_mode_gated_equals_dense() {
+    let run = |mode: SimMode| {
+        let sys = NocSystem::new(NocConfig::mesh(3, 3).wide_only().with_sim_mode(mode));
+        let tiles = sys.topo.num_tiles;
+        let profiles: Vec<TileTraffic> = (0..tiles)
+            .map(|i| TileTraffic {
+                core: Some(GenCfg {
+                    pattern: Pattern::UniformTiles,
+                    num_txns: 8,
+                    seed: 0xFACE + i as u64,
+                    ..GenCfg::narrow_probe(NodeId(0), 8)
+                }),
+                dma: Some(GenCfg {
+                    pattern: Pattern::Neighbor,
+                    num_txns: 2,
+                    seed: 0xCAFE + i as u64,
+                    write_fraction: 1.0,
+                    ..GenCfg::dma_burst(NodeId(0), 2, true)
+                }),
+            })
+            .collect();
+        let mut w = TiledWorkload::new(sys, profiles);
+        assert!(w.run_to_completion(2_000_000), "{mode:?} drains");
+        assert!(w.protocol_ok());
+        digest(&mut w)
+    };
+    let gated = run(SimMode::Gated);
+    let dense = run(SimMode::Dense);
+    assert!(gated == dense, "wide-only gated != dense\n{gated}\n---\n{dense}");
+}
+
+/// Pipelined multi-stage links under gating: with deeper output
+/// pipelines (buffer islands on long routing channels) a flit spends
+/// several cycles in stages where *only* the link occupancy — not any
+/// router input — proves the network busy. If the active set dropped
+/// those links, the flit would strand and the run would time out; the
+/// digest equality additionally pins exact timing.
+#[test]
+fn pipelined_links_gated_equals_dense() {
+    let run = |mode: SimMode| {
+        let mut cfg = NocConfig::mesh(3, 1).with_sim_mode(mode);
+        cfg.in_buf_depth = 1; // tight buffers: maximum backpressure
+        let sys = NocSystem::new(cfg);
+        let profiles = vec![
+            TileTraffic {
+                core: Some(GenCfg {
+                    pattern: Pattern::FixedDst(NodeId(2)),
+                    ..GenCfg::narrow_probe(NodeId(2), 6)
+                }),
+                dma: Some(GenCfg::dma_burst(NodeId(2), 2, false)),
+            },
+            TileTraffic::idle(),
+            TileTraffic::idle(),
+        ];
+        let mut w = TiledWorkload::new(sys, profiles);
+        assert!(w.run_to_completion(200_000), "{mode:?} drains");
+        digest(&mut w)
+    };
+    let gated = run(SimMode::Gated);
+    let dense = run(SimMode::Dense);
+    assert!(gated == dense, "pipelined gated != dense\n{gated}\n---\n{dense}");
+}

@@ -42,6 +42,7 @@ fn saturated_router_cycle(b: &mut Bencher) {
         RouterCfg {
             ports,
             in_buf_depth: 4,
+            vcs: 1,
         },
         RouteTable::new(table),
     );

@@ -6,7 +6,7 @@
 //! repro reproduce <exp> [--bidir]     regenerate a paper table/figure:
 //!        tab1 | tab2 | fig5a | fig5b | fig6a | fig6b |
 //!        latency | bandwidth | wires | scaling | all
-//! repro simulate [--config f] [--topology k] [--txns n] run uniform traffic
+//! repro simulate [--config f] [--topology k] [--vcs n] [--txns n]  uniform traffic
 //! repro sweep <rob|buffers|burst|mesh|topology|output-reg>  ablations
 //! repro scale_topology [--mesh n]     mesh vs torus vs ring at equal tiles
 //! repro dse [--mesh n] [--artifacts dir]              analytical model vs sim
@@ -102,9 +102,12 @@ COMMANDS:
                                bandwidth wires scaling all
                                options: --bidir, --levels a,b,c, --jobs <n>
   simulate                     run uniform-random traffic on a fabric
+                               (wide wormhole bursts included: wrap
+                               fabrics are deadlock-free via dateline
+                               virtual channels)
                                options: --config <file.json>, --txns <n>,
                                --mesh <n>, --topology <mesh|torus|ring>,
-                               --wide-only
+                               --vcs <n>, --wide-only
   sweep <ablation>             rob | buffers | burst | mesh | topology |
                                output-reg; options: --jobs <n>
   scale_topology               compare mesh vs torus vs ring at the same
@@ -124,6 +127,8 @@ COMMANDS:
 
   --topology <kind>: fabric shape for simulate (mesh is the default;
               torus adds wraparound rows+columns, ring is a 1-D cycle).
+  --vcs <n>:  virtual channels per link (default: 1 on meshes, 2 dateline
+              VCs on torus/ring — see docs/deadlock.md).
   --jobs <n>: worker threads for sweep points (0/omitted = all cores,
               1 = serial); results are identical for any worker count.
   help                         this text

@@ -188,6 +188,60 @@ impl TiledWorkload {
         self.done() && self.sys.is_idle()
     }
 
+    /// [`Self::run_to_completion`] with a **stalled-cycle watchdog**: if
+    /// no flit is ejected anywhere in the system for `stall_window`
+    /// consecutive cycles while work remains, the run is declared stuck
+    /// and `Err(cycle_of_last_progress)` is returned. `Ok(true)` means
+    /// completed-and-drained, `Ok(false)` means the cycle budget ran out
+    /// while the system was still (slowly) progressing.
+    ///
+    /// This is the forward-progress instrument of the wrap-fabric
+    /// saturation suite (`tests/vc_deadlock.rs`): a wormhole deadlock on
+    /// a torus/ring shows up as an ejection flat-line long before any
+    /// multi-million-cycle timeout, and the returned cycle pinpoints
+    /// when traffic seized. Pick `stall_window` well above the longest
+    /// legitimate quiet gap (memory latency + drain of one burst —
+    /// hundreds of cycles, not thousands).
+    ///
+    /// ```
+    /// use floonoc::cluster::{TileTraffic, TiledWorkload};
+    /// use floonoc::flit::NodeId;
+    /// use floonoc::noc::{NocConfig, NocSystem};
+    /// let sys = NocSystem::new(NocConfig::mesh(2, 1));
+    /// let profiles = vec![TileTraffic::single_dma_1kib(NodeId(1)), TileTraffic::idle()];
+    /// let mut w = TiledWorkload::new(sys, profiles);
+    /// assert_eq!(w.run_with_watchdog(10_000, 1_000), Ok(true));
+    /// ```
+    pub fn run_with_watchdog(&mut self, max_cycles: u64, stall_window: u64) -> Result<bool, u64> {
+        let progress = |w: &TiledWorkload| -> u64 {
+            let ejected: u64 = w.sys.counters.iter().map(|c| c.ejected).sum();
+            let completed: u64 = w
+                .tiles
+                .iter()
+                .flat_map(|t| [&t.core_gen, &t.dma_gen])
+                .flatten()
+                .map(|g| g.completed)
+                .sum();
+            ejected + completed
+        };
+        let mut last_progress = progress(self);
+        let mut last_progress_at = self.sys.now;
+        for _ in 0..max_cycles {
+            if self.done() && self.sys.is_idle() {
+                return Ok(true);
+            }
+            self.step();
+            let p = progress(self);
+            if p != last_progress {
+                last_progress = p;
+                last_progress_at = self.sys.now;
+            } else if self.sys.now - last_progress_at >= stall_window {
+                return Err(last_progress_at);
+            }
+        }
+        Ok(self.done() && self.sys.is_idle())
+    }
+
     /// All tiles' protocol monitors are clean.
     pub fn protocol_ok(&self) -> bool {
         self.tiles.iter().all(ComputeTile::protocol_ok)
@@ -252,6 +306,29 @@ mod tests {
         let mut w = TiledWorkload::new(sys, profiles);
         assert!(w.run_to_completion(50_000));
         assert!(w.protocol_ok());
+    }
+
+    /// The watchdog's two verdicts: a healthy run completes under a sane
+    /// window, and a window smaller than the scenario's legitimate quiet
+    /// gaps trips (documenting why callers must size the window above
+    /// memory latency + burst drain, not at a handful of cycles).
+    #[test]
+    fn watchdog_completes_and_trips_by_window() {
+        let mk = || {
+            let sys = NocSystem::new(NocConfig::mesh(2, 1));
+            let profiles = vec![
+                TileTraffic {
+                    core: Some(GenCfg::narrow_probe(NodeId(1), 3)),
+                    dma: None,
+                },
+                TileTraffic::idle(),
+            ];
+            TiledWorkload::new(sys, profiles)
+        };
+        assert_eq!(mk().run_with_watchdog(10_000, 1_000), Ok(true));
+        // An 18-cycle zero-load round trip has ejection-free stretches
+        // longer than 2 cycles: the undersized window must trip.
+        assert!(mk().run_with_watchdog(10_000, 2).is_err());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! {
 //!   "mesh": {"width": 4, "height": 4, "mem_edge": "west"},
 //!   "mode": "narrow_wide",
+//!   "vcs": 1,
 //!   "router": {"in_buf_depth": 2, "output_reg": true},
 //!   "ni": {"wide_rob_slots": 128, "narrow_rob_slots": 256,
 //!          "per_id_depth": 4, "num_ids": 16},
@@ -75,6 +76,14 @@ pub fn noc_config_from_value(j: &Json) -> crate::Result<NocConfig> {
             "dense" => SimMode::Dense,
             other => bail!("unknown sim_mode '{other}' (gated|dense)"),
         };
+    }
+    // Virtual channels: explicit `"vcs"` wins; omitted defaults to the
+    // fabric's requirement (1 on meshes, 2 dateline VCs on torus/ring —
+    // matching the `NocConfig::torus`/`ring` builders).
+    match j.get("vcs").map(|v| v.as_usize()) {
+        Some(Some(v)) if (1..=crate::router::MAX_VCS).contains(&v) => cfg.vcs = v,
+        Some(_) => bail!("vcs must be an integer in 1..={}", crate::router::MAX_VCS),
+        None => cfg.vcs = cfg.topology.default_vcs(),
     }
     if let Some(r) = j.get("router") {
         if let Some(d) = r.get("in_buf_depth").and_then(Json::as_usize) {
@@ -155,6 +164,7 @@ pub fn noc_config_to_json(cfg: &NocConfig) -> Json {
             ),
         ),
         ("sim_mode", Json::Str(cfg.sim_mode.name().to_string())),
+        ("vcs", Json::Num(cfg.vcs as f64)),
         (
             "router",
             Json::obj(vec![
@@ -270,7 +280,31 @@ mod tests {
             let back = noc_config_from_value(&noc_config_to_json(&cfg)).unwrap();
             assert_eq!(back.topology, cfg.topology);
             assert_eq!((back.width, back.height), (cfg.width, cfg.height));
+            assert_eq!(back.vcs, cfg.vcs);
         }
+    }
+
+    #[test]
+    fn vcs_axis_parses() {
+        // Explicit value wins on any fabric.
+        let j = r#"{"topology": "torus", "vcs": 1}"#;
+        assert_eq!(noc_config_from_json(j).unwrap().vcs, 1);
+        let j = r#"{"vcs": 2}"#;
+        assert_eq!(noc_config_from_json(j).unwrap().vcs, 2);
+        // Omitted: the fabric's requirement (mesh 1, wrap fabrics 2).
+        assert_eq!(noc_config_from_json("{}").unwrap().vcs, 1);
+        let torus = r#"{"topology": "torus", "mesh": {"width": 4, "height": 4}}"#;
+        assert_eq!(noc_config_from_json(torus).unwrap().vcs, 2);
+        let ring = r#"{"topology": "ring", "mesh": {"width": 8, "height": 1}}"#;
+        assert_eq!(noc_config_from_json(ring).unwrap().vcs, 2);
+        // Out-of-range and non-integer values are rejected.
+        assert!(noc_config_from_json(r#"{"vcs": 0}"#).is_err());
+        assert!(noc_config_from_json(r#"{"vcs": 99}"#).is_err());
+        assert!(noc_config_from_json(r#"{"vcs": "two"}"#).is_err());
+        // Round-trips through serialization, including non-defaults.
+        let cfg = NocConfig::torus(3, 3).with_vcs(1);
+        let back = noc_config_from_value(&noc_config_to_json(&cfg)).unwrap();
+        assert_eq!(back.vcs, 1);
     }
 
     #[test]

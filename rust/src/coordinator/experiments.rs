@@ -469,11 +469,11 @@ pub struct TopologyRow {
 /// ring, drive identical uniform-random narrow read traffic on each,
 /// and report analytic + measured hop counts and delivered throughput.
 ///
-/// Single-beat narrow reads keep every packet single-flit, so the
-/// comparison is safe on the wrap-around fabrics even without virtual
-/// channels (see `docs/topologies.md` on torus/ring deadlock avoidance);
-/// bounded outstanding transactions keep buffer occupancy far below any
-/// cyclic-wait configuration.
+/// The wrap fabrics run with their default dateline virtual channels
+/// (see `docs/deadlock.md`), so the generators use their full default
+/// outstanding budgets — the pre-VC era's bounded-budget workaround
+/// (`max_outstanding = 2` to stay out of the cyclic-wait regime) is
+/// gone, and the throughput rows reflect genuinely loaded fabrics.
 pub fn scale_topology(n: u8) -> Vec<TopologyRow> {
     scale_topology_with(n, &ParallelRunner::default())
 }
@@ -500,7 +500,6 @@ pub fn scale_topology_with(n: u8, runner: &ParallelRunner) -> Vec<TopologyRow> {
             .map(|i| {
                 let mut c = GenCfg::narrow_probe(NodeId(0), 8);
                 c.pattern = Pattern::UniformTiles;
-                c.max_outstanding = 2;
                 c.seed = 0x5CA1E + i as u64;
                 TileTraffic {
                     core: Some(c),

@@ -59,6 +59,13 @@ pub struct FlooFlit {
     pub payload: Payload,
     /// Injection cycle (latency accounting only).
     pub injected_at: u64,
+    /// Virtual channel the flit currently rides (a link-level sideband,
+    /// not an AXI header line). Flits inject on VC 0; on wrap fabrics
+    /// the router rewrites this when the flit crosses a dateline
+    /// (`router::routing::dateline_vc`) and it selects the lane of the
+    /// next [`crate::sim::Link`]. Always 0 on meshes and on every
+    /// single-VC configuration. See `docs/deadlock.md`.
+    pub vc: u8,
 }
 
 /// Every message class that can cross the NoC. `Narrow*` originate from the
@@ -186,12 +193,16 @@ impl Payload {
 }
 
 impl FlooFlit {
-    /// Assemble a flit stamped with its injection cycle.
+    /// Assemble a flit stamped with its injection cycle. Flits start on
+    /// virtual channel 0 (the dateline scheme's injection invariant —
+    /// see `docs/deadlock.md`); routers rewrite [`FlooFlit::vc`] at
+    /// dateline crossings.
     pub fn new(header: Header, payload: Payload, now: u64) -> Self {
         FlooFlit {
             header,
             payload,
             injected_at: now,
+            vc: 0,
         }
     }
 }

@@ -7,7 +7,7 @@
 //! repro reproduce <tab1|tab2|fig5a|fig5b|fig6a|fig6b|latency|bandwidth|
 //!                  wires|scaling|all> [--bidir] [--levels a,b,c] [--jobs n]
 //! repro simulate  [--config f.json] [--mesh n] [--txns n] [--wide-only]
-//!                 [--topology mesh|torus|ring]
+//!                 [--topology mesh|torus|ring] [--vcs n]
 //! repro sweep     <rob|buffers|burst|mesh|topology|output-reg> [--jobs n]
 //! repro scale_topology [--mesh n] [--jobs n]
 //! repro dse       [--mesh n] [--artifacts dir] [--jobs n]
@@ -206,7 +206,7 @@ fn reproduce(args: &Args) -> anyhow::Result<()> {
 }
 
 fn simulate(args: &Args) -> anyhow::Result<()> {
-    let cfg = match args.opt("config") {
+    let mut cfg = match args.opt("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("reading config '{path}'"))?;
@@ -233,18 +233,23 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
             c
         }
     };
+    if args.opt("vcs").is_some() {
+        let vcs = args.opt_u64("vcs", 0)? as usize;
+        anyhow::ensure!(
+            (1..=floonoc::router::MAX_VCS).contains(&vcs),
+            "--vcs expects 1..={}, got {vcs}",
+            floonoc::router::MAX_VCS
+        );
+        cfg = cfg.with_vcs(vcs);
+    }
     let txns = args.opt_u64("txns", 64)?;
     println!("config: {}", config::noc_config_to_json(&cfg));
     let sys = NocSystem::new(cfg);
     let tiles = sys.topo.num_tiles;
-    // Wormhole DMA bursts over uniform-random destinations can deadlock
-    // on wraparound fabrics (no virtual channels yet — see
-    // docs/topologies.md): keep the wide traffic single-hop there.
-    // Narrow single-beat reads are single-flit and safe everywhere.
-    let dma_pattern = match sys.topo.kind {
-        floonoc::topology::TopologyKind::Mesh => Pattern::UniformTiles,
-        _ => Pattern::NearestNeighbor,
-    };
+    // Uniform-random wide wormhole bursts are safe on every fabric:
+    // torus/ring configs carry dateline virtual channels by default
+    // (docs/deadlock.md), so the wrap-saturation workload no longer
+    // needs the single-hop DMA restriction it shipped with pre-VC.
     let profiles: Vec<TileTraffic> = (0..tiles)
         .map(|i| TileTraffic {
             core: Some(GenCfg {
@@ -252,7 +257,7 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
                 ..GenCfg::narrow_probe(NodeId(0), txns)
             }),
             dma: Some(GenCfg {
-                pattern: dma_pattern,
+                pattern: Pattern::UniformTiles,
                 seed: 0xD0A + i as u64,
                 ..GenCfg::dma_burst(NodeId(0), (txns / 4).max(1), false)
             }),

@@ -102,8 +102,28 @@ pub struct NocConfig {
     /// reference sweep. Cycle-accurate equivalence between the two is
     /// pinned by `tests/gated_equivalence.rs`.
     pub sim_mode: SimMode,
-    /// Router input-buffer depth (flits).
+    /// Router input-buffer depth (flits; split across VCs when
+    /// `vcs > 1`).
     pub in_buf_depth: usize,
+    /// Virtual channels per router-to-router link (JSON `"vcs"`, CLI
+    /// `--vcs`). `1` is the paper's VC-free router and the mesh default;
+    /// wrap fabrics (torus/ring) default to `2` and use the dateline
+    /// rule for deadlock freedom (see `docs/deadlock.md`). Inject/eject
+    /// links always carry one lane. At most
+    /// [`crate::router::MAX_VCS`].
+    ///
+    /// ```
+    /// use floonoc::noc::NocConfig;
+    /// use floonoc::topology::TopologyKind;
+    /// // Meshes need no VCs; wrap fabrics get dateline VCs by default.
+    /// assert_eq!(NocConfig::mesh(4, 4).vcs, 1);
+    /// assert_eq!(NocConfig::torus(4, 4).vcs, 2);
+    /// assert_eq!(NocConfig::ring(8).vcs, 2);
+    /// assert_eq!(NocConfig::fabric(TopologyKind::Torus, 3, 3).vcs, 2);
+    /// // Explicit override via the builder:
+    /// assert_eq!(NocConfig::torus(4, 4).with_vcs(1).vcs, 1);
+    /// ```
+    pub vcs: usize,
     /// Output register on router links ("elastic buffer", §III-C): the
     /// two-cycle router used by the paper's physical implementation.
     pub output_reg: bool,
@@ -127,6 +147,7 @@ impl Default for NocConfig {
             mode: LinkMode::NarrowWide,
             sim_mode: SimMode::Gated,
             in_buf_depth: 2,
+            vcs: 1,
             output_reg: true,
             narrow_init: InitiatorCfg::narrow_default(),
             wide_init: InitiatorCfg::wide_default(),
@@ -146,22 +167,27 @@ impl NocConfig {
         }
     }
 
-    /// A `width × height` torus (wraparound rows and columns).
+    /// A `width × height` torus (wraparound rows and columns), with the
+    /// fabric's default dateline VC count (2 — deadlock-free wormhole
+    /// wrap traffic out of the box).
     pub fn torus(width: u8, height: u8) -> Self {
         NocConfig {
             topology: TopologyKind::Torus,
             width,
             height,
+            vcs: TopologyKind::Torus.default_vcs(),
             ..Default::default()
         }
     }
 
-    /// A ring of `n` tiles (1-D chain closed by one wraparound link).
+    /// A ring of `n` tiles (1-D chain closed by one wraparound link),
+    /// with the fabric's default dateline VC count (2).
     pub fn ring(n: u8) -> Self {
         NocConfig {
             topology: TopologyKind::Ring,
             width: n,
             height: 1,
+            vcs: TopologyKind::Ring.default_vcs(),
             ..Default::default()
         }
     }
@@ -169,18 +195,17 @@ impl NocConfig {
     /// A fabric of `kind` with `width × height` tiles. The tile-count
     /// semantics hold for every kind: a ring request lays the same
     /// `width × height` tiles out as one closed chain (so the result is
-    /// always a valid config, never a deferred height assert).
+    /// always a valid config, never a deferred height assert). Each kind
+    /// gets its default VC count (1 for mesh, 2 for wrap fabrics).
     pub fn fabric(kind: TopologyKind, width: u8, height: u8) -> Self {
-        if kind == TopologyKind::Ring {
-            let tiles = width as usize * height as usize;
-            assert!(tiles <= u8::MAX as usize, "ring fabric supports at most 255 tiles");
-            return NocConfig::ring(tiles as u8);
-        }
-        NocConfig {
-            topology: kind,
-            width,
-            height,
-            ..Default::default()
+        match kind {
+            TopologyKind::Ring => {
+                let tiles = width as usize * height as usize;
+                assert!(tiles <= u8::MAX as usize, "ring fabric supports at most 255 tiles");
+                NocConfig::ring(tiles as u8)
+            }
+            TopologyKind::Torus => NocConfig::torus(width, height),
+            TopologyKind::Mesh => NocConfig::mesh(width, height),
         }
     }
 
@@ -199,6 +224,26 @@ impl NocConfig {
     /// Select the step-loop strategy (gated vs dense reference).
     pub fn with_sim_mode(mut self, mode: SimMode) -> Self {
         self.sim_mode = mode;
+        self
+    }
+
+    /// Set the virtual-channel count per router-to-router link (see
+    /// [`NocConfig::vcs`]). Panics outside `1..=MAX_VCS`.
+    ///
+    /// ```
+    /// use floonoc::noc::{NocConfig, NocSystem};
+    /// // A torus forced back to 1 VC builds (the documented pre-VC
+    /// // danger regime); a mesh raised to 2 VCs also builds.
+    /// let _ = NocSystem::new(NocConfig::torus(3, 3).with_vcs(1));
+    /// let _ = NocSystem::new(NocConfig::mesh(2, 2).with_vcs(2));
+    /// ```
+    pub fn with_vcs(mut self, vcs: usize) -> Self {
+        assert!(
+            (1..=crate::router::MAX_VCS).contains(&vcs),
+            "vcs must be in 1..={}, got {vcs}",
+            crate::router::MAX_VCS
+        );
+        self.vcs = vcs;
         self
     }
 
@@ -638,13 +683,14 @@ impl NocSystem {
 fn build_network(topo: &Topology, cfg: &NocConfig) -> Network {
     let num_routers = topo.width as usize * topo.height as usize;
     let mut links: Vec<Link<FlooFlit>> = Vec::new();
-    let new_link = |links: &mut Vec<Link<FlooFlit>>, pipelined: bool| -> LinkId {
-        let l = if pipelined && cfg.output_reg {
-            Link::with_pipeline(cfg.in_buf_depth, 1)
-        } else {
-            Link::new(cfg.in_buf_depth)
-        };
-        links.push(l);
+    // Neighbour channels carry the configured VC lane count; local
+    // (inject/eject) links always carry one lane — flits inject on VC 0
+    // and the router's dateline rule resets ejecting flits to VC 0, so
+    // extra NI-side lanes would never be used (and a single eject lane
+    // keeps NI-bound packets non-interleaved via the lane-0 lock).
+    let new_link = |links: &mut Vec<Link<FlooFlit>>, pipelined: bool, vcs: usize| -> LinkId {
+        let stages = usize::from(pipelined && cfg.output_reg);
+        links.push(Link::with_vcs(cfg.in_buf_depth, vcs, stages));
         links.len() - 1
     };
 
@@ -656,6 +702,7 @@ fn build_network(topo: &Topology, cfg: &NocConfig) -> Network {
                 RouterCfg {
                     ports: radix,
                     in_buf_depth: cfg.in_buf_depth,
+                    vcs: cfg.vcs,
                 },
                 topo.route_table(coord),
             )
@@ -673,11 +720,11 @@ fn build_network(topo: &Topology, cfg: &NocConfig) -> Network {
             routers[a].out_links[port_a].is_none() && routers[b].in_links[port_b].is_none(),
             "channel collision at router {a} port {port_a}"
         );
-        let l = new_link(&mut links, true);
+        let l = new_link(&mut links, true, cfg.vcs);
         routers[a].out_links[port_a] = Some(l);
         routers[b].in_links[port_b] = Some(l);
         link_sink.push(Some(b));
-        let l = new_link(&mut links, true);
+        let l = new_link(&mut links, true, cfg.vcs);
         routers[b].out_links[port_b] = Some(l);
         routers[a].in_links[port_a] = Some(l);
         link_sink.push(Some(a));
@@ -697,11 +744,11 @@ fn build_network(topo: &Topology, cfg: &NocConfig) -> Network {
             routers[r].in_links[port].is_none(),
             "local-port collision at router {r} port {port}"
         );
-        let inj = new_link(&mut links, false);
+        let inj = new_link(&mut links, false, 1);
         routers[r].in_links[port] = Some(inj);
         inject[node.id.0 as usize] = inj;
         link_sink.push(Some(r));
-        let ej = new_link(&mut links, true);
+        let ej = new_link(&mut links, true, 1);
         routers[r].out_links[port] = Some(ej);
         eject[node.id.0 as usize] = ej;
         // Eject links are consumed by the node's NI, which is stepped
@@ -998,6 +1045,64 @@ mod tests {
         }
         assert_eq!(beats, 8);
         assert!(sys.run_until_idle(20));
+    }
+
+    /// Dateline VCs on the default torus: wrap fabrics build with 2 VCs,
+    /// wrap-crossing flits really ride lane 1 of the wrap link, and the
+    /// wrap link's VC 0 lane stays clear (the invariant the acyclicity
+    /// proof rests on — see docs/deadlock.md).
+    #[test]
+    fn torus_wrap_traffic_rides_vc1() {
+        use crate::router::PORT_W;
+        let mut sys = NocSystem::new(NocConfig::torus(4, 4));
+        assert_eq!(sys.cfg.vcs, 2);
+        sys.narrow_init(NodeId(0))
+            .push_ar(rd(1, 0, 3, 15 * TILE_SPAN + 0x100), NodeId(15));
+        let mut done = false;
+        for _ in 0..200 {
+            sys.step();
+            if sys.narrow_init(NodeId(0)).r_out.pop().is_some() {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "wraparound read must complete with VCs on");
+        assert!(sys.run_until_idle(10));
+        // Request path 0 -> 15 starts with the westward wrap hop out of
+        // router 0 (x = 0 going W crosses the row dateline).
+        let wrap = sys.nets[NET_REQ].routers[0].out_links[PORT_W].unwrap();
+        let l = &sys.nets[NET_REQ].links[wrap];
+        assert!(l.lane_delivered(1) > 0, "wrap hop must ride VC 1");
+        assert_eq!(l.lane_delivered(0), 0, "a wrap link's VC 0 lane stays clear");
+    }
+
+    /// A wide wormhole burst crossing the torus dateline completes —
+    /// multi-flit packets over wrap links are exactly the traffic the
+    /// dateline scheme exists for.
+    #[test]
+    fn torus_wide_burst_across_dateline() {
+        let mut sys = NocSystem::new(NocConfig::torus(4, 4));
+        sys.wide_init(NodeId(0))
+            .push_ar(rd(2, 15, 6, 15 * TILE_SPAN), NodeId(15));
+        let mut beats = 0;
+        for _ in 0..400 {
+            sys.step();
+            while sys.wide_init(NodeId(0)).r_out.pop().is_some() {
+                beats += 1;
+            }
+            if beats == 16 {
+                break;
+            }
+        }
+        assert_eq!(beats, 16);
+        assert!(sys.run_until_idle(10));
+    }
+
+    /// The VC knob validates its range.
+    #[test]
+    #[should_panic(expected = "vcs must be in 1..=")]
+    fn with_vcs_rejects_zero() {
+        let _ = NocConfig::mesh(2, 2).with_vcs(0);
     }
 
     /// The gated and dense step loops must agree on the calibrated

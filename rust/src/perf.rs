@@ -14,6 +14,10 @@
 //!   narrow + wide traffic at full rate: the gated loop's worst case
 //!   (bar: within 5% of dense — the active set is allowed to cost its
 //!   bookkeeping only when it buys nothing);
+//! * **wrap_saturated** — the same full-rate uniform traffic on a 4×4
+//!   torus with its default 2 dateline VCs: the VC switch's cps record
+//!   (this workload deadlocked — or needed crippled outstanding budgets
+//!   — before the virtual-channel PR);
 //! * **parallel sweep** — the serial-vs-parallel `ParallelRunner`
 //!   speedup on identical points with a byte-identical-report check;
 //! * **cps gate** — [`crate::util::bench::cps_gate`] over the gated
@@ -53,6 +57,34 @@ pub fn saturated_workload(n: u8, mode: SimMode) -> TiledWorkload {
                 pattern: Pattern::UniformTiles,
                 num_txns: u64::MAX,
                 seed: 100 + i as u64,
+                ..GenCfg::dma_burst(NodeId(0), 1, false)
+            }),
+        })
+        .collect();
+    TiledWorkload::new(sys, profiles)
+}
+
+/// Every tile of an `n × n` **torus** injecting uniform-random wide
+/// wormhole bursts (plus narrow probes) at full rate — the
+/// wrap-saturation scenario the dateline virtual channels (PR 4)
+/// unlocked: before VCs this workload was undrivable (cyclic-wait
+/// deadlock risk); now it records the VC machinery's simulation-speed
+/// cost in the trajectory file as `wrap_saturated_torus_4x4`.
+pub fn wrap_saturated_workload(n: u8, mode: SimMode) -> TiledWorkload {
+    let sys = NocSystem::new(NocConfig::torus(n, n).with_sim_mode(mode));
+    let tiles = sys.topo.num_tiles;
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                num_txns: u64::MAX,
+                seed: i as u64,
+                ..GenCfg::narrow_probe(NodeId(0), 1)
+            }),
+            dma: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                num_txns: u64::MAX,
+                seed: 300 + i as u64,
                 ..GenCfg::dma_burst(NodeId(0), 1, false)
             }),
         })
@@ -260,6 +292,10 @@ pub struct E2eReport {
     pub sparse: ModeComparison,
     /// Saturated scenario (gating's worst case; bar: ≥ 0.95×).
     pub saturated: ModeComparison,
+    /// Wrap-saturation scenario on a 2-VC torus (the dateline-VC
+    /// feature's cps record; no bar — the entry tracks the VC switch's
+    /// cost PR-over-PR).
+    pub wrap: ModeComparison,
     /// Serial-vs-parallel sweep runner comparison.
     pub sweep: SweepComparison,
     /// The regression-gate measurement (gated saturated workload).
@@ -286,6 +322,9 @@ pub fn run_e2e(quick: bool) -> E2eReport {
         sparse_trace_workload(8, m)
     });
     let saturated = compare_modes("saturated_4x4", sat_cycles, |m| saturated_workload(4, m));
+    let wrap = compare_modes("wrap_saturated_torus_4x4", sat_cycles, |m| {
+        wrap_saturated_workload(4, m)
+    });
     if sparse.speedup() < 2.0 {
         println!(
             "    WARNING: sparse-trace gated speedup {:.2}x below the 2x tentpole bar",
@@ -306,6 +345,7 @@ pub fn run_e2e(quick: bool) -> E2eReport {
     E2eReport {
         sparse,
         saturated,
+        wrap,
         sweep,
         gate,
         gate_floor,
@@ -322,6 +362,7 @@ pub fn report_to_json(r: &E2eReport) -> Json {
             Json::obj(vec![
                 (r.sparse.name.as_str(), r.sparse.to_json()),
                 (r.saturated.name.as_str(), r.saturated.to_json()),
+                (r.wrap.name.as_str(), r.wrap.to_json()),
                 ("parallel_sweep", r.sweep.to_json()),
             ]),
         ),
@@ -399,7 +440,7 @@ mod tests {
     /// stepped the same number of cycles agree on injected-flit counts.
     #[test]
     fn scenarios_deterministic() {
-        for mk in [sparse_trace_workload, saturated_workload] {
+        for mk in [sparse_trace_workload, saturated_workload, wrap_saturated_workload] {
             let count = |mode: SimMode| {
                 let mut w = mk(4, mode);
                 for _ in 0..500 {
@@ -426,6 +467,12 @@ mod tests {
                 cycles: 10,
                 dense_cps: 100.0,
                 gated_cps: 99.0,
+            },
+            wrap: ModeComparison {
+                name: "wrap_saturated_torus_4x4".into(),
+                cycles: 10,
+                dense_cps: 90.0,
+                gated_cps: 90.0,
             },
             sweep: SweepComparison {
                 points: 4,

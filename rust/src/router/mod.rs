@@ -2,10 +2,16 @@
 //!
 //! Design points taken from the paper, each visible in the code:
 //!
-//! * **no virtual channels, no internal pipelining** — a router is input
-//!   FIFOs + route computation + round-robin switch allocation, nothing
-//!   else; single-cycle latency because forwarding happens the same cycle
-//!   a flit sits at an input-buffer head;
+//! * **no internal pipelining** — a router is input FIFOs + route
+//!   computation + round-robin switch allocation, nothing else;
+//!   single-cycle latency because forwarding happens the same cycle a
+//!   flit sits at an input-buffer head;
+//! * **virtual channels only where the fabric needs them** — the paper's
+//!   mesh runs VC-free (and our 1-VC configuration is byte-identical to
+//!   that router); wrap fabrics (torus/ring) configure 2 VCs and the
+//!   dateline rule ([`routing::dateline_vc`]) for deadlock freedom —
+//!   per-input-per-VC buffers, per-(output, VC) wormhole locks, one
+//!   traversal per output per cycle (see `docs/deadlock.md`);
 //! * **multilink** — one independent router instance per physical link
 //!   (narrow_req / narrow_rsp / wide); the three networks never share
 //!   resources;
@@ -27,6 +33,9 @@ pub mod arbiter;
 
 pub use arbiter::RoundRobin;
 pub use router::{
-    Router, RouterActivity, RouterCfg, PORT_E, PORT_LOCAL, PORT_MEM, PORT_N, PORT_S, PORT_W,
+    Router, RouterActivity, RouterCfg, MAX_VCS, PORT_E, PORT_LOCAL, PORT_MEM, PORT_N, PORT_S,
+    PORT_W,
 };
-pub use routing::{ring_route, torus_route, xy_route, RouteTable, RoutingAlgorithm};
+pub use routing::{
+    dateline_vc, port_dim, ring_route, torus_route, xy_route, RouteTable, RoutingAlgorithm,
+};

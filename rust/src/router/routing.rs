@@ -14,10 +14,11 @@
 //! * [`ring_route`] — shortest direction around a 1-D ring.
 //!
 //! Torus/ring wraparound introduces cyclic channel dependencies that XY
-//! on a mesh does not have; deadlock freedom there currently relies on
-//! bounded outstanding transactions and end-to-end NI flow control, not
-//! on virtual channels (see `docs/topologies.md` and the ROADMAP item on
-//! VC-based deadlock avoidance).
+//! on a mesh does not have; deadlock freedom there comes from **dateline
+//! virtual channels**: each [`RouteTable`] carries the router's dateline
+//! mask (which output ports cross a wraparound link) and [`dateline_vc`]
+//! switches wrap-crossing flits from VC 0 to VC 1, breaking every
+//! channel-dependency cycle (proof sketch in `docs/deadlock.md`).
 
 use crate::flit::{Coord, NodeId};
 
@@ -135,16 +136,86 @@ impl RoutingAlgorithm {
     }
 }
 
-/// Per-router route table: output port for every destination node.
+/// Routing dimension a cardinal port moves a flit in: `Some(0)` for X
+/// (east/west), `Some(1)` for Y (north/south), `None` for every
+/// non-cardinal port (local, memory attach) — i.e. injection/ejection.
+#[inline]
+pub fn port_dim(port: usize) -> Option<u8> {
+    match port {
+        PORT_E | PORT_W => Some(0),
+        PORT_N | PORT_S => Some(1),
+        _ => None,
+    }
+}
+
+/// The dateline virtual-channel rule: which VC a flit rides on the link
+/// it is about to traverse, given where it came from and where it goes.
+///
+/// * crossing a **dateline** (a wraparound link, `crosses_dateline`) →
+///   VC 1, unconditionally;
+/// * continuing in the **same dimension** (E/W → E/W, N/S → N/S) →
+///   keep the current VC (a flit that crossed the wrap stays on VC 1
+///   until it leaves the dimension — returning early would re-close the
+///   dependency cycle through the dateline, see `docs/deadlock.md`);
+/// * **entering a dimension** (injection, or an X→Y turn under
+///   dimension-ordered routing) → back to VC 0: each dimension's ring is
+///   broken independently, and dimension-ordered routing never turns
+///   Y→X, so the cross-dimension edges are acyclic by themselves.
+///
+/// ```
+/// use floonoc::router::routing::dateline_vc;
+/// use floonoc::router::{PORT_E, PORT_LOCAL, PORT_N, PORT_W};
+/// // Injected flit heading east on a plain channel: VC 0.
+/// assert_eq!(dateline_vc(PORT_LOCAL, PORT_E, false, 0), 0);
+/// // The same hop over the row's wraparound link: switch to VC 1.
+/// assert_eq!(dateline_vc(PORT_LOCAL, PORT_E, true, 0), 1);
+/// // Continuing east after the wrap: stay on VC 1...
+/// assert_eq!(dateline_vc(PORT_W, PORT_E, false, 1), 1);
+/// // ...until the dimension-ordered turn into Y resets to VC 0.
+/// assert_eq!(dateline_vc(PORT_W, PORT_N, false, 1), 0);
+/// ```
+#[inline]
+pub fn dateline_vc(in_port: usize, out_port: usize, crosses_dateline: bool, vc_in: u8) -> u8 {
+    if crosses_dateline {
+        1
+    } else if port_dim(in_port).is_some() && port_dim(in_port) == port_dim(out_port) {
+        vc_in
+    } else {
+        0
+    }
+}
+
+/// Per-router route table: output port for every destination node, plus
+/// the router's **dateline mask** — which of its output ports cross a
+/// wraparound link (always empty on meshes). The mask is what makes the
+/// table the single source of the VC-switch decision: the router hot
+/// loop asks [`RouteTable::crosses_dateline`] and [`dateline_vc`] and
+/// never re-derives fabric geometry.
 #[derive(Debug, Clone)]
 pub struct RouteTable {
     ports: Vec<u8>,
+    dateline: u8,
 }
 
 impl RouteTable {
-    /// Build from the destination-indexed port vector.
+    /// Build from the destination-indexed port vector, with no dateline
+    /// ports (correct for meshes and for unit fixtures).
     pub fn new(ports: Vec<u8>) -> Self {
-        RouteTable { ports }
+        RouteTable::with_dateline(ports, 0)
+    }
+
+    /// Build with an explicit dateline mask (bit `p` set = output port
+    /// `p` crosses a wraparound link). `Topology::route_table` fills
+    /// this from `Topology::dateline_ports`.
+    pub fn with_dateline(ports: Vec<u8>, dateline: u8) -> Self {
+        RouteTable { ports, dateline }
+    }
+
+    /// Does leaving this router through `port` cross a wraparound
+    /// (dateline) link?
+    #[inline]
+    pub fn crosses_dateline(&self, port: usize) -> bool {
+        (self.dateline >> port) & 1 == 1
     }
 
     /// Output port for `dst`. Panics on unknown destinations — a routing
@@ -261,5 +332,50 @@ mod tests {
         assert_eq!(t.lookup(NodeId(0)), 0);
         assert_eq!(t.lookup(NodeId(2)), 2);
         assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn dateline_mask_per_port() {
+        let t = RouteTable::new(vec![0]);
+        for p in 0..6 {
+            assert!(!t.crosses_dateline(p), "plain tables have no datelines");
+        }
+        let t = RouteTable::with_dateline(vec![0], (1 << PORT_E) | (1 << PORT_S));
+        assert!(t.crosses_dateline(PORT_E));
+        assert!(t.crosses_dateline(PORT_S));
+        assert!(!t.crosses_dateline(PORT_W));
+        assert!(!t.crosses_dateline(PORT_LOCAL));
+    }
+
+    /// The dateline rule, case by case: wrap hops always land on VC 1,
+    /// in-dimension hops preserve the VC, and dimension entry (injection
+    /// or the X→Y turn) resets to VC 0.
+    #[test]
+    fn dateline_vc_rule() {
+        // Wrap crossing dominates everything, whatever the current VC.
+        for vc in [0, 1] {
+            assert_eq!(dateline_vc(PORT_LOCAL, PORT_E, true, vc), 1);
+            assert_eq!(dateline_vc(PORT_W, PORT_E, true, vc), 1);
+            assert_eq!(dateline_vc(PORT_E, PORT_N, true, vc), 1);
+        }
+        // Same dimension, no wrap: the VC sticks (both X and Y).
+        assert_eq!(dateline_vc(PORT_W, PORT_E, false, 0), 0);
+        assert_eq!(dateline_vc(PORT_W, PORT_E, false, 1), 1);
+        assert_eq!(dateline_vc(PORT_S, PORT_N, false, 1), 1);
+        // Dimension change / injection / ejection: reset to VC 0.
+        assert_eq!(dateline_vc(PORT_W, PORT_N, false, 1), 0, "X->Y turn");
+        assert_eq!(dateline_vc(PORT_LOCAL, PORT_E, false, 1), 0, "injection");
+        assert_eq!(dateline_vc(PORT_E, PORT_LOCAL, false, 1), 0, "ejection");
+        assert_eq!(dateline_vc(PORT_E, super::super::router::PORT_MEM, false, 1), 0);
+    }
+
+    #[test]
+    fn port_dimensions() {
+        assert_eq!(port_dim(PORT_E), Some(0));
+        assert_eq!(port_dim(PORT_W), Some(0));
+        assert_eq!(port_dim(PORT_N), Some(1));
+        assert_eq!(port_dim(PORT_S), Some(1));
+        assert_eq!(port_dim(PORT_LOCAL), None);
+        assert_eq!(port_dim(super::super::router::PORT_MEM), None);
     }
 }

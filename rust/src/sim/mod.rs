@@ -2,8 +2,9 @@
 //!
 //! The simulator is a synchronous model of the RTL: a global cycle counter
 //! advances, and every hardware structure steps once per cycle. Hop timing
-//! and backpressure are modelled by [`Link`], a one-entry register stage in
-//! front of a bounded input FIFO:
+//! and backpressure are modelled by [`Link`]: per virtual-channel lane, a
+//! one-entry register stage in front of a bounded input FIFO (single-VC
+//! links — every mesh link — have exactly one lane):
 //!
 //! ```text
 //!   producer --(offer when reg empty)--> [reg] --(deliver when fifo space)--> [input fifo] --> consumer

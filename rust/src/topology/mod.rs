@@ -46,6 +46,18 @@ impl TopologyKind {
             TopologyKind::Ring => "ring",
         }
     }
+
+    /// Virtual channels this fabric needs for deadlock-free wormhole
+    /// routing, and the default a [`crate::noc::NocConfig`] built for it
+    /// gets: 1 on meshes (XY is turn-cycle-free), 2 on wrap fabrics
+    /// (dateline VCs break each closed row/column's channel cycle — see
+    /// `docs/deadlock.md`).
+    pub fn default_vcs(&self) -> usize {
+        match self {
+            TopologyKind::Mesh => 1,
+            TopologyKind::Torus | TopologyKind::Ring => 2,
+        }
+    }
 }
 
 /// What kind of endpoint a node is.
@@ -276,6 +288,21 @@ impl Topology {
         }
     }
 
+    /// Which dimensions of this fabric are closed by a wraparound link:
+    /// `(x, y)`. The single home of the wrap rule — both the channel
+    /// list ([`Topology::channels`]) and the dateline masks
+    /// ([`Topology::dateline_ports`]) derive from it, so they can never
+    /// disagree about which links exist. A dimension of length 1 never
+    /// wraps (the wrap would be a self-link).
+    fn wrap_dims(&self) -> (bool, bool) {
+        let wrap_x = match self.kind {
+            TopologyKind::Mesh => false,
+            TopologyKind::Torus | TopologyKind::Ring => self.width > 1,
+        };
+        let wrap_y = self.kind == TopologyKind::Torus && self.height > 1;
+        (wrap_x, wrap_y)
+    }
+
     /// Bidirectional neighbour channels as
     /// `(router_a, port_on_a, router_b, port_on_b)`: `a`'s port faces
     /// `b` and vice versa, each physical channel listed exactly once.
@@ -301,11 +328,7 @@ impl Topology {
                 }
             }
         }
-        let wrap_x = match self.kind {
-            TopologyKind::Mesh => false,
-            TopologyKind::Torus | TopologyKind::Ring => w > 1,
-        };
-        let wrap_y = self.kind == TopologyKind::Torus && h > 1;
+        let (wrap_x, wrap_y) = self.wrap_dims();
         if wrap_x {
             for y in 0..h {
                 out.push((idx(w - 1, y), PORT_E, idx(0, y), PORT_W));
@@ -357,9 +380,38 @@ impl Topology {
         }
     }
 
+    /// Output ports of the router at `me` whose channel is a wraparound
+    /// — dateline — link, as a bitmask over port numbers. This is the
+    /// geometric complement of [`Topology::channels`]'s wrap rules
+    /// (both derive from the same private `wrap_dims` helper, so the
+    /// mask can never disagree with the channels that actually exist):
+    /// the last router of a wrapping dimension exits it through E/N,
+    /// the first through W/S. Always zero on meshes; degenerate
+    /// dimensions (length 1) have no wrap channel and contribute no
+    /// bits.
+    pub fn dateline_ports(&self, me: Coord) -> u8 {
+        let (wrap_x, wrap_y) = self.wrap_dims();
+        let mut mask = 0u8;
+        if wrap_x && me.x == self.width - 1 {
+            mask |= 1 << PORT_E;
+        }
+        if wrap_x && me.x == 0 {
+            mask |= 1 << PORT_W;
+        }
+        if wrap_y && me.y == self.height - 1 {
+            mask |= 1 << PORT_N;
+        }
+        if wrap_y && me.y == 0 {
+            mask |= 1 << PORT_S;
+        }
+        mask
+    }
+
     /// Generate the route table for the router at `me`: for each
     /// destination node, the output port a flit should take, per the
-    /// fabric's [`RoutingAlgorithm`]. Memory controllers route like
+    /// fabric's [`RoutingAlgorithm`], plus the router's dateline mask
+    /// ([`Topology::dateline_ports`]) so the VC-aware switch knows which
+    /// exits cross a wraparound link. Memory controllers route like
     /// their host router, plus the final attach-port exit at the host
     /// itself.
     pub fn route_table(&self, me: Coord) -> RouteTable {
@@ -378,7 +430,7 @@ impl Topology {
                 }
             })
             .collect();
-        RouteTable::new(ports)
+        RouteTable::with_dateline(ports, self.dateline_ports(me))
     }
 
     /// Shortest-path hop count between two nodes' host routers under the
@@ -609,6 +661,46 @@ mod tests {
                 assert_eq!(hops, t.hops(src.id, dst.id));
             }
         }
+    }
+
+    /// Dateline masks match the channel rules exactly: mesh routers have
+    /// none; torus border routers expose their wrap exits; interior
+    /// routers none; length-1 dimensions contribute nothing.
+    #[test]
+    fn dateline_ports_per_fabric() {
+        let mesh = Topology::mesh(4, 4, MemEdge::None);
+        for n in &mesh.nodes {
+            assert_eq!(mesh.dateline_ports(n.coord), 0, "meshes have no datelines");
+        }
+        let torus = Topology::torus(4, 3, MemEdge::None);
+        assert_eq!(
+            torus.dateline_ports(Coord::new(0, 0)),
+            (1 << PORT_W) | (1 << PORT_S),
+            "corner exits both dimensions through wraps"
+        );
+        assert_eq!(
+            torus.dateline_ports(Coord::new(3, 1)),
+            1 << PORT_E,
+            "row-end router wraps east only"
+        );
+        assert_eq!(torus.dateline_ports(Coord::new(1, 1)), 0, "interior router");
+        let ring = Topology::ring(6, MemEdge::None);
+        assert_eq!(ring.dateline_ports(Coord::new(0, 0)), 1 << PORT_W);
+        assert_eq!(ring.dateline_ports(Coord::new(5, 0)), 1 << PORT_E);
+        assert_eq!(ring.dateline_ports(Coord::new(2, 0)), 0);
+        // Degenerate 1-wide ring: no wrap channel, no dateline.
+        let dot = Topology::ring(1, MemEdge::None);
+        assert_eq!(dot.dateline_ports(Coord::new(0, 0)), 0);
+        // The mask flows into the generated route tables.
+        assert!(torus.route_table(Coord::new(3, 1)).crosses_dateline(PORT_E));
+        assert!(!torus.route_table(Coord::new(1, 1)).crosses_dateline(PORT_E));
+    }
+
+    #[test]
+    fn default_vcs_per_kind() {
+        assert_eq!(TopologyKind::Mesh.default_vcs(), 1);
+        assert_eq!(TopologyKind::Torus.default_vcs(), 2);
+        assert_eq!(TopologyKind::Ring.default_vcs(), 2);
     }
 
     #[test]

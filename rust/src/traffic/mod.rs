@@ -465,14 +465,14 @@ mod tests {
 
     #[test]
     fn tornado_completes_on_torus() {
-        // Live run: tornado over a 4x4 torus, single-beat narrow reads,
-        // low outstanding budget (the wrap links see real traffic).
+        // Live run: tornado over a 4x4 torus at the full default
+        // outstanding budget — every flow crosses a dateline, riding the
+        // fabric's default 2 VCs (the pre-VC budget cap is gone).
         let mut sys = NocSystem::new(crate::noc::NocConfig::torus(4, 4));
         let mut gens: Vec<Generator> = (0..16)
             .map(|i| {
                 let mut c = GenCfg::narrow_probe(NodeId(0), 8);
                 c.pattern = Pattern::Tornado;
-                c.max_outstanding = 2;
                 c.seed = 0x70AD0 + i as u64;
                 Generator::new(c, NodeId(i as u16))
             })

@@ -1,0 +1,89 @@
+//! Shared integration-test support (included via `mod common;` from the
+//! test binaries that need it — not a test target itself).
+
+use floonoc::cluster::TiledWorkload;
+
+/// Serialize every observable counter of a drained workload — total
+/// cycles, per-network flit-conservation counters, per-link
+/// delivered/stall/busy counters, per-router-per-port forwarding
+/// counters, per-node target statistics and per-tile generator
+/// completions and latency aggregates. Two runs are equivalent iff
+/// their digests are **byte-identical**; any divergence — a component
+/// skipped while it had work, a wake edge firing a cycle early or late,
+/// VC plumbing leaking into a 1-VC configuration — shows up as a
+/// counter mismatch somewhere in this string.
+///
+/// Shared by `gated_equivalence.rs` (gated-vs-dense differential) and
+/// `vc_deadlock.rs` (1-VC non-regression and wrap-saturation
+/// differential) so both suites pin the *same* notion of equivalence.
+pub fn digest(w: &mut TiledWorkload) -> String {
+    use std::fmt::Write;
+    let mut d = String::new();
+    writeln!(d, "cycles={}", w.sys.now).unwrap();
+    for (n, c) in w.sys.counters.iter().enumerate() {
+        writeln!(d, "net{n} injected={} ejected={}", c.injected, c.ejected).unwrap();
+    }
+    for (n, net) in w.sys.nets.iter().enumerate() {
+        for (lid, l) in net.links.iter().enumerate() {
+            // Skip never-touched links to keep the digest readable; a
+            // link touched in one mode but not the other still diverges
+            // (its line exists on one side only).
+            if l.delivered == 0 && l.busy_cycles == 0 {
+                continue;
+            }
+            writeln!(
+                d,
+                "net{n} link{lid} delivered={} stall={} busy={}",
+                l.delivered, l.stall_cycles, l.busy_cycles
+            )
+            .unwrap();
+        }
+        for (rid, r) in net.routers.iter().enumerate() {
+            if r.forwarded == 0 {
+                continue;
+            }
+            let per_port: Vec<String> = (0..r.cfg.ports)
+                .map(|p| r.forwarded_on(p).to_string())
+                .collect();
+            writeln!(
+                d,
+                "net{n} router{rid} forwarded={} active={} ports=[{}]",
+                r.forwarded,
+                r.active_cycles,
+                per_port.join(",")
+            )
+            .unwrap();
+        }
+    }
+    for (idx, node) in w.sys.nodes.iter().enumerate() {
+        let s = &node.target.stats;
+        writeln!(
+            d,
+            "node{idx} reads={} writes={} atomics={} req_stalls={}",
+            s.reads_served, s.writes_served, s.atomics_served, s.req_stall_cycles
+        )
+        .unwrap();
+    }
+    for t in &mut w.tiles {
+        for (tag, g) in [
+            ("core", t.core_gen.as_mut()),
+            ("dma", t.dma_gen.as_mut()),
+        ] {
+            let Some(g) = g else { continue };
+            writeln!(
+                d,
+                "tile{} {tag} issued={} completed={} lat_count={} lat_mean={:.6} lat_min={} lat_max={} lat_p50={}",
+                t.node.0,
+                g.issued,
+                g.completed,
+                g.latencies.count(),
+                g.latencies.mean(),
+                g.latencies.min(),
+                g.latencies.max(),
+                g.latencies.p50(),
+            )
+            .unwrap();
+        }
+    }
+    d
+}

@@ -25,17 +25,23 @@ use floonoc::sim::SimMode;
 use floonoc::topology::TopologyKind;
 use floonoc::traffic::{GenCfg, Pattern};
 
+mod common;
+use common::digest;
+
 /// 9-tile fabric of `kind` (3×3 for mesh/torus, 9-ring), mode selected.
 fn fabric(kind: TopologyKind, mode: SimMode) -> NocSystem {
     NocSystem::new(NocConfig::fabric(kind, 3, 3).with_sim_mode(mode))
 }
 
 /// The differential workload: every tile runs seeded narrow traffic with
-/// the pattern under test plus a few nearest-neighbor wide DMA bursts
-/// (single-hop wide wormholes are deadlock-safe on wrap fabrics without
-/// VCs — see docs/topologies.md). Bursty-with-gaps by construction: the
-/// narrow generators finish at different times, leaving long quiescent
-/// stretches that exercise the gating/pruning paths, not just saturation.
+/// the pattern under test plus a few uniform-random wide DMA bursts —
+/// multi-hop wide wormholes are deadlock-safe on the wrap fabrics now
+/// that torus/ring default to 2 dateline VCs (docs/deadlock.md), so the
+/// differential grid exercises the VC-aware switch (per-lane wake edges,
+/// per-VC locks, dateline switches) on every wrap fabric cell.
+/// Bursty-with-gaps by construction: the narrow generators finish at
+/// different times, leaving long quiescent stretches that exercise the
+/// gating/pruning paths, not just saturation.
 fn workload(kind: TopologyKind, pattern: Pattern, mode: SimMode) -> TiledWorkload {
     let sys = fabric(kind, mode);
     let tiles = sys.topo.num_tiles;
@@ -48,7 +54,7 @@ fn workload(kind: TopologyKind, pattern: Pattern, mode: SimMode) -> TiledWorkloa
                 ..GenCfg::narrow_probe(NodeId(0), 12)
             }),
             dma: Some(GenCfg {
-                pattern: Pattern::NearestNeighbor,
+                pattern: Pattern::UniformTiles,
                 num_txns: 3,
                 burst_len: 7,
                 seed: 0xD0A + i as u64,
@@ -59,81 +65,8 @@ fn workload(kind: TopologyKind, pattern: Pattern, mode: SimMode) -> TiledWorkloa
     TiledWorkload::new(sys, profiles)
 }
 
-/// Serialize every observable counter of a drained workload. Two runs
-/// are equivalent iff their digests are byte-identical.
-fn digest(w: &mut TiledWorkload) -> String {
-    use std::fmt::Write;
-    let mut d = String::new();
-    writeln!(d, "cycles={}", w.sys.now).unwrap();
-    for (n, c) in w.sys.counters.iter().enumerate() {
-        writeln!(d, "net{n} injected={} ejected={}", c.injected, c.ejected).unwrap();
-    }
-    for (n, net) in w.sys.nets.iter().enumerate() {
-        for (lid, l) in net.links.iter().enumerate() {
-            // Skip never-touched links to keep the digest readable; a
-            // link touched in one mode but not the other still diverges
-            // (its line exists on one side only).
-            if l.delivered == 0 && l.busy_cycles == 0 {
-                continue;
-            }
-            writeln!(
-                d,
-                "net{n} link{lid} delivered={} stall={} busy={}",
-                l.delivered, l.stall_cycles, l.busy_cycles
-            )
-            .unwrap();
-        }
-        for (rid, r) in net.routers.iter().enumerate() {
-            if r.forwarded == 0 {
-                continue;
-            }
-            let per_port: Vec<String> = (0..r.cfg.ports)
-                .map(|p| r.forwarded_on(p).to_string())
-                .collect();
-            writeln!(
-                d,
-                "net{n} router{rid} forwarded={} active={} ports=[{}]",
-                r.forwarded,
-                r.active_cycles,
-                per_port.join(",")
-            )
-            .unwrap();
-        }
-    }
-    for (idx, node) in w.sys.nodes.iter().enumerate() {
-        let s = &node.target.stats;
-        writeln!(
-            d,
-            "node{idx} reads={} writes={} atomics={} req_stalls={}",
-            s.reads_served, s.writes_served, s.atomics_served, s.req_stall_cycles
-        )
-        .unwrap();
-    }
-    for t in &mut w.tiles {
-        for (tag, g) in [
-            ("core", t.core_gen.as_mut()),
-            ("dma", t.dma_gen.as_mut()),
-        ] {
-            let Some(g) = g else { continue };
-            writeln!(
-                d,
-                "tile{} {tag} issued={} completed={} lat_count={} lat_mean={:.6} lat_min={} lat_max={} lat_p50={}",
-                t.node.0,
-                g.issued,
-                g.completed,
-                g.latencies.count(),
-                g.latencies.mean(),
-                g.latencies.min(),
-                g.latencies.max(),
-                g.latencies.p50(),
-            )
-            .unwrap();
-        }
-    }
-    d
-}
-
-/// Run one (fabric, pattern, mode) cell to completion and digest it.
+/// Run one (fabric, pattern, mode) cell to completion and digest it
+/// (the digest instrument itself is shared — see `common::digest`).
 fn run_cell(kind: TopologyKind, pattern: Pattern, mode: SimMode) -> String {
     let mut w = workload(kind, pattern, mode);
     assert!(

@@ -7,6 +7,7 @@
 //!        tab1 | tab2 | fig5a | fig5b | fig6a | fig6b |
 //!        latency | bandwidth | wires | scaling | all
 //! repro simulate [--config f] [--topology k] [--vcs n] [--txns n]  uniform traffic
+//! repro verify [--config f] [--topology k] [--vcs n] [--json] [--deep]  static checks
 //! repro sweep <rob|buffers|burst|mesh|topology|output-reg>  ablations
 //! repro scale_topology [--mesh n]     mesh vs torus vs ring at equal tiles
 //! repro dse [--mesh n] [--artifacts dir]              analytical model vs sim
@@ -107,7 +108,18 @@ COMMANDS:
                                virtual channels)
                                options: --config <file.json>, --txns <n>,
                                --mesh <n>, --topology <mesh|torus|ring>,
-                               --vcs <n>, --wide-only
+                               --vcs <n>, --wide-only, --no-verify,
+                               --check-invariants
+  verify                       statically verify a config before any cycle
+                               runs: channel-dependency-graph deadlock
+                               freedom, route sanity, config lints — the
+                               same preflight simulate runs, as a command
+                               (see docs/verification.md)
+                               options: --config <file.json>, --mesh <n>,
+                               --topology <mesh|torus|ring>, --vcs <n>,
+                               --wide-only, --json (machine-readable
+                               report), --deep (one gated warm-up epoch
+                               with invariant scans forced on)
   sweep <ablation>             rob | buffers | burst | mesh | topology |
                                output-reg; options: --jobs <n>
   scale_topology               compare mesh vs torus vs ring at the same
@@ -129,6 +141,10 @@ COMMANDS:
               torus adds wraparound rows+columns, ring is a 1-D cycle).
   --vcs <n>:  virtual channels per link (default: 1 on meshes, 2 dateline
               VCs on torus/ring — see docs/deadlock.md).
+  --no-verify: skip the static preflight verifier (simulate); configs the
+              verifier rejects as deadlock-prone then build anyway.
+  --check-invariants: enforce the gating "occupied => active" invariant
+              scans in release builds too (debug builds always scan).
   --jobs <n>: worker threads for sweep points (0/omitted = all cores,
               1 = serial); results are identical for any worker count.
   help                         this text

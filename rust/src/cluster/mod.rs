@@ -203,6 +203,12 @@ impl TiledWorkload {
     /// legitimate quiet gap (memory latency + drain of one burst —
     /// hundreds of cycles, not thousands).
     ///
+    /// A trip is not a bare error: before returning, the verifier's
+    /// live wait-for analysis ([`Self::stall_analysis`]) is printed to
+    /// stderr — every blocked `(router, input, vc) → (output, vc)`
+    /// dependency plus any cycle among them, in the same chain format
+    /// static `FV001` findings use.
+    ///
     /// ```
     /// use floonoc::cluster::{TileTraffic, TiledWorkload};
     /// use floonoc::flit::NodeId;
@@ -236,10 +242,25 @@ impl TiledWorkload {
                 last_progress = p;
                 last_progress_at = self.sys.now;
             } else if self.sys.now - last_progress_at >= stall_window {
+                eprintln!(
+                    "watchdog tripped (no progress since cycle {last_progress_at}):\n{}",
+                    self.stall_analysis()
+                );
                 return Err(last_progress_at);
             }
         }
         Ok(self.done() && self.sys.is_idle())
+    }
+
+    /// The verifier's live wait-for analysis of the network's current
+    /// state ([`crate::verify::live`]): every blocked
+    /// `(router, input, vc) → (output, vc)` dependency, plus any cycle
+    /// among them — the same chain format static findings use. Printed
+    /// automatically when [`Self::run_with_watchdog`] trips; callers
+    /// that match the `Err` themselves can include it in their panic
+    /// message.
+    pub fn stall_analysis(&self) -> String {
+        crate::verify::live::analyze(&self.sys)
     }
 
     /// All tiles' protocol monitors are clean.

@@ -120,6 +120,14 @@ pub fn noc_config_from_value(j: &Json) -> crate::Result<NocConfig> {
             cfg.mem_ctrl.mem_latency = l;
         }
     }
+    // Verifier knobs: preflight on by default, release-build invariant
+    // scans off by default (see `docs/verification.md`).
+    if let Some(v) = j.get("verify").and_then(Json::as_bool) {
+        cfg.verify = v;
+    }
+    if let Some(c) = j.get("check_invariants").and_then(Json::as_bool) {
+        cfg.check_invariants = c;
+    }
     if cfg.width == 0 || cfg.height == 0 {
         bail!("mesh dimensions must be >= 1");
     }
@@ -165,6 +173,8 @@ pub fn noc_config_to_json(cfg: &NocConfig) -> Json {
         ),
         ("sim_mode", Json::Str(cfg.sim_mode.name().to_string())),
         ("vcs", Json::Num(cfg.vcs as f64)),
+        ("verify", Json::Bool(cfg.verify)),
+        ("check_invariants", Json::Bool(cfg.check_invariants)),
         (
             "router",
             Json::obj(vec![
@@ -316,5 +326,18 @@ mod tests {
         assert_eq!(back.width, 5);
         assert_eq!(back.mode, LinkMode::WideOnly);
         assert_eq!(back.in_buf_depth, 3);
+    }
+
+    #[test]
+    fn verify_knobs_parse_and_roundtrip() {
+        // Defaults: preflight on, invariant scans off.
+        let cfg = noc_config_from_json("{}").unwrap();
+        assert!(cfg.verify && !cfg.check_invariants);
+        let cfg =
+            noc_config_from_json(r#"{"verify": false, "check_invariants": true}"#).unwrap();
+        assert!(!cfg.verify && cfg.check_invariants);
+        // Round-trips through serialization.
+        let back = noc_config_from_value(&noc_config_to_json(&cfg)).unwrap();
+        assert!(!back.verify && back.check_invariants);
     }
 }

@@ -37,13 +37,18 @@
 //!   figure of the paper's evaluation;
 //! * [`report`] — table/figure formatters, incl. the Table-II comparison;
 //! * [`perf`] — end-to-end simulator-throughput scenarios (activity-gated
-//!   vs dense reference) and the `BENCH_e2e.json` trajectory writer.
+//!   vs dense reference) and the `BENCH_e2e.json` trajectory writer;
+//! * [`verify`] — the static network analyzer: channel-dependency-graph
+//!   acyclicity (deadlock freedom), route-table sanity and config lints
+//!   as a mandatory build preflight, plus the live wait-for analysis
+//!   the stall watchdog prints (see `docs/verification.md`).
 //!
 //! Python (JAX + Pallas) is used **only at build time** to author and
 //! AOT-lower the compute kernels; the simulator and all experiments run
 //! from this crate alone once `make artifacts` has been executed.
 
 #![warn(missing_docs)]
+#![forbid(unsafe_code)]
 
 pub mod util;
 pub mod sim;
@@ -66,6 +71,7 @@ pub mod dse;
 pub mod coordinator;
 pub mod report;
 pub mod perf;
+pub mod verify;
 pub mod cli;
 
 /// Crate-wide result type.

@@ -8,6 +8,9 @@
 //!                  wires|scaling|all> [--bidir] [--levels a,b,c] [--jobs n]
 //! repro simulate  [--config f.json] [--mesh n] [--txns n] [--wide-only]
 //!                 [--topology mesh|torus|ring] [--vcs n]
+//!                 [--no-verify] [--check-invariants]
+//! repro verify    [--config f.json] [--mesh n] [--topology mesh|torus|ring]
+//!                 [--vcs n] [--wide-only] [--json] [--deep]
 //! repro sweep     <rob|buffers|burst|mesh|topology|output-reg> [--jobs n]
 //! repro scale_topology [--mesh n] [--jobs n]
 //! repro dse       [--mesh n] [--artifacts dir] [--jobs n]
@@ -58,6 +61,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         "info" => info(),
         "reproduce" => reproduce(args)?,
         "simulate" => simulate(args)?,
+        "verify" => verify_cmd(args)?,
         "sweep" => sweep(args)?,
         "scale_topology" => scale_topology(args)?,
         "dse" => dse(args)?,
@@ -205,7 +209,12 @@ fn reproduce(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn simulate(args: &Args) -> anyhow::Result<()> {
+/// The `NocConfig` described by the shared fabric options: `--config`
+/// (JSON file, wins over everything else) or `--mesh`/`--topology`/
+/// `--wide-only`, plus a `--vcs` override. Used by both `simulate` and
+/// `verify` so "verify what you are about to simulate" is the same
+/// config object, flag for flag.
+fn build_cfg(args: &Args) -> anyhow::Result<NocConfig> {
     let mut cfg = match args.opt("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)
@@ -241,6 +250,84 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
             floonoc::router::MAX_VCS
         );
         cfg = cfg.with_vcs(vcs);
+    }
+    Ok(cfg)
+}
+
+/// `repro verify`: the static analyzer as a standalone command — print
+/// the full [`floonoc::verify`] report for a config without simulating,
+/// exit non-zero if it contains error-severity findings. `--json` emits
+/// the machine-readable report (schema `floonoc-verify/1`); `--deep`
+/// additionally runs one activity-gated warm-up epoch with the
+/// "occupied ⇒ active" invariant scans forced on (release builds
+/// included), catching gating-soundness bugs the static passes cannot
+/// see.
+fn verify_cmd(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_cfg(args)?;
+    let report = floonoc::verify::preflight(&cfg);
+    if args.flag("json") {
+        println!("{}", pretty(&report.to_json()));
+    } else {
+        println!("config: {}", config::noc_config_to_json(&cfg));
+        println!("{report}");
+    }
+    if report.has_errors() {
+        bail!(
+            "verification failed: {} error(s) (see docs/verification.md)",
+            report.error_count()
+        );
+    }
+    if args.flag("deep") {
+        let sys = NocSystem::new(cfg.no_verify().with_invariant_checks());
+        let tiles = sys.topo.num_tiles;
+        let profiles: Vec<TileTraffic> = (0..tiles)
+            .map(|i| TileTraffic {
+                core: Some(GenCfg {
+                    pattern: Pattern::UniformTiles,
+                    seed: 0xDEE9 + i as u64,
+                    ..GenCfg::narrow_probe(NodeId(0), 8)
+                }),
+                dma: Some(GenCfg {
+                    pattern: Pattern::UniformTiles,
+                    seed: 0xDEE9 + i as u64,
+                    ..GenCfg::dma_burst(NodeId(0), 2, false)
+                }),
+            })
+            .collect();
+        let mut w = TiledWorkload::new(sys, profiles);
+        let drained = w.run_to_completion(5_000_000);
+        anyhow::ensure!(drained, "--deep warm-up epoch did not drain");
+        anyhow::ensure!(w.protocol_ok(), "--deep warm-up epoch: AXI protocol violations");
+        if !args.flag("json") {
+            println!(
+                "deep check: warm-up epoch drained in {} cycles with gating invariants enforced",
+                w.sys.now
+            );
+        }
+    }
+    Ok(())
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = build_cfg(args)?;
+    if args.flag("no-verify") {
+        cfg = cfg.no_verify();
+    }
+    if args.flag("check-invariants") {
+        cfg = cfg.with_invariant_checks();
+    }
+    // Preflight here (instead of inside `NocSystem::new`) so a rejected
+    // config is a readable CLI error, not a panic with a backtrace.
+    if cfg.verify {
+        let report = floonoc::verify::preflight(&cfg);
+        if report.has_errors() {
+            eprintln!("{report}");
+            bail!(
+                "config failed static verification ({} error(s)); \
+                 run 'repro verify' for details or pass --no-verify to simulate anyway",
+                report.error_count()
+            );
+        }
     }
     let txns = args.opt_u64("txns", 64)?;
     println!("config: {}", config::noc_config_to_json(&cfg));

@@ -131,6 +131,19 @@ pub struct NocConfig {
     pub narrow_init: InitiatorCfg,
     /// Wide-bus (DMA) NI initiator sizing.
     pub wide_init: InitiatorCfg,
+    /// Run the static verifier ([`crate::verify::preflight`]) before
+    /// building: [`NocSystem::new`] panics on error-severity findings
+    /// (CDG deadlock cycles, broken route tables). On by default; clear
+    /// it with [`NocConfig::no_verify`] (JSON `"verify": false`, CLI
+    /// `--no-verify`) to build a provably unsafe fabric anyway — e.g.
+    /// to demonstrate the deadlock the verifier predicts.
+    pub verify: bool,
+    /// Keep the gating-invariant scans ("occupied ⇒ active",
+    /// "buffered ⇒ woken") in release builds too (CLI
+    /// `--check-invariants`; `repro verify --deep` uses this for its
+    /// gated warm-up epoch). Debug builds always scan; the flag only
+    /// costs anything in release mode.
+    pub check_invariants: bool,
     /// Tile SPM target timing.
     pub spm: TargetCfg,
     /// Memory-controller target timing.
@@ -151,6 +164,8 @@ impl Default for NocConfig {
             output_reg: true,
             narrow_init: InitiatorCfg::narrow_default(),
             wide_init: InitiatorCfg::wide_default(),
+            verify: true,
+            check_invariants: false,
             spm: TargetCfg::spm_default(),
             mem_ctrl: TargetCfg::mem_ctrl_default(),
         }
@@ -232,10 +247,13 @@ impl NocConfig {
     ///
     /// ```
     /// use floonoc::noc::{NocConfig, NocSystem};
-    /// // A torus forced back to 1 VC builds (the documented pre-VC
-    /// // danger regime); a mesh raised to 2 VCs also builds.
+    /// // A 3×3 torus forced back to 1 VC still builds: every dimension
+    /// // is shorter than 4, so the verifier proves its CDG acyclic even
+    /// // without dateline lanes. A mesh raised to 2 VCs also builds.
     /// let _ = NocSystem::new(NocConfig::torus(3, 3).with_vcs(1));
     /// let _ = NocSystem::new(NocConfig::mesh(2, 2).with_vcs(2));
+    /// // A 4×4 torus at 1 VC is rejected by the preflight; building it
+    /// // anyway requires the explicit escape hatch (`no_verify`).
     /// ```
     pub fn with_vcs(mut self, vcs: usize) -> Self {
         assert!(
@@ -250,6 +268,29 @@ impl NocConfig {
     /// Switch to the dense reference step loop (differential testing).
     pub fn dense(self) -> Self {
         self.with_sim_mode(SimMode::Dense)
+    }
+
+    /// Disable the mandatory build preflight (see [`NocConfig::verify`])
+    /// — the escape hatch for deliberately building a configuration the
+    /// static verifier rejects.
+    ///
+    /// ```
+    /// use floonoc::noc::{NocConfig, NocSystem};
+    /// // A 4×4 torus at 1 VC has a cyclic channel dependency graph;
+    /// // the preflight refuses it, but the escape hatch builds it.
+    /// let cfg = NocConfig::torus(4, 4).with_vcs(1).no_verify();
+    /// let _ = NocSystem::new(cfg);
+    /// ```
+    pub fn no_verify(mut self) -> Self {
+        self.verify = false;
+        self
+    }
+
+    /// Keep the gating-invariant scans on in release builds (see
+    /// [`NocConfig::check_invariants`]).
+    pub fn with_invariant_checks(mut self) -> Self {
+        self.check_invariants = true;
+        self
     }
 }
 
@@ -277,6 +318,9 @@ pub struct Network {
     /// Routers to step *this* cycle; rebuilt from link wake edges every
     /// cycle (a router runs iff one of its input buffers holds a flit).
     router_wake: ActiveSet,
+    /// Run the gating-invariant scans even in release builds (from
+    /// [`NocConfig::check_invariants`]; debug builds always scan).
+    check_invariants: bool,
 }
 
 impl Network {
@@ -322,17 +366,20 @@ impl Network {
             link_sink,
             link_active,
             router_wake,
+            check_invariants,
             ..
         } = self;
-        // Gating invariant (debug builds): no occupied link may be
-        // missing from the active set — a violation means an offer path
-        // without a wake edge, which would strand flits silently.
-        #[cfg(debug_assertions)]
-        for (lid, l) in links.iter().enumerate() {
-            debug_assert!(
-                l.is_quiescent() || link_active.contains(lid),
-                "occupied link {lid} missing from the active set"
-            );
+        // Gating invariant (debug builds, or any build with
+        // `--check-invariants`): no occupied link may be missing from
+        // the active set — a violation means an offer path without a
+        // wake edge, which would strand flits silently.
+        if cfg!(debug_assertions) || *check_invariants {
+            for (lid, l) in links.iter().enumerate() {
+                assert!(
+                    l.is_quiescent() || link_active.contains(lid),
+                    "occupied link {lid} missing from the active set"
+                );
+            }
         }
         router_wake.clear();
         for wi in 0..link_active.num_words() {
@@ -354,16 +401,18 @@ impl Network {
                 }
             }
         }
-        // Wake-completeness invariant (debug builds): every router with
-        // a non-empty input buffer must have been woken by the link
-        // sweep — a miss here means a consumer_ready edge was lost and
-        // a flit would rot in an input buffer.
-        #[cfg(debug_assertions)]
-        for (r, router) in routers.iter().enumerate() {
-            debug_assert!(
-                router.is_quiescent(links) || router_wake.contains(r),
-                "router {r} has buffered input but was not woken"
-            );
+        // Wake-completeness invariant (debug builds, or any build with
+        // `--check-invariants`): every router with a non-empty input
+        // buffer must have been woken by the link sweep — a miss here
+        // means a consumer_ready edge was lost and a flit would rot in
+        // an input buffer.
+        if cfg!(debug_assertions) || *check_invariants {
+            for (r, router) in routers.iter().enumerate() {
+                assert!(
+                    router.is_quiescent(links) || router_wake.contains(r),
+                    "router {r} has buffered input but was not woken"
+                );
+            }
         }
         // The router sweep never mutates `router_wake` itself (only
         // `link_active` and the routers), so plain iteration is safe.
@@ -445,7 +494,26 @@ pub struct NocSystem {
 impl NocSystem {
     /// Build the complete system (topology, per-network routers and
     /// links, per-node NIs) for `cfg`.
+    ///
+    /// # Panics
+    ///
+    /// Unless `cfg.verify` is cleared ([`NocConfig::no_verify`], CLI
+    /// `--no-verify`), the static verifier ([`crate::verify::preflight`])
+    /// runs first and this constructor panics — printing the full
+    /// report — on any error-severity finding (a channel-dependency
+    /// cycle, a broken route table). Warnings never panic; the CLI
+    /// front end surfaces them separately.
     pub fn new(cfg: NocConfig) -> Self {
+        if cfg.verify {
+            let report = crate::verify::preflight(&cfg);
+            if report.has_errors() {
+                panic!(
+                    "NocConfig failed static verification (see docs/verification.md):\n\
+                     {report}\n\
+                     use NocConfig::no_verify() (CLI: --no-verify) to build anyway"
+                );
+            }
+        }
         let topo = Topology::new(cfg.topology, cfg.width, cfg.height, cfg.mem_edge);
         let nets = (0..cfg.mode.num_nets())
             .map(|_| build_network(&topo, &cfg))
@@ -767,6 +835,7 @@ fn build_network(topo: &Topology, cfg: &NocConfig) -> Network {
         link_sink,
         link_active: ActiveSet::new(num_links),
         router_wake: ActiveSet::new(num_routers),
+        check_invariants: cfg.check_invariants,
     }
 }
 

@@ -162,6 +162,15 @@ impl Router {
         self.outputs[port].forwarded
     }
 
+    /// The `(input port, input VC)` pair whose packet currently holds
+    /// the wormhole lock on lane `vc` of output `port`, if any. A
+    /// read-only view for the live wait-for analysis
+    /// ([`crate::verify::live`]); the switch itself owns and releases
+    /// the lock when the flit marked `last` passes.
+    pub fn lock_holder(&self, port: usize, vc: usize) -> Option<(u8, u8)> {
+        self.outputs[port].locks[vc]
+    }
+
     /// One cycle, in two explicit phases: **compute** (route lookup on
     /// every input-buffer head, no state changes) and **commit** (switch
     /// allocation honouring wormhole locks, then traversal into the output

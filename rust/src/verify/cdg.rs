@@ -1,0 +1,430 @@
+//! The channel-dependency-graph pass: route sanity + Dally/Seitz
+//! acyclicity, statically, before a single cycle runs.
+//!
+//! The model: a CDG node is one **(directed channel, VC lane)** pair of
+//! the fabric's router-to-router channels ([`Topology::channels`] gives
+//! each physical channel once; we split it into its two directions).
+//! Walking every minimal `src → dst` route through the generated
+//! [`RouteTable`]s, applying the dateline rule
+//! ([`crate::router::routing::dateline_vc`]) with the **same output-VC
+//! cap the router's switch applies at runtime**
+//! (`min(assigned, vcs - 1)`), yields a dependency edge for every pair
+//! of channels a wormhole packet can hold simultaneously. By Dally &
+//! Seitz, an acyclic CDG means no routing-level wormhole deadlock;
+//! a cycle is reported as a readable `(router, port, vc) → …` chain
+//! (diagnostic `FV001`).
+//!
+//! Injection and ejection channels are deliberately not CDG nodes: an
+//! injection channel has no predecessor and an ejection channel has no
+//! successor, so neither can lie on a cycle.
+//!
+//! The same walk checks route-table sanity along the way: every route
+//! must terminate within its minimal hop bound (`FV002`), never U-turn
+//! (`FV003`), only exit through connected ports and eject exactly at
+//! its destination (`FV004`), and the dateline assignment must stay
+//! within the configured VC count (`FV005` — a warning, because the
+//! switch caps the lane at runtime; the capped graph is what the
+//! `FV001` analysis judges). Note what this makes the graph analysis
+//! *sharper* than any "wrap fabrics need 2 VCs" lint: a wrapping
+//! dimension shorter than 4 routers produces no same-dimension
+//! dependency edge (every in-dimension trip is a single hop), so e.g. a
+//! 3×3 torus at `vcs = 1` is **provably deadlock-free** and accepted,
+//! while a 4×4 torus at `vcs = 1` closes the directional ring and is
+//! rejected with its cycle printed.
+
+use crate::router::routing::dateline_vc;
+use crate::router::{RouteTable, PORT_LOCAL};
+use crate::topology::{NodeKind, Topology};
+
+use super::report::{format_cycle, port_label, Category, ChainNode, Finding, Report, Severity};
+
+/// One direction of a physical channel: `src` router drives it out of
+/// `out_port`; `dst` router receives it on `in_port`.
+#[derive(Debug, Clone, Copy)]
+struct DirLink {
+    src: usize,
+    out_port: usize,
+    dst: usize,
+    in_port: usize,
+}
+
+/// How many example routes each aggregated route-sanity finding keeps.
+const MAX_EXAMPLES: usize = 3;
+/// How many cyclic components `FV001` prints chains for.
+const MAX_CYCLES: usize = 4;
+
+/// Per-code aggregation of route-walk findings (one `Finding` per code,
+/// with a violation count and a few example routes as context).
+struct RouteAgg {
+    code: &'static str,
+    severity: Severity,
+    what: &'static str,
+    count: usize,
+    examples: Vec<String>,
+}
+
+impl RouteAgg {
+    fn new(code: &'static str, severity: Severity, what: &'static str) -> Self {
+        RouteAgg {
+            code,
+            severity,
+            what,
+            count: 0,
+            examples: Vec::new(),
+        }
+    }
+
+    fn hit(&mut self, example: String) {
+        self.count += 1;
+        if self.examples.len() < MAX_EXAMPLES {
+            self.examples.push(example);
+        }
+    }
+
+    fn flush(self, report: &mut Report) {
+        if self.count == 0 {
+            return;
+        }
+        let mut context = self.examples;
+        if self.count > context.len() {
+            context.push(format!(
+                "... {} violating route(s) in total",
+                self.count
+            ));
+        }
+        report.push(Finding {
+            code: self.code,
+            severity: self.severity,
+            category: Category::Route,
+            message: format!("{} route(s) {}", self.count, self.what),
+            context,
+        });
+    }
+}
+
+/// Run the route-sanity walk and the CDG acyclicity check over `topo`
+/// with `vcs` lanes per channel and the per-router dateline-mask array
+/// `masks` (bit `p` of `masks[r]` marks router `r`'s output `p` as a
+/// wraparound exit). Findings are appended to `report`.
+///
+/// `masks` is taken explicitly — rather than read from the generated
+/// tables — so callers can verify *hypothetical* fabrics: pass
+/// [`crate::verify::default_masks`] for the deployed configuration, or
+/// an all-zero array to prove what clearing the dateline would do.
+pub fn analyze(topo: &Topology, vcs: usize, masks: &[u8], report: &mut Report) {
+    assert!(vcs >= 1, "a fabric has at least one VC lane");
+    let num_routers = topo.width as usize * topo.height as usize;
+    let radix = topo.router_radix();
+
+    // Directed channel table + per-router output map.
+    let mut dirlinks: Vec<DirLink> = Vec::new();
+    let mut out_map: Vec<Vec<Option<usize>>> = vec![vec![None; radix]; num_routers];
+    for (a, pa, b, pb) in topo.channels() {
+        out_map[a][pa] = Some(dirlinks.len());
+        dirlinks.push(DirLink {
+            src: a,
+            out_port: pa,
+            dst: b,
+            in_port: pb,
+        });
+        out_map[b][pb] = Some(dirlinks.len());
+        dirlinks.push(DirLink {
+            src: b,
+            out_port: pb,
+            dst: a,
+            in_port: pa,
+        });
+    }
+
+    let tables: Vec<RouteTable> = (0..num_routers)
+        .map(|r| topo.route_table(topo.nodes[r].coord))
+        .collect();
+    let mask_of = |r: usize| masks.get(r).copied().unwrap_or(0);
+
+    let mut fv002 = RouteAgg::new(
+        "FV002",
+        Severity::Error,
+        "exceed their minimal hop bound (non-terminating or detouring table)",
+    );
+    let mut fv003 = RouteAgg::new("FV003", Severity::Error, "U-turn (exit == entry port)");
+    let mut fv004 = RouteAgg::new(
+        "FV004",
+        Severity::Error,
+        "exit through an unconnected port or miss their destination's attach port",
+    );
+    let mut fv005 = RouteAgg::new(
+        "FV005",
+        Severity::Warning,
+        "get a dateline VC beyond the configured count (lane capped at runtime; \
+         dateline separation disabled on these hops)",
+    );
+
+    // CDG edges over (dirlink, capped VC) nodes, deduplicated.
+    let n_nodes = dirlinks.len() * vcs;
+    let mut edges: std::collections::BTreeSet<(u32, u32)> = std::collections::BTreeSet::new();
+
+    for src in &topo.nodes {
+        for dst in &topo.nodes {
+            if src.id == dst.id {
+                continue;
+            }
+            let label = |at: String| format!("route {} → {}: {at}", src.id.0, dst.id.0);
+            let dst_router = topo.router_index(dst.coord);
+            let terminal_port = match dst.kind {
+                NodeKind::Tile => PORT_LOCAL,
+                NodeKind::MemCtrl { attach_port } => attach_port,
+            };
+            let mut at = topo.router_index(src.coord);
+            let mut in_port = match src.kind {
+                NodeKind::Tile => PORT_LOCAL,
+                NodeKind::MemCtrl { attach_port } => attach_port,
+            };
+            let mut vc: usize = 0;
+            let mut prev: Option<u32> = None;
+            let bound = topo.hops(src.id, dst.id) as usize;
+            let mut hops = 0usize;
+            loop {
+                let port = tables[at].lookup(dst.id);
+                let coord = topo.nodes[at].coord;
+                if at == dst_router {
+                    if port != terminal_port {
+                        fv004.hit(label(format!(
+                            "at destination router ({}, {}) the table says {} \
+                             instead of the attach port {}",
+                            coord.x,
+                            coord.y,
+                            port_label(port),
+                            port_label(terminal_port)
+                        )));
+                    }
+                    break;
+                }
+                if port == in_port {
+                    fv003.hit(label(format!(
+                        "U-turn at router ({}, {}): enters and exits {}",
+                        coord.x,
+                        coord.y,
+                        port_label(port)
+                    )));
+                    break;
+                }
+                let Some(dl) = out_map[at].get(port).copied().flatten() else {
+                    fv004.hit(label(format!(
+                        "router ({}, {}) exit {} has no channel",
+                        coord.x,
+                        coord.y,
+                        port_label(port)
+                    )));
+                    break;
+                };
+                let wrap = (mask_of(at) >> port) & 1 == 1;
+                let raw = dateline_vc(in_port, port, wrap, vc as u8) as usize;
+                if raw >= vcs {
+                    fv005.hit(label(format!(
+                        "exit {} at router ({}, {}) assigns vc {raw} >= vcs {vcs}",
+                        port_label(port),
+                        coord.x,
+                        coord.y
+                    )));
+                }
+                let capped = raw.min(vcs - 1);
+                let node = (dl * vcs + capped) as u32;
+                if let Some(p) = prev {
+                    edges.insert((p, node));
+                }
+                prev = Some(node);
+                at = dirlinks[dl].dst;
+                in_port = dirlinks[dl].in_port;
+                vc = capped;
+                hops += 1;
+                if hops > bound {
+                    fv002.hit(label(format!(
+                        "still in transit after {bound} hop(s) (the minimal bound)"
+                    )));
+                    break;
+                }
+            }
+        }
+    }
+
+    fv002.flush(report);
+    fv003.flush(report);
+    fv004.flush(report);
+    fv005.flush(report);
+
+    // Acyclicity: Tarjan SCCs over the dependency edges; any SCC with
+    // more than one node (self-edges cannot occur — a directed channel
+    // never follows itself) is a wormhole-deadlock cycle.
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
+    for &(a, b) in &edges {
+        adj[a as usize].push(b);
+    }
+    let cyclic: Vec<Vec<u32>> = sccs(n_nodes, &adj)
+        .into_iter()
+        .filter(|c| c.len() > 1)
+        .collect();
+    for comp in cyclic.iter().take(MAX_CYCLES) {
+        let cycle = extract_cycle(&adj, comp);
+        let chain: Vec<ChainNode> = cycle
+            .iter()
+            .map(|&node| {
+                let dl = dirlinks[node as usize / vcs];
+                ChainNode {
+                    coord: topo.nodes[dl.src].coord,
+                    port: dl.out_port,
+                    vc: node as usize % vcs,
+                }
+            })
+            .collect();
+        let mut context = vec![format!(
+            "cyclic dependency over {} (channel, vc) node(s):",
+            comp.len()
+        )];
+        context.extend(format_cycle(&chain));
+        report.push(Finding {
+            code: "FV001",
+            severity: Severity::Error,
+            category: Category::Deadlock,
+            message: "channel dependency graph has a cycle — wormhole deadlock is reachable"
+                .to_string(),
+            context,
+        });
+    }
+    if cyclic.len() > MAX_CYCLES {
+        report.push(Finding {
+            code: "FV001",
+            severity: Severity::Error,
+            category: Category::Deadlock,
+            message: format!(
+                "... and {} more cyclic component(s) not printed",
+                cyclic.len() - MAX_CYCLES
+            ),
+            context: vec![],
+        });
+    }
+}
+
+/// Tarjan's strongly-connected components, iterative (explicit frame
+/// stack — fabric CDGs are small, but recursion depth must not depend
+/// on fabric size). Returns every SCC; order is reverse-topological.
+pub(crate) fn sccs(n: usize, adj: &[Vec<u32>]) -> Vec<Vec<u32>> {
+    const UNSET: u32 = u32::MAX;
+    let mut index = vec![UNSET; n];
+    let mut low = vec![0u32; n];
+    let mut on_stack = vec![false; n];
+    let mut stack: Vec<u32> = Vec::new();
+    let mut frames: Vec<(u32, usize)> = Vec::new();
+    let mut next = 0u32;
+    let mut out: Vec<Vec<u32>> = Vec::new();
+    for root in 0..n {
+        if index[root] != UNSET {
+            continue;
+        }
+        index[root] = next;
+        low[root] = next;
+        next += 1;
+        stack.push(root as u32);
+        on_stack[root] = true;
+        frames.push((root as u32, 0));
+        while let Some(&(v, ci)) = frames.last() {
+            let vi = v as usize;
+            if ci < adj[vi].len() {
+                let w = adj[vi][ci] as usize;
+                frames.last_mut().expect("frame exists").1 += 1;
+                if index[w] == UNSET {
+                    index[w] = next;
+                    low[w] = next;
+                    next += 1;
+                    stack.push(w as u32);
+                    on_stack[w] = true;
+                    frames.push((w as u32, 0));
+                } else if on_stack[w] {
+                    low[vi] = low[vi].min(index[w]);
+                }
+            } else {
+                frames.pop();
+                if let Some(&(p, _)) = frames.last() {
+                    let pi = p as usize;
+                    low[pi] = low[pi].min(low[vi]);
+                }
+                if low[vi] == index[vi] {
+                    let mut comp = Vec::new();
+                    loop {
+                        let w = stack.pop().expect("SCC root on stack");
+                        on_stack[w as usize] = false;
+                        comp.push(w);
+                        if w as usize == vi {
+                            break;
+                        }
+                    }
+                    out.push(comp);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract one concrete cycle from a cyclic SCC by following, from any
+/// member, the first successor that stays inside the component until a
+/// node repeats; the segment from its first occurrence is the cycle.
+/// Every node of a multi-node SCC has an intra-component successor, so
+/// this terminates within `|scc| + 1` steps.
+pub(crate) fn extract_cycle(adj: &[Vec<u32>], comp: &[u32]) -> Vec<u32> {
+    let in_comp: std::collections::BTreeSet<u32> = comp.iter().copied().collect();
+    let mut path: Vec<u32> = vec![comp[0]];
+    let mut pos: std::collections::BTreeMap<u32, usize> = std::collections::BTreeMap::new();
+    pos.insert(comp[0], 0);
+    loop {
+        let cur = *path.last().expect("path is non-empty");
+        let next = adj[cur as usize]
+            .iter()
+            .copied()
+            .find(|w| in_comp.contains(w))
+            .expect("every node of a cyclic SCC has an intra-SCC successor");
+        if let Some(&i) = pos.get(&next) {
+            return path[i..].to_vec();
+        }
+        pos.insert(next, path.len());
+        path.push(next);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tarjan_finds_the_cycle_and_the_tail() {
+        // 0 → 1 → 2 → 0 (cycle), 3 → 0 (tail), 4 isolated.
+        let adj: Vec<Vec<u32>> = vec![vec![1], vec![2], vec![0], vec![0], vec![]];
+        let comps = sccs(5, &adj);
+        let mut sizes: Vec<usize> = comps.iter().map(|c| c.len()).collect();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![1, 1, 3]);
+        let cyc = comps.into_iter().find(|c| c.len() == 3).unwrap();
+        let mut cycle = extract_cycle(&adj, &cyc);
+        assert_eq!(cycle.len(), 3);
+        cycle.sort_unstable();
+        assert_eq!(cycle, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn tarjan_on_a_dag_yields_singletons() {
+        let adj: Vec<Vec<u32>> = vec![vec![1, 2], vec![3], vec![3], vec![]];
+        let comps = sccs(4, &adj);
+        assert_eq!(comps.len(), 4);
+        assert!(comps.iter().all(|c| c.len() == 1));
+    }
+
+    #[test]
+    fn two_disjoint_cycles_are_two_components() {
+        let adj: Vec<Vec<u32>> = vec![vec![1], vec![0], vec![3], vec![2]];
+        let comps = sccs(4, &adj);
+        let cyclic: Vec<_> = comps.into_iter().filter(|c| c.len() > 1).collect();
+        assert_eq!(cyclic.len(), 2);
+        for c in &cyclic {
+            assert_eq!(extract_cycle(&adj, c).len(), 2);
+        }
+    }
+}

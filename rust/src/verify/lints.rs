@@ -1,0 +1,145 @@
+//! Configuration-consistency lints (`FV101`–`FV104`).
+//!
+//! These are the pipeline's warning tier: each names a configuration
+//! that builds and simulates but is degraded, surprising, or one step
+//! from the error tier. Codes are stable; the table lives in
+//! `docs/verification.md`.
+//!
+//! * `FV101` — a wrap fabric (torus/ring) configured with fewer VCs
+//!   than its dateline default: the lane-separation scheme is (partly)
+//!   disabled. Whether that actually deadlocks is decided by the CDG
+//!   pass ([`crate::verify::cdg`]), which is sharper than this lint —
+//!   small wrap fabrics (every dimension shorter than 4) stay acyclic
+//!   even at 1 VC.
+//! * `FV102` — a dateline-mask bit on a port that has no wraparound
+//!   channel: the VC switch would escalate lanes on a plain grid hop.
+//! * `FV103` — a zero input-buffer depth: `Link::with_vcs` silently
+//!   clamps every lane to at least one slot, so the built system is
+//!   deeper than the config says.
+//! * `FV104` — memory-controller attach-port mismatches: an attach
+//!   port beyond the router radix, or colliding with a neighbour
+//!   channel or another node's local port.
+
+use crate::noc::NocConfig;
+use crate::topology::{NodeKind, Topology};
+
+use super::report::{port_label, Category, Finding, Report, Severity};
+
+/// Config-level lints (`FV101`, `FV103`): facts readable from the
+/// [`NocConfig`] knobs plus the fabric geometry.
+pub fn lint_config(cfg: &NocConfig, topo: &Topology, report: &mut Report) {
+    let num_routers = topo.width as usize * topo.height as usize;
+    let wraps = (0..num_routers).any(|r| topo.dateline_ports(topo.nodes[r].coord) != 0);
+    let default_vcs = cfg.topology.default_vcs();
+    if wraps && cfg.vcs < default_vcs {
+        report.push(Finding {
+            code: "FV101",
+            severity: Severity::Warning,
+            category: Category::Config,
+            message: format!(
+                "wrap fabric configured with vcs = {} (below the dateline default {}); \
+                 deadlock freedom now rests on the CDG analysis alone",
+                cfg.vcs, default_vcs
+            ),
+            context: vec![
+                "the FV001 pass decides whether this particular fabric stays acyclic"
+                    .to_string(),
+            ],
+        });
+    }
+    if cfg.in_buf_depth == 0 {
+        report.push(Finding {
+            code: "FV103",
+            severity: Severity::Warning,
+            category: Category::Config,
+            message: "in_buf_depth = 0: Link::with_vcs clamps every lane to >= 1 slot, \
+                      so the built fabric is deeper than configured"
+                .to_string(),
+            context: vec![],
+        });
+    }
+}
+
+/// Topology-structural lints (`FV102`, `FV104`): facts readable from
+/// the fabric geometry plus the dateline-mask array under test.
+pub fn lint_topology(topo: &Topology, masks: &[u8], report: &mut Report) {
+    let num_routers = topo.width as usize * topo.height as usize;
+    let radix = topo.router_radix();
+
+    // FV102: mask bits with no wraparound channel behind them.
+    let mut extra_ctx = Vec::new();
+    for r in 0..num_routers {
+        let coord = topo.nodes[r].coord;
+        let extra = masks.get(r).copied().unwrap_or(0) & !topo.dateline_ports(coord);
+        for port in 0..8 {
+            if (extra >> port) & 1 == 1 {
+                extra_ctx.push(format!(
+                    "router ({}, {}): dateline bit on non-wrap exit {}",
+                    coord.x,
+                    coord.y,
+                    port_label(port)
+                ));
+            }
+        }
+    }
+    if !extra_ctx.is_empty() {
+        report.push(Finding {
+            code: "FV102",
+            severity: Severity::Warning,
+            category: Category::Config,
+            message: format!(
+                "{} dateline-mask bit(s) on ports without a wraparound channel",
+                extra_ctx.len()
+            ),
+            context: extra_ctx,
+        });
+    }
+
+    // FV104: local attach ports must exist and be exclusive — neighbour
+    // channels and node attachments may never share a router port.
+    let mut used: Vec<Vec<Option<String>>> = vec![vec![None; radix]; num_routers];
+    for (a, pa, b, pb) in topo.channels() {
+        used[a][pa] = Some("a neighbour channel".to_string());
+        used[b][pb] = Some("a neighbour channel".to_string());
+    }
+    let mut attach_ctx = Vec::new();
+    for node in &topo.nodes {
+        let r = topo.router_index(node.coord);
+        let (port, what) = match node.kind {
+            NodeKind::Tile => (crate::router::PORT_LOCAL, "tile"),
+            NodeKind::MemCtrl { attach_port } => (attach_port, "memory controller"),
+        };
+        let coord = topo.nodes[r].coord;
+        if port >= radix {
+            attach_ctx.push(format!(
+                "node {} ({what}) attaches to router ({}, {}) port {port}, \
+                 beyond the radix {radix}",
+                node.id.0, coord.x, coord.y
+            ));
+            continue;
+        }
+        if let Some(prev) = &used[r][port] {
+            attach_ctx.push(format!(
+                "node {} ({what}) attach {} at router ({}, {}) collides with {prev}",
+                node.id.0,
+                port_label(port),
+                coord.x,
+                coord.y
+            ));
+        } else {
+            used[r][port] = Some(format!("node {}'s local port", node.id.0));
+        }
+    }
+    if !attach_ctx.is_empty() {
+        report.push(Finding {
+            code: "FV104",
+            severity: Severity::Warning,
+            category: Category::Config,
+            message: format!(
+                "{} memory-port / local-port attach mismatch(es)",
+                attach_ctx.len()
+            ),
+            context: attach_ctx,
+        });
+    }
+}

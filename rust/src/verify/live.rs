@@ -1,0 +1,136 @@
+//! Live wait-for analysis: the verifier's view of a *running* (and
+//! possibly wedged) fabric.
+//!
+//! When the stalled-cycle watchdog
+//! ([`crate::cluster::TiledWorkload::run_with_watchdog`]) trips, this
+//! module explains the freeze instead of leaving a bare "no progress"
+//! panic: for every input-buffer head flit in every network it computes
+//! the output lane the switch would assign — the same route lookup and
+//! capped dateline rule the router itself applies — and reports the
+//! blocked `(router, input, vc) → (output, vc)` dependencies: heads
+//! whose wanted output lane is wormhole-locked by *another* packet
+//! ([`crate::router::router::Router::lock_holder`]) or backpressured by
+//! a full downstream lane. Running Tarjan over those wait-for edges
+//! (nodes are `(link, vc)` pairs, like the static CDG's) surfaces any
+//! cycle among them — a live wormhole deadlock — printed through the
+//! same chain printer static `FV001` findings use
+//! ([`crate::verify::report::format_cycle`]).
+//!
+//! No blocked dependency at all is itself a diagnosis: the fabric is
+//! idle or draining, so the stall lives outside it (NI, generator, or
+//! memory model).
+
+use crate::noc::NocSystem;
+use crate::router::routing::dateline_vc;
+use crate::router::MAX_VCS;
+
+use super::cdg::{extract_cycle, sccs};
+use super::report::{format_cycle, port_label, ChainNode};
+
+/// Blocked-input lines printed per network before eliding the rest.
+const MAX_LINES: usize = 16;
+
+/// Render the live wait-for analysis of `sys`'s current state as a
+/// multi-line report (one section per network). Read-only: safe to call
+/// on a live, wedged, or drained system.
+pub fn analyze(sys: &NocSystem) -> String {
+    let mut out = format!("live wait-for analysis at cycle {}:\n", sys.now);
+    let mut any_blocked = false;
+    for (ni, net) in sys.nets.iter().enumerate() {
+        // Producer map: which (router, output port) drives each link.
+        let mut src_of: Vec<Option<(usize, usize)>> = vec![None; net.links.len()];
+        for (r, router) in net.routers.iter().enumerate() {
+            for (port, lid) in router.out_links.iter().enumerate() {
+                if let Some(lid) = lid {
+                    src_of[*lid] = Some((r, port));
+                }
+            }
+        }
+        // Wait-for edges over (link, vc) nodes, stride MAX_VCS.
+        let n_nodes = net.links.len() * MAX_VCS;
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
+        let mut lines = 0usize;
+        let mut elided = 0usize;
+        for (r, router) in net.routers.iter().enumerate() {
+            let coord = sys.topo.nodes[r].coord;
+            for (i, in_lid) in router.in_links.iter().enumerate() {
+                let Some(in_lid) = *in_lid else { continue };
+                for v in 0..net.links[in_lid].vcs() {
+                    let Some(flit) = net.links[in_lid].peek_vc(v) else {
+                        continue;
+                    };
+                    let o = router.table.lookup(flit.header.dst);
+                    let Some(out_lid) = router.out_links.get(o).copied().flatten() else {
+                        continue;
+                    };
+                    let wrap = router.table.crosses_dateline(o);
+                    let out_vcs = net.links[out_lid].vcs();
+                    let v_out =
+                        (dateline_vc(i, o, wrap, v as u8) as usize).min(out_vcs - 1);
+                    let lock = router.lock_holder(o, v_out);
+                    let locked_by_other =
+                        matches!(lock, Some(h) if h != (i as u8, v as u8));
+                    let backpressured = !net.links[out_lid].can_offer_vc(v_out);
+                    if !(locked_by_other || backpressured) {
+                        continue;
+                    }
+                    any_blocked = true;
+                    adj[in_lid * MAX_VCS + v].push((out_lid * MAX_VCS + v_out) as u32);
+                    if lines < MAX_LINES {
+                        let why = if locked_by_other {
+                            let (hp, hv) = lock.expect("locked_by_other implies a holder");
+                            format!("locked by input ({}, vc {hv})", port_label(hp as usize))
+                        } else {
+                            "backpressured".to_string()
+                        };
+                        out.push_str(&format!(
+                            "  net {ni}: (router ({}, {}), in {}, vc {v}) → ({}, vc {v_out}): \
+                             {why} [head → node {}]\n",
+                            coord.x,
+                            coord.y,
+                            port_label(i),
+                            port_label(o),
+                            flit.header.dst.0
+                        ));
+                        lines += 1;
+                    } else {
+                        elided += 1;
+                    }
+                }
+            }
+        }
+        if elided > 0 {
+            out.push_str(&format!(
+                "  net {ni}: ... and {elided} more blocked input(s)\n"
+            ));
+        }
+        // Cycles among the wait-for edges: a live wormhole deadlock.
+        for comp in sccs(n_nodes, &adj).into_iter().filter(|c| c.len() > 1) {
+            let cycle = extract_cycle(&adj, &comp);
+            let chain: Vec<ChainNode> = cycle
+                .iter()
+                .filter_map(|&node| {
+                    let (lid, vc) = (node as usize / MAX_VCS, node as usize % MAX_VCS);
+                    src_of[lid].map(|(r, port)| ChainNode {
+                        coord: sys.topo.nodes[r].coord,
+                        port,
+                        vc,
+                    })
+                })
+                .collect();
+            out.push_str(&format!("  net {ni}: wait-for cycle (wormhole deadlock):\n"));
+            for line in format_cycle(&chain) {
+                out.push_str("    ");
+                out.push_str(&line);
+                out.push('\n');
+            }
+        }
+    }
+    if !any_blocked {
+        out.push_str(
+            "  no blocked (router, input, vc) → (output, vc) dependency in any network — \
+             the stall is outside the fabric (NI / generator / memory model)\n",
+        );
+    }
+    out
+}

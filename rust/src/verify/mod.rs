@@ -1,0 +1,196 @@
+//! Static network verification: prove deadlock-freedom, route sanity,
+//! and config consistency before a single cycle runs.
+//!
+//! PR 4's dateline virtual channels made wrap fabrics deadlock-free,
+//! but the acyclicity argument lived as prose in `docs/deadlock.md` and
+//! violations were only caught dynamically, by a stalled-cycle watchdog
+//! minutes into a simulation. This module turns that reasoning into an
+//! executable pass pipeline over any [`NocConfig`]:
+//!
+//! 1. **config lints** ([`lints`]) — wrap fabrics below their dateline
+//!    VC default, dateline bits on non-wrap ports, zero FIFO depths,
+//!    attach-port mismatches (`FV101`–`FV104`, warnings);
+//! 2. **route sanity** ([`cdg`]) — every `src → dst` route terminates
+//!    within its minimal hop bound, never U-turns, exits through
+//!    connected ports, and stays within the configured VC count
+//!    (`FV002`–`FV005`);
+//! 3. **CDG acyclicity** ([`cdg`]) — Tarjan SCC over the channel
+//!    dependency graph on (channel, VC) nodes; a cycle is a reachable
+//!    wormhole deadlock, reported as a `(router, port, vc) → …` chain
+//!    (`FV001`).
+//!
+//! Every finding carries a stable diagnostic code, severity and
+//! span-like context ([`report`]); the full code table is in
+//! `docs/verification.md`. [`preflight`] runs the pipeline for a
+//! config; [`crate::noc::NocSystem::new`] calls it mandatorily and
+//! refuses to build on error-severity findings (escape hatch:
+//! [`NocConfig::no_verify`] / CLI `--no-verify`). The CLI front end is
+//! `repro verify [--config …] [--json] [--deep]`.
+//!
+//! The fourth pass is dynamic: [`live`] analyzes a *running* system's
+//! blocked wait-for dependencies through the same chain printer, and
+//! the watchdog prints it when it trips.
+
+pub mod cdg;
+pub mod lints;
+pub mod live;
+pub mod report;
+
+pub use report::{Category, ChainNode, Finding, Report, Severity};
+
+use crate::noc::NocConfig;
+use crate::topology::Topology;
+
+/// The deployed dateline-mask array of `topo`: bit `p` of entry `r`
+/// marks output `p` of router `r` as a wraparound (dateline) exit,
+/// exactly as [`Topology::dateline_ports`] assigns them at
+/// construction. Pass a modified copy to [`verify_topology`] to check
+/// hypothetical maskings (e.g. a cleared dateline).
+pub fn default_masks(topo: &Topology) -> Vec<u8> {
+    (0..topo.width as usize * topo.height as usize)
+        .map(|r| topo.dateline_ports(topo.nodes[r].coord))
+        .collect()
+}
+
+/// Verify a fabric directly: structural lints (`FV102`, `FV104`), route
+/// sanity (`FV002`–`FV005`) and CDG acyclicity (`FV001`) for `topo`
+/// with `vcs` lanes per channel under the dateline-mask array `masks`.
+///
+/// This is the mask-override entry point; [`preflight`] is the
+/// config-level wrapper that adds the [`NocConfig`]-knob lints.
+///
+/// ```
+/// use floonoc::topology::{MemEdge, Topology};
+/// use floonoc::verify::{default_masks, verify_topology};
+/// let topo = Topology::torus(4, 4, MemEdge::West);
+/// // The deployed dateline keeps the 2-VC torus acyclic…
+/// assert!(!verify_topology(&topo, 2, &default_masks(&topo)).has_errors());
+/// // …but clearing the mask (or dropping to 1 VC) closes the cycle.
+/// let zeros = vec![0u8; topo.width as usize * topo.height as usize];
+/// assert!(verify_topology(&topo, 2, &zeros).has_errors());
+/// assert!(verify_topology(&topo, 1, &default_masks(&topo)).has_errors());
+/// ```
+pub fn verify_topology(topo: &Topology, vcs: usize, masks: &[u8]) -> Report {
+    let mut report = Report::new();
+    lints::lint_topology(topo, masks, &mut report);
+    cdg::analyze(topo, vcs, masks, &mut report);
+    report
+}
+
+/// The mandatory preflight: run the full pass pipeline for `cfg`
+/// (config lints + structural lints + route sanity + CDG acyclicity,
+/// with the deployed dateline masks). [`crate::noc::NocSystem::new`]
+/// panics on [`Report::has_errors`] unless `cfg.verify` is cleared.
+///
+/// ```
+/// use floonoc::noc::NocConfig;
+/// use floonoc::verify::preflight;
+/// // Shipped defaults verify clean…
+/// assert!(preflight(&NocConfig::torus(4, 4)).is_clean());
+/// // …a 4×4 torus forced to one VC is provably deadlock-prone…
+/// let bad = preflight(&NocConfig::torus(4, 4).with_vcs(1));
+/// assert!(bad.has_errors() && !bad.with_code("FV001").is_empty());
+/// // …while a 3×3 torus at one VC has an acyclic CDG (warnings only):
+/// let small = preflight(&NocConfig::torus(3, 3).with_vcs(1));
+/// assert!(!small.has_errors() && small.warning_count() > 0);
+/// ```
+pub fn preflight(cfg: &NocConfig) -> Report {
+    let topo = Topology::new(cfg.topology, cfg.width, cfg.height, cfg.mem_edge);
+    let masks = default_masks(&topo);
+    let mut report = Report::new();
+    lints::lint_config(cfg, &topo, &mut report);
+    report.merge(verify_topology(&topo, cfg.vcs, &masks));
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::MemEdge;
+
+    #[test]
+    fn shipped_defaults_are_clean() {
+        for cfg in [
+            NocConfig::mesh(4, 4),
+            NocConfig::torus(4, 4),
+            NocConfig::ring(8),
+        ] {
+            let r = preflight(&cfg);
+            assert!(r.is_clean(), "{:?} {}x{}: {r}", cfg.topology, cfg.width, cfg.height);
+        }
+    }
+
+    #[test]
+    fn small_wrap_fabrics_are_acyclic_even_at_one_vc() {
+        // Every in-dimension trip is a single hop when the dimension is
+        // shorter than 4, so no same-dimension dependency edge exists:
+        // the graph analysis accepts what a naive lint would reject.
+        for cfg in [
+            NocConfig::torus(3, 3).with_vcs(1),
+            NocConfig::torus(2, 2).with_vcs(1),
+            NocConfig::ring(3).with_vcs(1),
+        ] {
+            let r = preflight(&cfg);
+            assert!(!r.has_errors(), "{:?} {}x{}: {r}", cfg.topology, cfg.width, cfg.height);
+            assert!(!r.with_code("FV101").is_empty(), "the lint still warns");
+        }
+    }
+
+    #[test]
+    fn long_wrap_dimension_at_one_vc_closes_the_cycle() {
+        for cfg in [
+            NocConfig::torus(4, 4).with_vcs(1),
+            NocConfig::ring(4).with_vcs(1),
+            NocConfig::ring(8).with_vcs(1),
+        ] {
+            let r = preflight(&cfg);
+            assert!(r.has_errors(), "{:?} {}x{}", cfg.topology, cfg.width, cfg.height);
+            let fv001 = r.with_code("FV001");
+            assert!(!fv001.is_empty());
+            // The chain is printed as a readable cycle.
+            assert!(fv001[0].context.iter().any(|l| l.contains("→")));
+            assert!(fv001[0].context.iter().any(|l| l.starts_with("back to ")));
+        }
+    }
+
+    #[test]
+    fn cleared_dateline_mask_is_rejected_and_extra_bits_warn() {
+        let topo = Topology::torus(4, 4, MemEdge::West);
+        let zeros = vec![0u8; topo.width as usize * topo.height as usize];
+        let cleared = verify_topology(&topo, 2, &zeros);
+        assert!(cleared.has_errors());
+        assert!(!cleared.with_code("FV001").is_empty());
+        // A mask bit on a port with no wrap channel behind it: FV102.
+        let mut extra = default_masks(&topo);
+        extra[5] |= 1 << crate::router::PORT_LOCAL;
+        let r = verify_topology(&topo, 2, &extra);
+        assert!(!r.with_code("FV102").is_empty());
+        assert!(!r.has_errors(), "an extra bit alone is a warning: {r}");
+    }
+
+    #[test]
+    fn attach_mismatches_are_flagged() {
+        use crate::topology::NodeKind;
+        let mut topo = Topology::torus(3, 3, MemEdge::West);
+        let mem = topo.num_tiles; // first controller node index
+        topo.nodes[mem].kind = NodeKind::MemCtrl {
+            attach_port: crate::router::PORT_E, // collides with a channel
+        };
+        let masks = default_masks(&topo);
+        let r = verify_topology(&topo, 2, &masks);
+        assert!(!r.with_code("FV104").is_empty(), "{r}");
+        // Beyond-radix attach is also caught, without panicking.
+        topo.nodes[mem].kind = NodeKind::MemCtrl { attach_port: 9 };
+        let r = verify_topology(&topo, 2, &masks);
+        assert!(!r.with_code("FV104").is_empty(), "{r}");
+    }
+
+    #[test]
+    fn zero_depth_lints() {
+        let mut cfg = NocConfig::mesh(2, 2);
+        cfg.in_buf_depth = 0;
+        let r = preflight(&cfg);
+        assert!(!r.with_code("FV103").is_empty());
+        assert!(!r.has_errors());
+    }
+}

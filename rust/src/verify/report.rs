@@ -1,0 +1,328 @@
+//! Findings, reports, and the shared chain printer.
+//!
+//! Every check in the verifier — static or live — speaks the same
+//! vocabulary: a [`Finding`] with a stable diagnostic code (`FV001`
+//! style, see the table in `docs/verification.md`), a [`Severity`], a
+//! [`Category`], a one-line message and span-like context lines. A
+//! [`Report`] collects findings, renders them for humans
+//! (`Display`) or machines ([`Report::to_json`]), and answers the one
+//! question the preflight gate asks: [`Report::has_errors`].
+//!
+//! The chain printer ([`format_cycle`]) renders a sequence of
+//! `(router, port, vc)` nodes the same way for a static
+//! channel-dependency cycle ([`crate::verify::cdg`]) and for a live
+//! wait-for cycle dumped by a tripped watchdog
+//! ([`crate::verify::live`]), so dynamic deadlocks and static findings
+//! share one report format.
+
+use std::fmt;
+
+use crate::flit::Coord;
+use crate::router::{PORT_E, PORT_LOCAL, PORT_MEM, PORT_N, PORT_S, PORT_W};
+use crate::util::json::Json;
+
+/// How seriously a finding should be taken by the preflight gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but buildable: the system can be constructed and
+    /// simulated; the finding names a degraded or unusual regime.
+    Warning,
+    /// Provably broken: building this configuration risks deadlock or
+    /// misrouting. The preflight refuses unless verification is
+    /// explicitly disabled ([`crate::noc::NocConfig::no_verify`]).
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// Which pass of the pipeline produced a finding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Category {
+    /// Channel-dependency-graph acyclicity (the deadlock proof).
+    Deadlock,
+    /// Route-table sanity (termination, reachability, U-turns, VCs).
+    Route,
+    /// Configuration consistency lints.
+    Config,
+}
+
+impl fmt::Display for Category {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Category::Deadlock => "deadlock",
+            Category::Route => "route",
+            Category::Config => "config",
+        })
+    }
+}
+
+/// One diagnostic: a stable code, severity, category, message, and
+/// indented context lines (route examples, cycle chains, ...).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Stable diagnostic code (`"FV001"` style); documented in
+    /// `docs/verification.md` and never renumbered.
+    pub code: &'static str,
+    /// Gate behavior: [`Severity::Error`] blocks construction.
+    pub severity: Severity,
+    /// Producing pass.
+    pub category: Category,
+    /// One-line statement of the problem.
+    pub message: String,
+    /// Span-like context: example routes, the offending cycle chain,
+    /// the routers/ports involved. Rendered indented under the message.
+    pub context: Vec<String>,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{}[{}] ({}): {}",
+            self.severity, self.code, self.category, self.message
+        )?;
+        for line in &self.context {
+            writeln!(f, "    {line}")?;
+        }
+        Ok(())
+    }
+}
+
+/// The outcome of a verification run: every finding, in pass order.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// All findings, in the order the passes produced them.
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    /// An empty (clean) report.
+    pub fn new() -> Self {
+        Report::default()
+    }
+
+    /// Append one finding.
+    pub fn push(&mut self, f: Finding) {
+        self.findings.push(f);
+    }
+
+    /// Append every finding of `other`.
+    pub fn merge(&mut self, other: Report) {
+        self.findings.extend(other.findings);
+    }
+
+    /// Does the report contain any [`Severity::Error`] finding? This is
+    /// the preflight gate: errors refuse construction, warnings do not.
+    pub fn has_errors(&self) -> bool {
+        self.findings.iter().any(|f| f.severity == Severity::Error)
+    }
+
+    /// No findings at all (not even warnings).
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Number of error-severity findings.
+    pub fn error_count(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Error)
+            .count()
+    }
+
+    /// Number of warning-severity findings.
+    pub fn warning_count(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Warning)
+            .count()
+    }
+
+    /// Findings with a given code (test/diagnostic convenience).
+    pub fn with_code(&self, code: &str) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| f.code == code).collect()
+    }
+
+    /// Machine-readable form (schema `floonoc-verify/1`): `ok` is the
+    /// gate verdict (`!has_errors`), `findings` keep pass order.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str("floonoc-verify/1".to_string())),
+            ("ok", Json::Bool(!self.has_errors())),
+            ("errors", Json::Num(self.error_count() as f64)),
+            ("warnings", Json::Num(self.warning_count() as f64)),
+            (
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("code", Json::Str(f.code.to_string())),
+                                ("severity", Json::Str(f.severity.to_string())),
+                                ("category", Json::Str(f.category.to_string())),
+                                ("message", Json::Str(f.message.clone())),
+                                (
+                                    "context",
+                                    Json::Arr(
+                                        f.context
+                                            .iter()
+                                            .map(|c| Json::Str(c.clone()))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl fmt::Display for Report {
+    /// Errors first, then warnings, then a one-line summary.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for sev in [Severity::Error, Severity::Warning] {
+            for finding in self.findings.iter().filter(|x| x.severity == sev) {
+                write!(f, "{finding}")?;
+            }
+        }
+        write!(
+            f,
+            "verify: {} error(s), {} warning(s)",
+            self.error_count(),
+            self.warning_count()
+        )
+    }
+}
+
+/// One node of a dependency chain: a router's output `port` on VC `vc`
+/// — i.e. one (channel, VC) pair, named by its producing router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChainNode {
+    /// Coordinate of the router that drives the channel.
+    pub coord: Coord,
+    /// Output port the channel leaves through.
+    pub port: usize,
+    /// Virtual-channel lane.
+    pub vc: usize,
+}
+
+impl fmt::Display for ChainNode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "(router ({}, {}), {}, vc {})",
+            self.coord.x,
+            self.coord.y,
+            port_label(self.port),
+            self.vc
+        )
+    }
+}
+
+/// Human name of a router port (`"local"`, `"N"`, `"E"`, `"S"`, `"W"`,
+/// `"mem"`; out-of-range ports print as `"port<n>"` rather than
+/// panicking — the verifier must survive broken configurations).
+pub fn port_label(port: usize) -> String {
+    match port {
+        PORT_LOCAL => "local".to_string(),
+        PORT_N => "N".to_string(),
+        PORT_E => "E".to_string(),
+        PORT_S => "S".to_string(),
+        PORT_W => "W".to_string(),
+        PORT_MEM => "mem".to_string(),
+        other => format!("port{other}"),
+    }
+}
+
+/// Render a dependency cycle as context lines: one `(router, port, vc)`
+/// node per line with a trailing arrow, closed by a `back to` line so
+/// the loop is visually explicit. Both the static CDG pass and the live
+/// watchdog analysis print their cycles through this one function.
+pub fn format_cycle(nodes: &[ChainNode]) -> Vec<String> {
+    let mut out: Vec<String> = nodes.iter().map(|n| format!("{n} →")).collect();
+    if let Some(first) = nodes.first() {
+        out.push(format!("back to {first}"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(code: &'static str, sev: Severity) -> Finding {
+        Finding {
+            code,
+            severity: sev,
+            category: Category::Config,
+            message: "m".to_string(),
+            context: vec![],
+        }
+    }
+
+    #[test]
+    fn gate_counts_and_codes() {
+        let mut r = Report::new();
+        assert!(r.is_clean() && !r.has_errors());
+        r.push(finding("FV101", Severity::Warning));
+        assert!(!r.has_errors() && !r.is_clean());
+        r.push(finding("FV001", Severity::Error));
+        assert!(r.has_errors());
+        assert_eq!((r.error_count(), r.warning_count()), (1, 1));
+        assert_eq!(r.with_code("FV001").len(), 1);
+    }
+
+    #[test]
+    fn display_orders_errors_first() {
+        let mut r = Report::new();
+        r.push(finding("FV101", Severity::Warning));
+        r.push(finding("FV001", Severity::Error));
+        let text = r.to_string();
+        let e = text.find("error[FV001]").unwrap();
+        let w = text.find("warning[FV101]").unwrap();
+        assert!(e < w, "{text}");
+        assert!(text.ends_with("verify: 1 error(s), 1 warning(s)"), "{text}");
+    }
+
+    #[test]
+    fn cycle_printer_closes_the_loop() {
+        let a = ChainNode {
+            coord: Coord::new(0, 0),
+            port: PORT_E,
+            vc: 0,
+        };
+        let b = ChainNode {
+            coord: Coord::new(1, 0),
+            port: PORT_W,
+            vc: 1,
+        };
+        let lines = format_cycle(&[a, b]);
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], "(router (0, 0), E, vc 0) →");
+        assert_eq!(lines[1], "(router (1, 0), W, vc 1) →");
+        assert_eq!(lines[2], "back to (router (0, 0), E, vc 0)");
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut r = Report::new();
+        r.push(finding("FV001", Severity::Error));
+        let j = r.to_json();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("errors").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            j.get("schema").and_then(Json::as_str),
+            Some("floonoc-verify/1")
+        );
+    }
+}

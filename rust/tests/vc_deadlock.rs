@@ -68,7 +68,10 @@ fn assert_drains(cfg: NocConfig, wide_txns: u64, label: &str) {
     match w.run_with_watchdog(5_000_000, STALL_WINDOW) {
         Ok(true) => {}
         Ok(false) => panic!("{label}: cycle budget exhausted while still progressing"),
-        Err(at) => panic!("{label}: watchdog tripped — no progress since cycle {at} (deadlock)"),
+        Err(at) => panic!(
+            "{label}: watchdog tripped — no progress since cycle {at} (deadlock)\n{}",
+            w.stall_analysis()
+        ),
     }
     assert!(w.protocol_ok(), "{label}: AXI protocol violations");
     let wide_done: u64 = w
@@ -127,6 +130,10 @@ fn torus_4x4_wide_tornado_saturation_drains() {
     let mut w = TiledWorkload::new(sys, profiles);
     match w.run_with_watchdog(5_000_000, STALL_WINDOW) {
         Ok(true) => {}
+        Err(at) => panic!(
+            "torus tornado: watchdog tripped at cycle {at}\n{}",
+            w.stall_analysis()
+        ),
         other => panic!("torus tornado: {other:?}"),
     }
     assert!(w.protocol_ok());
@@ -240,10 +247,13 @@ fn wrap_saturation_gated_equals_dense() {
 
 /// Downgrading a wrap fabric to 1 VC still *builds* (the documented
 /// pre-VC regime for single-flit traffic); single-beat narrow reads
-/// cannot hold-and-wait and must complete as before.
+/// cannot hold-and-wait and must complete as before. The static
+/// verifier rejects this configuration (its CDG has a cycle, and wide
+/// wormhole traffic *would* deadlock — `tests/verify_static.rs` pins
+/// both sides), so the explicit escape hatch is required.
 #[test]
 fn torus_with_one_vc_still_serves_single_flit_traffic() {
-    let sys = NocSystem::new(NocConfig::torus(4, 4).with_vcs(1));
+    let sys = NocSystem::new(NocConfig::torus(4, 4).with_vcs(1).no_verify());
     let tiles = sys.topo.num_tiles;
     let profiles: Vec<TileTraffic> = (0..tiles)
         .map(|i| {

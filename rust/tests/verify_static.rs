@@ -1,0 +1,346 @@
+//! The static verifier against live fabrics: acceptance of every
+//! shipped default, rejection of the known-deadlockable configurations,
+//! property sweeps over random fabric shapes, and the
+//! **verifier-vs-watchdog agreement matrix** — the end-to-end claim
+//! that the channel-dependency-graph verdict predicts what a saturating
+//! wormhole workload actually does on the simulated network.
+//!
+//! The rejection side exploits the verifier's sharpness boundary
+//! (docs/verification.md): a wrapping dimension needs length >= 4
+//! before minimal routing exercises enough consecutive ring channels to
+//! close a CDG cycle, so 3x3 torus/ring fabrics at a single VC are
+//! *correctly* accepted while 4x4 torus and rings of length >= 4 at a
+//! single VC are rejected with a printed cycle.
+
+use floonoc::cluster::{TileTraffic, TiledWorkload};
+use floonoc::flit::NodeId;
+use floonoc::noc::{NocConfig, NocSystem};
+use floonoc::prop_assert;
+use floonoc::topology::{MemEdge, Topology};
+use floonoc::traffic::{GenCfg, Pattern};
+use floonoc::util::prop::check_default;
+use floonoc::verify::{preflight, verify_topology};
+
+// ---------------------------------------------------------------------
+// Acceptance: every configuration the repo ships as a default.
+// ---------------------------------------------------------------------
+
+/// All shipped default configurations verify with zero error-severity
+/// findings — mesh/torus/ring across the sizes the test suite and
+/// sweeps use, in both link modes.
+#[test]
+fn shipped_defaults_verify_clean() {
+    let configs: Vec<(NocConfig, &str)> = vec![
+        (NocConfig::mesh(2, 2), "mesh 2x2"),
+        (NocConfig::mesh(3, 3), "mesh 3x3"),
+        (NocConfig::mesh(4, 4), "mesh 4x4"),
+        (NocConfig::mesh(7, 7), "mesh 7x7"),
+        (NocConfig::torus(3, 3), "torus 3x3"),
+        (NocConfig::torus(4, 4), "torus 4x4"),
+        (NocConfig::torus(8, 8), "torus 8x8"),
+        (NocConfig::ring(4), "ring 4"),
+        (NocConfig::ring(8), "ring 8"),
+        (NocConfig::ring(16), "ring 16"),
+        (NocConfig::torus(4, 4).wide_only(), "torus 4x4 wide-only"),
+        (NocConfig::mesh(4, 4).wide_only(), "mesh 4x4 wide-only"),
+    ];
+    for (cfg, label) in configs {
+        let report = preflight(&cfg);
+        assert!(
+            !report.has_errors(),
+            "{label}: shipped default must verify clean, got:\n{report}"
+        );
+    }
+}
+
+/// The example configs under `examples/configs/` — the ones CI feeds to
+/// `repro verify --json` — parse and verify clean, so the CI gate and
+/// this suite agree on the same artifacts.
+#[test]
+fn example_configs_verify_clean() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/configs");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("examples/configs exists") {
+        let path = entry.expect("readable dir entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        seen += 1;
+        let text = std::fs::read_to_string(&path).expect("readable config");
+        let cfg = floonoc::config::noc_config_from_json(&text)
+            .unwrap_or_else(|e| panic!("{}: parse failed: {e:#}", path.display()));
+        let report = preflight(&cfg);
+        assert!(
+            !report.has_errors(),
+            "{}: example config must verify clean, got:\n{report}",
+            path.display()
+        );
+    }
+    assert!(seen >= 3, "expected the shipped example configs, found {seen}");
+}
+
+// ---------------------------------------------------------------------
+// Rejection: known-deadlockable configurations.
+// ---------------------------------------------------------------------
+
+/// A 4x4 torus forced to a single VC is rejected with an FV001 deadlock
+/// finding whose context prints the offending CDG cycle as a readable
+/// `(router, port, vc) -> ...` chain, plus the FV101 wrap-fabric lint.
+#[test]
+fn torus_4x4_at_one_vc_is_rejected_with_printed_cycle() {
+    let report = preflight(&NocConfig::torus(4, 4).with_vcs(1));
+    assert!(report.has_errors(), "must reject, got:\n{report}");
+    let deadlocks = report.with_code("FV001");
+    assert!(!deadlocks.is_empty(), "expected FV001, got:\n{report}");
+    let chain = &deadlocks[0].context;
+    assert!(
+        chain.iter().any(|l| l.contains('→') && l.contains("vc")),
+        "FV001 context must print the cycle chain, got: {chain:?}"
+    );
+    assert!(
+        chain.iter().any(|l| l.starts_with("back to ")),
+        "the chain must visibly close, got: {chain:?}"
+    );
+    assert!(
+        !report.with_code("FV101").is_empty(),
+        "downgraded wrap fabric must also carry the FV101 lint:\n{report}"
+    );
+}
+
+/// Rings of length >= 4 at a single VC are rejected; both directions of
+/// the 8-ring close a cycle.
+#[test]
+fn rings_at_one_vc_are_rejected() {
+    for n in [4u8, 8] {
+        let report = preflight(&NocConfig::ring(n).with_vcs(1));
+        assert!(
+            !report.with_code("FV001").is_empty(),
+            "ring {n} @ 1 VC must be rejected, got:\n{report}"
+        );
+    }
+}
+
+/// Clearing the dateline mask (no VC switch on the wrap links) defeats
+/// the escape lane even with 2 VCs: the verifier finds the cycle.
+#[test]
+fn cleared_dateline_mask_is_rejected() {
+    let topo = Topology::torus(4, 4, MemEdge::None);
+    let zeros = vec![0u8; topo.nodes.len()];
+    let report = verify_topology(&topo, 2, &zeros);
+    assert!(
+        !report.with_code("FV001").is_empty(),
+        "cleared dateline masks must close a CDG cycle, got:\n{report}"
+    );
+}
+
+/// The sharpness boundary: 3-long wrapping dimensions never route more
+/// than one in-dimension hop, so the directional rings never close —
+/// the verifier accepts these at a single VC (with warnings, no
+/// errors). This is what keeps `NocConfig::torus(3, 3).with_vcs(1)`
+/// building without an escape hatch.
+#[test]
+fn three_rings_at_one_vc_are_accepted_with_warnings() {
+    for (cfg, label) in [
+        (NocConfig::torus(3, 3).with_vcs(1), "torus 3x3 @ 1 VC"),
+        (NocConfig::ring(3).with_vcs(1), "ring 3 @ 1 VC"),
+        (NocConfig::torus(2, 2).with_vcs(1), "torus 2x2 @ 1 VC"),
+    ] {
+        let report = preflight(&cfg);
+        assert!(!report.has_errors(), "{label}: must accept, got:\n{report}");
+        assert!(
+            report.warning_count() > 0,
+            "{label}: the capped dateline lanes must still warn"
+        );
+    }
+}
+
+/// The machine-readable report carries the stable schema tag and agrees
+/// with the programmatic verdict on both sides.
+#[test]
+fn json_report_schema_is_stable() {
+    for (cfg, ok) in [
+        (NocConfig::torus(4, 4), true),
+        (NocConfig::torus(4, 4).with_vcs(1), false),
+    ] {
+        let report = preflight(&cfg);
+        let j = report.to_json();
+        assert_eq!(
+            j.get("schema").and_then(floonoc::util::json::Json::as_str),
+            Some("floonoc-verify/1")
+        );
+        assert_eq!(j.get("ok").and_then(floonoc::util::json::Json::as_bool), Some(ok));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property sweeps over random fabric shapes.
+// ---------------------------------------------------------------------
+
+/// Every default-VC fabric of any shape verifies clean: the shipped
+/// dateline configuration is deadlock-free by construction, and the
+/// verifier never false-positives on it.
+#[test]
+fn prop_default_vc_fabrics_verify_clean() {
+    check_default("default-vc fabrics verify clean", |rng| {
+        let cfg = match rng.index(3) {
+            0 => NocConfig::mesh(rng.range(2, 8) as u8, rng.range(2, 8) as u8),
+            1 => NocConfig::torus(rng.range(2, 8) as u8, rng.range(2, 8) as u8),
+            _ => NocConfig::ring(rng.range(2, 32) as u8),
+        };
+        let report = preflight(&cfg);
+        prop_assert!(!report.has_errors(), "default config rejected:\n{report}");
+        Ok(())
+    });
+}
+
+/// Every wrap fabric with a dimension of length >= 4 forced to a single
+/// VC is rejected with FV001: minimal routing on a 4-long directional
+/// ring exercises every consecutive channel pair, closing the cycle.
+#[test]
+fn prop_long_wrap_dimension_at_one_vc_is_rejected() {
+    check_default("long wrap dimension @ 1 VC rejected", |rng| {
+        let base = if rng.chance(0.5) {
+            // At least one torus dimension long enough to wrap-cycle.
+            let long = rng.range(4, 8) as u8;
+            let other = rng.range(2, 8) as u8;
+            if rng.chance(0.5) {
+                NocConfig::torus(long, other)
+            } else {
+                NocConfig::torus(other, long)
+            }
+        } else {
+            NocConfig::ring(rng.range(4, 32) as u8)
+        };
+        let report = preflight(&base.with_vcs(1));
+        prop_assert!(
+            !report.with_code("FV001").is_empty(),
+            "expected an FV001 deadlock finding, got:\n{report}"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Agreement matrix: static verdict vs watchdog outcome.
+// ---------------------------------------------------------------------
+
+/// A saturating wide-wormhole workload: tornado pattern (every flow
+/// travels the wrap diameter — the adversarial case for datelines) with
+/// full-length bursts on every tile.
+fn tornado_workload(sys: NocSystem, wide_txns: u64) -> TiledWorkload {
+    let tiles = sys.topo.num_tiles;
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| TileTraffic {
+            core: None,
+            dma: Some(GenCfg {
+                pattern: Pattern::Tornado,
+                num_txns: wide_txns,
+                burst_len: 15,
+                seed: 0xA62E + i as u64,
+                ..GenCfg::dma_burst(NodeId(0), wide_txns, false)
+            }),
+        })
+        .collect();
+    TiledWorkload::new(sys, profiles)
+}
+
+/// Uniform-random wide + narrow saturation, as in `tests/vc_deadlock.rs`.
+fn uniform_workload(sys: NocSystem, wide_txns: u64) -> TiledWorkload {
+    let tiles = sys.topo.num_tiles;
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                num_txns: 2 * wide_txns,
+                seed: 0xA62E + i as u64,
+                ..GenCfg::narrow_probe(NodeId(0), 2 * wide_txns)
+            }),
+            dma: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                num_txns: wide_txns,
+                burst_len: 15,
+                seed: 0xA62F + i as u64,
+                ..GenCfg::dma_burst(NodeId(0), wide_txns, false)
+            }),
+        })
+        .collect();
+    TiledWorkload::new(sys, profiles)
+}
+
+/// Cycles of zero ejection progress treated as a seizure (rationale in
+/// `tests/vc_deadlock.rs`).
+const STALL_WINDOW: u64 = 25_000;
+
+/// The agreement matrix. For each configuration the static verdict is
+/// computed first; a **clean** verdict must see the saturating workload
+/// drain under the watchdog, and a **rejected** verdict (built with the
+/// `no_verify` escape hatch) must see the watchdog trip on a genuine
+/// wormhole deadlock. The verifier is neither optimistic (rejected
+/// configs really do seize) nor just pattern-matching on "wrap + 1 VC"
+/// (the accepted 3x3 torus at 1 VC survives the same saturation).
+#[test]
+fn verifier_verdict_matches_watchdog_outcome() {
+    struct Case {
+        cfg: NocConfig,
+        label: &'static str,
+        tornado: bool,
+    }
+    let cases = vec![
+        Case {
+            cfg: NocConfig::mesh(3, 3),
+            label: "mesh 3x3 default",
+            tornado: false,
+        },
+        Case {
+            cfg: NocConfig::torus(3, 3),
+            label: "torus 3x3 default",
+            tornado: true,
+        },
+        Case {
+            cfg: NocConfig::ring(6),
+            label: "ring 6 default",
+            tornado: false,
+        },
+        Case {
+            cfg: NocConfig::torus(3, 3).with_vcs(1),
+            label: "torus 3x3 @ 1 VC (sharp accept)",
+            tornado: true,
+        },
+        Case {
+            cfg: NocConfig::torus(4, 4).with_vcs(1),
+            label: "torus 4x4 @ 1 VC",
+            tornado: true,
+        },
+        Case {
+            cfg: NocConfig::ring(8).with_vcs(1),
+            label: "ring 8 @ 1 VC",
+            tornado: true,
+        },
+    ];
+    for case in cases {
+        let verdict_clean = !preflight(&case.cfg).has_errors();
+        let sys = NocSystem::new(case.cfg.no_verify());
+        let mut w = if case.tornado {
+            tornado_workload(sys, 3)
+        } else {
+            uniform_workload(sys, 3)
+        };
+        let outcome = w.run_with_watchdog(5_000_000, STALL_WINDOW);
+        match (verdict_clean, outcome) {
+            (true, Ok(true)) => {}
+            (false, Err(_)) => {}
+            (true, bad) => panic!(
+                "{}: verifier accepted but the workload did not drain ({bad:?})\n{}",
+                case.label,
+                w.stall_analysis()
+            ),
+            (false, bad) => panic!(
+                "{}: verifier rejected but the watchdog saw no deadlock ({bad:?})",
+                case.label
+            ),
+        }
+        if verdict_clean {
+            assert!(w.protocol_ok(), "{}: AXI protocol violations", case.label);
+        }
+    }
+}

@@ -7,8 +7,11 @@
 //! * classic per-mesh-size iteration timings (2×2 / 4×4 / 8×8 saturated);
 //! * activity-gated vs dense-reference cycles/s on the sparse-trace and
 //!   saturated scenarios;
-//! * the `cycles_per_second` regression gate (pin a floor with
-//!   `CPS_FLOOR=<n>` or `CPS_FLOOR_4X4_SATURATED=<n>`; CI does);
+//! * event-driven fast-forward vs gated cycles/s on the duty-cycled
+//!   scenario (event cps counts *simulated* cycles per wall second);
+//! * the `cycles_per_second` regression gates (pin floors with
+//!   `CPS_FLOOR=<n>`, `CPS_FLOOR_4X4_SATURATED=<n>`, or
+//!   `CPS_FLOOR_8X8_DUTY_EVENT=<n>`; CI does);
 //! * the parallel sweep runner against its serial reference (same
 //!   points, byte-identical report, wall-clock speedup printed);
 //! * the `BENCH_e2e.json` trajectory file at the repository root

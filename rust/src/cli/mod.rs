@@ -6,7 +6,7 @@
 //! repro reproduce <exp> [--bidir]     regenerate a paper table/figure:
 //!        tab1 | tab2 | fig5a | fig5b | fig6a | fig6b |
 //!        latency | bandwidth | wires | scaling | all
-//! repro simulate [--config f] [--topology k] [--vcs n] [--txns n]  uniform traffic
+//! repro simulate [--config f] [--topology k] [--vcs n] [--sim-mode m] [--txns n]  uniform traffic
 //! repro verify [--config f] [--topology k] [--vcs n] [--json] [--deep]  static checks
 //! repro sweep <rob|buffers|burst|mesh|topology|output-reg>  ablations
 //! repro scale_topology [--mesh n]     mesh vs torus vs ring at equal tiles
@@ -108,7 +108,8 @@ COMMANDS:
                                virtual channels)
                                options: --config <file.json>, --txns <n>,
                                --mesh <n>, --topology <mesh|torus|ring>,
-                               --vcs <n>, --wide-only, --no-verify,
+                               --vcs <n>, --sim-mode <gated|dense|event>,
+                               --wide-only, --no-verify,
                                --check-invariants
   verify                       statically verify a config before any cycle
                                runs: channel-dependency-graph deadlock
@@ -141,6 +142,11 @@ COMMANDS:
               torus adds wraparound rows+columns, ring is a 1-D cycle).
   --vcs <n>:  virtual channels per link (default: 1 on meshes, 2 dateline
               VCs on torus/ring — see docs/deadlock.md).
+  --sim-mode <m>: step-loop engine (simulate/verify): gated (default,
+              active-set sweeps), dense (reference full sweep), event
+              (gated + calendar fast-forward over idle cycles). All three
+              are cycle-accurate and produce identical results — see
+              docs/performance.md.
   --no-verify: skip the static preflight verifier (simulate); configs the
               verifier rejects as deadlock-prone then build anyway.
   --check-invariants: enforce the gating "occupied => active" invariant

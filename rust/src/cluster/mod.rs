@@ -201,7 +201,13 @@ impl TiledWorkload {
     /// multi-million-cycle timeout, and the returned cycle pinpoints
     /// when traffic seized. Pick `stall_window` well above the longest
     /// legitimate quiet gap (memory latency + drain of one burst —
-    /// hundreds of cycles, not thousands).
+    /// hundreds of cycles, not thousands). Under
+    /// [`SimMode::Event`](crate::sim::SimMode) the window is measured
+    /// in *simulated* cycles, and a single fast-forwarding step can
+    /// legitimately advance `now` past it (e.g. over a
+    /// [`DutyCycle`](crate::traffic::DutyCycle) silence) — size the
+    /// window above the longest duty period, or run watchdog suites in
+    /// gated mode, where a skipped-over idle gap cannot exist.
     ///
     /// A trip is not a bare error: before returning, the verifier's
     /// live wait-for analysis ([`Self::stall_analysis`]) is printed to

@@ -74,7 +74,8 @@ pub fn noc_config_from_value(j: &Json) -> crate::Result<NocConfig> {
         cfg.sim_mode = match sim {
             "gated" => SimMode::Gated,
             "dense" => SimMode::Dense,
-            other => bail!("unknown sim_mode '{other}' (gated|dense)"),
+            "event" => SimMode::Event,
+            other => bail!("unknown sim_mode '{other}' (gated|dense|event)"),
         };
     }
     // Virtual channels: explicit `"vcs"` wins; omitted defaults to the
@@ -275,13 +276,22 @@ mod tests {
             noc_config_from_json(r#"{"sim_mode": "gated"}"#).unwrap().sim_mode,
             SimMode::Gated
         );
+        assert_eq!(
+            noc_config_from_json(r#"{"sim_mode": "event"}"#).unwrap().sim_mode,
+            SimMode::Event
+        );
         // Omitted => gated (the fast default, backwards compatible).
         assert_eq!(noc_config_from_json("{}").unwrap().sim_mode, SimMode::Gated);
         assert!(noc_config_from_json(r#"{"sim_mode": "warp"}"#).is_err());
-        // Round-trips through serialization.
-        let cfg = NocConfig::mesh(3, 3).dense();
-        let back = noc_config_from_value(&noc_config_to_json(&cfg)).unwrap();
-        assert_eq!(back.sim_mode, SimMode::Dense);
+        // Round-trips through serialization (all three modes).
+        for cfg in [
+            NocConfig::mesh(3, 3).dense(),
+            NocConfig::mesh(3, 3).event(),
+            NocConfig::mesh(3, 3),
+        ] {
+            let back = noc_config_from_value(&noc_config_to_json(&cfg)).unwrap();
+            assert_eq!(back.sim_mode, cfg.sim_mode);
+        }
     }
 
     #[test]

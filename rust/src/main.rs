@@ -8,9 +8,11 @@
 //!                  wires|scaling|all> [--bidir] [--levels a,b,c] [--jobs n]
 //! repro simulate  [--config f.json] [--mesh n] [--txns n] [--wide-only]
 //!                 [--topology mesh|torus|ring] [--vcs n]
+//!                 [--sim-mode gated|dense|event]
 //!                 [--no-verify] [--check-invariants]
 //! repro verify    [--config f.json] [--mesh n] [--topology mesh|torus|ring]
-//!                 [--vcs n] [--wide-only] [--json] [--deep]
+//!                 [--vcs n] [--wide-only] [--sim-mode gated|dense|event]
+//!                 [--json] [--deep]
 //! repro sweep     <rob|buffers|burst|mesh|topology|output-reg> [--jobs n]
 //! repro scale_topology [--mesh n] [--jobs n]
 //! repro dse       [--mesh n] [--artifacts dir] [--jobs n]
@@ -250,6 +252,14 @@ fn build_cfg(args: &Args) -> anyhow::Result<NocConfig> {
             floonoc::router::MAX_VCS
         );
         cfg = cfg.with_vcs(vcs);
+    }
+    if let Some(mode) = args.opt("sim-mode") {
+        cfg = cfg.with_sim_mode(match mode {
+            "gated" => floonoc::sim::SimMode::Gated,
+            "dense" => floonoc::sim::SimMode::Dense,
+            "event" => floonoc::sim::SimMode::Event,
+            other => bail!("--sim-mode expects gated|dense|event, got '{other}'"),
+        });
     }
     Ok(cfg)
 }

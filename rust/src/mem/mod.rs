@@ -97,7 +97,11 @@ impl MemModel {
         self.ops.is_empty()
     }
 
-    /// Accept an operation at cycle `now`.
+    /// Accept an operation at cycle `now`. Returns the cycle at which the
+    /// first response beat will be ready (`now + latency`) so the caller
+    /// can register the retirement in an event calendar
+    /// ([`crate::util::calendar::Calendar`]) for the event-driven
+    /// fast-forward path.
     pub fn accept(
         &mut self,
         now: u64,
@@ -107,8 +111,9 @@ impl MemModel {
         atomic: bool,
         req: AxReq,
         is_read: bool,
-    ) {
+    ) -> u64 {
         assert!(self.can_accept(), "memory accept without can_accept");
+        let ready_at = now + self.latency;
         self.ops.push_back(MemOp {
             src,
             rob_idx,
@@ -116,9 +121,17 @@ impl MemModel {
             atomic,
             req,
             is_read,
-            ready_at: now + self.latency,
+            ready_at,
             beats_done: 0,
         });
+        ready_at
+    }
+
+    /// Cycle at which the head operation's next beat becomes ready, if
+    /// any op is in flight. Ops queue in acceptance order with monotonic
+    /// `ready_at`, so the head is always the earliest.
+    pub fn next_ready_at(&self) -> Option<u64> {
+        self.ops.front().map(|op| op.ready_at)
     }
 
     /// Peek the head operation if it is ready to emit a beat at `now`
@@ -235,5 +248,22 @@ mod tests {
         m.accept(0, NodeId(1), 0, true, false, req(0), true);
         m.accept(0, NodeId(1), 1, true, false, req(0), true);
         assert!(!m.can_accept());
+    }
+
+    /// The accept return value and `next_ready_at` expose the retirement
+    /// schedule the event-driven mode's calendar runs on: accept at `t`
+    /// reports `t + latency`, and the head op is always the earliest
+    /// (acceptance order ⇒ monotonic ready times).
+    #[test]
+    fn accept_reports_retirement_cycle() {
+        let mut m = MemModel::new(5, 4);
+        assert_eq!(m.next_ready_at(), None);
+        let t0 = m.accept(10, NodeId(1), 0, true, false, req(0), true);
+        assert_eq!(t0, 15);
+        let t1 = m.accept(12, NodeId(1), 1, true, false, req(0), true);
+        assert_eq!(t1, 17);
+        assert_eq!(m.next_ready_at(), Some(15));
+        m.step(15).unwrap(); // single-beat read retires the head
+        assert_eq!(m.next_ready_at(), Some(17));
     }
 }

@@ -199,6 +199,24 @@ impl Initiator {
         self.w_stream.is_some()
     }
 
+    /// True when stepping this initiator's inject/drain phase would be a
+    /// provable no-op this cycle **and** no stall counter would tick:
+    /// nothing queued to issue, no W stream mid-flight, and nothing
+    /// drainable from the reorder tables. One conjunct of the
+    /// event-driven fast-forward's skip condition
+    /// ([`crate::sim::SimMode::Event`]): the cheaper [`Self::is_idle`]
+    /// ignores queued-but-unissued requests, which this must not —
+    /// `try_issue` ticks `read_stall_cycles`/`write_stall_cycles` while
+    /// a head request waits, so skipping such a cycle would diverge the
+    /// stats digest from the gated oracle.
+    pub fn inject_quiet(&self) -> bool {
+        self.ar_in.is_empty()
+            && self.aw_in.is_empty()
+            && self.w_stream.is_none()
+            && !self.r_table.any_drainable()
+            && !self.b_table.any_drainable()
+    }
+
     /// Produce the next W-beat flit of the active stream, if any.
     pub fn next_w_flit(&mut self, now: u64) -> Option<FlooFlit> {
         let s = self.w_stream.as_mut()?;

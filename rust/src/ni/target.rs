@@ -107,6 +107,11 @@ pub struct Target {
     /// 512-bit port memory.
     pub wide_mem: MemModel,
     assembly: HashMap<(u16, BusKind), WriteAssembly>,
+    /// Retirement cycle of the latest memory accept this cycle, not yet
+    /// drained into the system's event calendar. A single slot suffices:
+    /// both memory ports share `cfg.mem_latency`, so every accept in one
+    /// cycle reports the same `now + latency`.
+    newly_scheduled: Option<u64>,
     /// Atomics meta buffer (separate, as in the paper). Counts in-flight
     /// atomic ops; bounded.
     atomics_inflight: usize,
@@ -124,6 +129,7 @@ impl Target {
             narrow_mem: MemModel::new(cfg.mem_latency, cfg.mem_outstanding),
             wide_mem: MemModel::new(cfg.mem_latency, cfg.mem_outstanding),
             assembly: HashMap::new(),
+            newly_scheduled: None,
             atomics_inflight: 0,
             rsp_rr: false,
             stats: TargetStats::default(),
@@ -175,8 +181,10 @@ impl Target {
             self.stats.req_stall_cycles += 1;
             return false;
         }
-        self.mem(bus)
+        let ready_at = self
+            .mem(bus)
             .accept(now, h.src, h.rob_idx, h.rob_req, h.atomic, req, true);
+        self.newly_scheduled = Some(ready_at);
         self.stats.reads_served += 1;
         true
     }
@@ -241,8 +249,10 @@ impl Target {
             aw.req.beats(),
             "W burst length must match its AW (src {src})"
         );
-        self.mem(bus)
+        let ready_at = self
+            .mem(bus)
             .accept(now, aw.src, aw.rob_idx, aw.rob_req, aw.atomic, aw.req, false);
+        self.newly_scheduled = Some(ready_at);
         if aw.atomic {
             self.stats.atomics_served += 1;
         } else {
@@ -305,6 +315,32 @@ impl Target {
     pub fn flip_rr(&mut self) -> bool {
         self.rsp_rr = !self.rsp_rr;
         self.rsp_rr
+    }
+
+    /// Drain the retirement cycle of any memory op accepted this cycle
+    /// (at most one distinct value per cycle — both ports share the
+    /// latency, so same-cycle accepts overwrite with the same value).
+    /// The system's event-mode step loop feeds this into its calendar;
+    /// cycle-stepped modes never drain it, and the stale value is inert.
+    pub fn take_scheduled(&mut self) -> Option<u64> {
+        self.newly_scheduled.take()
+    }
+
+    /// True when stepping this target's eject/inject phase at `now`
+    /// would be a provable no-op: no memory head is ready to emit a
+    /// beat, and no matched AW/W-burst pair is waiting for memory space
+    /// (`pump_writes` would submit one — a state change). Deliberately
+    /// conservative: a ready pair blocks the event-mode skip even when
+    /// the memory is full, costing stepped cycles, never correctness.
+    /// Future retirements of ops already inside the memories are covered
+    /// by the calendar, not by this predicate.
+    pub fn eject_quiet(&self, now: u64) -> bool {
+        self.narrow_mem.peek_head(now).is_none()
+            && self.wide_mem.peek_head(now).is_none()
+            && self
+                .assembly
+                .values()
+                .all(|a| a.aws.is_empty() || a.done_bursts.is_empty())
     }
 
     fn rsp_to_flit(&self, bus: BusKind, rsp: MemRsp, now: u64) -> FlooFlit {

@@ -42,6 +42,13 @@ impl InjectState {
             rr_init: false,
         }
     }
+
+    /// No wormhole lock held on any network — an NI stream mid-packet
+    /// *must* be stepped every cycle (it injects a beat whenever its
+    /// link accepts), so a held lock blocks the event-mode fast-forward.
+    pub fn quiet(&self) -> bool {
+        self.locks.iter().all(Option::is_none)
+    }
 }
 
 impl Default for InjectState {

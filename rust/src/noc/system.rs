@@ -7,6 +7,7 @@ use crate::sim::{Link, LinkId, SimMode};
 use crate::stats::BandwidthMeter;
 use crate::topology::{MemEdge, NodeKind, Topology, TopologyKind};
 use crate::util::activeset::ActiveSet;
+use crate::util::calendar::Calendar;
 
 use super::inject::InjectState;
 
@@ -98,9 +99,11 @@ pub struct NocConfig {
     pub mem_edge: MemEdge,
     /// Physical-link configuration under evaluation.
     pub mode: LinkMode,
-    /// Step-loop strategy: activity-gated (default) or the dense
-    /// reference sweep. Cycle-accurate equivalence between the two is
-    /// pinned by `tests/gated_equivalence.rs`.
+    /// Step-loop strategy: activity-gated (default), the dense reference
+    /// sweep, or gated + event-driven fast-forward
+    /// ([`SimMode::Event`]). Cycle-accurate equivalence between all
+    /// three is pinned by `tests/gated_equivalence.rs` and
+    /// `tests/mode_equivalence_sweep.rs`.
     pub sim_mode: SimMode,
     /// Router input-buffer depth (flits; split across VCs when
     /// `vcs > 1`).
@@ -268,6 +271,13 @@ impl NocConfig {
     /// Switch to the dense reference step loop (differential testing).
     pub fn dense(self) -> Self {
         self.with_sim_mode(SimMode::Dense)
+    }
+
+    /// Switch to event-driven fast-forward stepping ([`SimMode::Event`]):
+    /// gated sweeps plus calendar-driven jumps over provably idle
+    /// stretches. Byte-identical statistics to the other modes.
+    pub fn event(self) -> Self {
+        self.with_sim_mode(SimMode::Event)
     }
 
     /// Disable the mandatory build preflight (see [`NocConfig::verify`])
@@ -489,6 +499,28 @@ pub struct NocSystem {
     pub eject_meters: Vec<Vec<BandwidthMeter>>,
     /// Flit-conservation counters per network (drive the idle skip).
     pub counters: Vec<NetCounters>,
+    /// Scheduled memory-retirement cycles ([`SimMode::Event`] only):
+    /// every target memory accept registers its `ready_at` here so the
+    /// fast-forward knows when a quiet system next becomes active on its
+    /// own. Entries are pruned lazily (see [`Calendar`]).
+    calendar: Calendar,
+    /// Earliest generator wake folded by [`Self::step_generator`] during
+    /// the *previous* cycle's generator pass, in generator time (the
+    /// post-increment clock generators are stepped at). `u64::MAX` when
+    /// no generator reported a finite wake; reset at the end of every
+    /// [`Self::step`]. Initialized to 0 so no fast-forward can fire
+    /// before the first full generator pass has reported in.
+    gen_wake_min: u64,
+    /// Step invocations actually executed (every [`Self::step`] call).
+    /// Deliberately **not** part of the equivalence digest: it measures
+    /// the mechanism (how much work the mode did), not the simulated
+    /// behaviour.
+    pub stepped_cycles: u64,
+    /// Cycles jumped over by event-driven fast-forward. Always 0 outside
+    /// [`SimMode::Event`]. `stepped_cycles + skipped_cycles == now` for
+    /// a system driven purely through [`Self::step`]. Not in the digest,
+    /// like [`Self::stepped_cycles`].
+    pub skipped_cycles: u64,
 }
 
 impl NocSystem {
@@ -548,6 +580,10 @@ impl NocSystem {
             now: 0,
             eject_meters,
             counters,
+            calendar: Calendar::new(),
+            gen_wake_min: 0,
+            stepped_cycles: 0,
+            skipped_cycles: 0,
             cfg,
         }
     }
@@ -588,21 +624,39 @@ impl NocSystem {
         }
         .expect("generator attached to node without initiator");
         g.step(now, init, topo);
+        if self.cfg.sim_mode == SimMode::Event {
+            // Fold this generator's next interesting cycle into the wake
+            // horizon the next step()'s fast-forward consults. Generators
+            // run at the post-increment clock, so the fold happens after
+            // `now += 1` and before the following step — exactly the
+            // window `gen_wake_min` is valid for.
+            self.gen_wake_min = self.gen_wake_min.min(g.next_wake(now));
+        }
     }
 
-    /// Advance one clock cycle.
+    /// Advance one clock cycle. Under [`SimMode::Event`] this may first
+    /// fast-forward `now` over a provably idle stretch (see
+    /// `try_fast_forward`), then executes one real cycle at the
+    /// (possibly jumped-to) time.
     pub fn step(&mut self) {
+        let event_mode = self.cfg.sim_mode == SimMode::Event;
+        if event_mode {
+            self.try_fast_forward();
+        }
+        self.stepped_cycles += 1;
         let now = self.now;
         // Phases 1+2 per network. Gated mode (default) sweeps only the
         // active-set bits — cost tracks activity, not fabric size; its
-        // empty-set case subsumes the whole-network idle skip. Dense
-        // mode is the reference sweep, still guarded by the
-        // flit-conservation skip (a network with no flit in flight has
-        // nothing to deliver and every router's compute phase would see
-        // empty inputs — both sweeps are no-ops by construction;
-        // wormhole locks and arbiter state are untouched either way).
+        // empty-set case subsumes the whole-network idle skip. Event
+        // mode runs the same gated sweep (fast-forward changed only
+        // `now`, never component state). Dense mode is the reference
+        // sweep, still guarded by the flit-conservation skip (a network
+        // with no flit in flight has nothing to deliver and every
+        // router's compute phase would see empty inputs — both sweeps
+        // are no-ops by construction; wormhole locks and arbiter state
+        // are untouched either way).
         match self.cfg.sim_mode {
-            SimMode::Gated => {
+            SimMode::Gated | SimMode::Event => {
                 for net in &mut self.nets {
                     net.step_gated();
                 }
@@ -621,6 +675,14 @@ impl NocSystem {
         for idx in 0..self.nodes.len() {
             self.eject_node(idx, now);
             self.nodes[idx].target.pump_writes(now);
+            if event_mode {
+                // Register this cycle's memory accepts (eject_node and
+                // pump_writes above are the only accept paths) so the
+                // fast-forward knows when the retirements come due.
+                if let Some(t) = self.nodes[idx].target.take_scheduled() {
+                    self.calendar.schedule(t);
+                }
+            }
             super::inject::inject_node(
                 plan,
                 &mut self.nodes[idx],
@@ -637,6 +699,77 @@ impl NocSystem {
             }
         }
         self.now += 1;
+        // The generator pass that follows this step (harness-driven, at
+        // the post-increment clock) re-folds its wake horizon from
+        // scratch; stale minima must not linger once consumed.
+        if event_mode {
+            self.gen_wake_min = u64::MAX;
+        }
+    }
+
+    /// Event-driven fast-forward ([`SimMode::Event`]): if stepping at
+    /// `now` — and at every cycle up to the jump target — would be a
+    /// provable no-op for *every* component, jump `now` directly to the
+    /// earliest cycle at which anything can happen. Skipped cycles
+    /// change no statistics because nothing would have changed: the
+    /// condition below is deliberately conservative (any doubt keeps
+    /// dense stepping), which can only cost stepped cycles, never
+    /// correctness.
+    ///
+    /// The skip condition:
+    /// * every network's flit-conservation counter reads zero in flight
+    ///   (no link sweep or router can do anything, and no stall/busy
+    ///   counter can tick);
+    /// * every node's NI is quiet: no wormhole lock held
+    ///   ([`InjectState::quiet`]), nothing issuable or drainable at the
+    ///   initiators ([`Initiator::inject_quiet`] — also guarantees no
+    ///   stall counter ticks), no memory head ready and no matched write
+    ///   pair pending at the target ([`Target::eject_quiet`]).
+    ///
+    /// The jump target is the earlier of the next scheduled memory
+    /// retirement (the calendar) and the next generator wake
+    /// (`gen_wake_min`, folded during the previous generator pass;
+    /// generators run at the post-increment clock, so their phase-time
+    /// wake is one cycle earlier). No finite wake source ⇒ no jump — a
+    /// fully drained system steps densely (its steps are cheap no-ops
+    /// and `run`-style loops terminate on their own conditions).
+    fn try_fast_forward(&mut self) {
+        if (0..self.nets.len()).any(|n| self.in_flight(n) != 0) {
+            return;
+        }
+        let now = self.now;
+        for node in &self.nodes {
+            let quiet = node.inj.quiet()
+                && node.target.eject_quiet(now)
+                && node
+                    .narrow
+                    .as_ref()
+                    .map(Initiator::inject_quiet)
+                    .unwrap_or(true)
+                && node
+                    .wide
+                    .as_ref()
+                    .map(Initiator::inject_quiet)
+                    .unwrap_or(true);
+            if !quiet {
+                return;
+            }
+        }
+        // Entries at or before `now` are stale: eject_quiet just proved
+        // no memory head is ready, and per-port ready times are
+        // monotonic (acceptance order), so those ops already retired.
+        self.calendar.prune_through(now);
+        let mem_wake = self.calendar.earliest().unwrap_or(u64::MAX);
+        let gen_wake = match self.gen_wake_min {
+            u64::MAX => u64::MAX,
+            w => w.saturating_sub(1), // gen-time → phase-time
+        };
+        let target = mem_wake.min(gen_wake);
+        if target == u64::MAX || target <= now {
+            return;
+        }
+        self.skipped_cycles += target - now;
+        self.now = target;
     }
 
     /// Terminate at most one flit per network at this node.
@@ -1174,12 +1307,14 @@ mod tests {
         let _ = NocConfig::mesh(2, 2).with_vcs(0);
     }
 
-    /// The gated and dense step loops must agree on the calibrated
-    /// zero-load number exactly: same round-trip latency, same total
-    /// cycles to drain, same router activity. A one-cycle divergence
-    /// here means a wake edge fires a cycle early or late.
+    /// The gated, dense, and event step loops must agree on the
+    /// calibrated zero-load number exactly: same round-trip latency,
+    /// same total cycles to drain, same router activity. A one-cycle
+    /// divergence here means a wake edge fires a cycle early or late —
+    /// or, for event mode, a fast-forward jumped over a cycle that was
+    /// not actually a no-op.
     #[test]
-    fn gated_matches_dense_zero_load() {
+    fn gated_matches_dense_and_event_zero_load() {
         use crate::sim::SimMode;
         let run = |mode: SimMode| {
             let mut sys = NocSystem::new(NocConfig::mesh(2, 1).with_sim_mode(mode));
@@ -1194,6 +1329,10 @@ mod tests {
                 }
             }
             assert!(sys.run_until_idle(10));
+            if mode != SimMode::Event {
+                assert_eq!(sys.skipped_cycles, 0, "only event mode may skip");
+                assert_eq!(sys.stepped_cycles, sys.now);
+            }
             (
                 completed_at.expect("read completes"),
                 sys.now,
@@ -1201,7 +1340,43 @@ mod tests {
                 sys.router_flit_hops(NET_RSP),
             )
         };
-        assert_eq!(run(SimMode::Gated), run(SimMode::Dense));
+        let gated = run(SimMode::Gated);
+        assert_eq!(gated, run(SimMode::Dense));
+        assert_eq!(gated, run(SimMode::Event));
+    }
+
+    /// Event-mode fast-forward actually skips: a single zero-load read
+    /// spends the memory-latency window with empty networks and quiet
+    /// NIs, so the calendar entry planted at accept time lets `step`
+    /// jump straight to the retirement cycle. The clock, results, and
+    /// the stepped/skipped split must reconcile exactly.
+    #[test]
+    fn event_mode_skips_memory_latency_window() {
+        use crate::sim::SimMode;
+        let mut sys = NocSystem::new(NocConfig::mesh(2, 1).with_sim_mode(SimMode::Event));
+        assert_eq!(sys.cfg.sim_mode, SimMode::Event);
+        sys.narrow_init(NodeId(0))
+            .push_ar(rd(1, 0, 3, TILE_SPAN + 0x100), NodeId(1));
+        let mut done = false;
+        for _ in 0..100 {
+            sys.step();
+            if sys.narrow_init(NodeId(0)).r_out.pop().is_some() {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "read completes under event mode");
+        assert!(sys.run_until_idle(10));
+        assert!(
+            sys.skipped_cycles > 0,
+            "memory latency window should fast-forward (skipped = {})",
+            sys.skipped_cycles
+        );
+        assert_eq!(
+            sys.stepped_cycles + sys.skipped_cycles,
+            sys.now,
+            "every cycle is either stepped or skipped"
+        );
     }
 
     /// Activity tracking: after a gated system drains, its active sets

@@ -18,11 +18,17 @@
 //!   torus with its default 2 dateline VCs: the VC switch's cps record
 //!   (this workload deadlocked — or needed crippled outstanding budgets
 //!   — before the virtual-channel PR);
+//! * **duty_cycled** — every tile of an 8×8 mesh firing a short
+//!   full-rate burst once per long period, silent between: the
+//!   event-driven mode's home turf (bar: event ≥ 5× gated cycles/s —
+//!   the fast-forward must actually jump the idle stretches);
 //! * **parallel sweep** — the serial-vs-parallel `ParallelRunner`
 //!   speedup on identical points with a byte-identical-report check;
-//! * **cps gate** — [`crate::util::bench::cps_gate`] over the gated
-//!   saturated workload, enforcing the pinned `CPS_FLOOR` when CI sets
-//!   one.
+//! * **cps gates** — [`crate::util::bench::cps_gate`] over the gated
+//!   saturated workload, plus an event-mode gate over the duty-cycled
+//!   workload (measured as simulated cycles per wall second — step
+//!   invocations undercount a fast-forwarding engine), each enforcing
+//!   its pinned `CPS_FLOOR_*` when CI sets one.
 //!
 //! Results are written as `BENCH_e2e.json` at the repository root so the
 //! performance trajectory is recorded PR-over-PR (see
@@ -35,7 +41,7 @@ use crate::dse::parallel::{run_sweep, sweep_report_json, ParallelRunner, SweepPo
 use crate::flit::NodeId;
 use crate::noc::{LinkMode, NocConfig, NocSystem};
 use crate::sim::SimMode;
-use crate::traffic::{GenCfg, Pattern};
+use crate::traffic::{DutyCycle, GenCfg, Pattern};
 use crate::util::bench::{cps_floor, cps_gate, measure_cps, time_once, CpsResult};
 use crate::util::json::{pretty, Json};
 
@@ -138,6 +144,35 @@ pub fn sparse_trace_workload(n: u8, mode: SimMode) -> TiledWorkload {
     TiledWorkload::new(sys, profiles)
 }
 
+/// Every tile of an `n × n` mesh issuing a short full-rate burst of
+/// narrow reads once per 512-cycle period (a 16-cycle duty window,
+/// offsets lightly staggered per tile), silent the other ~97% of the
+/// time. Bernoulli-sparse workloads (`rate < 1`) can draw an issue on
+/// *any* cycle, so they never present a provably idle stretch; this
+/// duty-cycled shape does — it is the scenario the event-driven
+/// fast-forward ([`SimMode::Event`]) is measured and gated on.
+pub fn duty_cycled_workload(n: u8, mode: SimMode) -> TiledWorkload {
+    let sys = NocSystem::new(NocConfig::mesh(n, n).with_sim_mode(mode));
+    let tiles = sys.topo.num_tiles;
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                num_txns: u64::MAX,
+                seed: 0xD117 + i as u64,
+                duty: Some(DutyCycle {
+                    period: 512,
+                    active: 16,
+                    offset: (i as u64 % 4) * 4,
+                }),
+                ..GenCfg::narrow_probe(NodeId(0), 1)
+            }),
+            dma: None,
+        })
+        .collect();
+    TiledWorkload::new(sys, profiles)
+}
+
 /// One gated-vs-dense throughput comparison of a scenario.
 #[derive(Debug, Clone)]
 pub struct ModeComparison {
@@ -195,6 +230,89 @@ where
         r.dense_cps,
         r.gated_cps,
         r.speedup()
+    );
+    r
+}
+
+/// One gated-vs-event throughput comparison of a (duty-cycled)
+/// scenario. Unlike [`ModeComparison`] the two sides are measured
+/// differently: gated by step invocations (one simulated cycle each),
+/// event by **simulated cycles per wall second** — a fast-forwarding
+/// step can advance many cycles, so counting invocations would
+/// undercount exactly the speedup being measured.
+#[derive(Debug, Clone)]
+pub struct EventComparison {
+    /// Scenario name (JSON key in the report).
+    pub name: String,
+    /// Gated measurement (cycles == step invocations).
+    pub gated: CpsResult,
+    /// Event measurement (cycles == simulated cycles at stop; may
+    /// overshoot the gated budget by up to one fast-forward jump).
+    pub event: CpsResult,
+    /// Cycles the event engine actually executed.
+    pub event_stepped: u64,
+    /// Cycles the event engine fast-forwarded over.
+    pub event_skipped: u64,
+}
+
+impl EventComparison {
+    /// Event speedup over gated (> 1 means fast-forward wins).
+    pub fn speedup(&self) -> f64 {
+        let g = self.gated.cycles_per_second();
+        if g > 0.0 {
+            self.event.cycles_per_second() / g
+        } else {
+            0.0
+        }
+    }
+
+    /// JSON object for the report file.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cycles", Json::Num(self.gated.cycles as f64)),
+            ("gated_cps", Json::Num(self.gated.cycles_per_second())),
+            ("event_cps", Json::Num(self.event.cycles_per_second())),
+            ("event_speedup", Json::Num(self.speedup())),
+            ("event_stepped_cycles", Json::Num(self.event_stepped as f64)),
+            ("event_skipped_cycles", Json::Num(self.event_skipped as f64)),
+        ])
+    }
+}
+
+/// Measure a scenario under gated and event stepping. `mk` must build a
+/// fresh, identically-seeded workload per mode. The event side runs to
+/// the same simulated-cycle horizon (not the same step count) and its
+/// cps is simulated cycles over wall time.
+pub fn compare_event<F>(name: &str, cycles: u64, mk: F) -> EventComparison
+where
+    F: Fn(SimMode) -> TiledWorkload,
+{
+    let mut gated_w = mk(SimMode::Gated);
+    let gated = measure_cps(cycles, || gated_w.step());
+    let mut event_w = mk(SimMode::Event);
+    let t0 = std::time::Instant::now();
+    while event_w.sys.now < cycles {
+        event_w.step();
+    }
+    let event = CpsResult {
+        cycles: event_w.sys.now,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    };
+    let r = EventComparison {
+        name: name.to_string(),
+        gated,
+        event,
+        event_stepped: event_w.sys.stepped_cycles,
+        event_skipped: event_w.sys.skipped_cycles,
+    };
+    println!(
+        "{:<24} gated {:>12.0} c/s | event {:>12.0} c/s | speedup {:.2}x (stepped {} / skipped {})",
+        r.name,
+        r.gated.cycles_per_second(),
+        r.event.cycles_per_second(),
+        r.speedup(),
+        r.event_stepped,
+        r.event_skipped,
     );
     r
 }
@@ -296,17 +414,28 @@ pub struct E2eReport {
     /// feature's cps record; no bar — the entry tracks the VC switch's
     /// cost PR-over-PR).
     pub wrap: ModeComparison,
+    /// Duty-cycled scenario under gated vs event stepping (the
+    /// fast-forward's target regime; bar: ≥ 5×).
+    pub duty: EventComparison,
     /// Serial-vs-parallel sweep runner comparison.
     pub sweep: SweepComparison,
     /// The regression-gate measurement (gated saturated workload).
     pub gate: CpsResult,
     /// The pinned floor the gate enforced, if CI set one.
     pub gate_floor: Option<f64>,
+    /// The pinned floor the event-mode gate enforced, if CI set one.
+    pub event_gate_floor: Option<f64>,
 }
 
 /// The name the cps regression gate runs under (also the suffix of its
 /// per-gate floor env var, `CPS_FLOOR_4X4_SATURATED`).
 pub const GATE_NAME: &str = "4x4-saturated";
+
+/// The name the event-mode cps gate runs under (per-gate floor env var:
+/// `CPS_FLOOR_8X8_DUTY_EVENT` — see [`crate::util::bench::cps_floor`]
+/// for the sanitization rule). Its measurement is simulated cycles per
+/// wall second on the duty-cycled 8×8 scenario under [`SimMode::Event`].
+pub const EVENT_GATE_NAME: &str = "8x8-duty-event";
 
 /// Run every scenario. `quick` shrinks cycle counts and sweep sizes for
 /// CI smoke runs; the measured *ratios* stay meaningful, absolute
@@ -337,18 +466,52 @@ pub fn run_e2e(quick: bool) -> E2eReport {
             saturated.speedup()
         );
     }
+    println!("== e2e performance: event-driven fast-forward vs gated ==");
+    let duty = compare_event("duty_cycled_8x8", sparse_cycles, |m| {
+        duty_cycled_workload(8, m)
+    });
+    if duty.speedup() < 5.0 {
+        println!(
+            "    WARNING: duty-cycled event speedup {:.2}x below the 5x tentpole bar",
+            duty.speedup()
+        );
+    }
     // Regression gate over the gated saturated mesh (the sweep workhorse).
     let mut w = saturated_workload(4, SimMode::Gated);
     let gate = cps_gate(GATE_NAME, sat_cycles, || w.step());
     let gate_floor = cps_floor(GATE_NAME);
+    // Event-mode gate: the measurement already exists (the duty
+    // comparison's event side, in simulated cycles per wall second);
+    // [`cps_gate`] cannot re-run it because it counts step invocations,
+    // which a fast-forwarding engine makes meaningless. Same print
+    // format and same floor-enforcement contract.
+    let event_gate_floor = cps_floor(EVENT_GATE_NAME);
+    println!(
+        "cps_gate name={EVENT_GATE_NAME} cycles={} wall_s={:.4} cycles_per_second={:.0} floor={}",
+        duty.event.cycles,
+        duty.event.wall_seconds,
+        duty.event.cycles_per_second(),
+        event_gate_floor
+            .map(|f| format!("{f:.0}"))
+            .unwrap_or_else(|| "unset".into()),
+    );
+    if let Some(floor) = event_gate_floor {
+        assert!(
+            duty.event.cycles_per_second() >= floor,
+            "cps regression: {EVENT_GATE_NAME} ran at {:.0} cycles/s, floor is {floor:.0}",
+            duty.event.cycles_per_second()
+        );
+    }
     let sweep = sweep_speedup(quick);
     E2eReport {
         sparse,
         saturated,
         wrap,
+        duty,
         sweep,
         gate,
         gate_floor,
+        event_gate_floor,
     }
 }
 
@@ -363,6 +526,7 @@ pub fn report_to_json(r: &E2eReport) -> Json {
                 (r.sparse.name.as_str(), r.sparse.to_json()),
                 (r.saturated.name.as_str(), r.saturated.to_json()),
                 (r.wrap.name.as_str(), r.wrap.to_json()),
+                (r.duty.name.as_str(), r.duty.to_json()),
                 ("parallel_sweep", r.sweep.to_json()),
             ]),
         ),
@@ -375,6 +539,24 @@ pub fn report_to_json(r: &E2eReport) -> Json {
                 (
                     "floor",
                     match r.gate_floor {
+                        Some(f) => Json::Num(f),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+        ),
+        (
+            "event_cps_gate",
+            Json::obj(vec![
+                ("name", Json::Str(EVENT_GATE_NAME.into())),
+                ("cycles", Json::Num(r.duty.event.cycles as f64)),
+                (
+                    "cycles_per_second",
+                    Json::Num(r.duty.event.cycles_per_second()),
+                ),
+                (
+                    "floor",
+                    match r.event_gate_floor {
                         Some(f) => Json::Num(f),
                         None => Json::Null,
                     },
@@ -440,7 +622,12 @@ mod tests {
     /// stepped the same number of cycles agree on injected-flit counts.
     #[test]
     fn scenarios_deterministic() {
-        for mk in [sparse_trace_workload, saturated_workload, wrap_saturated_workload] {
+        for mk in [
+            sparse_trace_workload,
+            saturated_workload,
+            wrap_saturated_workload,
+            duty_cycled_workload,
+        ] {
             let count = |mode: SimMode| {
                 let mut w = mk(4, mode);
                 for _ in 0..500 {
@@ -451,6 +638,32 @@ mod tests {
             assert_eq!(count(SimMode::Gated), count(SimMode::Gated));
             assert_eq!(count(SimMode::Gated), count(SimMode::Dense));
         }
+    }
+
+    /// The duty-cycled scenario actually exercises the fast-forward: the
+    /// event engine executes a small fraction of the simulated cycles,
+    /// and the stepped/skipped split reconciles with the clock. This is
+    /// the in-crate half of the duty-cycle regression (the cross-mode
+    /// digest half lives in `tests/mode_equivalence_sweep.rs`).
+    #[test]
+    fn duty_cycled_event_fast_forwards() {
+        let mut w = duty_cycled_workload(4, SimMode::Event);
+        while w.sys.now < 4_096 {
+            w.step();
+        }
+        let (stepped, skipped, now) = (w.sys.stepped_cycles, w.sys.skipped_cycles, w.sys.now);
+        assert_eq!(stepped + skipped, now, "cycle accounting must reconcile");
+        assert!(
+            stepped * 4 < now,
+            "duty workload should skip >75% of cycles: stepped {stepped} of {now}"
+        );
+        // Gated never skips on the same workload.
+        let mut g = duty_cycled_workload(4, SimMode::Gated);
+        for _ in 0..1_000 {
+            g.step();
+        }
+        assert_eq!(g.sys.skipped_cycles, 0);
+        assert_eq!(g.sys.stepped_cycles, g.sys.now);
     }
 
     #[test]
@@ -474,6 +687,19 @@ mod tests {
                 dense_cps: 90.0,
                 gated_cps: 90.0,
             },
+            duty: EventComparison {
+                name: "duty_cycled_8x8".into(),
+                gated: crate::util::bench::CpsResult {
+                    cycles: 100,
+                    wall_seconds: 0.1,
+                },
+                event: crate::util::bench::CpsResult {
+                    cycles: 120,
+                    wall_seconds: 0.02,
+                },
+                event_stepped: 20,
+                event_skipped: 100,
+            },
             sweep: SweepComparison {
                 points: 4,
                 threads: 2,
@@ -485,6 +711,7 @@ mod tests {
                 wall_seconds: 0.1,
             },
             gate_floor: None,
+            event_gate_floor: Some(350_000.0),
         };
         let j = report_to_json(&r);
         assert_eq!(
@@ -493,8 +720,18 @@ mod tests {
         );
         let sparse = j.get("scenarios").and_then(|s| s.get("sparse_trace_8x8")).unwrap();
         assert_eq!(sparse.get("gated_speedup").and_then(Json::as_f64), Some(4.0));
+        let duty = j.get("scenarios").and_then(|s| s.get("duty_cycled_8x8")).unwrap();
+        // 120 cycles / 0.02 s = 6000 c/s event vs 100 / 0.1 = 1000 gated.
+        assert_eq!(duty.get("event_speedup").and_then(Json::as_f64), Some(6.0));
+        assert_eq!(
+            duty.get("event_skipped_cycles").and_then(Json::as_f64),
+            Some(100.0)
+        );
         let gate = j.get("cps_gate").unwrap();
         assert_eq!(gate.get("name").and_then(Json::as_str), Some(GATE_NAME));
         assert!(matches!(gate.get("floor"), Some(Json::Null)));
+        let egate = j.get("event_cps_gate").unwrap();
+        assert_eq!(egate.get("name").and_then(Json::as_str), Some(EVENT_GATE_NAME));
+        assert_eq!(egate.get("floor").and_then(Json::as_f64), Some(350_000.0));
     }
 }

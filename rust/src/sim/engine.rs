@@ -13,6 +13,12 @@ use super::Cycle;
 pub struct SimStats {
     /// Total cycles simulated.
     pub cycles: Cycle,
+    /// Step-closure invocations actually executed. Equal to `cycles`
+    /// under cycle-stepped modes; **≤ `cycles`** under event-driven
+    /// fast-forward ([`Engine::run_until_clocked`]), where a single step
+    /// may advance the system clock by many cycles — the gap
+    /// `cycles - stepped_cycles` is exactly the idle time skipped.
+    pub stepped_cycles: Cycle,
     /// Wall-clock seconds spent inside `run`.
     pub wall_seconds: f64,
 }
@@ -60,6 +66,7 @@ impl<S> Engine<S> {
             self.now += 1;
         }
         self.stats.cycles += n;
+        self.stats.stepped_cycles += n;
         self.stats.wall_seconds += t0.elapsed().as_secs_f64();
     }
 
@@ -90,6 +97,44 @@ impl<S> Engine<S> {
             self.now += 1;
         }
         self.stats.cycles += self.now - start;
+        self.stats.stepped_cycles += self.now - start;
+        self.stats.wall_seconds += t0.elapsed().as_secs_f64();
+        completed
+    }
+
+    /// [`Self::run_until`] for systems that own their clock — the step
+    /// closure returns the system's cycle counter *after* stepping, and
+    /// the engine adopts it as `now`. This is the event-driven entry
+    /// point: a fast-forwarding system ([`crate::sim::SimMode::Event`])
+    /// may advance its clock by many cycles in one step, and every
+    /// skipped cycle is charged to [`SimStats::cycles`] as if it had
+    /// been stepped (they are provably no-ops), while
+    /// [`SimStats::stepped_cycles`] counts only real step invocations.
+    ///
+    /// Same entry semantics as `run_until`: `done` at entry charges
+    /// nothing. The `max_cycles` budget bounds *simulated* cycles, so a
+    /// fast-forwarding run can overshoot the budget by one jump but
+    /// never spins unboundedly.
+    pub fn run_until_clocked<F, D>(&mut self, max_cycles: Cycle, mut step: F, mut done: D) -> bool
+    where
+        F: FnMut(&mut S) -> Cycle,
+        D: FnMut(&S, Cycle) -> bool,
+    {
+        if done(&self.system, self.now) {
+            return true;
+        }
+        let t0 = std::time::Instant::now();
+        let start = self.now;
+        let mut completed = false;
+        while self.now - start < max_cycles {
+            if done(&self.system, self.now) {
+                completed = true;
+                break;
+            }
+            self.now = step(&mut self.system);
+            self.stats.stepped_cycles += 1;
+        }
+        self.stats.cycles += self.now - start;
         self.stats.wall_seconds += t0.elapsed().as_secs_f64();
         completed
     }
@@ -110,6 +155,7 @@ mod tests {
         assert_eq!(e.now, 10);
         assert_eq!(e.system.v, 10);
         assert_eq!(e.stats.cycles, 10);
+        assert_eq!(e.stats.stepped_cycles, 10, "cycle-stepped: stepped == cycles");
     }
 
     #[test]
@@ -172,5 +218,71 @@ mod tests {
         let mut e = Engine::new(Counter { v: 0 });
         e.run_for(100_000, |s, _| s.v = s.v.wrapping_add(1));
         assert!(e.stats.cycles_per_second() > 0.0);
+    }
+
+    /// A self-clocked system that jumps its clock 10 cycles per step:
+    /// every skipped cycle is charged to `cycles` (throughput counts
+    /// simulated time), while `stepped_cycles` counts invocations only.
+    struct Jumper {
+        clock: u64,
+        steps: u64,
+    }
+
+    #[test]
+    fn run_until_clocked_charges_skipped_cycles() {
+        let mut e = Engine::new(Jumper { clock: 0, steps: 0 });
+        let ok = e.run_until_clocked(
+            1000,
+            |s| {
+                s.steps += 1;
+                s.clock += 10;
+                s.clock
+            },
+            |s, _| s.clock >= 50,
+        );
+        assert!(ok);
+        assert_eq!(e.now, 50, "engine adopts the system clock");
+        assert_eq!(e.system.steps, 5);
+        assert_eq!(e.stats.cycles, 50, "skipped cycles count as simulated");
+        assert_eq!(e.stats.stepped_cycles, 5, "only real invocations stepped");
+    }
+
+    #[test]
+    fn run_until_clocked_done_at_entry_charges_nothing() {
+        let mut e = Engine::new(Jumper { clock: 0, steps: 0 });
+        let ok = e.run_until_clocked(
+            1000,
+            |s| {
+                s.steps += 1;
+                s.clock + 1
+            },
+            |_, _| true,
+        );
+        assert!(ok);
+        assert_eq!(e.system.steps, 0);
+        assert_eq!(e.stats.cycles, 0);
+        assert_eq!(e.stats.stepped_cycles, 0);
+    }
+
+    #[test]
+    fn run_until_clocked_times_out_on_simulated_budget() {
+        let mut e = Engine::new(Jumper { clock: 0, steps: 0 });
+        // 7-cycle jumps against a 20-cycle budget: the run stops at the
+        // first step whose clock reaches the budget (21 ≥ 20), having
+        // executed 3 steps, and reports not-completed.
+        let ok = e.run_until_clocked(
+            20,
+            |s| {
+                s.steps += 1;
+                s.clock += 7;
+                s.clock
+            },
+            |_, _| false,
+        );
+        assert!(!ok);
+        assert_eq!(e.system.steps, 3);
+        assert_eq!(e.now, 21);
+        assert_eq!(e.stats.cycles, 21);
+        assert_eq!(e.stats.stepped_cycles, 3);
     }
 }

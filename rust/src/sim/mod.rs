@@ -49,6 +49,14 @@ pub type Cycle = u64;
 ///   router steps every cycle (a whole network is skipped only when its
 ///   flit-conservation counter proves it empty). Kept as the
 ///   differential-testing oracle and for debugging the gating itself.
+/// * [`SimMode::Event`] — gated stepping plus **event-driven
+///   fast-forward**: components that can become active spontaneously
+///   (memory retirements, generator issue windows) register their next
+///   interesting cycle in a calendar (`util::calendar`), and when every
+///   active set is empty and every NI is provably quiet, `now` jumps
+///   directly to the earliest scheduled event. Skipped cycles are
+///   provably no-ops, so all statistics stay exactly as if they had
+///   been stepped — sparse *time* becomes free, not just sparse space.
 ///
 /// See `docs/performance.md` for the design and the equivalence argument.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -58,6 +66,8 @@ pub enum SimMode {
     Gated,
     /// Dense reference stepping (every component, every cycle).
     Dense,
+    /// Gated stepping + calendar-driven fast-forward over idle cycles.
+    Event,
 }
 
 impl SimMode {
@@ -66,6 +76,7 @@ impl SimMode {
         match self {
             SimMode::Gated => "gated",
             SimMode::Dense => "dense",
+            SimMode::Event => "event",
         }
     }
 }

@@ -48,6 +48,52 @@ pub enum Pattern {
     NearestNeighbor,
 }
 
+/// A periodic on/off issue window: the generator may issue only during
+/// the first `active` cycles of each `period`-cycle window, with the
+/// window grid shifted by `offset`. Modeling bursty duty-cycled traffic
+/// (a DMA that fires every N cycles, a core that polls periodically) —
+/// the off phases are exactly the idle stretches the event-driven mode
+/// ([`crate::sim::SimMode::Event`]) fast-forwards over.
+///
+/// The gate is pure arithmetic on the cycle number (no RNG draw), so a
+/// duty-cycled workload behaves bit-identically under every
+/// [`crate::sim::SimMode`].
+#[derive(Debug, Clone, Copy)]
+pub struct DutyCycle {
+    /// Window length in cycles (must be > 0).
+    pub period: u64,
+    /// Issue-eligible cycles at the start of each window (1..=period).
+    pub active: u64,
+    /// Phase shift of the window grid (taken mod `period`); staggering
+    /// offsets across tiles decorrelates their bursts.
+    pub offset: u64,
+}
+
+impl DutyCycle {
+    /// Position of `now` inside its window.
+    fn phase(&self, now: u64) -> u64 {
+        debug_assert!(self.period > 0 && self.active >= 1 && self.active <= self.period);
+        let off = self.offset % self.period;
+        (now + self.period - off) % self.period
+    }
+
+    /// Whether the generator may issue at cycle `now`.
+    pub fn in_window(&self, now: u64) -> bool {
+        self.phase(now) < self.active
+    }
+
+    /// Earliest cycle `>= t` inside an active window — the generator's
+    /// scheduled wake for the event calendar.
+    pub fn next_active(&self, t: u64) -> u64 {
+        let p = self.phase(t);
+        if p < self.active {
+            t
+        } else {
+            t + (self.period - p)
+        }
+    }
+}
+
 /// Generator configuration.
 #[derive(Debug, Clone)]
 pub struct GenCfg {
@@ -71,6 +117,8 @@ pub struct GenCfg {
     pub ids: u16,
     /// RNG seed (mixed with the node id for decorrelated streams).
     pub seed: u64,
+    /// Optional periodic issue window (None = always eligible).
+    pub duty: Option<DutyCycle>,
 }
 
 impl GenCfg {
@@ -88,6 +136,7 @@ impl GenCfg {
             max_outstanding: 4,
             ids: 4,
             seed: 0xC0FE,
+            duty: None,
         }
     }
 
@@ -105,6 +154,7 @@ impl GenCfg {
             max_outstanding: 8,
             ids: 4,
             seed: 0xD0A,
+            duty: None,
         }
     }
 }
@@ -170,6 +220,27 @@ impl Generator {
     /// Transactions in flight right now.
     pub fn outstanding(&self) -> u32 {
         self.outstanding
+    }
+
+    /// The next cycle (generator time — the post-increment clock this
+    /// generator is stepped at) at which it could possibly issue, for
+    /// the event-driven fast-forward's wake list. `u64::MAX` means "no
+    /// scheduled wake": the generator is done, or blocked on responses —
+    /// a *reactive* wake, safe to omit because the in-flight responses
+    /// keep the networks or memories busy until they arrive.
+    ///
+    /// Conservative by construction: the true next issue may be later
+    /// (rate RNG, backpressure), which only costs a wasted stepped
+    /// cycle, never a missed one.
+    pub fn next_wake(&self, now: u64) -> u64 {
+        if self.issued >= self.cfg.num_txns || self.outstanding >= self.cfg.max_outstanding {
+            return u64::MAX;
+        }
+        let t = self.next_issue_at.max(now + 1);
+        match &self.cfg.duty {
+            Some(d) => d.next_active(t),
+            None => t,
+        }
     }
 
     fn pick_dst(&mut self, topo: &Topology) -> NodeId {
@@ -267,6 +338,14 @@ impl Generator {
             || now < self.next_issue_at
         {
             return;
+        }
+        // Duty window before the rate draw: off-window cycles consume no
+        // RNG state, so the issue sequence is a pure function of which
+        // cycles are in-window (identical under every sim mode).
+        if let Some(d) = &self.cfg.duty {
+            if !d.in_window(now) {
+                return;
+            }
         }
         if self.cfg.rate < 1.0 && !self.rng.chance(self.cfg.rate) {
             return;
@@ -488,6 +567,74 @@ mod tests {
         }
         assert!(gens.iter().all(Generator::done), "tornado must drain");
         assert!(gens.iter().all(|g| g.monitor.ok()));
+    }
+
+    /// Duty-window arithmetic: phase, membership, and the wake target
+    /// used by the event calendar, including a non-zero offset.
+    #[test]
+    fn duty_cycle_window_arithmetic() {
+        let d = DutyCycle {
+            period: 8,
+            active: 2,
+            offset: 3,
+        };
+        // Windows open at 3, 11, 19, ... for two cycles each.
+        for t in 0..24u64 {
+            let open = matches!(t % 8, 3 | 4);
+            assert_eq!(d.in_window(t), open, "cycle {t}");
+        }
+        assert_eq!(d.next_active(0), 3);
+        assert_eq!(d.next_active(3), 3); // already open
+        assert_eq!(d.next_active(4), 4);
+        assert_eq!(d.next_active(5), 11); // just closed
+        assert_eq!(d.next_active(11), 11);
+        // offset is taken mod period.
+        let wrapped = DutyCycle {
+            period: 8,
+            active: 2,
+            offset: 11,
+        };
+        assert_eq!(wrapped.next_active(0), 3);
+    }
+
+    /// `next_wake` semantics: a fresh generator wakes at its next
+    /// eligible issue cycle (pushed to the duty window's opening); a
+    /// finished generator has no scheduled wake at all.
+    #[test]
+    fn next_wake_respects_duty_and_completion() {
+        let mut cfg = GenCfg::narrow_probe(NodeId(1), 4);
+        cfg.duty = Some(DutyCycle {
+            period: 100,
+            active: 5,
+            offset: 0,
+        });
+        let g = Generator::new(cfg, NodeId(0));
+        // At now = 10 the window [0, 5) is closed: wake at the next one.
+        assert_eq!(g.next_wake(10), 100);
+        // Inside a window the wake is simply the next cycle.
+        assert_eq!(g.next_wake(2), 3);
+        // Without a duty cycle the conservative wake is always now + 1.
+        let free = Generator::new(GenCfg::narrow_probe(NodeId(1), 4), NodeId(0));
+        assert_eq!(free.next_wake(10), 11);
+        // Done (num_txns = 0 is trivially exhausted) ⇒ no wake.
+        let done = Generator::new(GenCfg::narrow_probe(NodeId(1), 0), NodeId(0));
+        assert_eq!(done.next_wake(10), u64::MAX);
+    }
+
+    /// A duty-cycled probe still completes and stays protocol-clean —
+    /// the gate delays issues, it must never drop them.
+    #[test]
+    fn duty_cycled_probe_completes() {
+        let mut cfg = GenCfg::narrow_probe(NodeId(1), 12);
+        cfg.duty = Some(DutyCycle {
+            period: 64,
+            active: 4,
+            offset: 1,
+        });
+        let g = run_gen(cfg, NodeId(0), 50_000);
+        assert!(g.done(), "issued {} completed {}", g.issued, g.completed);
+        assert_eq!(g.completed, 12);
+        assert!(g.monitor.ok(), "violations: {:?}", g.monitor.violations);
     }
 }
 pub mod trace;

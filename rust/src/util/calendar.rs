@@ -1,0 +1,127 @@
+//! Event calendar for the event-driven simulation mode
+//! ([`crate::sim::SimMode::Event`]).
+//!
+//! A [`Calendar`] is a min-heap of future wake times: components that can
+//! become active *spontaneously* (a memory operation retiring after its
+//! fixed latency, a generator's next issue window opening) schedule the
+//! cycle at which they next need to be stepped. When every active set is
+//! empty and every NI is provably quiet, the system fast-forwards `now`
+//! to the earliest scheduled entry instead of ticking through dead
+//! cycles (see `docs/performance.md`, "Event-driven fast-forward").
+//!
+//! Entries are *hints*, not obligations: the fast-forward path re-checks
+//! real component state before and after every jump, so a stale entry
+//! (e.g. a memory op that was popped before its scheduled cycle came up)
+//! costs at most one wasted — provably no-op — stepped cycle. Entries at
+//! or before the current cycle are discarded by [`Calendar::prune_through`]
+//! once the caller has verified no component head is actually ready.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Min-heap of scheduled wake cycles. Duplicates are allowed (several
+/// memory accepts in one cycle share a retirement time); they cost one
+/// heap slot each and are drained together by pruning.
+#[derive(Debug, Default)]
+pub struct Calendar {
+    heap: BinaryHeap<Reverse<u64>>,
+}
+
+impl Calendar {
+    /// Empty calendar.
+    pub fn new() -> Self {
+        Calendar {
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    /// Schedule a wake at cycle `at`.
+    pub fn schedule(&mut self, at: u64) {
+        self.heap.push(Reverse(at));
+    }
+
+    /// Earliest scheduled cycle, if any.
+    pub fn earliest(&self) -> Option<u64> {
+        self.heap.peek().map(|Reverse(t)| *t)
+    }
+
+    /// Drop every entry scheduled at or before `now`. Callers must have
+    /// verified first that no component is actually ready at `now` —
+    /// then entries ≤ `now` are provably stale (their ops already
+    /// retired and were popped).
+    pub fn prune_through(&mut self, now: u64) {
+        while let Some(Reverse(t)) = self.heap.peek() {
+            if *t > now {
+                break;
+            }
+            self.heap.pop();
+        }
+    }
+
+    /// Number of scheduled entries (duplicates counted).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// No entries scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drop all entries.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn earliest_is_min_regardless_of_insert_order() {
+        let mut c = Calendar::new();
+        assert_eq!(c.earliest(), None);
+        c.schedule(50);
+        c.schedule(10);
+        c.schedule(30);
+        assert_eq!(c.earliest(), Some(10));
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn duplicates_are_kept_and_pruned_together() {
+        let mut c = Calendar::new();
+        c.schedule(7);
+        c.schedule(7);
+        c.schedule(9);
+        assert_eq!(c.len(), 3);
+        c.prune_through(7);
+        assert_eq!(c.earliest(), Some(9));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn prune_through_is_inclusive_and_stops_at_future() {
+        let mut c = Calendar::new();
+        c.schedule(3);
+        c.schedule(5);
+        c.schedule(8);
+        c.prune_through(5);
+        assert_eq!(c.earliest(), Some(8));
+        c.prune_through(100);
+        assert!(c.is_empty());
+        // Pruning an empty calendar is a no-op.
+        c.prune_through(200);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut c = Calendar::new();
+        c.schedule(1);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.earliest(), None);
+    }
+}

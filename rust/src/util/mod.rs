@@ -11,3 +11,4 @@ pub mod prop;
 pub mod bench;
 pub mod fifo;
 pub mod activeset;
+pub mod calendar;

@@ -1,7 +1,12 @@
 //! Shared integration-test support (included via `mod common;` from the
 //! test binaries that need it — not a test target itself).
 
+// Each including test binary uses a subset of these helpers; unused-item
+// warnings in the other binaries are expected, not bugs.
+#![allow(dead_code)]
+
 use floonoc::cluster::TiledWorkload;
+use floonoc::sim::SimMode;
 
 /// Serialize every observable counter of a drained workload — total
 /// cycles, per-network flit-conservation counters, per-link
@@ -86,4 +91,49 @@ pub fn digest(w: &mut TiledWorkload) -> String {
         }
     }
     d
+}
+
+/// The three-way differential runner: build the same seeded workload
+/// under [`SimMode::Dense`], [`SimMode::Gated`] and [`SimMode::Event`],
+/// run each to completion, and assert all three digests are
+/// **byte-identical**. Dense is the reference sweep, gated skips by
+/// activity, event additionally fast-forwards the clock over provably
+/// idle stretches — none of which may change a single counter.
+///
+/// Also pins the cycle bookkeeping: gated/dense must never skip
+/// (`skipped_cycles == 0`), and under event every cycle is either
+/// stepped or skipped (`stepped + skipped == now`).
+pub fn assert_modes_equivalent<F>(label: &str, max_cycles: u64, mk: F)
+where
+    F: Fn(SimMode) -> TiledWorkload,
+{
+    let run = |mode: SimMode| {
+        let mut w = mk(mode);
+        assert!(w.run_to_completion(max_cycles), "{label}/{mode:?} must drain");
+        assert!(w.protocol_ok(), "{label}/{mode:?} protocol clean");
+        if mode == SimMode::Event {
+            assert_eq!(
+                w.sys.stepped_cycles + w.sys.skipped_cycles,
+                w.sys.now,
+                "{label}/event: stepped + skipped must reconcile with the clock"
+            );
+        } else {
+            assert_eq!(
+                w.sys.skipped_cycles, 0,
+                "{label}/{mode:?}: only event mode may fast-forward"
+            );
+        }
+        digest(&mut w)
+    };
+    let dense = run(SimMode::Dense);
+    let gated = run(SimMode::Gated);
+    let event = run(SimMode::Event);
+    assert!(
+        gated == dense,
+        "gated != dense for {label}\n--- gated ---\n{gated}\n--- dense ---\n{dense}"
+    );
+    assert!(
+        event == dense,
+        "event != dense for {label}\n--- event ---\n{event}\n--- dense ---\n{dense}"
+    );
 }

@@ -1,22 +1,27 @@
 //! Differential proof that activity-gated stepping ([`SimMode::Gated`])
-//! is cycle-accurately **byte-identical** to the dense reference sweep
+//! and event-driven fast-forward stepping ([`SimMode::Event`]) are both
+//! cycle-accurately **byte-identical** to the dense reference sweep
 //! ([`SimMode::Dense`]).
 //!
 //! Methodology (see `docs/performance.md`): the same seeded workload is
-//! run to completion twice — once per [`SimMode`] — and every observable
-//! counter in the system is serialized into one digest string: total
-//! cycles, per-network flit-conservation counters, per-link
-//! delivered/stall/busy counters, per-router-per-port forwarding
-//! counters, per-node target statistics and per-tile generator
-//! completions and latency aggregates. The two digests must be equal to
-//! the byte. Any divergence — a component skipped while it had work, a
-//! wake edge firing a cycle early or late — shows up as a counter
-//! mismatch somewhere in this digest.
+//! run to completion three times — once per [`SimMode`] — and every
+//! observable counter in the system is serialized into one digest
+//! string: total cycles, per-network flit-conservation counters,
+//! per-link delivered/stall/busy counters, per-router-per-port
+//! forwarding counters, per-node target statistics and per-tile
+//! generator completions and latency aggregates. All digests must be
+//! equal to the byte. Any divergence — a component skipped while it had
+//! work, a wake edge firing a cycle early or late, a fast-forward
+//! jumping over a cycle that was not actually a no-op — shows up as a
+//! counter mismatch somewhere in this digest.
 //!
 //! The grid covers all three fabrics × three traffic patterns (uniform
-//! random, tornado, nearest-neighbor), which together exercise XY mesh
-//! routing, both directions of every wraparound link, wormhole bursts
-//! across pipelined links, and long quiescent stretches between bursts.
+//! random, tornado, nearest-neighbor) × both link modes, which together
+//! exercise XY mesh routing, both directions of every wraparound link,
+//! wormhole bursts across pipelined links, and long quiescent stretches
+//! between bursts. The three-way runner itself is shared
+//! (`common::assert_modes_equivalent`) with the seeded randomized sweep
+//! in `mode_equivalence_sweep.rs`.
 
 use floonoc::cluster::{TileTraffic, TiledWorkload};
 use floonoc::flit::NodeId;
@@ -26,7 +31,7 @@ use floonoc::topology::TopologyKind;
 use floonoc::traffic::{GenCfg, Pattern};
 
 mod common;
-use common::digest;
+use common::assert_modes_equivalent;
 
 /// 9-tile fabric of `kind` (3×3 for mesh/torus, 9-ring), mode selected.
 fn fabric(kind: TopologyKind, mode: SimMode) -> NocSystem {
@@ -41,7 +46,8 @@ fn fabric(kind: TopologyKind, mode: SimMode) -> NocSystem {
 /// per-VC locks, dateline switches) on every wrap fabric cell.
 /// Bursty-with-gaps by construction: the narrow generators finish at
 /// different times, leaving long quiescent stretches that exercise the
-/// gating/pruning paths, not just saturation.
+/// gating/pruning paths — and give the event engine real idle windows
+/// to fast-forward over — not just saturation.
 fn workload(kind: TopologyKind, pattern: Pattern, mode: SimMode) -> TiledWorkload {
     let sys = fabric(kind, mode);
     let tiles = sys.topo.num_tiles;
@@ -65,25 +71,10 @@ fn workload(kind: TopologyKind, pattern: Pattern, mode: SimMode) -> TiledWorkloa
     TiledWorkload::new(sys, profiles)
 }
 
-/// Run one (fabric, pattern, mode) cell to completion and digest it
-/// (the digest instrument itself is shared — see `common::digest`).
-fn run_cell(kind: TopologyKind, pattern: Pattern, mode: SimMode) -> String {
-    let mut w = workload(kind, pattern, mode);
-    assert!(
-        w.run_to_completion(2_000_000),
-        "{kind:?}/{pattern:?}/{mode:?} must drain"
-    );
-    assert!(w.protocol_ok(), "{kind:?}/{pattern:?}/{mode:?} protocol clean");
-    digest(&mut w)
-}
-
 fn assert_equivalent(kind: TopologyKind, pattern: Pattern) {
-    let gated = run_cell(kind, pattern, SimMode::Gated);
-    let dense = run_cell(kind, pattern, SimMode::Dense);
-    assert!(
-        gated == dense,
-        "gated != dense for {kind:?}/{pattern:?}\n--- gated ---\n{gated}\n--- dense ---\n{dense}"
-    );
+    assert_modes_equivalent(&format!("{kind:?}/{pattern:?}"), 2_000_000, |mode| {
+        workload(kind, pattern, mode)
+    });
 }
 
 const PATTERNS: [Pattern; 3] = [
@@ -114,11 +105,11 @@ fn ring_gated_equals_dense_across_patterns() {
 }
 
 /// Wide-only baseline link configuration through the same differential
-/// harness: the gating must be mode-agnostic (two networks, merged
-/// response classes, W beats on the request net).
+/// harness: the gating and fast-forward must be mode-agnostic (two
+/// networks, merged response classes, W beats on the request net).
 #[test]
 fn wide_only_mode_gated_equals_dense() {
-    let run = |mode: SimMode| {
+    assert_modes_equivalent("wide-only/3x3", 2_000_000, |mode| {
         let sys = NocSystem::new(NocConfig::mesh(3, 3).wide_only().with_sim_mode(mode));
         let tiles = sys.topo.num_tiles;
         let profiles: Vec<TileTraffic> = (0..tiles)
@@ -138,25 +129,21 @@ fn wide_only_mode_gated_equals_dense() {
                 }),
             })
             .collect();
-        let mut w = TiledWorkload::new(sys, profiles);
-        assert!(w.run_to_completion(2_000_000), "{mode:?} drains");
-        assert!(w.protocol_ok());
-        digest(&mut w)
-    };
-    let gated = run(SimMode::Gated);
-    let dense = run(SimMode::Dense);
-    assert!(gated == dense, "wide-only gated != dense\n{gated}\n---\n{dense}");
+        TiledWorkload::new(sys, profiles)
+    });
 }
 
 /// Pipelined multi-stage links under gating: with deeper output
 /// pipelines (buffer islands on long routing channels) a flit spends
 /// several cycles in stages where *only* the link occupancy — not any
 /// router input — proves the network busy. If the active set dropped
-/// those links, the flit would strand and the run would time out; the
-/// digest equality additionally pins exact timing.
+/// those links, the flit would strand and the run would time out; if the
+/// event engine skipped while a stage was occupied, the in-flight
+/// counter guard would have to be wrong. The digest equality
+/// additionally pins exact timing.
 #[test]
 fn pipelined_links_gated_equals_dense() {
-    let run = |mode: SimMode| {
+    assert_modes_equivalent("pipelined/3x1", 200_000, |mode| {
         let mut cfg = NocConfig::mesh(3, 1).with_sim_mode(mode);
         cfg.in_buf_depth = 1; // tight buffers: maximum backpressure
         let sys = NocSystem::new(cfg);
@@ -171,11 +158,6 @@ fn pipelined_links_gated_equals_dense() {
             TileTraffic::idle(),
             TileTraffic::idle(),
         ];
-        let mut w = TiledWorkload::new(sys, profiles);
-        assert!(w.run_to_completion(200_000), "{mode:?} drains");
-        digest(&mut w)
-    };
-    let gated = run(SimMode::Gated);
-    let dense = run(SimMode::Dense);
-    assert!(gated == dense, "pipelined gated != dense\n{gated}\n---\n{dense}");
+        TiledWorkload::new(sys, profiles)
+    });
 }

@@ -1,0 +1,215 @@
+//! Seeded randomized three-way differential sweep: ~50 random
+//! (topology, shape, pattern, link-mode, vcs, buffer-depth, duty, seed)
+//! points, each run to completion under [`SimMode::Dense`],
+//! [`SimMode::Gated`] and [`SimMode::Event`] and compared by
+//! byte-identical stats digest (`common::assert_modes_equivalent` — the
+//! same runner the curated grid in `gated_equivalence.rs` uses).
+//!
+//! The sweep is deterministic: one fixed master seed drives every
+//! random choice, so a failing point reproduces exactly (its full
+//! parameter set is in the assertion label). Alongside the sweep live
+//! the duty-cycle regressions: fast-forward must *actually skip* on
+//! bursty workloads (`stepped_cycles` ≪ `now`) and must never fire
+//! while any generator remains issue-eligible every cycle.
+
+use floonoc::cluster::{TileTraffic, TiledWorkload};
+use floonoc::flit::NodeId;
+use floonoc::noc::{NocConfig, NocSystem};
+use floonoc::sim::SimMode;
+use floonoc::topology::TopologyKind;
+use floonoc::traffic::{DutyCycle, GenCfg, Pattern};
+use floonoc::util::rng::Rng;
+
+mod common;
+use common::{assert_modes_equivalent, digest};
+
+/// One randomly drawn sweep point (everything needed to rebuild the
+/// workload deterministically in any sim mode).
+#[derive(Debug, Clone)]
+struct Point {
+    kind: TopologyKind,
+    width: u8,
+    height: u8,
+    wide_only: bool,
+    vcs: usize,
+    in_buf_depth: usize,
+    pattern: Pattern,
+    core_txns: u64,
+    dma_txns: u64,
+    dma_burst_len: u8,
+    duty: Option<DutyCycle>,
+    seed: u64,
+}
+
+/// Draw one point. Constraints keep every draw valid: wrap fabrics
+/// (torus/ring) keep at least their 2 dateline VCs, tornado needs a
+/// non-degenerate shape (width ≥ 2, which all draws satisfy).
+fn draw(rng: &mut Rng) -> Point {
+    let kind = *rng.choose(&[TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::Ring]);
+    let (width, height) = match kind {
+        TopologyKind::Ring => ((4 + rng.below(7)) as u8, 1),
+        _ => ((2 + rng.below(3)) as u8, (2 + rng.below(3)) as u8),
+    };
+    let vcs = match kind {
+        TopologyKind::Mesh => 1 + rng.below(2) as usize,
+        _ => 2 + rng.below(2) as usize,
+    };
+    let pattern = *rng.choose(&[
+        Pattern::UniformTiles,
+        Pattern::Tornado,
+        Pattern::NearestNeighbor,
+        Pattern::Neighbor,
+    ]);
+    let duty = rng.chance(0.4).then(|| DutyCycle {
+        period: 64 + rng.below(192),
+        active: 4 + rng.below(12),
+        offset: rng.below(64),
+    });
+    Point {
+        kind,
+        width,
+        height,
+        wide_only: rng.chance(0.3),
+        vcs,
+        in_buf_depth: *rng.choose(&[1usize, 2, 4]),
+        pattern,
+        core_txns: 4 + rng.below(8),
+        dma_txns: 1 + rng.below(3),
+        dma_burst_len: *rng.choose(&[3u8, 7, 15]),
+        duty,
+        seed: rng.below(1 << 32),
+    }
+}
+
+/// Build the point's workload in the requested mode.
+fn build(p: &Point, mode: SimMode) -> TiledWorkload {
+    let mut cfg = match p.kind {
+        TopologyKind::Ring => NocConfig::ring(p.width),
+        k => NocConfig::fabric(k, p.width, p.height),
+    }
+    .with_sim_mode(mode)
+    .with_vcs(p.vcs);
+    if p.wide_only {
+        cfg = cfg.wide_only();
+    }
+    cfg.in_buf_depth = p.in_buf_depth;
+    let sys = NocSystem::new(cfg);
+    let tiles = sys.topo.num_tiles;
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: p.pattern,
+                num_txns: p.core_txns,
+                seed: p.seed ^ (0xC0 + i as u64),
+                duty: p.duty.map(|d| DutyCycle {
+                    // Stagger the window grid per tile so the bursts
+                    // decorrelate without killing the shared idle gaps.
+                    offset: d.offset + 3 * i as u64,
+                    ..d
+                }),
+                ..GenCfg::narrow_probe(NodeId(0), p.core_txns)
+            }),
+            dma: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                num_txns: p.dma_txns,
+                burst_len: p.dma_burst_len,
+                seed: p.seed ^ (0xDA00 + i as u64),
+                ..GenCfg::dma_burst(NodeId(0), p.dma_txns, false)
+            }),
+        })
+        .collect();
+    TiledWorkload::new(sys, profiles)
+}
+
+/// The headline sweep: 50 seeded random points, three-way digest
+/// equality on every one.
+#[test]
+fn randomized_three_way_differential_sweep() {
+    let mut rng = Rng::new(0x5EED_2026);
+    for i in 0..50 {
+        let p = draw(&mut rng);
+        assert_modes_equivalent(&format!("point {i}: {p:?}"), 2_000_000, |mode| {
+            build(&p, mode)
+        });
+    }
+}
+
+/// Duty-cycle regression: on a bursty workload (short full-rate windows
+/// separated by long silence) the event engine must fast-forward —
+/// executing a small fraction of the simulated cycles — while staying
+/// byte-identical to gated and dense.
+#[test]
+fn duty_cycled_workload_skips_and_stays_equivalent() {
+    let mk = |mode: SimMode| {
+        let sys = NocSystem::new(NocConfig::mesh(4, 4).with_sim_mode(mode));
+        let tiles = sys.topo.num_tiles;
+        let profiles: Vec<TileTraffic> = (0..tiles)
+            .map(|i| TileTraffic {
+                core: Some(GenCfg {
+                    pattern: Pattern::UniformTiles,
+                    num_txns: 24,
+                    seed: 0xD077 + i as u64,
+                    duty: Some(DutyCycle {
+                        period: 256,
+                        active: 8,
+                        offset: 4 * (i as u64 % 4),
+                    }),
+                    ..GenCfg::narrow_probe(NodeId(0), 24)
+                }),
+                dma: None,
+            })
+            .collect();
+        TiledWorkload::new(sys, profiles)
+    };
+    assert_modes_equivalent("duty-cycled/4x4", 2_000_000, mk);
+    // The equivalence above proves correctness; now prove the speed
+    // mechanism engaged at all: most cycles must be skipped, not stepped.
+    let mut w = mk(SimMode::Event);
+    assert!(w.run_to_completion(2_000_000));
+    let (stepped, now) = (w.sys.stepped_cycles, w.sys.now);
+    assert!(
+        stepped * 4 < now,
+        "duty workload must skip >75% of cycles: stepped {stepped} of {now}"
+    );
+}
+
+/// Anti-regression on the skip condition itself: while any generator is
+/// issue-eligible every cycle (full rate, no duty window, outstanding
+/// budget never saturated), its wake is always "next cycle" and the
+/// fast-forward must never fire. Both engines step the same 5 000
+/// cycles and agree on every counter mid-flight.
+#[test]
+fn full_rate_workload_never_skips() {
+    let mk = |mode: SimMode| {
+        let sys = NocSystem::new(NocConfig::mesh(3, 3).with_sim_mode(mode));
+        let tiles = sys.topo.num_tiles;
+        let profiles: Vec<TileTraffic> = (0..tiles)
+            .map(|i| TileTraffic {
+                core: Some(GenCfg {
+                    pattern: Pattern::UniformTiles,
+                    num_txns: u64::MAX,
+                    max_outstanding: 64,
+                    seed: 0xF00 + i as u64,
+                    ..GenCfg::narrow_probe(NodeId(0), 1)
+                }),
+                dma: None,
+            })
+            .collect();
+        TiledWorkload::new(sys, profiles)
+    };
+    let run = |mode: SimMode| {
+        let mut w = mk(mode);
+        for _ in 0..5_000 {
+            w.step();
+        }
+        (digest(&mut w), w.sys.skipped_cycles)
+    };
+    let (gated, gated_skipped) = run(SimMode::Gated);
+    let (event, event_skipped) = run(SimMode::Event);
+    assert_eq!(gated_skipped, 0);
+    assert_eq!(
+        event_skipped, 0,
+        "an always-eligible generator pins the wake to now + 1 — no jump is possible"
+    );
+    assert!(gated == event, "mid-flight digests must agree\n{gated}\n---\n{event}");
+}

@@ -109,7 +109,7 @@ COMMANDS:
                                options: --config <file.json>, --txns <n>,
                                --mesh <n>, --topology <mesh|torus|ring>,
                                --vcs <n>, --sim-mode <gated|dense|event>,
-                               --wide-only, --no-verify,
+                               --shards <n>, --wide-only, --no-verify,
                                --check-invariants
   verify                       statically verify a config before any cycle
                                runs: channel-dependency-graph deadlock
@@ -147,6 +147,11 @@ COMMANDS:
               (gated + calendar fast-forward over idle cycles). All three
               are cycle-accurate and produce identical results — see
               docs/performance.md.
+  --shards <n>: execution shards for the run loop (simulate; default 1 =
+              serial). The fabric is cut into n contiguous strips stepped
+              on n threads with deterministic cross-shard exchange —
+              statistics are byte-identical at any shard count; clamped
+              to the strip dimension (see docs/architecture.md).
   --no-verify: skip the static preflight verifier (simulate); configs the
               verifier rejects as deadlock-prone then build anyway.
   --check-invariants: enforce the gating "occupied => active" invariant

@@ -178,7 +178,16 @@ impl TiledWorkload {
 
     /// Run until all generators complete and the network drains, or
     /// `max_cycles` pass. Returns true on completion.
+    ///
+    /// With [`NocConfig::shards`](crate::noc::NocConfig::shards)
+    /// greater than 1, the run executes on the deterministic sharded
+    /// engine ([`crate::noc::sharded`]) — same statistics, byte for
+    /// byte, at any shard count. Single-stepping entry points
+    /// ([`Self::step`], [`Self::run_with_watchdog`]) always run serial.
     pub fn run_to_completion(&mut self, max_cycles: u64) -> bool {
+        if self.sys.cfg.shards > 1 {
+            return crate::noc::sharded::run_sharded(&mut self.sys, &mut self.tiles, max_cycles);
+        }
         for _ in 0..max_cycles {
             if self.done() && self.sys.is_idle() {
                 return true;

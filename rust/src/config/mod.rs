@@ -129,6 +129,13 @@ pub fn noc_config_from_value(j: &Json) -> crate::Result<NocConfig> {
     if let Some(c) = j.get("check_invariants").and_then(Json::as_bool) {
         cfg.check_invariants = c;
     }
+    // Execution shards (deterministic sharded engine). 1 = serial; the
+    // engine clamps to the fabric's strip dimension at run time.
+    match j.get("shards").map(|v| v.as_usize()) {
+        Some(Some(s)) if s >= 1 => cfg.shards = s,
+        Some(_) => bail!("shards must be an integer >= 1"),
+        None => {}
+    }
     if cfg.width == 0 || cfg.height == 0 {
         bail!("mesh dimensions must be >= 1");
     }
@@ -176,6 +183,7 @@ pub fn noc_config_to_json(cfg: &NocConfig) -> Json {
         ("vcs", Json::Num(cfg.vcs as f64)),
         ("verify", Json::Bool(cfg.verify)),
         ("check_invariants", Json::Bool(cfg.check_invariants)),
+        ("shards", Json::Num(cfg.shards as f64)),
         (
             "router",
             Json::obj(vec![
@@ -325,6 +333,20 @@ mod tests {
         let cfg = NocConfig::torus(3, 3).with_vcs(1);
         let back = noc_config_from_value(&noc_config_to_json(&cfg)).unwrap();
         assert_eq!(back.vcs, 1);
+    }
+
+    #[test]
+    fn shards_knob_parses_and_roundtrips() {
+        // Omitted => serial.
+        assert_eq!(noc_config_from_json("{}").unwrap().shards, 1);
+        assert_eq!(noc_config_from_json(r#"{"shards": 4}"#).unwrap().shards, 4);
+        // Zero and non-integer values are rejected.
+        assert!(noc_config_from_json(r#"{"shards": 0}"#).is_err());
+        assert!(noc_config_from_json(r#"{"shards": "four"}"#).is_err());
+        // Round-trips through serialization.
+        let cfg = NocConfig::mesh(4, 4).with_shards(4);
+        let back = noc_config_from_value(&noc_config_to_json(&cfg)).unwrap();
+        assert_eq!(back.shards, 4);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!                  wires|scaling|all> [--bidir] [--levels a,b,c] [--jobs n]
 //! repro simulate  [--config f.json] [--mesh n] [--txns n] [--wide-only]
 //!                 [--topology mesh|torus|ring] [--vcs n]
-//!                 [--sim-mode gated|dense|event]
+//!                 [--sim-mode gated|dense|event] [--shards n]
 //!                 [--no-verify] [--check-invariants]
 //! repro verify    [--config f.json] [--mesh n] [--topology mesh|torus|ring]
 //!                 [--vcs n] [--wide-only] [--sim-mode gated|dense|event]
@@ -260,6 +260,11 @@ fn build_cfg(args: &Args) -> anyhow::Result<NocConfig> {
             "event" => floonoc::sim::SimMode::Event,
             other => bail!("--sim-mode expects gated|dense|event, got '{other}'"),
         });
+    }
+    if args.opt("shards").is_some() {
+        let shards = args.opt_u64("shards", 1)? as usize;
+        anyhow::ensure!(shards >= 1, "--shards expects an integer >= 1");
+        cfg = cfg.with_shards(shards);
     }
     Ok(cfg)
 }

@@ -40,7 +40,7 @@ pub struct RobAllocator {
 impl RobAllocator {
     /// An allocator over `slots` response-beat slots.
     pub fn new(slots: u32) -> Self {
-        assert!(slots > 0);
+        assert!(slots > 0, "a ROB needs at least one slot");
         RobAllocator {
             slots,
             free: vec![(0, slots)],
@@ -52,9 +52,17 @@ impl RobAllocator {
     }
 
     /// Construct from a byte budget and per-beat granule (paper: 8 kB / 64 B
-    /// for the wide bus, 2 kB / 8 B for the narrow bus).
+    /// for the wide bus, 2 kB / 8 B for the narrow bus). A budget that is
+    /// not a granule multiple rounds **up** — the partial slot is bought,
+    /// never silently dropped (a sub-granule budget used to truncate to
+    /// zero slots and trip the bare capacity assert).
     pub fn from_bytes(bytes: u32, granule: u32) -> Self {
-        RobAllocator::new(bytes / granule)
+        assert!(
+            granule > 0 && bytes > 0,
+            "ROB byte budget and granule must be non-zero (bytes = {bytes}, granule = {granule})"
+        );
+        let slots = (bytes as u64 + granule as u64 - 1) / granule as u64;
+        RobAllocator::new(slots as u32)
     }
 
     /// Capacity in slots.
@@ -182,6 +190,7 @@ impl RobAllocator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::{prop_assert, prop_assert_eq};
 
     #[test]
     fn alloc_and_release_roundtrip() {
@@ -267,5 +276,78 @@ mod tests {
         rob.alloc(2).unwrap();
         assert_eq!(rob.peak_used(), 10);
         assert_eq!(rob.used_slots(), 2);
+    }
+
+    #[test]
+    fn from_bytes_rounds_up_partial_granules() {
+        // 100 B at 64 B/beat is 1.5625 granules: the partial slot is
+        // bought (2 slots), not truncated to 1.
+        assert_eq!(RobAllocator::from_bytes(100, 64).total_slots(), 2);
+        // A sub-granule budget still yields a usable 1-slot ROB instead
+        // of truncating to zero and panicking on the capacity assert.
+        assert_eq!(RobAllocator::from_bytes(8, 64).total_slots(), 1);
+        // Exact multiples are unchanged.
+        assert_eq!(RobAllocator::from_bytes(8 * 1024, 64).total_slots(), 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "bytes = 0, granule = 64")]
+    fn from_bytes_zero_budget_names_both_values() {
+        let _ = RobAllocator::from_bytes(0, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "bytes = 512, granule = 0")]
+    fn from_bytes_zero_granule_names_both_values() {
+        let _ = RobAllocator::from_bytes(512, 0);
+    }
+
+    /// Seeded random alloc/release sweep: drive the allocator through
+    /// long interleaved sequences of arbitrary-length allocations and
+    /// out-of-order releases, checking [`RobAllocator::check_invariants`]
+    /// (sorted/disjoint/non-adjacent free list, exact accounting) after
+    /// every mutation, plus first-fit determinism of `can_alloc`.
+    #[test]
+    fn random_alloc_release_keeps_invariants() {
+        crate::util::prop::check_default("rob-alloc-release", |rng| {
+            let slots = 1 + rng.below(96) as u32;
+            let mut rob = RobAllocator::new(slots);
+            let mut live: Vec<RobGrant> = Vec::new();
+            for _ in 0..128 {
+                if rng.chance(0.55) {
+                    let len = 1 + rng.below(16) as u32;
+                    let could = rob.can_alloc(len);
+                    match rob.alloc(len) {
+                        Some(g) => {
+                            prop_assert!(could, "alloc({len}) succeeded but can_alloc said no");
+                            prop_assert!(
+                                g.base + g.len <= slots,
+                                "grant {g:?} beyond capacity {slots}"
+                            );
+                            live.push(g);
+                        }
+                        None => {
+                            prop_assert!(!could, "can_alloc({len}) true but alloc refused");
+                        }
+                    }
+                } else if !live.is_empty() {
+                    let i = rng.below(live.len() as u64) as usize;
+                    rob.release(live.swap_remove(i));
+                }
+                if let Err(msg) = rob.check_invariants() {
+                    return Err(format!("slots {slots}: {msg}"));
+                }
+            }
+            let held: u32 = live.iter().map(|g| g.len).sum();
+            prop_assert_eq!(rob.used_slots(), held);
+            for g in live.drain(..) {
+                rob.release(g);
+            }
+            if let Err(msg) = rob.check_invariants() {
+                return Err(format!("after full drain: {msg}"));
+            }
+            prop_assert_eq!(rob.free_slots(), slots);
+            Ok(())
+        });
     }
 }

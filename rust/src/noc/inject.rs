@@ -57,57 +57,68 @@ impl Default for InjectState {
     }
 }
 
-fn offer(
-    nets: &mut [Network],
-    counters: &mut [NetCounters],
-    net: usize,
-    node_idx: usize,
-    flit: FlooFlit,
-) {
-    let lid = nets[net].inject[node_idx];
-    nets[net].links[lid].offer(flit);
-    // Commit-time wake edge (NI inject → local link): the gated step
-    // loop must visit this link next cycle or the flit would be
-    // stranded in a "clock-gated" inject register forever.
-    nets[net].wake_link(lid);
-    counters[net].injected += 1;
+/// One node's local inject ports, one per physical network.
+///
+/// The injection state machines below are written against this seam so
+/// they run unchanged under both engines: the serial engine's
+/// [`SerialPort`] offers straight into the network link arenas, while
+/// the sharded engine ([`crate::noc::sharded`]) substitutes a port over
+/// its shard-local link storage. Both must count the injection and wake
+/// the inject link in their engine's active set, exactly as
+/// [`SerialPort::offer`] does.
+pub trait LocalPort {
+    /// Whether this node's inject link into network `net` can accept a
+    /// flit this cycle.
+    fn can_offer(&self, net: usize) -> bool;
+    /// Offer `flit` on this node's inject link into network `net`,
+    /// waking the link and counting the injection.
+    fn offer(&mut self, net: usize, flit: FlooFlit);
 }
 
-fn can_offer(nets: &[Network], net: usize, node_idx: usize) -> bool {
-    let lid = nets[net].inject[node_idx];
-    nets[net].links[lid].can_offer()
+/// The serial engine's [`LocalPort`]: direct access to the per-network
+/// link arenas and injection counters of one node.
+pub struct SerialPort<'a> {
+    /// All physical networks of the system.
+    pub nets: &'a mut [Network],
+    /// Per-network injection/ejection counters.
+    pub counters: &'a mut [NetCounters],
+    /// The injecting node's index.
+    pub node_idx: usize,
+}
+
+impl LocalPort for SerialPort<'_> {
+    fn can_offer(&self, net: usize) -> bool {
+        let lid = self.nets[net].inject[self.node_idx];
+        self.nets[net].links[lid].can_offer()
+    }
+
+    fn offer(&mut self, net: usize, flit: FlooFlit) {
+        let lid = self.nets[net].inject[self.node_idx];
+        self.nets[net].links[lid].offer(flit);
+        // Commit-time wake edge (NI inject → local link): the gated step
+        // loop must visit this link next cycle or the flit would be
+        // stranded in a "clock-gated" inject register forever.
+        self.nets[net].wake_link(lid);
+        self.counters[net].injected += 1;
+    }
 }
 
 /// Schedule this node's injections for one cycle. The [`InjectPlan`] is
 /// the link mode resolved once at system construction, so this per-node
 /// per-cycle path carries no mode dispatch of its own.
-pub fn inject_node(
-    plan: InjectPlan,
-    node: &mut NodeNi,
-    nets: &mut [Network],
-    counters: &mut [NetCounters],
-    now: u64,
-) {
-    let node_idx = node.target.node.0 as usize;
-    inject_req_net(node, nets, counters, node_idx, now, plan.shared_w);
-    inject_rsp_net(node, nets, counters, node_idx, now, plan.merged_rsp);
+pub fn inject_node<P: LocalPort>(plan: InjectPlan, node: &mut NodeNi, port: &mut P, now: u64) {
+    inject_req_net(node, port, now, plan.shared_w);
+    inject_rsp_net(node, port, now, plan.merged_rsp);
     if plan.has_wide_net {
-        inject_wide_net(node, nets, counters, node_idx, now);
+        inject_wide_net(node, port, now);
     }
 }
 
 /// Request network: initiator AR/AW issue + W-beat streams.
 /// `shared_w`: wide W beats ride this network too (wide-only mode);
 /// otherwise they ride NET_WIDE.
-fn inject_req_net(
-    node: &mut NodeNi,
-    nets: &mut [Network],
-    counters: &mut [NetCounters],
-    node_idx: usize,
-    now: u64,
-    shared_w: bool,
-) {
-    if node.narrow.is_none() || !can_offer(nets, NET_REQ, node_idx) {
+fn inject_req_net<P: LocalPort>(node: &mut NodeNi, port: &mut P, now: u64, shared_w: bool) {
+    if node.narrow.is_none() || !port.can_offer(NET_REQ) {
         return;
     }
     match node.inj.locks[NET_REQ] {
@@ -117,7 +128,7 @@ fn inject_req_net(
                 if f.header.last {
                     node.inj.locks[NET_REQ] = None;
                 }
-                offer(nets, counters, NET_REQ, node_idx, f);
+                port.offer(NET_REQ, f);
             }
         }
         Some(Src::WideInitW) => {
@@ -127,7 +138,7 @@ fn inject_req_net(
                 if f.header.last {
                     node.inj.locks[NET_REQ] = None;
                 }
-                offer(nets, counters, NET_REQ, node_idx, f);
+                port.offer(NET_REQ, f);
             }
         }
         Some(_) => unreachable!("target sources never lock the request net"),
@@ -148,7 +159,7 @@ fn inject_req_net(
                         if w.streaming_w() {
                             node.inj.locks[w_net] = Some(Src::WideInitW);
                         }
-                        offer(nets, counters, NET_REQ, node_idx, f);
+                        port.offer(NET_REQ, f);
                         node.inj.rr_init = !node.inj.rr_init;
                         return;
                     }
@@ -159,7 +170,7 @@ fn inject_req_net(
                         if n.streaming_w() {
                             node.inj.locks[NET_REQ] = Some(Src::NarrowInitW);
                         }
-                        offer(nets, counters, NET_REQ, node_idx, f);
+                        port.offer(NET_REQ, f);
                         node.inj.rr_init = !node.inj.rr_init;
                         return;
                     }
@@ -172,15 +183,8 @@ fn inject_req_net(
 /// Response network. In narrow-wide mode it carries narrow R/B and wide B
 /// (`merged = false`: wide R goes to NET_WIDE instead). In wide-only mode
 /// (`merged = true`) it carries every response.
-fn inject_rsp_net(
-    node: &mut NodeNi,
-    nets: &mut [Network],
-    counters: &mut [NetCounters],
-    node_idx: usize,
-    now: u64,
-    merged: bool,
-) {
-    if !can_offer(nets, NET_RSP, node_idx) {
+fn inject_rsp_net<P: LocalPort>(node: &mut NodeNi, port: &mut P, now: u64, merged: bool) {
+    if !port.can_offer(NET_RSP) {
         return;
     }
     match node.inj.locks[NET_RSP] {
@@ -189,7 +193,7 @@ fn inject_rsp_net(
                 if f.header.last {
                     node.inj.locks[NET_RSP] = None;
                 }
-                offer(nets, counters, NET_RSP, node_idx, f);
+                port.offer(NET_RSP, f);
             }
         }
         Some(Src::TgtWideR) => {
@@ -198,7 +202,7 @@ fn inject_rsp_net(
                 if f.header.last {
                     node.inj.locks[NET_RSP] = None;
                 }
-                offer(nets, counters, NET_RSP, node_idx, f);
+                port.offer(NET_RSP, f);
             }
         }
         Some(_) => unreachable!("initiator sources never lock the response net"),
@@ -228,21 +232,15 @@ fn inject_rsp_net(
                     Src::TgtNarrow
                 });
             }
-            offer(nets, counters, NET_RSP, node_idx, f);
+            port.offer(NET_RSP, f);
         }
     }
 }
 
 /// Wide network (narrow-wide mode only): wide W streams from the initiator
 /// and wide R streams from the target share the local port.
-fn inject_wide_net(
-    node: &mut NodeNi,
-    nets: &mut [Network],
-    counters: &mut [NetCounters],
-    node_idx: usize,
-    now: u64,
-) {
-    if !can_offer(nets, NET_WIDE, node_idx) {
+fn inject_wide_net<P: LocalPort>(node: &mut NodeNi, port: &mut P, now: u64) {
+    if !port.can_offer(NET_WIDE) {
         return;
     }
     match node.inj.locks[NET_WIDE] {
@@ -255,7 +253,7 @@ fn inject_wide_net(
                 if f.header.last {
                     node.inj.locks[NET_WIDE] = None;
                 }
-                offer(nets, counters, NET_WIDE, node_idx, f);
+                port.offer(NET_WIDE, f);
             }
         }
         Some(Src::TgtWideR) => {
@@ -263,7 +261,7 @@ fn inject_wide_net(
                 if f.header.last {
                     node.inj.locks[NET_WIDE] = None;
                 }
-                offer(nets, counters, NET_WIDE, node_idx, f);
+                port.offer(NET_WIDE, f);
             }
         }
         Some(_) => unreachable!("narrow sources never touch the wide net"),
@@ -278,7 +276,7 @@ fn inject_wide_net(
                 if !f.header.last {
                     node.inj.locks[NET_WIDE] = Some(Src::TgtWideR);
                 }
-                offer(nets, counters, NET_WIDE, node_idx, f);
+                port.offer(NET_WIDE, f);
             }
         }
     }

@@ -21,5 +21,6 @@
 
 pub mod system;
 pub mod inject;
+pub mod sharded;
 
 pub use system::{InjectPlan, LinkMode, Network, NocConfig, NocSystem, NET_REQ, NET_RSP, NET_WIDE};

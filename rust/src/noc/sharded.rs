@@ -1,0 +1,1058 @@
+//! Deterministic sharded execution of a single simulation.
+//!
+//! One [`NocSystem`] is spatially partitioned into contiguous strips
+//! ([`ShardPlan`]); each shard owns the links, routers, NIs, meters and
+//! generators of its strip and steps them on its own thread. The engine
+//! is **deterministic by construction**: the per-cycle phase structure
+//! of the serial engine ([`NocSystem::step`]) is reproduced exactly,
+//! with two barriers per simulated cycle, so the run's statistics are
+//! byte-identical to the serial engine at any shard count.
+//!
+//! # Ownership
+//!
+//! Every link is owned by its **consumer** side: channel and inject
+//! links by the shard of their sink router, eject links by the shard of
+//! their host node. A link whose producer router lives in a different
+//! shard than its owner is a **boundary link** — with row-strip
+//! partitioning these are exactly the N/S channels crossing a strip
+//! border (plus wraparound channels on tori/rings).
+//!
+//! # The two races, and their two mechanisms
+//!
+//! Within one serial cycle, only two interactions cross a strip border:
+//!
+//! * **Forward (flits)**: a producer router offers a flit into a
+//!   boundary link during phase 2. The sharded producer instead pushes
+//!   the flit into the owner's **mailbox**; the owner applies all
+//!   mailbox offers — sorted by `(net, link, lane)` for determinism —
+//!   at the start of its next turn, before link delivery. The serial
+//!   engine would not have looked at that link again until the same
+//!   point, so the late application is unobservable.
+//! * **Backward (credits)**: the producer's switch allocation reads
+//!   `can_offer` of the boundary link. The owner publishes a per-lane
+//!   **credit mirror** (an [`AtomicU8`] bitmask) right after delivering
+//!   the link in phase 1; barrier A orders every publish before any
+//!   read. The mirror equals exactly what the serial producer would
+//!   have read at the same point in the cycle, and cannot go stale
+//!   mid-phase: a link has one producer, at most one offer per output
+//!   per cycle, and the owner's own pops only *increase* credit.
+//!
+//! # Cycle protocol
+//!
+//! ```text
+//! decision  — replicated on every shard from the published summaries:
+//!             completion, budget, dense-mode skip, event fast-forward
+//! drain     — apply mailbox offers into owned links (sorted)
+//! phase 1   — deliver owned links, publish boundary credit mirrors
+//! BARRIER A — mirrors visible before any router reads them
+//! phase 2   — step woken owned routers; boundary offers → mailboxes
+//! phase 3   — owned NIs terminate + inject, generators step,
+//!             per-shard calendar pruned, summary published
+//! BARRIER B — cycle sealed: summaries + mailboxes visible to all
+//! ```
+//!
+//! Global decisions (are we done? may we fast-forward, and to where?)
+//! are **replicated**, not centralized: each shard reads all published
+//! summaries and computes the same answer from the same inputs, so no
+//! coordinator thread exists and every shard takes the same branch
+//! every cycle — the barrier counts always agree. Event-mode
+//! fast-forward jumps only when *every* shard reports quiet, to the
+//! minimum wake over all per-shard calendars and generator horizons —
+//! exactly the serial jump target.
+//!
+//! The engine is driven through
+//! [`TiledWorkload::run_to_completion`](crate::cluster::TiledWorkload::run_to_completion)
+//! when [`NocConfig::shards`](super::NocConfig::shards) is greater
+//! than 1; single-stepping entry points (`step`, `run_with_watchdog`)
+//! always use the serial engine.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use crate::cluster::ComputeTile;
+use crate::flit::{BusKind, FlooFlit, MsgClass, Payload};
+use crate::ni::Initiator;
+use crate::router::{LinkPool, Router};
+use crate::sim::{Link, LinkId, SimMode};
+use crate::stats::BandwidthMeter;
+use crate::topology::partition::ShardPlan;
+use crate::topology::Topology;
+use crate::util::activeset::ActiveSet;
+use crate::util::calendar::Calendar;
+
+use super::inject::{self, LocalPort};
+use super::system::{InjectPlan, NetCounters, NocSystem, NodeNi};
+
+/// A flit offered into a boundary link, in transit between shards.
+struct BoundaryMsg {
+    net: usize,
+    lid: LinkId,
+    vc: usize,
+    flit: FlooFlit,
+}
+
+/// Immutable per-network lookup tables shared by every worker.
+struct NetTables {
+    /// Owning shard of each link (consumer side).
+    owner: Vec<usize>,
+    /// Links whose producer router lives in a different shard.
+    boundary: Vec<bool>,
+    /// Lane count of each link (for [`LinkPool::vcs`] on non-owned links).
+    vcs: Vec<u8>,
+    /// Consuming router of each link (`None` for eject links).
+    link_sink: Vec<Option<usize>>,
+    /// Per-node inject link.
+    inject: Vec<LinkId>,
+    /// Per-node eject link.
+    eject: Vec<LinkId>,
+    /// Links owned by each shard, ascending.
+    owned_links: Vec<Vec<LinkId>>,
+}
+
+/// Immutable run-wide tables shared by every worker.
+struct Tables {
+    plan: ShardPlan,
+    nets: Vec<NetTables>,
+    /// Routers owned by each shard, ascending (identical across nets).
+    owned_routers: Vec<Vec<usize>>,
+    /// Nodes owned by each shard, ascending.
+    owned_nodes: Vec<Vec<usize>>,
+    /// System counters at decompose time; global in-flight counts are
+    /// `base + Σ shard deltas`.
+    base: Vec<NetCounters>,
+    iplan: InjectPlan,
+    dense: bool,
+    event: bool,
+    check_invariants: bool,
+    num_nets: usize,
+}
+
+/// What one shard publishes at the end of every cycle; the replicated
+/// decision logic reads all of them.
+#[derive(Clone)]
+struct Summary {
+    /// Per-net flits injected by this shard since decompose.
+    injected: Vec<u64>,
+    /// Per-net flits ejected by this shard since decompose.
+    ejected: Vec<u64>,
+    /// Every owned NI is quiet (fast-forward precondition).
+    nodes_quiet: bool,
+    /// Every owned NI is idle (completion condition).
+    nodes_idle: bool,
+    /// Every owned generator has completed.
+    gens_done: bool,
+    /// Earliest scheduled memory retirement in this shard's calendar.
+    mem_wake: u64,
+    /// Generator wake horizon folded by this shard's last generator
+    /// pass (gen-time clock).
+    gen_wake: u64,
+}
+
+/// Cross-shard communication fabric for one run.
+struct Shared {
+    /// Per-net, per-link credit mirrors: bit `v` set ⇔ lane `v` of the
+    /// (boundary) link can accept a flit. Only boundary links are ever
+    /// published or read; barrier A orders publish before read, so
+    /// `Relaxed` suffices.
+    mirrors: Vec<Vec<AtomicU8>>,
+    /// Per-destination-shard boundary flit queues.
+    mailboxes: Vec<Mutex<Vec<BoundaryMsg>>>,
+    /// Per-shard end-of-cycle summaries.
+    summaries: Vec<Mutex<Summary>>,
+    barrier: Barrier,
+}
+
+/// One network's state within a shard: full-length sparse vectors
+/// (global indices preserved; `None` = owned by another shard).
+struct ShardNet {
+    links: Vec<Option<Link<FlooFlit>>>,
+    routers: Vec<Option<Router>>,
+    link_active: ActiveSet,
+    router_wake: ActiveSet,
+}
+
+/// All state owned by one shard.
+struct Shard {
+    id: usize,
+    now: u64,
+    stepped: u64,
+    skipped: u64,
+    /// Generator wake horizon folded by the most recent generator pass.
+    gen_fold: u64,
+    nets: Vec<ShardNet>,
+    nodes: Vec<Option<NodeNi>>,
+    tiles: Vec<Option<ComputeTile>>,
+    /// `[net][node]` ejection meters.
+    meters: Vec<Vec<Option<BandwidthMeter>>>,
+    /// Per-net injected/ejected deltas since decompose.
+    counters: Vec<NetCounters>,
+    calendar: Calendar,
+    /// Boundary offers staged during phase 2, flushed to mailboxes.
+    pending: Vec<BoundaryMsg>,
+    /// Per-destination staging buckets for the flush.
+    scratch: Vec<Vec<BoundaryMsg>>,
+}
+
+/// Per-lane credit bitmask of a link, as published in the mirror.
+fn offer_mask(link: &Link<FlooFlit>) -> u8 {
+    debug_assert!(link.vcs() <= 8, "credit mirror packs lanes into a u8");
+    let mut mask = 0u8;
+    for vc in 0..link.vcs() {
+        if link.can_offer_vc(vc) {
+            mask |= 1 << vc;
+        }
+    }
+    mask
+}
+
+/// The [`LinkPool`] a shard's routers step against: owned links are
+/// accessed directly; a non-owned (boundary) link answers credit checks
+/// from its mirror and turns offers into mailbox messages. Peeks and
+/// pops of non-owned links panic — a router's input links are always
+/// owned by its own shard.
+struct ShardLinks<'a> {
+    links: &'a mut [Option<Link<FlooFlit>>],
+    vcs: &'a [u8],
+    mirror: &'a [AtomicU8],
+    pending: &'a mut Vec<BoundaryMsg>,
+    net: usize,
+}
+
+impl LinkPool for ShardLinks<'_> {
+    fn vcs(&self, lid: LinkId) -> usize {
+        self.vcs[lid] as usize
+    }
+
+    fn peek_vc(&self, lid: LinkId, vc: usize) -> Option<&FlooFlit> {
+        self.links[lid]
+            .as_ref()
+            .expect("peek on non-owned link")
+            .peek_vc(vc)
+    }
+
+    fn can_offer_vc(&self, lid: LinkId, vc: usize) -> bool {
+        match self.links[lid].as_ref() {
+            Some(l) => l.can_offer_vc(vc),
+            None => self.mirror[lid].load(Ordering::Relaxed) & (1 << vc) != 0,
+        }
+    }
+
+    fn pop_vc(&mut self, lid: LinkId, vc: usize) -> Option<FlooFlit> {
+        self.links[lid]
+            .as_mut()
+            .expect("pop on non-owned link")
+            .pop_vc(vc)
+    }
+
+    fn offer_vc(&mut self, lid: LinkId, vc: usize, flit: FlooFlit) {
+        match self.links[lid].as_mut() {
+            Some(l) => l.offer_vc(vc, flit),
+            None => self.pending.push(BoundaryMsg {
+                net: self.net,
+                lid,
+                vc,
+                flit,
+            }),
+        }
+    }
+
+    fn buffered(&self, lid: LinkId) -> usize {
+        self.links[lid]
+            .as_ref()
+            .expect("buffered on non-owned link")
+            .buffered()
+    }
+}
+
+/// The sharded engine's [`LocalPort`]: offers into the shard-local link
+/// storage, waking the shard's active set and counting into the
+/// shard's delta counters — mirroring `SerialPort::offer` exactly.
+struct ShardPort<'a> {
+    nets: &'a mut [ShardNet],
+    counters: &'a mut [NetCounters],
+    tables: &'a Tables,
+    node_idx: usize,
+}
+
+impl LocalPort for ShardPort<'_> {
+    fn can_offer(&self, net: usize) -> bool {
+        let lid = self.tables.nets[net].inject[self.node_idx];
+        self.nets[net].links[lid]
+            .as_ref()
+            .expect("inject link not owned by node's shard")
+            .can_offer()
+    }
+
+    fn offer(&mut self, net: usize, flit: FlooFlit) {
+        let lid = self.tables.nets[net].inject[self.node_idx];
+        let snet = &mut self.nets[net];
+        snet.links[lid]
+            .as_mut()
+            .expect("inject link not owned by node's shard")
+            .offer(flit);
+        snet.link_active.insert(lid);
+        self.counters[net].injected += 1;
+    }
+}
+
+/// Apply last cycle's boundary offers into owned links, in a canonical
+/// `(net, link, lane)` order. At most one offer per lane per cycle can
+/// exist, so the sort fixes only presentation order; semantically the
+/// offers commute.
+fn drain_mailbox(shard: &mut Shard, shared: &Shared) {
+    let mut msgs = std::mem::take(&mut *shared.mailboxes[shard.id].lock().expect("mailbox lock"));
+    if msgs.is_empty() {
+        return;
+    }
+    msgs.sort_by_key(|m| (m.net, m.lid, m.vc));
+    for m in msgs {
+        let snet = &mut shard.nets[m.net];
+        snet.links[m.lid]
+            .as_mut()
+            .expect("boundary flit routed to non-owned link")
+            .offer_vc(m.vc, m.flit);
+        snet.link_active.insert(m.lid);
+    }
+}
+
+/// Phase 1, gated: sweep the shard's active set, delivering owned
+/// links, waking their sink routers and publishing boundary credit
+/// mirrors. The serial `Network::step_gated` delivery sweep, restricted
+/// to owned links.
+fn deliver_gated(snet: &mut ShardNet, tn: &NetTables, mirror: &[AtomicU8], me: usize, check: bool) {
+    if check {
+        for &lid in &tn.owned_links[me] {
+            let l = snet.links[lid].as_ref().expect("owned link missing");
+            assert!(
+                l.is_quiescent() || snet.link_active.contains(lid),
+                "occupied link {lid} missing from the active set"
+            );
+        }
+    }
+    let ShardNet {
+        links,
+        link_active,
+        router_wake,
+        ..
+    } = snet;
+    router_wake.clear();
+    for wi in 0..link_active.num_words() {
+        let mut w = link_active.word(wi);
+        while w != 0 {
+            let lid = (wi << 6) + w.trailing_zeros() as usize;
+            w &= w - 1;
+            let link = links[lid].as_mut().expect("active bit on non-owned link");
+            let s = link.deliver();
+            if tn.boundary[lid] {
+                mirror[lid].store(offer_mask(link), Ordering::Relaxed);
+            }
+            if s.consumer_ready {
+                if let Some(r) = tn.link_sink[lid] {
+                    router_wake.insert(r);
+                }
+            }
+            if !s.still_active {
+                link_active.remove(lid);
+            }
+        }
+    }
+}
+
+/// Phase 1, dense: deliver every owned link in ascending order,
+/// publishing boundary mirrors. The serial `Network::step_dense`
+/// delivery sweep, restricted to owned links.
+fn deliver_dense(snet: &mut ShardNet, tn: &NetTables, mirror: &[AtomicU8], me: usize) {
+    for &lid in &tn.owned_links[me] {
+        let link = snet.links[lid].as_mut().expect("owned link missing");
+        link.deliver();
+        if tn.boundary[lid] {
+            mirror[lid].store(offer_mask(link), Ordering::Relaxed);
+        }
+    }
+}
+
+/// Phase 2, gated: step exactly the owned routers woken by phase 1.
+fn routers_gated(
+    snet: &mut ShardNet,
+    tn: &NetTables,
+    owned_routers: &[usize],
+    mirror: &[AtomicU8],
+    pending: &mut Vec<BoundaryMsg>,
+    net: usize,
+    check: bool,
+) {
+    let ShardNet {
+        links,
+        routers,
+        link_active,
+        router_wake,
+    } = snet;
+    if check {
+        for &r in owned_routers {
+            let router = routers[r].as_ref().expect("owned router missing");
+            // Router::is_quiescent, inlined over owned storage (a
+            // router's input links are always owned by its own shard).
+            let quiescent = router.in_links.iter().flatten().all(|&lid| {
+                links[lid]
+                    .as_ref()
+                    .expect("router input link not owned")
+                    .buffered()
+                    == 0
+            });
+            assert!(
+                quiescent || router_wake.contains(r),
+                "router {r} has buffered input but was not woken"
+            );
+        }
+    }
+    for r in router_wake.iter() {
+        let mut router = routers[r].take().expect("woken router not owned");
+        let act = {
+            let mut view = ShardLinks {
+                links: links.as_mut_slice(),
+                vcs: &tn.vcs,
+                mirror,
+                pending: &mut *pending,
+                net,
+            };
+            router.step(&mut view)
+        };
+        debug_assert!(act.any_input, "woken router {r} saw no input");
+        let mut m = act.woke_outputs;
+        while m != 0 {
+            let o = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let lid = router.out_links[o].expect("commit woke an unconnected output port");
+            // Non-owned outputs were staged for the owner's mailbox;
+            // the owner wakes the link when it drains the flit.
+            if links[lid].is_some() {
+                link_active.insert(lid);
+            }
+        }
+        routers[r] = Some(router);
+    }
+}
+
+/// Phase 2, dense: step every owned router in ascending order.
+fn routers_dense(
+    snet: &mut ShardNet,
+    tn: &NetTables,
+    owned_routers: &[usize],
+    mirror: &[AtomicU8],
+    pending: &mut Vec<BoundaryMsg>,
+    net: usize,
+) {
+    let ShardNet { links, routers, .. } = snet;
+    for &r in owned_routers {
+        let mut router = routers[r].take().expect("owned router missing");
+        {
+            let mut view = ShardLinks {
+                links: links.as_mut_slice(),
+                vcs: &tn.vcs,
+                mirror,
+                pending: &mut *pending,
+                net,
+            };
+            router.step(&mut view);
+        }
+        routers[r] = Some(router);
+    }
+}
+
+/// Route phase 2's staged boundary offers into their owners' mailboxes
+/// (one lock per destination shard with traffic).
+fn flush_pending(shard: &mut Shard, shared: &Shared, t: &Tables) {
+    if shard.pending.is_empty() {
+        return;
+    }
+    for m in shard.pending.drain(..) {
+        let dst = t.nets[m.net].owner[m.lid];
+        shard.scratch[dst].push(m);
+    }
+    for (dst, bucket) in shard.scratch.iter_mut().enumerate() {
+        if !bucket.is_empty() {
+            shared.mailboxes[dst].lock().expect("mailbox lock").append(bucket);
+        }
+    }
+}
+
+/// `NocSystem::eject_node`, over shard-local storage. The serial
+/// engine skips a whole network when its conservation counter reads
+/// zero; peeking the eject link directly is equivalent (an empty
+/// network has nothing buffered anywhere), so no global counter is
+/// needed here.
+fn eject_node(shard: &mut Shard, t: &Tables, idx: usize, now: u64) {
+    for n in 0..t.num_nets {
+        let lid = t.nets[n].eject[idx];
+        let consumed = {
+            let Some(flit) = shard.nets[n].links[lid]
+                .as_ref()
+                .expect("eject link not owned by node's shard")
+                .peek()
+            else {
+                continue;
+            };
+            let node = shard.nodes[idx].as_mut().expect("owned node missing");
+            match flit.payload.class() {
+                MsgClass::Request => node.target.handle_request(flit, now),
+                MsgClass::Response => {
+                    let init = match flit.payload.bus() {
+                        BusKind::Narrow => node.narrow.as_mut(),
+                        BusKind::Wide => node.wide.as_mut(),
+                    }
+                    .expect("response delivered to node without initiator");
+                    init.handle_response(flit)
+                }
+            }
+        };
+        if consumed {
+            let f = shard.nets[n].links[lid].as_mut().unwrap().pop().unwrap();
+            shard.counters[n].ejected += 1;
+            let wide_bits = match f.payload {
+                Payload::WideR(_) | Payload::WideW { .. } => 512,
+                _ => 0,
+            };
+            shard.meters[n][idx]
+                .as_mut()
+                .expect("eject meter missing")
+                .observe(now, wide_bits);
+        }
+    }
+}
+
+/// Phase 3 over owned nodes, ascending: terminate, pump writes,
+/// register memory retirements, inject, drain — byte-for-byte the
+/// serial phase 3 body.
+fn phase_local(shard: &mut Shard, t: &Tables, now: u64) {
+    for &idx in &t.owned_nodes[shard.id] {
+        eject_node(shard, t, idx, now);
+        {
+            let node = shard.nodes[idx].as_mut().expect("owned node missing");
+            node.target.pump_writes(now);
+            if t.event {
+                if let Some(ts) = node.target.take_scheduled() {
+                    shard.calendar.schedule(ts);
+                }
+            }
+        }
+        {
+            let (nets, counters, nodes) =
+                (&mut shard.nets, &mut shard.counters, &mut shard.nodes);
+            let mut port = ShardPort {
+                nets,
+                counters,
+                tables: t,
+                node_idx: idx,
+            };
+            inject::inject_node(
+                t.iplan,
+                nodes[idx].as_mut().expect("owned node missing"),
+                &mut port,
+                now,
+            );
+        }
+        let node = shard.nodes[idx].as_mut().expect("owned node missing");
+        if let Some(n) = node.narrow.as_mut() {
+            n.drain_cycle();
+        }
+        if let Some(w) = node.wide.as_mut() {
+            w.drain_cycle();
+        }
+    }
+}
+
+/// The harness-driven generator pass (`ComputeTile::step` /
+/// `NocSystem::step_generator`), over owned tiles at the
+/// post-increment clock, folding the shard's generator wake horizon.
+fn gen_pass(shard: &mut Shard, t: &Tables, topo: &Topology) {
+    shard.gen_fold = u64::MAX;
+    let now = shard.now;
+    for &idx in &t.owned_nodes[shard.id] {
+        let Some(tile) = shard.tiles[idx].as_mut() else {
+            continue;
+        };
+        let node = shard.nodes[idx].as_mut().expect("owned node missing");
+        let mut fold = u64::MAX;
+        for g in [tile.core_gen.as_mut(), tile.dma_gen.as_mut()]
+            .into_iter()
+            .flatten()
+        {
+            let init = match g.cfg.bus {
+                BusKind::Narrow => node.narrow.as_mut(),
+                BusKind::Wide => node.wide.as_mut(),
+            }
+            .expect("generator attached to node without initiator");
+            g.step(now, init, topo);
+            if t.event {
+                fold = fold.min(g.next_wake(now));
+            }
+        }
+        shard.gen_fold = shard.gen_fold.min(fold);
+    }
+}
+
+/// This shard's end-of-cycle summary: delta counters, the three
+/// per-node conjunctions the global decisions need, and the two wake
+/// horizons. Evaluated after the generator pass with `now` already
+/// incremented — the clock the serial decision points read at.
+fn summarize(shard: &Shard, t: &Tables) -> Summary {
+    let now = shard.now;
+    let mut quiet = true;
+    let mut idle = true;
+    let mut done = true;
+    for &idx in &t.owned_nodes[shard.id] {
+        let node = shard.nodes[idx].as_ref().expect("owned node missing");
+        quiet = quiet
+            && node.inj.quiet()
+            && node.target.eject_quiet(now)
+            && node
+                .narrow
+                .as_ref()
+                .map(Initiator::inject_quiet)
+                .unwrap_or(true)
+            && node
+                .wide
+                .as_ref()
+                .map(Initiator::inject_quiet)
+                .unwrap_or(true);
+        idle = idle
+            && node.target.is_idle()
+            && node.narrow.as_ref().map(Initiator::is_idle).unwrap_or(true)
+            && node.wide.as_ref().map(Initiator::is_idle).unwrap_or(true);
+        if let Some(tile) = shard.tiles[idx].as_ref() {
+            done = done && tile.done();
+        }
+    }
+    Summary {
+        injected: shard.counters.iter().map(|c| c.injected).collect(),
+        ejected: shard.counters.iter().map(|c| c.ejected).collect(),
+        nodes_quiet: quiet,
+        nodes_idle: idle,
+        gens_done: done,
+        mem_wake: shard.calendar.earliest().unwrap_or(u64::MAX),
+        gen_wake: shard.gen_fold,
+    }
+}
+
+/// One shard's run loop. Every shard computes every global decision
+/// from the same published summaries, so all shards take the same
+/// branch each iteration and the barrier counts always agree.
+fn worker(shard: &mut Shard, shared: &Shared, t: &Tables, topo: &Topology, max_cycles: u64) -> bool {
+    let mut cycles_left = max_cycles;
+    loop {
+        // ---- replicated decision ----
+        let sums: Vec<Summary> = shared
+            .summaries
+            .iter()
+            .map(|m| m.lock().expect("summary lock").clone())
+            .collect();
+        let mut in_flight = vec![0u64; t.num_nets];
+        for (n, f) in in_flight.iter_mut().enumerate() {
+            let injected: u64 = t.base[n].injected + sums.iter().map(|s| s.injected[n]).sum::<u64>();
+            let ejected: u64 = t.base[n].ejected + sums.iter().map(|s| s.ejected[n]).sum::<u64>();
+            *f = injected - ejected;
+        }
+        let links_idle = in_flight.iter().all(|&f| f == 0);
+        let complete = links_idle
+            && sums.iter().all(|s| s.gens_done)
+            && sums.iter().all(|s| s.nodes_idle);
+        if complete {
+            return true;
+        }
+        if cycles_left == 0 {
+            return false;
+        }
+        cycles_left -= 1;
+        // ---- event-mode fast-forward (same jump on every shard) ----
+        if t.event && links_idle && sums.iter().all(|s| s.nodes_quiet) {
+            let mem_wake = sums.iter().map(|s| s.mem_wake).min().unwrap_or(u64::MAX);
+            let gen_wake = match sums.iter().map(|s| s.gen_wake).min().unwrap_or(u64::MAX) {
+                u64::MAX => u64::MAX,
+                w => w.saturating_sub(1), // gen-time → phase-time
+            };
+            let target = mem_wake.min(gen_wake);
+            if target != u64::MAX && target > shard.now {
+                shard.skipped += target - shard.now;
+                shard.now = target;
+            }
+        }
+        shard.stepped += 1;
+        let now = shard.now;
+        // ---- boundary drain + phase 1 ----
+        drain_mailbox(shard, shared);
+        for n in 0..t.num_nets {
+            if t.dense && in_flight[n] == 0 {
+                continue;
+            }
+            let tn = &t.nets[n];
+            let mirror = &shared.mirrors[n];
+            if t.dense {
+                deliver_dense(&mut shard.nets[n], tn, mirror, shard.id);
+            } else {
+                deliver_gated(&mut shard.nets[n], tn, mirror, shard.id, t.check_invariants);
+            }
+        }
+        shared.barrier.wait(); // A: mirrors published before any router reads
+        // ---- phase 2 ----
+        for n in 0..t.num_nets {
+            if t.dense && in_flight[n] == 0 {
+                continue;
+            }
+            let tn = &t.nets[n];
+            let mirror = &shared.mirrors[n];
+            let owned_routers = &t.owned_routers[shard.id];
+            if t.dense {
+                routers_dense(&mut shard.nets[n], tn, owned_routers, mirror, &mut shard.pending, n);
+            } else {
+                routers_gated(
+                    &mut shard.nets[n],
+                    tn,
+                    owned_routers,
+                    mirror,
+                    &mut shard.pending,
+                    n,
+                    t.check_invariants,
+                );
+            }
+        }
+        flush_pending(shard, shared, t);
+        // ---- phase 3 + bookkeeping ----
+        phase_local(shard, t, now);
+        shard.now = now + 1;
+        gen_pass(shard, t, topo);
+        // Unconditional early prune: the serial engine prunes lazily at
+        // quiet decision points, but every earliest() it ever consults
+        // happens after a prune through the same (or later) clock, so
+        // removing stale entries each cycle can never change a
+        // consulted value.
+        shard.calendar.prune_through(shard.now);
+        *shared.summaries[shard.id].lock().expect("summary lock") = summarize(shard, t);
+        shared.barrier.wait(); // B: cycle sealed
+    }
+}
+
+/// Run `sys` + `tiles` to completion (or `max_cycles`) on
+/// `sys.cfg.shards` threads, byte-identical to
+/// [`TiledWorkload::run_to_completion`](crate::cluster::TiledWorkload::run_to_completion)
+/// at `shards = 1`. Returns `true` when every generator completed and
+/// the system drained within the budget.
+///
+/// The system is decomposed into per-shard state, stepped under
+/// [`std::thread::scope`] (the first shard runs on the calling
+/// thread), and recomposed on exit — callers see a plain `&mut`
+/// borrow, no `Arc`, no lifetime leakage. If the partition degenerates
+/// to a single strip (fabric too small to split), the serial loop runs
+/// instead.
+pub fn run_sharded(sys: &mut NocSystem, tiles: &mut Vec<ComputeTile>, max_cycles: u64) -> bool {
+    let plan = ShardPlan::new(&sys.topo, sys.cfg.shards);
+    if plan.shards <= 1 {
+        for _ in 0..max_cycles {
+            if tiles.iter().all(ComputeTile::done) && sys.is_idle() {
+                return true;
+            }
+            sys.step();
+            for tile in tiles.iter_mut() {
+                tile.step(sys);
+            }
+        }
+        return tiles.iter().all(ComputeTile::done) && sys.is_idle();
+    }
+    let shards = plan.shards;
+    let num_nets = sys.nets.len();
+    let num_nodes = sys.nodes.len();
+    let num_routers = sys.nets[0].routers.len();
+
+    // ---- immutable tables ----
+    let mut nets_t = Vec::with_capacity(num_nets);
+    for net in &sys.nets {
+        let nl = net.links.len();
+        let mut owner = vec![usize::MAX; nl];
+        for (lid, sink) in net.link_sink.iter().enumerate() {
+            if let Some(r) = sink {
+                owner[lid] = plan.router_shard[*r];
+            }
+        }
+        for (idx, &lid) in net.eject.iter().enumerate() {
+            owner[lid] = plan.node_shard[idx];
+        }
+        let mut producer = vec![usize::MAX; nl];
+        for (r, router) in net.routers.iter().enumerate() {
+            for &lid in router.out_links.iter().flatten() {
+                producer[lid] = plan.router_shard[r];
+            }
+        }
+        for (idx, &lid) in net.inject.iter().enumerate() {
+            producer[lid] = plan.node_shard[idx];
+        }
+        let boundary: Vec<bool> = (0..nl)
+            .map(|l| {
+                debug_assert!(
+                    owner[l] != usize::MAX && producer[l] != usize::MAX,
+                    "link {l} has no owner or producer"
+                );
+                producer[l] != owner[l]
+            })
+            .collect();
+        let owned_links: Vec<Vec<LinkId>> = (0..shards)
+            .map(|s| (0..nl).filter(|&l| owner[l] == s).collect())
+            .collect();
+        nets_t.push(NetTables {
+            owner,
+            boundary,
+            vcs: net.links.iter().map(|l| l.vcs() as u8).collect(),
+            link_sink: net.link_sink.clone(),
+            inject: net.inject.clone(),
+            eject: net.eject.clone(),
+            owned_links,
+        });
+    }
+    let tables = Tables {
+        nets: nets_t,
+        owned_routers: (0..shards).map(|s| plan.routers_of(s)).collect(),
+        owned_nodes: (0..shards).map(|s| plan.nodes_of(s)).collect(),
+        base: sys.counters.clone(),
+        iplan: sys.plan,
+        dense: sys.cfg.sim_mode == SimMode::Dense,
+        event: sys.cfg.sim_mode == SimMode::Event,
+        check_invariants: cfg!(debug_assertions) || sys.cfg.check_invariants,
+        num_nets,
+        plan,
+    };
+    let plan = &tables.plan;
+
+    // ---- decompose ----
+    sys.calendar.prune_through(sys.now);
+    let mut shard_states: Vec<Shard> = (0..shards)
+        .map(|s| Shard {
+            id: s,
+            now: sys.now,
+            stepped: 0,
+            skipped: 0,
+            gen_fold: if s == 0 { sys.gen_wake_min } else { u64::MAX },
+            nets: (0..num_nets)
+                .map(|n| ShardNet {
+                    links: (0..sys.nets[n].links.len()).map(|_| None).collect(),
+                    routers: (0..num_routers).map(|_| None).collect(),
+                    link_active: ActiveSet::new(sys.nets[n].links.len()),
+                    router_wake: ActiveSet::new(num_routers),
+                })
+                .collect(),
+            nodes: (0..num_nodes).map(|_| None).collect(),
+            tiles: (0..num_nodes).map(|_| None).collect(),
+            meters: (0..num_nets)
+                .map(|_| (0..num_nodes).map(|_| None).collect())
+                .collect(),
+            counters: vec![NetCounters::default(); num_nets],
+            calendar: Calendar::new(),
+            pending: Vec::new(),
+            scratch: (0..shards).map(|_| Vec::new()).collect(),
+        })
+        .collect();
+    shard_states[0].calendar = std::mem::take(&mut sys.calendar);
+    for n in 0..num_nets {
+        for (lid, link) in std::mem::take(&mut sys.nets[n].links).into_iter().enumerate() {
+            shard_states[tables.nets[n].owner[lid]].nets[n].links[lid] = Some(link);
+        }
+        for (r, router) in std::mem::take(&mut sys.nets[n].routers).into_iter().enumerate() {
+            shard_states[plan.router_shard[r]].nets[n].routers[r] = Some(router);
+        }
+        let active = std::mem::replace(&mut sys.nets[n].link_active, ActiveSet::new(0));
+        for lid in active.iter() {
+            shard_states[tables.nets[n].owner[lid]].nets[n].link_active.insert(lid);
+        }
+    }
+    for (idx, node) in std::mem::take(&mut sys.nodes).into_iter().enumerate() {
+        shard_states[plan.node_shard[idx]].nodes[idx] = Some(node);
+    }
+    for (n, meters) in std::mem::take(&mut sys.eject_meters).into_iter().enumerate() {
+        for (idx, meter) in meters.into_iter().enumerate() {
+            shard_states[plan.node_shard[idx]].meters[n][idx] = Some(meter);
+        }
+    }
+    for tile in std::mem::take(tiles) {
+        let idx = tile.node.0 as usize;
+        shard_states[plan.node_shard[idx]].tiles[idx] = Some(tile);
+    }
+
+    // ---- shared fabric (mirrors seeded from current link state) ----
+    let mirrors: Vec<Vec<AtomicU8>> = (0..num_nets)
+        .map(|n| {
+            let tn = &tables.nets[n];
+            (0..tn.owner.len())
+                .map(|lid| {
+                    let mask = if tn.boundary[lid] {
+                        offer_mask(
+                            shard_states[tn.owner[lid]].nets[n].links[lid]
+                                .as_ref()
+                                .expect("boundary link missing at decompose"),
+                        )
+                    } else {
+                        0
+                    };
+                    AtomicU8::new(mask)
+                })
+                .collect()
+        })
+        .collect();
+    let shared = Shared {
+        mirrors,
+        mailboxes: (0..shards).map(|_| Mutex::new(Vec::new())).collect(),
+        summaries: shard_states
+            .iter()
+            .map(|sh| Mutex::new(summarize(sh, &tables)))
+            .collect(),
+        barrier: Barrier::new(shards),
+    };
+
+    // ---- run ----
+    let topo = &sys.topo;
+    let completed = std::thread::scope(|scope| {
+        let shared = &shared;
+        let tables = &tables;
+        let mut rest = shard_states.iter_mut();
+        let first = rest.next().expect("at least one shard");
+        let handles: Vec<_> = rest
+            .map(|sh| scope.spawn(move || worker(sh, shared, tables, topo, max_cycles)))
+            .collect();
+        let result = worker(first, shared, tables, topo, max_cycles);
+        for h in handles {
+            let r = h.join().expect("shard worker panicked");
+            debug_assert_eq!(r, result, "shard workers disagree on the outcome");
+        }
+        result
+    });
+
+    // ---- recompose ----
+    for n in 0..num_nets {
+        let nl = tables.nets[n].owner.len();
+        let mut links = Vec::with_capacity(nl);
+        for lid in 0..nl {
+            let s = tables.nets[n].owner[lid];
+            links.push(
+                shard_states[s].nets[n].links[lid]
+                    .take()
+                    .expect("link lost in recompose"),
+            );
+        }
+        // Rebuild the active set from occupancy. This is a (possibly
+        // proper) subset of what a serial run would hold — serial can
+        // keep a bit set on a link drained by an eject pop until the
+        // next sweep visits it — but an empty link's delivery is a
+        // statistics-free no-op, so dropping such bits is unobservable.
+        let mut act = ActiveSet::new(nl);
+        for (lid, link) in links.iter().enumerate() {
+            if !link.is_quiescent() {
+                act.insert(lid);
+            }
+        }
+        sys.nets[n].links = links;
+        sys.nets[n].link_active = act;
+        let mut routers = Vec::with_capacity(num_routers);
+        for r in 0..num_routers {
+            routers.push(
+                shard_states[plan.router_shard[r]].nets[n].routers[r]
+                    .take()
+                    .expect("router lost in recompose"),
+            );
+        }
+        sys.nets[n].routers = routers;
+        for sh in &shard_states {
+            sys.counters[n].injected += sh.counters[n].injected;
+            sys.counters[n].ejected += sh.counters[n].ejected;
+        }
+    }
+    sys.nodes = (0..num_nodes)
+        .map(|idx| {
+            shard_states[plan.node_shard[idx]].nodes[idx]
+                .take()
+                .expect("node lost in recompose")
+        })
+        .collect();
+    sys.eject_meters = (0..num_nets)
+        .map(|n| {
+            (0..num_nodes)
+                .map(|idx| {
+                    shard_states[plan.node_shard[idx]].meters[n][idx]
+                        .take()
+                        .expect("meter lost in recompose")
+                })
+                .collect()
+        })
+        .collect();
+    *tiles = (0..num_nodes)
+        .filter_map(|idx| shard_states[plan.node_shard[idx]].tiles[idx].take())
+        .collect();
+    for sh in &mut shard_states {
+        let cal = std::mem::take(&mut sh.calendar);
+        sys.calendar.merge_from(cal);
+    }
+    sys.now = shard_states[0].now;
+    sys.stepped_cycles += shard_states[0].stepped;
+    sys.skipped_cycles += shard_states[0].skipped;
+    if tables.event && shard_states[0].stepped > 0 {
+        sys.gen_wake_min = shard_states
+            .iter()
+            .map(|sh| sh.gen_fold)
+            .min()
+            .unwrap_or(u64::MAX);
+    }
+    completed
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cluster::{TileTraffic, TiledWorkload};
+    use crate::flit::NodeId;
+    use crate::noc::{NocConfig, NocSystem};
+
+    fn workload(shards: usize) -> TiledWorkload {
+        let sys = NocSystem::new(NocConfig::mesh(4, 4).with_shards(shards));
+        let profiles = (0..16)
+            .map(|i| {
+                if i % 3 == 0 {
+                    TileTraffic::single_dma_1kib(NodeId(((i + 5) % 16) as u16))
+                } else {
+                    TileTraffic::idle()
+                }
+            })
+            .collect();
+        TiledWorkload::new(sys, profiles)
+    }
+
+    #[test]
+    fn sharded_run_matches_serial_counters_and_clock() {
+        let mut serial = workload(1);
+        assert!(serial.run_to_completion(100_000));
+        for shards in [2, 4] {
+            let mut sharded = workload(shards);
+            assert!(sharded.run_to_completion(100_000), "{shards} shards stuck");
+            assert_eq!(sharded.sys.now, serial.sys.now, "{shards} shards: clock diverged");
+            for n in 0..serial.sys.nets.len() {
+                assert_eq!(
+                    sharded.sys.counters[n].injected, serial.sys.counters[n].injected,
+                    "{shards} shards: net {n} injected diverged"
+                );
+                assert_eq!(
+                    sharded.sys.counters[n].ejected, serial.sys.counters[n].ejected,
+                    "{shards} shards: net {n} ejected diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn clamped_shard_request_still_completes() {
+        // A 2×1 mesh holds at most two column strips; shards = 8 clamps
+        // to 2 and the run must still complete and agree with serial.
+        let mk = |shards| {
+            let sys = NocSystem::new(NocConfig::mesh(2, 1).with_shards(shards));
+            let profiles = vec![TileTraffic::single_dma_1kib(NodeId(1)), TileTraffic::idle()];
+            TiledWorkload::new(sys, profiles)
+        };
+        let mut serial = mk(1);
+        let mut sharded = mk(8);
+        assert!(serial.run_to_completion(10_000));
+        assert!(sharded.run_to_completion(10_000));
+        assert_eq!(sharded.sys.now, serial.sys.now);
+    }
+}

@@ -147,6 +147,18 @@ pub struct NocConfig {
     /// gated warm-up epoch). Debug builds always scan; the flag only
     /// costs anything in release mode.
     pub check_invariants: bool,
+    /// Worker threads for batch runs (JSON `"shards"`, CLI `--shards`).
+    /// `1` (the default) is the unchanged serial engine. Above 1,
+    /// `TiledWorkload::run_to_completion` partitions the fabric into
+    /// contiguous spatial strips ([`crate::topology::partition`]) and
+    /// steps them concurrently under a phased cycle barrier
+    /// ([`crate::noc::sharded`]). Deterministic: digests are
+    /// byte-identical to the serial engine at any shard count (the
+    /// request is clamped to the fabric's strip dimension). Per-cycle
+    /// stepping ([`NocSystem::step`], `TiledWorkload::step`,
+    /// `run_with_watchdog`) always runs serially regardless of this
+    /// knob.
+    pub shards: usize,
     /// Tile SPM target timing.
     pub spm: TargetCfg,
     /// Memory-controller target timing.
@@ -169,6 +181,7 @@ impl Default for NocConfig {
             wide_init: InitiatorCfg::wide_default(),
             verify: true,
             check_invariants: false,
+            shards: 1,
             spm: TargetCfg::spm_default(),
             mem_ctrl: TargetCfg::mem_ctrl_default(),
         }
@@ -302,6 +315,15 @@ impl NocConfig {
         self.check_invariants = true;
         self
     }
+
+    /// Set the worker-thread count for batch runs (see
+    /// [`NocConfig::shards`]). Panics on 0 — ask for 1 to force the
+    /// serial engine.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        assert!(shards >= 1, "shards must be >= 1, got {shards}");
+        self.shards = shards;
+        self
+    }
 }
 
 /// One physical network: one router per tile, the fabric's channels
@@ -320,17 +342,17 @@ pub struct Network {
     /// is the node's NI). This is the static wake-edge table of the
     /// gated step loop: when a link's deliver leaves its input buffer
     /// non-empty, the sink router is woken for this cycle.
-    link_sink: Vec<Option<usize>>,
+    pub(crate) link_sink: Vec<Option<usize>>,
     /// Clock-gating bitmap: links that may hold flits. Invariant — every
     /// link with `occupancy() > 0` has its bit set (the set may lag on
     /// the quiescent side; stale bits are pruned by the next sweep).
-    link_active: ActiveSet,
+    pub(crate) link_active: ActiveSet,
     /// Routers to step *this* cycle; rebuilt from link wake edges every
     /// cycle (a router runs iff one of its input buffers holds a flit).
-    router_wake: ActiveSet,
+    pub(crate) router_wake: ActiveSet,
     /// Run the gating-invariant scans even in release builds (from
     /// [`NocConfig::check_invariants`]; debug builds always scan).
-    check_invariants: bool,
+    pub(crate) check_invariants: bool,
 }
 
 impl Network {
@@ -489,7 +511,7 @@ pub struct NocSystem {
     /// Per-node NI bundles, indexed by node id.
     pub nodes: Vec<NodeNi>,
     /// Hoisted link-mode dispatch for the injection hot path.
-    plan: InjectPlan,
+    pub(crate) plan: InjectPlan,
     /// Current simulation cycle.
     pub now: u64,
     /// Per-network, per-node ejection bandwidth meters: every consumed
@@ -503,14 +525,14 @@ pub struct NocSystem {
     /// every target memory accept registers its `ready_at` here so the
     /// fast-forward knows when a quiet system next becomes active on its
     /// own. Entries are pruned lazily (see [`Calendar`]).
-    calendar: Calendar,
+    pub(crate) calendar: Calendar,
     /// Earliest generator wake folded by [`Self::step_generator`] during
     /// the *previous* cycle's generator pass, in generator time (the
     /// post-increment clock generators are stepped at). `u64::MAX` when
     /// no generator reported a finite wake; reset at the end of every
     /// [`Self::step`]. Initialized to 0 so no fast-forward can fire
     /// before the first full generator pass has reported in.
-    gen_wake_min: u64,
+    pub(crate) gen_wake_min: u64,
     /// Step invocations actually executed (every [`Self::step`] call).
     /// Deliberately **not** part of the equivalence digest: it measures
     /// the mechanism (how much work the mode did), not the simulated
@@ -683,13 +705,12 @@ impl NocSystem {
                     self.calendar.schedule(t);
                 }
             }
-            super::inject::inject_node(
-                plan,
-                &mut self.nodes[idx],
-                &mut self.nets,
-                &mut self.counters,
-                now,
-            );
+            let mut port = super::inject::SerialPort {
+                nets: &mut self.nets,
+                counters: &mut self.counters,
+                node_idx: idx,
+            };
+            super::inject::inject_node(plan, &mut self.nodes[idx], &mut port, now);
             let node = &mut self.nodes[idx];
             if let Some(n) = node.narrow.as_mut() {
                 n.drain_cycle();

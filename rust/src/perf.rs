@@ -22,6 +22,11 @@
 //!   full-rate burst once per long period, silent between: the
 //!   event-driven mode's home turf (bar: event ≥ 5× gated cycles/s —
 //!   the fast-forward must actually jump the idle stretches);
+//! * **sharded_16x16** — the saturated workload scaled to a 16×16 mesh
+//!   and run to the same cycle horizon serial (`shards = 1`) and on the
+//!   deterministic sharded engine (`shards = 4`), with an
+//!   identical-counters check: the self-relative bar is ≥ 2× at four
+//!   shards (see `docs/architecture.md`, "Sharded execution");
 //! * **parallel sweep** — the serial-vs-parallel `ParallelRunner`
 //!   speedup on identical points with a byte-identical-report check;
 //! * **cps gates** — [`crate::util::bench::cps_gate`] over the gated
@@ -317,6 +322,98 @@ where
     r
 }
 
+/// One serial-vs-sharded comparison of a single simulation: the same
+/// workload run to the same cycle horizon with `shards = 1` and with
+/// `shards = n`, identical-counters checked. Unlike the parallel sweep
+/// (independent points fanned out), this measures intra-simulation
+/// parallelism — one `NocSystem` cut into strips and stepped on `n`
+/// threads by `floonoc::noc::sharded`.
+#[derive(Debug, Clone)]
+pub struct ShardComparison {
+    /// Scenario name (JSON key in the report).
+    pub name: String,
+    /// Simulated cycles per measured run.
+    pub cycles: u64,
+    /// Shard count of the sharded side.
+    pub shards: usize,
+    /// Serial (`shards = 1`) cycles/second.
+    pub serial_cps: f64,
+    /// Sharded cycles/second.
+    pub sharded_cps: f64,
+}
+
+impl ShardComparison {
+    /// Sharded speedup over serial (> 1 means sharding wins).
+    pub fn speedup(&self) -> f64 {
+        if self.serial_cps > 0.0 {
+            self.sharded_cps / self.serial_cps
+        } else {
+            0.0
+        }
+    }
+
+    /// JSON object for the report file.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cycles", Json::Num(self.cycles as f64)),
+            ("shards", Json::Num(self.shards as f64)),
+            ("serial_cps", Json::Num(self.serial_cps)),
+            ("sharded_cps", Json::Num(self.sharded_cps)),
+            ("sharded_speedup", Json::Num(self.speedup())),
+        ])
+    }
+}
+
+/// Measure a workload serial and sharded to the same cycle horizon.
+/// `mk` must build a fresh, identically-seeded workload per side; the
+/// two runs' clocks and per-network flit counters are asserted equal —
+/// determinism is part of the sharded engine's contract, so the bench
+/// re-checks it on every measurement rather than trusting the test
+/// suite alone.
+pub fn compare_sharded<F>(name: &str, cycles: u64, shards: usize, mk: F) -> ShardComparison
+where
+    F: Fn() -> TiledWorkload,
+{
+    let run = |shards: usize| {
+        let mut w = mk();
+        w.sys.cfg.shards = shards;
+        let wall = time_once(|| {
+            w.run_to_completion(cycles);
+        });
+        (w, wall.as_secs_f64())
+    };
+    let (serial_w, serial_s) = run(1);
+    let (sharded_w, sharded_s) = run(shards);
+    assert_eq!(
+        serial_w.sys.now, sharded_w.sys.now,
+        "sharded run must stop on the same cycle as serial"
+    );
+    let pairs = serial_w.sys.counters.iter().zip(&sharded_w.sys.counters);
+    for (n, (a, b)) in pairs.enumerate() {
+        assert_eq!(
+            (a.injected, a.ejected),
+            (b.injected, b.ejected),
+            "sharded net{n} counters must match serial byte for byte"
+        );
+    }
+    let r = ShardComparison {
+        name: name.to_string(),
+        cycles: serial_w.sys.now,
+        shards,
+        serial_cps: serial_w.sys.now as f64 / serial_s.max(1e-9),
+        sharded_cps: sharded_w.sys.now as f64 / sharded_s.max(1e-9),
+    };
+    println!(
+        "{:<24} serial {:>11.0} c/s | {}-shard {:>11.0} c/s | speedup {:.2}x (identical counters)",
+        r.name,
+        r.serial_cps,
+        r.shards,
+        r.sharded_cps,
+        r.speedup()
+    );
+    r
+}
+
 /// Serial-vs-parallel sweep comparison (byte-identical reports checked).
 #[derive(Debug, Clone)]
 pub struct SweepComparison {
@@ -417,6 +514,10 @@ pub struct E2eReport {
     /// Duty-cycled scenario under gated vs event stepping (the
     /// fast-forward's target regime; bar: ≥ 5×).
     pub duty: EventComparison,
+    /// Saturated 16×16 mesh, serial vs 4-shard single-simulation
+    /// execution (the sharded engine's target regime; bar: ≥ 2×
+    /// self-relative).
+    pub sharded: ShardComparison,
     /// Serial-vs-parallel sweep runner comparison.
     pub sweep: SweepComparison,
     /// The regression-gate measurement (gated saturated workload).
@@ -425,6 +526,8 @@ pub struct E2eReport {
     pub gate_floor: Option<f64>,
     /// The pinned floor the event-mode gate enforced, if CI set one.
     pub event_gate_floor: Option<f64>,
+    /// The pinned floor the sharded gate enforced, if CI set one.
+    pub sharded_gate_floor: Option<f64>,
 }
 
 /// The name the cps regression gate runs under (also the suffix of its
@@ -436,6 +539,11 @@ pub const GATE_NAME: &str = "4x4-saturated";
 /// for the sanitization rule). Its measurement is simulated cycles per
 /// wall second on the duty-cycled 8×8 scenario under [`SimMode::Event`].
 pub const EVENT_GATE_NAME: &str = "8x8-duty-event";
+
+/// The name the sharded cps gate runs under (per-gate floor env var:
+/// `CPS_FLOOR_SHARDED_16X16`). Its measurement is the sharded side of
+/// the serial-vs-sharded comparison on the saturated 16×16 mesh.
+pub const SHARDED_GATE_NAME: &str = "sharded-16x16";
 
 /// Run every scenario. `quick` shrinks cycle counts and sweep sizes for
 /// CI smoke runs; the measured *ratios* stay meaningful, absolute
@@ -476,6 +584,35 @@ pub fn run_e2e(quick: bool) -> E2eReport {
             duty.speedup()
         );
     }
+    println!("== e2e performance: sharded single-simulation execution ==");
+    let sharded_cycles = if quick { 2_000 } else { 6_000 };
+    let sharded = compare_sharded("sharded_16x16", sharded_cycles, 4, || {
+        saturated_workload(16, SimMode::Gated)
+    });
+    if sharded.speedup() < 2.0 {
+        println!(
+            "    WARNING: 4-shard speedup {:.2}x below the 2x tentpole bar",
+            sharded.speedup()
+        );
+    }
+    // Sharded gate: floor enforced on the sharded side's absolute
+    // throughput, same contract as the other gates.
+    let sharded_gate_floor = cps_floor(SHARDED_GATE_NAME);
+    println!(
+        "cps_gate name={SHARDED_GATE_NAME} cycles={} cycles_per_second={:.0} floor={}",
+        sharded.cycles,
+        sharded.sharded_cps,
+        sharded_gate_floor
+            .map(|f| format!("{f:.0}"))
+            .unwrap_or_else(|| "unset".into()),
+    );
+    if let Some(floor) = sharded_gate_floor {
+        assert!(
+            sharded.sharded_cps >= floor,
+            "cps regression: {SHARDED_GATE_NAME} ran at {:.0} cycles/s, floor is {floor:.0}",
+            sharded.sharded_cps
+        );
+    }
     // Regression gate over the gated saturated mesh (the sweep workhorse).
     let mut w = saturated_workload(4, SimMode::Gated);
     let gate = cps_gate(GATE_NAME, sat_cycles, || w.step());
@@ -508,10 +645,12 @@ pub fn run_e2e(quick: bool) -> E2eReport {
         saturated,
         wrap,
         duty,
+        sharded,
         sweep,
         gate,
         gate_floor,
         event_gate_floor,
+        sharded_gate_floor,
     }
 }
 
@@ -527,6 +666,7 @@ pub fn report_to_json(r: &E2eReport) -> Json {
                 (r.saturated.name.as_str(), r.saturated.to_json()),
                 (r.wrap.name.as_str(), r.wrap.to_json()),
                 (r.duty.name.as_str(), r.duty.to_json()),
+                (r.sharded.name.as_str(), r.sharded.to_json()),
                 ("parallel_sweep", r.sweep.to_json()),
             ]),
         ),
@@ -557,6 +697,21 @@ pub fn report_to_json(r: &E2eReport) -> Json {
                 (
                     "floor",
                     match r.event_gate_floor {
+                        Some(f) => Json::Num(f),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+        ),
+        (
+            "sharded_cps_gate",
+            Json::obj(vec![
+                ("name", Json::Str(SHARDED_GATE_NAME.into())),
+                ("cycles", Json::Num(r.sharded.cycles as f64)),
+                ("cycles_per_second", Json::Num(r.sharded.sharded_cps)),
+                (
+                    "floor",
+                    match r.sharded_gate_floor {
                         Some(f) => Json::Num(f),
                         None => Json::Null,
                     },
@@ -700,6 +855,13 @@ mod tests {
                 event_stepped: 20,
                 event_skipped: 100,
             },
+            sharded: ShardComparison {
+                name: "sharded_16x16".into(),
+                cycles: 10,
+                shards: 4,
+                serial_cps: 100.0,
+                sharded_cps: 250.0,
+            },
             sweep: SweepComparison {
                 points: 4,
                 threads: 2,
@@ -712,6 +874,7 @@ mod tests {
             },
             gate_floor: None,
             event_gate_floor: Some(350_000.0),
+            sharded_gate_floor: Some(40_000.0),
         };
         let j = report_to_json(&r);
         assert_eq!(
@@ -733,5 +896,26 @@ mod tests {
         let egate = j.get("event_cps_gate").unwrap();
         assert_eq!(egate.get("name").and_then(Json::as_str), Some(EVENT_GATE_NAME));
         assert_eq!(egate.get("floor").and_then(Json::as_f64), Some(350_000.0));
+        let shd = j.get("scenarios").and_then(|s| s.get("sharded_16x16")).unwrap();
+        assert_eq!(shd.get("sharded_speedup").and_then(Json::as_f64), Some(2.5));
+        assert_eq!(shd.get("shards").and_then(Json::as_f64), Some(4.0));
+        let sgate = j.get("sharded_cps_gate").unwrap();
+        assert_eq!(sgate.get("name").and_then(Json::as_str), Some(SHARDED_GATE_NAME));
+        assert_eq!(sgate.get("floor").and_then(Json::as_f64), Some(40_000.0));
+    }
+
+    /// The serial-vs-sharded bench comparison's built-in determinism
+    /// check holds on a small saturated mesh (the full byte-level digest
+    /// differential lives in `tests/`; this pins the bench path itself —
+    /// same clock, same counters, sane cps figures).
+    #[test]
+    fn compare_sharded_is_deterministic_and_measures() {
+        let r = compare_sharded("sharded_unit", 300, 2, || {
+            saturated_workload(4, SimMode::Gated)
+        });
+        assert_eq!(r.cycles, 300);
+        assert_eq!(r.shards, 2);
+        assert!(r.serial_cps > 0.0 && r.sharded_cps > 0.0);
+        assert!(r.speedup() > 0.0);
     }
 }

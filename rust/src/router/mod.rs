@@ -33,8 +33,8 @@ pub mod arbiter;
 
 pub use arbiter::RoundRobin;
 pub use router::{
-    Router, RouterActivity, RouterCfg, MAX_VCS, PORT_E, PORT_LOCAL, PORT_MEM, PORT_N, PORT_S,
-    PORT_W,
+    LinkPool, Router, RouterActivity, RouterCfg, MAX_VCS, PORT_E, PORT_LOCAL, PORT_MEM, PORT_N,
+    PORT_S, PORT_W,
 };
 pub use routing::{
     dateline_vc, port_dim, ring_route, torus_route, xy_route, RouteTable, RoutingAlgorithm,

@@ -47,6 +47,73 @@ pub const PORT_W: usize = 4;
 /// sixth port instead of a free boundary port.
 pub const PORT_MEM: usize = 5;
 
+/// Read/write access to a network's link arena by [`LinkId`].
+///
+/// The serial engine owns every link of a network in one dense
+/// `Vec<Link>`; the sharded engine ([`crate::noc::sharded`]) moves each
+/// shard's links into a sparse per-shard view where non-owned output
+/// links are reached through lock-free credit mirrors and boundary
+/// mailboxes instead of direct state. This trait is the seam: the
+/// router's compute/commit phases are written against it once and run
+/// identically over both storages.
+pub trait LinkPool {
+    /// Lane (virtual-channel) count of link `lid`.
+    fn vcs(&self, lid: LinkId) -> usize;
+    /// Head flit of lane `vc` of link `lid`, if one has been delivered.
+    fn peek_vc(&self, lid: LinkId, vc: usize) -> Option<&FlooFlit>;
+    /// Whether lane `vc` of link `lid` can accept an offer this cycle.
+    fn can_offer_vc(&self, lid: LinkId, vc: usize) -> bool;
+    /// Pop the delivered head flit of lane `vc` of link `lid`.
+    fn pop_vc(&mut self, lid: LinkId, vc: usize) -> Option<FlooFlit>;
+    /// Offer `flit` on lane `vc` of link `lid` (panics when not
+    /// [`LinkPool::can_offer_vc`], exactly like [`Link::offer_vc`]).
+    fn offer_vc(&mut self, lid: LinkId, vc: usize, flit: FlooFlit);
+    /// Flits buffered at the consumer side of link `lid`, all lanes.
+    fn buffered(&self, lid: LinkId) -> usize;
+}
+
+impl LinkPool for [Link<FlooFlit>] {
+    fn vcs(&self, lid: LinkId) -> usize {
+        self[lid].vcs()
+    }
+    fn peek_vc(&self, lid: LinkId, vc: usize) -> Option<&FlooFlit> {
+        self[lid].peek_vc(vc)
+    }
+    fn can_offer_vc(&self, lid: LinkId, vc: usize) -> bool {
+        self[lid].can_offer_vc(vc)
+    }
+    fn pop_vc(&mut self, lid: LinkId, vc: usize) -> Option<FlooFlit> {
+        self[lid].pop_vc(vc)
+    }
+    fn offer_vc(&mut self, lid: LinkId, vc: usize, flit: FlooFlit) {
+        self[lid].offer_vc(vc, flit)
+    }
+    fn buffered(&self, lid: LinkId) -> usize {
+        self[lid].buffered()
+    }
+}
+
+impl LinkPool for Vec<Link<FlooFlit>> {
+    fn vcs(&self, lid: LinkId) -> usize {
+        self.as_slice().vcs(lid)
+    }
+    fn peek_vc(&self, lid: LinkId, vc: usize) -> Option<&FlooFlit> {
+        self.as_slice().peek_vc(lid, vc)
+    }
+    fn can_offer_vc(&self, lid: LinkId, vc: usize) -> bool {
+        self.as_slice().can_offer_vc(lid, vc)
+    }
+    fn pop_vc(&mut self, lid: LinkId, vc: usize) -> Option<FlooFlit> {
+        self.as_mut_slice().pop_vc(lid, vc)
+    }
+    fn offer_vc(&mut self, lid: LinkId, vc: usize, flit: FlooFlit) {
+        self.as_mut_slice().offer_vc(lid, vc, flit)
+    }
+    fn buffered(&self, lid: LinkId) -> usize {
+        self.as_slice().buffered(lid)
+    }
+}
+
 /// Static router configuration.
 #[derive(Debug, Clone)]
 pub struct RouterCfg {
@@ -180,7 +247,7 @@ impl Router {
     ///
     /// Returns a [`RouterActivity`] summary for the gated step loop;
     /// dense-mode and unit-test callers are free to ignore it.
-    pub fn step(&mut self, links: &mut [Link<FlooFlit>]) -> RouterActivity {
+    pub fn step<P: LinkPool + ?Sized>(&mut self, links: &mut P) -> RouterActivity {
         if self.compute_requests(links) {
             RouterActivity {
                 any_input: true,
@@ -196,7 +263,7 @@ impl Router {
     /// every input is empty — the common case in large meshes, letting
     /// `step` exit early. The scratch buffer lives in the router (no
     /// per-cycle allocation).
-    fn compute_requests(&mut self, links: &[Link<FlooFlit>]) -> bool {
+    fn compute_requests<P: LinkPool + ?Sized>(&mut self, links: &P) -> bool {
         let ports = self.cfg.ports;
         let vcs = self.cfg.vcs;
         let mut any_input = false;
@@ -207,8 +274,8 @@ impl Router {
             let Some(lid) = self.in_links[i] else { continue };
             // Inject/eject links carry one lane regardless of the
             // router's VC count; neighbour links carry `vcs` lanes.
-            for v in 0..links[lid].vcs().min(vcs) {
-                if let Some(flit) = links[lid].peek_vc(v) {
+            for v in 0..links.vcs(lid).min(vcs) {
+                if let Some(flit) = links.peek_vc(lid, v) {
                     let o = self.table.lookup(flit.header.dst);
                     debug_assert!(o < ports, "route table port out of range");
                     debug_assert!(
@@ -236,14 +303,14 @@ impl Router {
     /// links on the lane the dateline rule assigns. Returns the bitmask
     /// of output ports that accepted a flit (the gated loop's
     /// router→output-link wake edges).
-    fn commit_switch(&mut self, links: &mut [Link<FlooFlit>]) -> u32 {
+    fn commit_switch<P: LinkPool + ?Sized>(&mut self, links: &mut P) -> u32 {
         let ports = self.cfg.ports;
         let vcs = self.cfg.vcs;
         let mut woke: u32 = 0;
         let mut any = false;
         for o in 0..ports {
             let Some(out_lid) = self.out_links[o] else { continue };
-            let out_vcs = links[out_lid].vcs();
+            let out_vcs = links.vcs(out_lid);
             let wrap = self.table.crosses_dateline(o);
             // The output lane a traversal (input i, input VC v) lands
             // on: the dateline rule, capped to the link's lane count
@@ -276,7 +343,7 @@ impl Router {
                     "locked input {li} (vc {lv}) head diverged from output {o} mid-packet"
                 );
                 debug_assert_eq!(ovc(li, lv), v_out, "lock lane disagrees with dateline rule");
-                if self.want[li * vcs + lv] == Some(o) && links[out_lid].can_offer_vc(v_out) {
+                if self.want[li * vcs + lv] == Some(o) && links.can_offer_vc(out_lid, v_out) {
                     winner = Some((li, lv, v_out));
                     break;
                 }
@@ -288,14 +355,14 @@ impl Router {
             // while an output was locked or backpressured.
             if winner.is_none() {
                 let want = &self.want;
-                let out_link = &links[out_lid];
+                let pool = &*links;
                 let arb = &mut self.outputs[o].arb;
                 let grant = arb.arbitrate_with(|k| {
                     if want[k] != Some(o) {
                         return false;
                     }
                     let v_out = ovc(k / vcs, k % vcs);
-                    locks[v_out].is_none() && out_link.can_offer_vc(v_out)
+                    locks[v_out].is_none() && pool.can_offer_vc(out_lid, v_out)
                 });
                 winner = grant.map(|k| {
                     let (i, v) = (k / vcs, k % vcs);
@@ -304,14 +371,14 @@ impl Router {
             }
             let Some((i, v_in, v_out)) = winner else { continue };
             let in_lid = self.in_links[i].unwrap();
-            let mut flit = links[in_lid].pop_vc(v_in).unwrap();
+            let mut flit = links.pop_vc(in_lid, v_in).unwrap();
             self.outputs[o].locks[v_out] = if flit.header.last {
                 None
             } else {
                 Some((i as u8, v_in as u8))
             };
             flit.vc = v_out as u8;
-            links[out_lid].offer_vc(v_out, flit);
+            links.offer_vc(out_lid, v_out, flit);
             self.outputs[o].forwarded += 1;
             self.forwarded += 1;
             // An input *port* feeds at most one output per cycle (one
@@ -330,7 +397,7 @@ impl Router {
 
     /// True when all input buffers this router reads from are empty (on
     /// every VC lane) and no output lane is mid-packet.
-    pub fn is_idle(&self, links: &[Link<FlooFlit>]) -> bool {
+    pub fn is_idle<P: LinkPool + ?Sized>(&self, links: &P) -> bool {
         self.outputs
             .iter()
             .all(|o| o.locks.iter().all(Option::is_none))
@@ -338,7 +405,7 @@ impl Router {
                 .in_links
                 .iter()
                 .flatten()
-                .all(|&lid| links[lid].buffered() == 0)
+                .all(|&lid| links.buffered(lid) == 0)
     }
 
     /// Clock-gating predicate: true when stepping this router would be a
@@ -347,11 +414,11 @@ impl Router {
     /// flit idles (and stays locked) whether or not the router is
     /// stepped, so a lock alone never requires a clock. The gated loop
     /// wakes a router the cycle any of its input links delivers a flit.
-    pub fn is_quiescent(&self, links: &[Link<FlooFlit>]) -> bool {
+    pub fn is_quiescent<P: LinkPool + ?Sized>(&self, links: &P) -> bool {
         self.in_links
             .iter()
             .flatten()
-            .all(|&lid| links[lid].buffered() == 0)
+            .all(|&lid| links.buffered(lid) == 0)
     }
 }
 

@@ -147,7 +147,10 @@ impl BandwidthMeter {
     /// over the link's peak capacity during the active window.
     pub fn utilization(&self) -> f64 {
         let w = self.window();
-        if w == 0 {
+        // An empty window (never observed) or a zero-width link would
+        // divide by zero; both are "no utilization", not NaN/inf — the
+        // value flows into JSON reports, which reject non-finite numbers.
+        if w == 0 || self.link_bits == 0 {
             return 0.0;
         }
         self.payload_bits as f64 / (self.link_bits as f64 * w as f64)
@@ -237,5 +240,27 @@ mod tests {
         let j = l.to_json();
         assert_eq!(j.get("count").unwrap().as_u64(), Some(1));
         assert_eq!(j.get("mean").unwrap().as_f64(), Some(18.0));
+    }
+
+    /// Empty-window / degenerate-meter regressions: every derived rate
+    /// must come back 0.0 — never NaN or inf — because these values feed
+    /// JSON reports directly.
+    #[test]
+    fn empty_window_rates_are_zero_not_nan() {
+        let b = BandwidthMeter::new(512);
+        assert_eq!(b.window(), 0);
+        assert_eq!(b.utilization(), 0.0);
+        assert_eq!(b.gbps(1.23), 0.0);
+        // A zero-width link (meter observing a header-only stream) must
+        // not turn observations into an infinite utilization.
+        let mut z = BandwidthMeter::new(0);
+        z.observe(0, 0);
+        z.observe(3, 0);
+        assert!(z.utilization().is_finite());
+        assert_eq!(z.utilization(), 0.0);
+        assert_eq!(z.gbps(1.23), 0.0);
+        // And the serialized form re-parses as numbers, not nulls.
+        let j = z.to_json();
+        assert_eq!(j.get("utilization").unwrap().as_f64(), Some(0.0));
     }
 }

@@ -19,6 +19,8 @@
 //! all three fabrics. Link construction consumes [`Topology::channels`],
 //! the single home of the wraparound rules.
 
+pub mod partition;
+
 use crate::flit::{Coord, NodeId};
 use crate::router::{
     RouteTable, RoutingAlgorithm, PORT_E, PORT_LOCAL, PORT_MEM, PORT_N, PORT_S, PORT_W,

@@ -1,0 +1,173 @@
+//! Spatial partitioning of a fabric into contiguous shards for the
+//! deterministic sharded execution engine ([`crate::noc::sharded`]).
+//!
+//! A [`ShardPlan`] assigns every router (and therefore every node — a
+//! node lives with its host router) to exactly one shard. Shards are
+//! contiguous coordinate strips:
+//!
+//! * fabrics with `height > 1` are cut into **row strips** (`shard =
+//!   ⌊y·S/H⌋`), so a shard owns whole rows and only the N/S channels at
+//!   strip borders cross shards;
+//! * one-dimensional fabrics (`height == 1`, i.e. rings and 1-row
+//!   meshes) are cut into **column strips** (`shard = ⌊x·S/W⌋`)
+//!   instead, since rows cannot be split further.
+//!
+//! The requested shard count is clamped to the strip dimension's
+//! length, so every shard is guaranteed non-empty — `⌊p·S/N⌋` for
+//! `p ∈ 0..N` with `S ≤ N` hits every value in `0..S` and is monotone,
+//! which gives contiguity for free. Wraparound channels (torus/ring)
+//! simply become boundary links between the first and last strip; the
+//! engine treats them like any other cross-shard channel.
+
+use super::Topology;
+
+/// A partition of a fabric's routers and nodes into contiguous strips.
+///
+/// ```
+/// use floonoc::topology::{partition::ShardPlan, MemEdge, Topology};
+/// let topo = Topology::mesh(4, 4, MemEdge::West);
+/// let plan = ShardPlan::new(&topo, 4);
+/// assert_eq!(plan.shards, 4); // one row each
+/// assert_eq!(plan.router_shard[0], 0);
+/// assert_eq!(plan.router_shard[15], 3);
+/// // Requests beyond the strip dimension are clamped.
+/// assert_eq!(ShardPlan::new(&topo, 99).shards, 4);
+/// ```
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Effective shard count after clamping to the strip dimension.
+    pub shards: usize,
+    /// Owning shard of each router, indexed by
+    /// [`Topology::router_index`].
+    pub router_shard: Vec<usize>,
+    /// Owning shard of each node (tiles and memory controllers), indexed
+    /// by node id. A node always lives with its host router.
+    pub node_shard: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Partition `topo` into (at most) `requested` contiguous strips.
+    /// `requested` is clamped to `[1, strip dimension length]`.
+    pub fn new(topo: &Topology, requested: usize) -> Self {
+        let (span, by_row) = if topo.height > 1 {
+            (topo.height as usize, true)
+        } else {
+            (topo.width as usize, false)
+        };
+        let shards = requested.clamp(1, span);
+        let num_routers = topo.width as usize * topo.height as usize;
+        let router_shard: Vec<usize> = (0..num_routers)
+            .map(|r| {
+                let coord = topo.nodes[r].coord;
+                let pos = if by_row { coord.y } else { coord.x } as usize;
+                pos * shards / span
+            })
+            .collect();
+        let node_shard = topo
+            .nodes
+            .iter()
+            .map(|n| router_shard[topo.router_index(n.coord)])
+            .collect();
+        ShardPlan {
+            shards,
+            router_shard,
+            node_shard,
+        }
+    }
+
+    /// Router indices owned by `shard`, ascending.
+    pub fn routers_of(&self, shard: usize) -> Vec<usize> {
+        (0..self.router_shard.len())
+            .filter(|&r| self.router_shard[r] == shard)
+            .collect()
+    }
+
+    /// Node indices owned by `shard`, ascending.
+    pub fn nodes_of(&self, shard: usize) -> Vec<usize> {
+        (0..self.node_shard.len())
+            .filter(|&n| self.node_shard[n] == shard)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::MemEdge;
+
+    #[test]
+    fn row_strips_are_contiguous_and_cover_every_shard() {
+        let topo = Topology::mesh(4, 6, MemEdge::None);
+        for requested in 1..=8 {
+            let plan = ShardPlan::new(&topo, requested);
+            assert_eq!(plan.shards, requested.min(6));
+            // Monotone in y, constant within a row.
+            let mut prev = 0;
+            for y in 0..6u8 {
+                let row: Vec<usize> = (0..4u8)
+                    .map(|x| {
+                        plan.router_shard
+                            [topo.router_index(crate::flit::Coord::new(x, y))]
+                    })
+                    .collect();
+                assert!(row.iter().all(|&s| s == row[0]), "row {y} split");
+                assert!(row[0] >= prev, "shards not monotone");
+                prev = row[0];
+            }
+            // Every shard owns at least one router.
+            for s in 0..plan.shards {
+                assert!(!plan.routers_of(s).is_empty(), "shard {s} empty");
+            }
+            assert_eq!(prev, plan.shards - 1, "last shard unused");
+        }
+    }
+
+    #[test]
+    fn one_dimensional_fabrics_cut_by_column() {
+        let topo = Topology::ring(8, MemEdge::West);
+        let plan = ShardPlan::new(&topo, 4);
+        assert_eq!(plan.shards, 4);
+        assert_eq!(plan.router_shard, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+    }
+
+    #[test]
+    fn requests_are_clamped_to_the_strip_dimension() {
+        let topo = Topology::mesh(16, 2, MemEdge::None);
+        // Two rows: at most two row strips, even for shards = 4.
+        assert_eq!(ShardPlan::new(&topo, 4).shards, 2);
+        assert_eq!(ShardPlan::new(&topo, 0).shards, 1);
+        let dot = Topology::ring(1, MemEdge::None);
+        assert_eq!(ShardPlan::new(&dot, 4).shards, 1);
+    }
+
+    #[test]
+    fn nodes_live_with_their_host_router() {
+        let topo = Topology::torus(4, 4, MemEdge::West);
+        let plan = ShardPlan::new(&topo, 4);
+        for node in &topo.nodes {
+            let host = topo.router_index(node.coord);
+            assert_eq!(
+                plan.node_shard[node.id.0 as usize],
+                plan.router_shard[host],
+                "node {} strays from its host router",
+                node.id.0
+            );
+        }
+        // Memory controllers (ids beyond num_tiles) are included.
+        assert!(topo.num_nodes() > topo.num_tiles);
+    }
+
+    #[test]
+    fn partition_covers_all_routers_exactly_once() {
+        let topo = Topology::mesh(5, 5, MemEdge::All);
+        let plan = ShardPlan::new(&topo, 3);
+        let mut seen = vec![false; 25];
+        for s in 0..plan.shards {
+            for r in plan.routers_of(s) {
+                assert!(!seen[r], "router {r} owned twice");
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

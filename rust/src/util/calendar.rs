@@ -22,7 +22,7 @@ use std::collections::BinaryHeap;
 /// Min-heap of scheduled wake cycles. Duplicates are allowed (several
 /// memory accepts in one cycle share a retirement time); they cost one
 /// heap slot each and are drained together by pruning.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct Calendar {
     heap: BinaryHeap<Reverse<u64>>,
 }
@@ -72,6 +72,15 @@ impl Calendar {
     pub fn clear(&mut self) {
         self.heap.clear();
     }
+
+    /// Absorb every entry of `other` (duplicates kept, as always). The
+    /// sharded engine gives each shard a private calendar during a run
+    /// and folds them back into the system's single calendar here — a
+    /// heap merge, so relative ordering of wake times is preserved
+    /// regardless of which shard scheduled them.
+    pub fn merge_from(&mut self, other: Calendar) {
+        self.heap.extend(other.heap);
+    }
 }
 
 #[cfg(test)]
@@ -114,6 +123,25 @@ mod tests {
         // Pruning an empty calendar is a no-op.
         c.prune_through(200);
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn merge_from_keeps_every_entry_and_the_global_min() {
+        let mut a = Calendar::new();
+        a.schedule(40);
+        a.schedule(12);
+        let mut b = Calendar::new();
+        b.schedule(7);
+        b.schedule(40); // duplicate across calendars survives
+        a.merge_from(b);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.earliest(), Some(7));
+        a.prune_through(12);
+        assert_eq!(a.earliest(), Some(40));
+        assert_eq!(a.len(), 2);
+        // Merging an empty calendar changes nothing.
+        a.merge_from(Calendar::new());
+        assert_eq!(a.len(), 2);
     }
 
     #[test]

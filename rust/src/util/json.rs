@@ -329,7 +329,20 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literals; emitting them
+                    // produces output no conforming parser (including
+                    // ours) accepts. `null` is the interchange-safe
+                    // encoding. NaN also fails every guard below
+                    // (NaN.fract() is NaN), so this arm must come first.
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
+                    // Small integral values print without a fraction. The
+                    // 1e15 bound keeps the `as i64` cast exact (every
+                    // integral f64 below it fits losslessly); larger
+                    // magnitudes take the float path instead of casting —
+                    // `f64`'s Display never uses scientific notation, so
+                    // that path is valid JSON at any magnitude.
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -494,5 +507,59 @@ mod tests {
     fn integers_print_without_fraction() {
         assert_eq!(Json::Num(5.0).to_string(), "5");
         assert_eq!(Json::Num(5.25).to_string(), "5.25");
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        // JSON has no NaN/Infinity literal; the serializer must not
+        // emit one (a literal `NaN` broke BENCH_e2e.json consumers).
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        // Nested positions and the pretty-printer take the same path.
+        let v = Json::obj(vec![("x", Json::Num(f64::NAN))]);
+        assert_eq!(v.to_string(), r#"{"x":null}"#);
+        assert_eq!(Json::parse(&pretty(&v)).unwrap().get("x"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn large_magnitudes_roundtrip_exactly() {
+        // Above the exact-i64-cast bound the serializer must not cast
+        // (2^63 `as i64` is garbage); every printed form must re-parse
+        // to the identical f64.
+        for &n in &[
+            9.223372036854776e18, // 2^63: first value the old cast mangled
+            1e15,                 // first value past the integer fast path
+            -1e15,
+            f64::MAX, // full-range extreme
+            -f64::MAX,
+            4.9e-324, // smallest subnormal
+            123456789.123,
+        ] {
+            let s = Json::Num(n).to_string();
+            assert!(
+                !s.contains('e') && !s.contains("inf") && !s.contains("NaN"),
+                "{n}: printed '{s}'"
+            );
+            assert_eq!(Json::parse(&s).unwrap(), Json::Num(n), "via '{s}'");
+        }
+    }
+
+    #[test]
+    fn serializer_output_always_reparses() {
+        // Printer/parser closure over a grab-bag of values, including
+        // the non-finite ones (which re-parse as null, not as numbers).
+        let v = Json::obj(vec![
+            ("nan", Json::Num(f64::NAN)),
+            ("inf", Json::Num(f64::INFINITY)),
+            ("big", Json::Num(1e300)),
+            ("neg", Json::Num(-2.0f64.powi(63))),
+            ("arr", Json::Arr(vec![Json::Num(f64::NEG_INFINITY), Json::Num(0.5)])),
+        ]);
+        let reparsed = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(reparsed.get("nan"), Some(&Json::Null));
+        assert_eq!(reparsed.get("inf"), Some(&Json::Null));
+        assert_eq!(reparsed.get("big"), Some(&Json::Num(1e300)));
+        assert_eq!(reparsed.get("neg"), Some(&Json::Num(-9.223372036854776e18)));
     }
 }

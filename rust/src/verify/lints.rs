@@ -1,4 +1,4 @@
-//! Configuration-consistency lints (`FV101`–`FV104`).
+//! Configuration-consistency lints (`FV101`–`FV105`).
 //!
 //! These are the pipeline's warning tier: each names a configuration
 //! that builds and simulates but is degraded, surprising, or one step
@@ -19,14 +19,22 @@
 //! * `FV104` — memory-controller attach-port mismatches: an attach
 //!   port beyond the router radix, or colliding with a neighbour
 //!   channel or another node's local port.
+//! * `FV105` — a ROB capacity that mismatches the wire format's byte
+//!   budget: the flit header's `rob_idx` field is sized from the paper
+//!   layout ([`RobParams`]: 2 kB / 8 B narrow ⇒ 8 bits, 8 kB / 64 B
+//!   wide ⇒ 7 bits), while the simulated allocator takes its capacity
+//!   from the `rob_slots` config knob — a slot count the header cannot
+//!   index could not echo its grants in hardware, and a zero capacity
+//!   panics at build (`RobAllocator::new`).
 
+use crate::flit::RobParams;
 use crate::noc::NocConfig;
 use crate::topology::{NodeKind, Topology};
 
 use super::report::{port_label, Category, Finding, Report, Severity};
 
-/// Config-level lints (`FV101`, `FV103`): facts readable from the
-/// [`NocConfig`] knobs plus the fabric geometry.
+/// Config-level lints (`FV101`, `FV103`, `FV105`): facts readable from
+/// the [`NocConfig`] knobs plus the fabric geometry.
 pub fn lint_config(cfg: &NocConfig, topo: &Topology, report: &mut Report) {
     let num_routers = topo.width as usize * topo.height as usize;
     let wraps = (0..num_routers).any(|r| topo.dateline_ports(topo.nodes[r].coord) != 0);
@@ -57,6 +65,46 @@ pub fn lint_config(cfg: &NocConfig, topo: &Topology, report: &mut Report) {
                 .to_string(),
             context: vec![],
         });
+    }
+    // FV105: ROB byte budgets that mismatch the wire format.
+    for (which, slots, params) in [
+        ("narrow", cfg.narrow_init.rob_slots, RobParams::narrow()),
+        ("wide", cfg.wide_init.rob_slots, RobParams::wide()),
+    ] {
+        let addressable = 1u32 << params.idx_bits();
+        if slots == 0 {
+            report.push(Finding {
+                code: "FV105",
+                severity: Severity::Warning,
+                category: Category::Config,
+                message: format!(
+                    "{which} initiator configured with rob_slots = 0: \
+                     RobAllocator::new panics at build (a ROB needs at least one slot)"
+                ),
+                context: vec![],
+            });
+        } else if slots > addressable {
+            report.push(Finding {
+                code: "FV105",
+                severity: Severity::Warning,
+                category: Category::Config,
+                message: format!(
+                    "{which} ROB byte budget mismatch: rob_slots = {slots} \
+                     ({} B at the {} B granule) exceeds the {addressable} slots \
+                     the wire-format rob_idx field can address ({} B budget, \
+                     {} index bits)",
+                    slots as u64 * params.granule as u64,
+                    params.granule,
+                    params.bytes,
+                    params.idx_bits()
+                ),
+                context: vec![
+                    "grants beyond the addressable range could not be echoed in \
+                     hardware headers; shrink rob_slots or widen RobParams"
+                        .to_string(),
+                ],
+            });
+        }
     }
 }
 

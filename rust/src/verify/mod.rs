@@ -9,7 +9,8 @@
 //!
 //! 1. **config lints** ([`lints`]) — wrap fabrics below their dateline
 //!    VC default, dateline bits on non-wrap ports, zero FIFO depths,
-//!    attach-port mismatches (`FV101`–`FV104`, warnings);
+//!    attach-port mismatches, ROB byte-budget mismatches
+//!    (`FV101`–`FV105`, warnings);
 //! 2. **route sanity** ([`cdg`]) — every `src → dst` route terminates
 //!    within its minimal hop bound, never U-turns, exits through
 //!    connected ports, and stays within the configured VC count
@@ -192,5 +193,23 @@ mod tests {
         let r = preflight(&cfg);
         assert!(!r.with_code("FV103").is_empty());
         assert!(!r.has_errors());
+    }
+
+    #[test]
+    fn rob_budget_mismatch_lints() {
+        // 256 wide slots exceed the 7-bit wide rob_idx range (8 kB /
+        // 64 B = 128 addressable slots): FV105, warning tier.
+        let mut cfg = NocConfig::mesh(2, 2);
+        cfg.wide_init.rob_slots = 256;
+        let r = preflight(&cfg);
+        assert!(!r.with_code("FV105").is_empty(), "{r}");
+        assert!(!r.has_errors());
+        // A zero capacity would panic inside RobAllocator::new at build.
+        let mut cfg = NocConfig::mesh(2, 2);
+        cfg.narrow_init.rob_slots = 0;
+        let r = preflight(&cfg);
+        assert!(!r.with_code("FV105").is_empty(), "{r}");
+        // The shipped defaults stay FV105-clean (pinned by
+        // shipped_defaults_are_clean above).
     }
 }

@@ -93,12 +93,18 @@ pub fn digest(w: &mut TiledWorkload) -> String {
     d
 }
 
-/// The three-way differential runner: build the same seeded workload
-/// under [`SimMode::Dense`], [`SimMode::Gated`] and [`SimMode::Event`],
-/// run each to completion, and assert all three digests are
+/// The differential runner: build the same seeded workload under
+/// [`SimMode::Dense`], [`SimMode::Gated`] and [`SimMode::Event`], run
+/// each to completion, and assert all three digests are
 /// **byte-identical**. Dense is the reference sweep, gated skips by
 /// activity, event additionally fast-forwards the clock over provably
 /// idle stretches — none of which may change a single counter.
+///
+/// On top of the mode axis, every mode is re-run on the sharded engine
+/// at 2 and 4 shards (`NocConfig::shards`; the engine clamps to the
+/// fabric's strip dimension) and each sharded digest must match the
+/// dense reference byte for byte too — the determinism contract of
+/// `floonoc::noc::sharded` is that thread count is unobservable.
 ///
 /// Also pins the cycle bookkeeping: gated/dense must never skip
 /// (`skipped_cycles == 0`), and under event every cycle is either
@@ -107,27 +113,31 @@ pub fn assert_modes_equivalent<F>(label: &str, max_cycles: u64, mk: F)
 where
     F: Fn(SimMode) -> TiledWorkload,
 {
-    let run = |mode: SimMode| {
+    let run = |mode: SimMode, shards: usize| {
         let mut w = mk(mode);
-        assert!(w.run_to_completion(max_cycles), "{label}/{mode:?} must drain");
-        assert!(w.protocol_ok(), "{label}/{mode:?} protocol clean");
+        w.sys.cfg.shards = shards;
+        assert!(
+            w.run_to_completion(max_cycles),
+            "{label}/{mode:?}/shards={shards} must drain"
+        );
+        assert!(w.protocol_ok(), "{label}/{mode:?}/shards={shards} protocol clean");
         if mode == SimMode::Event {
             assert_eq!(
                 w.sys.stepped_cycles + w.sys.skipped_cycles,
                 w.sys.now,
-                "{label}/event: stepped + skipped must reconcile with the clock"
+                "{label}/event/shards={shards}: stepped + skipped must reconcile with the clock"
             );
         } else {
             assert_eq!(
                 w.sys.skipped_cycles, 0,
-                "{label}/{mode:?}: only event mode may fast-forward"
+                "{label}/{mode:?}/shards={shards}: only event mode may fast-forward"
             );
         }
         digest(&mut w)
     };
-    let dense = run(SimMode::Dense);
-    let gated = run(SimMode::Gated);
-    let event = run(SimMode::Event);
+    let dense = run(SimMode::Dense, 1);
+    let gated = run(SimMode::Gated, 1);
+    let event = run(SimMode::Event, 1);
     assert!(
         gated == dense,
         "gated != dense for {label}\n--- gated ---\n{gated}\n--- dense ---\n{dense}"
@@ -136,4 +146,14 @@ where
         event == dense,
         "event != dense for {label}\n--- event ---\n{event}\n--- dense ---\n{dense}"
     );
+    for shards in [2, 4] {
+        for mode in [SimMode::Dense, SimMode::Gated, SimMode::Event] {
+            let sharded = run(mode, shards);
+            assert!(
+                sharded == dense,
+                "{shards}-shard {mode:?} != serial dense for {label}\n\
+                 --- sharded ---\n{sharded}\n--- dense ---\n{dense}"
+            );
+        }
+    }
 }

@@ -17,6 +17,11 @@
 //! * the `BENCH_e2e.json` trajectory file at the repository root
 //!   (override the location with `BENCH_OUT=<path>`; `BENCH_QUICK=1`
 //!   shrinks cycle counts for smoke runs).
+//!
+//! For *where a saturated cycle's time goes* (link deliver vs router
+//! sweep vs NI vs generators), run the companion phase profiler instead:
+//! `repro bench --profile` (`floonoc::perf::profile`, writes
+//! `BENCH_profile.json`).
 
 use floonoc::perf;
 use floonoc::sim::SimMode;

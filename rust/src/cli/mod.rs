@@ -12,6 +12,8 @@
 //! repro scale_topology [--mesh n]     mesh vs torus vs ring at equal tiles
 //! repro dse [--mesh n] [--artifacts dir]              analytical model vs sim
 //! repro bench [--out path] [--quick]  e2e perf scenarios -> BENCH_e2e.json
+//! repro bench --profile [--quick]     per-phase wall-time profile of the
+//!                                     saturated hot path -> BENCH_profile.json
 //! ```
 //!
 //! Sweep-style commands (`reproduce fig5a|fig5b`, `sweep`, `dse`) accept
@@ -136,7 +138,12 @@ COMMANDS:
                                gated vs dense cycles/s on sparse + saturated
                                workloads, parallel-sweep speedup, cps gate)
                                written to BENCH_e2e.json at the repo root;
-                               options: --out <path>, --quick
+                               options: --out <path>, --quick, --profile
+                               (--profile runs the per-phase wall-time
+                               profiler over the saturated scenarios
+                               instead — link deliver / router sweep / NI /
+                               generators / gating overhead — and writes
+                               BENCH_profile.json, schema floonoc-profile/1)
 
   --topology <kind>: fabric shape for simulate (mesh is the default;
               torus adds wraparound rows+columns, ring is a 1-D cycle).

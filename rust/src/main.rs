@@ -16,7 +16,7 @@
 //! repro sweep     <rob|buffers|burst|mesh|topology|output-reg> [--jobs n]
 //! repro scale_topology [--mesh n] [--jobs n]
 //! repro dse       [--mesh n] [--artifacts dir] [--jobs n]
-//! repro bench     [--out path] [--quick]
+//! repro bench     [--out path] [--quick] [--profile]
 //! ```
 //!
 //! `--jobs n` controls the parallel sweep runner: every sweep/ablation
@@ -465,8 +465,19 @@ fn dse(args: &Args) -> anyhow::Result<()> {
 
 /// `repro bench`: the end-to-end performance scenarios of
 /// `cargo bench --bench bench_e2e`, runnable from the installed binary,
-/// writing the `BENCH_e2e.json` trajectory file.
+/// writing the `BENCH_e2e.json` trajectory file. With `--profile` it
+/// instead runs the per-phase wall-time profiler over the saturated
+/// scenarios and writes the `floonoc-profile/1` report
+/// (`BENCH_profile.json` unless `--out` overrides).
 fn bench(args: &Args) -> anyhow::Result<()> {
+    if args.flag("profile") {
+        let profiles = floonoc::perf::profile::run_profile(args.flag("quick"));
+        let path = match args.opt("out") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => floonoc::perf::profile::default_profile_path(),
+        };
+        return floonoc::perf::profile::write_profile(&profiles, &path);
+    }
     let report = floonoc::perf::run_e2e(args.flag("quick"));
     let path = match args.opt("out") {
         Some(p) => std::path::PathBuf::from(p),

@@ -262,6 +262,15 @@ impl LinkPool for ShardLinks<'_> {
             .expect("buffered on non-owned link")
             .buffered()
     }
+
+    fn occupied_lanes(&self, lid: LinkId) -> u32 {
+        // Only consulted for a router's input links, which are always
+        // owned by the router's own shard (consumer-side ownership).
+        self.links[lid]
+            .as_ref()
+            .expect("occupied_lanes on non-owned link")
+            .occupied_lanes()
+    }
 }
 
 /// The sharded engine's [`LocalPort`]: offers into the shard-local link
@@ -317,8 +326,8 @@ fn drain_mailbox(shard: &mut Shard, shared: &Shared) {
 
 /// Phase 1, gated: sweep the shard's active set, delivering owned
 /// links, waking their sink routers and publishing boundary credit
-/// mirrors. The serial `Network::step_gated` delivery sweep, restricted
-/// to owned links.
+/// mirrors. The serial `Network::deliver_gated` sweep, restricted to
+/// owned links.
 fn deliver_gated(snet: &mut ShardNet, tn: &NetTables, mirror: &[AtomicU8], me: usize, check: bool) {
     if check {
         for &lid in &tn.owned_links[me] {
@@ -359,8 +368,8 @@ fn deliver_gated(snet: &mut ShardNet, tn: &NetTables, mirror: &[AtomicU8], me: u
 }
 
 /// Phase 1, dense: deliver every owned link in ascending order,
-/// publishing boundary mirrors. The serial `Network::step_dense`
-/// delivery sweep, restricted to owned links.
+/// publishing boundary mirrors. The serial `Network::deliver_dense`
+/// sweep, restricted to owned links.
 fn deliver_dense(snet: &mut ShardNet, tn: &NetTables, mirror: &[AtomicU8], me: usize) {
     for &lid in &tn.owned_links[me] {
         let link = snet.links[lid].as_mut().expect("owned link missing");

@@ -358,7 +358,7 @@ pub struct Network {
 impl Network {
     /// Mark a link as holding flits (wake edge at commit time). Called
     /// for every producer-side [`Link::offer`]: router commits wake
-    /// their output links internally via [`Network::step_gated`]; NI
+    /// their output links internally via [`Network::route_gated`]; NI
     /// injection calls this directly.
     #[inline]
     pub(crate) fn wake_link(&mut self, lid: LinkId) {
@@ -376,25 +376,15 @@ impl Network {
         self.link_active.contains(lid)
     }
 
-    /// One activity-gated cycle of this network, equivalent to
-    /// [`Network::step_dense`] by construction:
-    ///
-    /// 1. **link sweep** — only links in the active set deliver. A link
-    ///    whose buffer holds flits afterwards wakes its sink router; a
-    ///    link left with zero occupancy is pruned from the set (it can
-    ///    only re-enter via an offer-time wake edge).
-    /// 2. **router sweep** — only woken routers step. Every output port
-    ///    that accepted a flit during commit wakes its output link so
-    ///    next cycle's link sweep visits it.
-    ///
-    /// Skipped components are exactly those whose step would have been
-    /// a no-op (empty links return immediately; routers with empty
-    /// input buffers never pass the compute phase), so all statistics
-    /// are byte-identical to dense stepping.
-    pub(crate) fn step_gated(&mut self) {
+    /// Phase 1 of an activity-gated cycle: the **link sweep**. Only
+    /// links in the active set deliver. A link whose buffer holds flits
+    /// afterwards wakes its sink router (filling `router_wake` for
+    /// [`Network::route_gated`]); a link left with zero occupancy is
+    /// pruned from the set (it can only re-enter via an offer-time wake
+    /// edge).
+    pub(crate) fn deliver_gated(&mut self) {
         let Network {
             links,
-            routers,
             link_sink,
             link_active,
             router_wake,
@@ -433,6 +423,26 @@ impl Network {
                 }
             }
         }
+    }
+
+    /// Phase 2 of an activity-gated cycle: the **router sweep**. Only
+    /// routers woken by [`Network::deliver_gated`] step. Every output
+    /// port that accepted a flit during commit wakes its output link so
+    /// next cycle's link sweep visits it.
+    ///
+    /// Skipped components are exactly those whose step would have been
+    /// a no-op (empty links return immediately; routers with empty
+    /// input buffers never pass the compute phase), so all statistics
+    /// are byte-identical to dense stepping.
+    pub(crate) fn route_gated(&mut self) {
+        let Network {
+            links,
+            routers,
+            link_active,
+            router_wake,
+            check_invariants,
+            ..
+        } = self;
         // Wake-completeness invariant (debug builds, or any build with
         // `--check-invariants`): every router with a non-empty input
         // buffer must have been woken by the link sweep — a miss here
@@ -466,16 +476,20 @@ impl Network {
         }
     }
 
-    /// One dense reference cycle: every link delivers, every router
-    /// steps. The oracle for differential testing of the gated loop.
-    pub(crate) fn step_dense(&mut self) {
+    /// Phase 1 of a dense reference cycle: every link delivers.
+    pub(crate) fn deliver_dense(&mut self) {
         for l in &mut self.links {
             l.deliver();
         }
+    }
+
+    /// Phase 2 of a dense reference cycle: every router steps.
+    pub(crate) fn route_dense(&mut self) {
         for r in &mut self.routers {
             r.step(&mut self.links);
         }
     }
+
 }
 
 /// Per-node NI bundle: initiators exist on tiles only.
@@ -660,27 +674,46 @@ impl NocSystem {
     /// fast-forward `now` over a provably idle stretch (see
     /// `try_fast_forward`), then executes one real cycle at the
     /// (possibly jumped-to) time.
+    ///
+    /// The cycle is composed of four phase helpers — [`Self::pre_step`],
+    /// [`Self::link_phase`], [`Self::router_phase`], [`Self::ni_phase`] —
+    /// so the profiler (`perf::profile`) can time each phase separately
+    /// while production runs pay only straight-line calls.
     pub fn step(&mut self) {
-        let event_mode = self.cfg.sim_mode == SimMode::Event;
-        if event_mode {
+        self.pre_step();
+        self.link_phase();
+        self.router_phase();
+        self.ni_phase();
+    }
+
+    /// Phase 0: event-mode fast-forward and cycle bookkeeping. Must run
+    /// exactly once per cycle, before any component is stepped.
+    pub(crate) fn pre_step(&mut self) {
+        if self.cfg.sim_mode == SimMode::Event {
             self.try_fast_forward();
         }
         self.stepped_cycles += 1;
-        let now = self.now;
-        // Phases 1+2 per network. Gated mode (default) sweeps only the
-        // active-set bits — cost tracks activity, not fabric size; its
-        // empty-set case subsumes the whole-network idle skip. Event
-        // mode runs the same gated sweep (fast-forward changed only
-        // `now`, never component state). Dense mode is the reference
-        // sweep, still guarded by the flit-conservation skip (a network
-        // with no flit in flight has nothing to deliver and every
-        // router's compute phase would see empty inputs — both sweeps
-        // are no-ops by construction; wormhole locks and arbiter state
-        // are untouched either way).
+    }
+
+    /// Phase 1: every network's link sweep. Gated mode (default) sweeps
+    /// only the active-set bits — cost tracks activity, not fabric size;
+    /// its empty-set case subsumes the whole-network idle skip. Event
+    /// mode runs the same gated sweep (fast-forward changed only `now`,
+    /// never component state). Dense mode is the reference sweep, still
+    /// guarded by the flit-conservation skip (a network with no flit in
+    /// flight has nothing to deliver — the sweep is a no-op by
+    /// construction).
+    ///
+    /// Running *all* networks' link sweeps before *any* network's router
+    /// sweep is digest-equivalent to interleaving them per network:
+    /// networks share no links, routers, or counters within phases 1–2
+    /// (counters change only in phase 3). The sharded engine already
+    /// orders its phases this way.
+    pub(crate) fn link_phase(&mut self) {
         match self.cfg.sim_mode {
             SimMode::Gated | SimMode::Event => {
                 for net in &mut self.nets {
-                    net.step_gated();
+                    net.deliver_gated();
                 }
             }
             SimMode::Dense => {
@@ -688,11 +721,40 @@ impl NocSystem {
                     if self.in_flight(n) == 0 {
                         continue;
                     }
-                    self.nets[n].step_dense();
+                    self.nets[n].deliver_dense();
                 }
             }
         }
-        // Phase 3: NIs terminate and inject.
+    }
+
+    /// Phase 2: every network's router sweep. The dense-mode
+    /// flit-conservation skip is recomputed here; that is safe because
+    /// the counters it reads change only in phase 3, so both phases see
+    /// the same verdict (a skipped network's router sweep would see
+    /// empty inputs and no-op; wormhole locks and arbiter state are
+    /// untouched either way).
+    pub(crate) fn router_phase(&mut self) {
+        match self.cfg.sim_mode {
+            SimMode::Gated | SimMode::Event => {
+                for net in &mut self.nets {
+                    net.route_gated();
+                }
+            }
+            SimMode::Dense => {
+                for n in 0..self.nets.len() {
+                    if self.in_flight(n) == 0 {
+                        continue;
+                    }
+                    self.nets[n].route_dense();
+                }
+            }
+        }
+    }
+
+    /// Phase 3: NIs terminate and inject, then the clock advances.
+    pub(crate) fn ni_phase(&mut self) {
+        let event_mode = self.cfg.sim_mode == SimMode::Event;
+        let now = self.now;
         let plan = self.plan;
         for idx in 0..self.nodes.len() {
             self.eject_node(idx, now);

@@ -14,6 +14,10 @@
 //!   narrow + wide traffic at full rate: the gated loop's worst case
 //!   (bar: within 5% of dense — the active set is allowed to cost its
 //!   bookkeeping only when it buys nothing);
+//! * **saturated_8x8** — the same full-rate uniform traffic on an 8×8
+//!   mesh: four times the routers per cycle, so the per-cycle hot
+//!   loops (switch allocation, link delivery) dominate — the record
+//!   the bitmask/memoization optimisations are tracked against;
 //! * **wrap_saturated** — the same full-rate uniform traffic on a 4×4
 //!   torus with its default 2 dateline VCs: the VC switch's cps record
 //!   (this workload deadlocked — or needed crippled outstanding budgets
@@ -37,7 +41,18 @@
 //!
 //! Results are written as `BENCH_e2e.json` at the repository root so the
 //! performance trajectory is recorded PR-over-PR (see
-//! `docs/performance.md` for how to read the file).
+//! `docs/performance.md` for how to read the file). Every scenario
+//! object carries a `"provenance"` field; reports written by this code
+//! are always `"measured"` (the checked-in trajectory file may carry
+//! `"estimated-offline"` entries until the first post-merge CI run
+//! refreshes them).
+//!
+//! The [`profile`] submodule is the companion *phase* profiler
+//! (`repro bench --profile`): instead of comparing step modes it
+//! attributes wall time inside one saturated gated run to the per-cycle
+//! phases (link deliver / router sweep / NI / generators).
+
+pub mod profile;
 
 use std::path::{Path, PathBuf};
 
@@ -201,9 +216,13 @@ impl ModeComparison {
         }
     }
 
-    /// JSON object for the report file.
+    /// JSON object for the report file. Reports this code writes are
+    /// always freshly measured; the per-scenario `provenance` field
+    /// exists so the checked-in trajectory file can distinguish them
+    /// from `"estimated-offline"` placeholder entries.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("provenance", Json::Str("measured".into())),
             ("cycles", Json::Num(self.cycles as f64)),
             ("dense_cps", Json::Num(self.dense_cps)),
             ("gated_cps", Json::Num(self.gated_cps)),
@@ -271,9 +290,11 @@ impl EventComparison {
         }
     }
 
-    /// JSON object for the report file.
+    /// JSON object for the report file (`provenance`: see
+    /// [`ModeComparison::to_json`]).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("provenance", Json::Str("measured".into())),
             ("cycles", Json::Num(self.gated.cycles as f64)),
             ("gated_cps", Json::Num(self.gated.cycles_per_second())),
             ("event_cps", Json::Num(self.event.cycles_per_second())),
@@ -352,9 +373,11 @@ impl ShardComparison {
         }
     }
 
-    /// JSON object for the report file.
+    /// JSON object for the report file (`provenance`: see
+    /// [`ModeComparison::to_json`]).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("provenance", Json::Str("measured".into())),
             ("cycles", Json::Num(self.cycles as f64)),
             ("shards", Json::Num(self.shards as f64)),
             ("serial_cps", Json::Num(self.serial_cps)),
@@ -433,9 +456,11 @@ impl SweepComparison {
         self.serial_seconds / self.parallel_seconds.max(1e-9)
     }
 
-    /// JSON object for the report file.
+    /// JSON object for the report file (`provenance`: see
+    /// [`ModeComparison::to_json`]).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("provenance", Json::Str("measured".into())),
             ("points", Json::Num(self.points as f64)),
             ("threads", Json::Num(self.threads as f64)),
             ("serial_seconds", Json::Num(self.serial_seconds)),
@@ -507,6 +532,12 @@ pub struct E2eReport {
     pub sparse: ModeComparison,
     /// Saturated scenario (gating's worst case; bar: ≥ 0.95×).
     pub saturated: ModeComparison,
+    /// Saturated scenario scaled to an 8×8 mesh — the hot-path
+    /// optimisation record (bitmask switch allocation, memoized route
+    /// lookups, flattened lanes): four times the routers of
+    /// `saturated_4x4`, so per-cycle loop cost dominates and the entry
+    /// tracks the allocator/link inner loops PR-over-PR.
+    pub saturated8: ModeComparison,
     /// Wrap-saturation scenario on a 2-VC torus (the dateline-VC
     /// feature's cps record; no bar — the entry tracks the VC switch's
     /// cost PR-over-PR).
@@ -559,6 +590,9 @@ pub fn run_e2e(quick: bool) -> E2eReport {
         sparse_trace_workload(8, m)
     });
     let saturated = compare_modes("saturated_4x4", sat_cycles, |m| saturated_workload(4, m));
+    // The 8×8 saturated entry runs fewer cycles — four times the
+    // routers per cycle keeps the measured wall time comparable.
+    let saturated8 = compare_modes("saturated_8x8", sat_cycles / 2, |m| saturated_workload(8, m));
     let wrap = compare_modes("wrap_saturated_torus_4x4", sat_cycles, |m| {
         wrap_saturated_workload(4, m)
     });
@@ -643,6 +677,7 @@ pub fn run_e2e(quick: bool) -> E2eReport {
     E2eReport {
         sparse,
         saturated,
+        saturated8,
         wrap,
         duty,
         sharded,
@@ -664,6 +699,7 @@ pub fn report_to_json(r: &E2eReport) -> Json {
             Json::obj(vec![
                 (r.sparse.name.as_str(), r.sparse.to_json()),
                 (r.saturated.name.as_str(), r.saturated.to_json()),
+                (r.saturated8.name.as_str(), r.saturated8.to_json()),
                 (r.wrap.name.as_str(), r.wrap.to_json()),
                 (r.duty.name.as_str(), r.duty.to_json()),
                 (r.sharded.name.as_str(), r.sharded.to_json()),
@@ -836,6 +872,12 @@ mod tests {
                 dense_cps: 100.0,
                 gated_cps: 99.0,
             },
+            saturated8: ModeComparison {
+                name: "saturated_8x8".into(),
+                cycles: 5,
+                dense_cps: 50.0,
+                gated_cps: 49.0,
+            },
             wrap: ModeComparison {
                 name: "wrap_saturated_torus_4x4".into(),
                 cycles: 10,
@@ -883,6 +925,14 @@ mod tests {
         );
         let sparse = j.get("scenarios").and_then(|s| s.get("sparse_trace_8x8")).unwrap();
         assert_eq!(sparse.get("gated_speedup").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(
+            sparse.get("provenance").and_then(Json::as_str),
+            Some("measured"),
+            "every scenario object records its provenance"
+        );
+        let sat8 = j.get("scenarios").and_then(|s| s.get("saturated_8x8")).unwrap();
+        assert_eq!(sat8.get("cycles").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(sat8.get("provenance").and_then(Json::as_str), Some("measured"));
         let duty = j.get("scenarios").and_then(|s| s.get("duty_cycled_8x8")).unwrap();
         // 120 cycles / 0.02 s = 6000 c/s event vs 100 / 0.1 = 1000 gated.
         assert_eq!(duty.get("event_speedup").and_then(Json::as_f64), Some(6.0));

@@ -1,0 +1,305 @@
+//! Per-phase wall-time profiler for the saturated hot path
+//! (`repro bench --profile`; JSON schema `floonoc-profile/1`).
+//!
+//! The e2e bench ([`super::run_e2e`]) answers "how fast is a cycle";
+//! this module answers "where does a cycle's time go". One saturated
+//! gated run is stepped through [`NocSystem`]'s phase helpers with a
+//! timestamp between each, attributing wall time to:
+//!
+//! * **link_deliver** — every network's link sweep (active-set walk +
+//!   [`crate::sim::Link::deliver`] per occupied link);
+//! * **router_sweep** — every network's router sweep (route compute +
+//!   switch allocation + commit);
+//! * **ni** — NI termination/injection plus the clock advance;
+//! * **generators** — the harness generator pass (traffic issue);
+//! * **gating_overhead** — the pre-step bookkeeping (event-mode
+//!   fast-forward check, cycle accounting) plus the residual between
+//!   the whole run's wall time and the sum of the timed phases — i.e.
+//!   the loop and timestamping cost the profiler itself adds. The
+//!   active-set word scans *inside* the sweeps are deliberately charged
+//!   to their sweep: they are inseparable from the work they gate.
+//!
+//! Shares therefore sum to exactly 1.0 by construction. Caveat: each
+//! profiled cycle takes five `Instant::now()` calls (tens of
+//! nanoseconds each), so on very small fabrics the `gating_overhead`
+//! bucket can be a visible fraction — compare shares, and compare cps
+//! against the untimed bench figures, not across fabric sizes.
+//!
+//! Results go to `BENCH_profile.json` at the repository root (CI
+//! uploads it next to the `BENCH_e2e.json` artifact).
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::cluster::TiledWorkload;
+use crate::sim::SimMode;
+use crate::util::json::{pretty, Json};
+
+use super::{saturated_workload, wrap_saturated_workload};
+
+/// Wall-time attribution of one profiled scenario run.
+#[derive(Debug, Clone)]
+pub struct PhaseProfile {
+    /// Scenario name (JSON key in the report).
+    pub name: String,
+    /// Simulated cycles in the timed region.
+    pub cycles: u64,
+    /// Whole-run wall time in seconds (outer timer, not the phase sum).
+    pub total_seconds: f64,
+    /// Seconds in the link-delivery sweeps.
+    pub link_deliver: f64,
+    /// Seconds in the router sweeps.
+    pub router_sweep: f64,
+    /// Seconds in NI termination/injection.
+    pub ni: f64,
+    /// Seconds in the harness generator pass.
+    pub generators: f64,
+    /// Seconds of pre-step bookkeeping plus the profiler's own loop and
+    /// timestamping residual (see the module docs).
+    pub gating_overhead: f64,
+}
+
+impl PhaseProfile {
+    /// Simulated cycles per wall second over the whole timed region.
+    pub fn cps(&self) -> f64 {
+        self.cycles as f64 / self.total_seconds.max(1e-9)
+    }
+
+    /// A phase's share of the total (0.0 when the run was too fast to
+    /// time).
+    fn share(&self, seconds: f64) -> f64 {
+        if self.total_seconds > 0.0 {
+            seconds / self.total_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// JSON object for the profile file: per-phase `seconds` + `share`,
+    /// shares summing to 1.0 by construction.
+    pub fn to_json(&self) -> Json {
+        let phase = |s: f64| {
+            Json::obj(vec![
+                ("seconds", Json::Num(s)),
+                ("share", Json::Num(self.share(s))),
+            ])
+        };
+        Json::obj(vec![
+            ("cycles", Json::Num(self.cycles as f64)),
+            ("total_seconds", Json::Num(self.total_seconds)),
+            ("cps", Json::Num(self.cps())),
+            (
+                "phases",
+                Json::obj(vec![
+                    ("link_deliver", phase(self.link_deliver)),
+                    ("router_sweep", phase(self.router_sweep)),
+                    ("ni", phase(self.ni)),
+                    ("generators", phase(self.generators)),
+                    ("gating_overhead", phase(self.gating_overhead)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Step `w` for `cycles` cycles with a timestamp between every phase,
+/// accumulating per-phase wall time. Behaviourally identical to calling
+/// [`TiledWorkload::step`] `cycles` times — the phase helpers are the
+/// same code `step` composes, in the same order — so a profiled run's
+/// statistics match an unprofiled one bit for bit.
+pub fn profile_workload(name: &str, cycles: u64, w: &mut TiledWorkload) -> PhaseProfile {
+    let mut link_deliver = 0.0f64;
+    let mut router_sweep = 0.0f64;
+    let mut ni = 0.0f64;
+    let mut generators = 0.0f64;
+    let mut pre = 0.0f64;
+    let run0 = Instant::now();
+    for _ in 0..cycles {
+        let t0 = Instant::now();
+        w.sys.pre_step();
+        let t1 = Instant::now();
+        w.sys.link_phase();
+        let t2 = Instant::now();
+        w.sys.router_phase();
+        let t3 = Instant::now();
+        w.sys.ni_phase();
+        let t4 = Instant::now();
+        for t in &mut w.tiles {
+            t.step(&mut w.sys);
+        }
+        let t5 = Instant::now();
+        pre += (t1 - t0).as_secs_f64();
+        link_deliver += (t2 - t1).as_secs_f64();
+        router_sweep += (t3 - t2).as_secs_f64();
+        ni += (t4 - t3).as_secs_f64();
+        generators += (t5 - t4).as_secs_f64();
+    }
+    let total_seconds = run0.elapsed().as_secs_f64();
+    // Residual = outer timer minus the phase sum: loop control and the
+    // Instant calls themselves. Folded into the overhead bucket so the
+    // shares partition the total exactly.
+    let residual = (total_seconds - (pre + link_deliver + router_sweep + ni + generators)).max(0.0);
+    let p = PhaseProfile {
+        name: name.to_string(),
+        cycles,
+        total_seconds,
+        link_deliver,
+        router_sweep,
+        ni,
+        generators,
+        gating_overhead: pre + residual,
+    };
+    println!(
+        "{:<24} {:>10.0} c/s | link {:>4.1}% | router {:>4.1}% | ni {:>4.1}% | gen {:>4.1}% | overhead {:>4.1}%",
+        p.name,
+        p.cps(),
+        100.0 * p.share(p.link_deliver),
+        100.0 * p.share(p.router_sweep),
+        100.0 * p.share(p.ni),
+        100.0 * p.share(p.generators),
+        100.0 * p.share(p.gating_overhead),
+    );
+    p
+}
+
+/// Profile the three saturated scenarios (4×4 mesh, 4×4 torus, 8×8
+/// mesh) under gated stepping — the hot-path record the bitmask
+/// allocator and flattened lanes are measured against. `quick` shrinks
+/// the cycle budget for CI smoke runs.
+pub fn run_profile(quick: bool) -> Vec<PhaseProfile> {
+    let cycles = if quick { 2_000 } else { 8_000 };
+    println!("== phase profile: saturated scenarios, gated stepping ==");
+    let mut out = Vec::new();
+    let mut w = saturated_workload(4, SimMode::Gated);
+    out.push(profile_workload("saturated_4x4", cycles, &mut w));
+    let mut w = wrap_saturated_workload(4, SimMode::Gated);
+    out.push(profile_workload("wrap_saturated_torus_4x4", cycles, &mut w));
+    let mut w = saturated_workload(8, SimMode::Gated);
+    out.push(profile_workload("saturated_8x8", cycles / 2, &mut w));
+    out
+}
+
+/// Serialize profiles to the `floonoc-profile/1` schema.
+pub fn profile_to_json(profiles: &[PhaseProfile]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("floonoc-profile/1".into())),
+        ("mode", Json::Str(SimMode::Gated.name().into())),
+        (
+            "scenarios",
+            Json::Obj(
+                profiles
+                    .iter()
+                    .map(|p| (p.name.clone(), p.to_json()))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Default location of the profile file: the repository root, next to
+/// `BENCH_e2e.json` (same relocation fallback as
+/// [`super::default_report_path`]).
+pub fn default_profile_path() -> PathBuf {
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    if repo_root.is_dir() {
+        repo_root.join("BENCH_profile.json")
+    } else {
+        PathBuf::from("BENCH_profile.json")
+    }
+}
+
+/// Write profiles as pretty JSON to `path`.
+pub fn write_profile(profiles: &[PhaseProfile], path: &Path) -> crate::Result<()> {
+    use anyhow::Context;
+    let text = format!("{}\n", pretty(&profile_to_json(profiles)));
+    std::fs::write(path, text)
+        .with_context(|| format!("writing phase profile to {}", path.display()))?;
+    println!("phase profile written to {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A profiled run is behaviourally identical to an unprofiled one:
+    /// same clock, same injected/ejected counters, bit for bit.
+    #[test]
+    fn profiled_run_matches_plain_stepping() {
+        let mut plain = saturated_workload(4, SimMode::Gated);
+        for _ in 0..400 {
+            plain.step();
+        }
+        let mut profiled = saturated_workload(4, SimMode::Gated);
+        profile_workload("unit", 400, &mut profiled);
+        assert_eq!(plain.sys.now, profiled.sys.now);
+        for (n, (a, b)) in plain
+            .sys
+            .counters
+            .iter()
+            .zip(&profiled.sys.counters)
+            .enumerate()
+        {
+            assert_eq!(
+                (a.injected, a.ejected),
+                (b.injected, b.ejected),
+                "profiled net{n} counters must match plain stepping"
+            );
+        }
+    }
+
+    /// Shares partition the total: they are non-negative and sum to 1
+    /// (the residual is folded into the overhead bucket).
+    #[test]
+    fn shares_partition_the_total() {
+        let mut w = saturated_workload(4, SimMode::Gated);
+        let p = profile_workload("unit", 200, &mut w);
+        assert_eq!(p.cycles, 200);
+        assert!(p.total_seconds > 0.0);
+        let parts = [
+            p.link_deliver,
+            p.router_sweep,
+            p.ni,
+            p.generators,
+            p.gating_overhead,
+        ];
+        assert!(parts.iter().all(|&s| s >= 0.0));
+        let sum: f64 = parts.iter().map(|&s| p.share(s)).sum();
+        assert!(
+            (sum - 1.0).abs() < 1e-6,
+            "phase shares must sum to 1.0, got {sum}"
+        );
+        assert!(p.cps() > 0.0);
+    }
+
+    #[test]
+    fn profile_json_shape() {
+        let p = PhaseProfile {
+            name: "saturated_4x4".into(),
+            cycles: 100,
+            total_seconds: 1.0,
+            link_deliver: 0.3,
+            router_sweep: 0.4,
+            ni: 0.15,
+            generators: 0.1,
+            gating_overhead: 0.05,
+        };
+        let j = profile_to_json(std::slice::from_ref(&p));
+        assert_eq!(
+            j.get("schema").and_then(Json::as_str),
+            Some("floonoc-profile/1")
+        );
+        assert_eq!(j.get("mode").and_then(Json::as_str), Some("gated"));
+        let sat = j
+            .get("scenarios")
+            .and_then(|s| s.get("saturated_4x4"))
+            .unwrap();
+        assert_eq!(sat.get("cps").and_then(Json::as_f64), Some(100.0));
+        let router = sat
+            .get("phases")
+            .and_then(|ph| ph.get("router_sweep"))
+            .unwrap();
+        assert_eq!(router.get("seconds").and_then(Json::as_f64), Some(0.4));
+        assert_eq!(router.get("share").and_then(Json::as_f64), Some(0.4));
+    }
+}

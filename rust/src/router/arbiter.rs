@@ -12,6 +12,7 @@ impl RoundRobin {
     /// An `n`-requestor arbiter; index 0 wins the first tie.
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
+        debug_assert!(n <= 32, "arbitrate_mask packs requesters into a u32");
         RoundRobin { n, next: 0 }
     }
 
@@ -31,6 +32,36 @@ impl RoundRobin {
             if requesting(i) {
                 self.next = (i + 1) % self.n;
                 return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Bitmask variant of [`arbitrate_with`](Self::arbitrate_with):
+    /// requesters are the set bits of `mask` (bit `i` ⇔ requester `i`),
+    /// and `accept(i)` applies any further per-requester gate (e.g.
+    /// credit checks). Probes only set bits — in the exact order the
+    /// linear scan would visit them: set bits at or above the priority
+    /// pointer ascending, then set bits below it ascending — and
+    /// advances the pointer only on a grant, so the grant sequence is
+    /// identical to `arbitrate_with` restricted to `mask`.
+    #[inline]
+    pub fn arbitrate_mask<F: Fn(usize) -> bool>(&mut self, mask: u32, accept: F) -> Option<usize> {
+        if mask == 0 {
+            return None;
+        }
+        // `next < n <= 32`; `next == 0` makes `hi` the whole mask and
+        // the low part empty, matching a scan that starts at bit 0.
+        let hi = if self.next == 0 { mask } else { mask & (u32::MAX << self.next) };
+        for part in [hi, mask & !hi] {
+            let mut m = part;
+            while m != 0 {
+                let i = m.trailing_zeros() as usize;
+                if accept(i) {
+                    self.next = (i + 1) % self.n;
+                    return Some(i);
+                }
+                m &= m - 1;
             }
         }
         None
@@ -72,5 +103,57 @@ mod tests {
             grants[g] += 1;
         }
         assert_eq!(grants, [100, 100, 100, 100]);
+    }
+
+    #[test]
+    fn mask_matches_linear_probe_grant_for_grant() {
+        // Twin arbiters over the same request sequence: the bitmask
+        // walk must reproduce the linear probe's grants exactly,
+        // including the advance-only-on-grant pointer rule.
+        let mut linear = RoundRobin::new(10);
+        let mut masked = RoundRobin::new(10);
+        let rounds: [u32; 8] = [
+            0b00_0100_0101, // {0, 2, 6}
+            0b00_0100_0101,
+            0b10_0000_0001, // {0, 9} — wraps past the pointer
+            0b00_0000_0000, // no requests: pointer must not move
+            0b10_0000_0001,
+            0b01_1000_0000, // {7, 8}
+            0b00_0000_0010, // {1} — far below the pointer
+            0b11_1111_1111, // everyone
+        ];
+        let mut got = Vec::new();
+        for mask in rounds {
+            let a = linear.arbitrate_with(|i| mask & (1 << i) != 0);
+            let b = masked.arbitrate_mask(mask, |_| true);
+            assert_eq!(a, b, "twin arbiters diverged on mask {mask:#b}");
+            got.push(a);
+        }
+        assert_eq!(
+            got,
+            vec![
+                Some(0),
+                Some(2),
+                Some(9),
+                None,
+                Some(0),
+                Some(7),
+                Some(1),
+                Some(2),
+            ]
+        );
+    }
+
+    #[test]
+    fn mask_respects_accept_gate() {
+        // A set bit whose accept() says no must be skipped without
+        // advancing the pointer past it.
+        let mut a = RoundRobin::new(6);
+        assert_eq!(a.arbitrate_mask(0b000110, |i| i != 1), Some(2));
+        // Pointer now at 3; 1 requests again and is accepted.
+        assert_eq!(a.arbitrate_mask(0b000010, |_| true), Some(1));
+        // Everything refused: no grant, pointer stays at 2.
+        assert_eq!(a.arbitrate_mask(0b111111, |_| false), None);
+        assert_eq!(a.arbitrate_mask(0b111111, |_| true), Some(2));
     }
 }

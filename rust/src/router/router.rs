@@ -70,6 +70,12 @@ pub trait LinkPool {
     fn offer_vc(&mut self, lid: LinkId, vc: usize, flit: FlooFlit);
     /// Flits buffered at the consumer side of link `lid`, all lanes.
     fn buffered(&self, lid: LinkId) -> usize;
+    /// Bitmask of lanes of link `lid` whose consumer buffer holds at
+    /// least one delivered flit (bit `v` ⇔ lane `v` has a head to
+    /// peek). Lets the route-compute pass skip empty lanes without
+    /// probing each one. Only meaningful for a router's *input* links —
+    /// the sharded engine answers it for owned links only.
+    fn occupied_lanes(&self, lid: LinkId) -> u32;
 }
 
 impl LinkPool for [Link<FlooFlit>] {
@@ -91,6 +97,9 @@ impl LinkPool for [Link<FlooFlit>] {
     fn buffered(&self, lid: LinkId) -> usize {
         self[lid].buffered()
     }
+    fn occupied_lanes(&self, lid: LinkId) -> u32 {
+        self[lid].occupied_lanes()
+    }
 }
 
 impl LinkPool for Vec<Link<FlooFlit>> {
@@ -111,6 +120,9 @@ impl LinkPool for Vec<Link<FlooFlit>> {
     }
     fn buffered(&self, lid: LinkId) -> usize {
         self.as_slice().buffered(lid)
+    }
+    fn occupied_lanes(&self, lid: LinkId) -> u32 {
+        self.as_slice().occupied_lanes(lid)
     }
 }
 
@@ -187,9 +199,19 @@ pub struct Router {
     /// Routing table (dst node -> output port, plus the dateline mask).
     pub table: RouteTable,
     outputs: Vec<OutputState>,
-    /// Reusable route-computation scratch, indexed `input * vcs + vc`
-    /// (avoids per-cycle allocation).
-    want: Vec<Option<usize>>,
+    /// Memoized route computation, indexed `input * vcs + vc`: the
+    /// output port the lane's *current* head flit routes to, `None`
+    /// when the lane is empty. This router is the sole consumer of its
+    /// input links, so a lane's head changes only when the commit phase
+    /// pops it — the entry stays valid across cycles and a stalled head
+    /// is looked up once, not once per cycle.
+    want: Vec<Option<u8>>,
+    /// Per-output requester bitmask: bit `input * vcs + vc` set ⇔
+    /// `want[input * vcs + vc] == Some(output)`. Lets the commit phase
+    /// skip outputs nobody wants and hands the arbiter a set-bit mask
+    /// instead of a probe-everything closure. Maintained alongside
+    /// `want` (set on route, cleared on pop).
+    req: Vec<u32>,
     /// Total flits forwarded (all ports).
     pub forwarded: u64,
     /// Cycles with at least one forwarded flit (activity factor).
@@ -205,6 +227,10 @@ impl Router {
             "router vcs must be in 1..={MAX_VCS}, got {}",
             cfg.vcs
         );
+        assert!(
+            cfg.ports * cfg.vcs <= 32,
+            "requester bitmasks pack (input, VC) pairs into a u32"
+        );
         let outputs = (0..cfg.ports)
             .map(|_| OutputState {
                 locks: [None; MAX_VCS],
@@ -218,6 +244,7 @@ impl Router {
             table,
             outputs,
             want: vec![None; cfg.ports * cfg.vcs],
+            req: vec![0; cfg.ports],
             cfg,
             forwarded: 0,
             active_cycles: 0,
@@ -258,39 +285,53 @@ impl Router {
         }
     }
 
-    /// Compute phase: fill `want[i * vcs + v] = Some(o)` for every
-    /// input-lane head flit requesting output `o`. Returns false when
-    /// every input is empty — the common case in large meshes, letting
-    /// `step` exit early. The scratch buffer lives in the router (no
-    /// per-cycle allocation).
+    /// Compute phase: ensure `want[i * vcs + v] = Some(o)` (and the
+    /// matching `req[o]` bit) for every input-lane head flit requesting
+    /// output `o`. Only *newly arrived* heads are looked up — a lane
+    /// whose memo survives from last cycle (head unpopped) is skipped,
+    /// and empty lanes are skipped wholesale via the link's occupied
+    /// bitmask. Returns false when every input is empty — the common
+    /// case in large meshes, letting `step` exit early.
     fn compute_requests<P: LinkPool + ?Sized>(&mut self, links: &P) -> bool {
         let ports = self.cfg.ports;
         let vcs = self.cfg.vcs;
         let mut any_input = false;
         for i in 0..ports {
-            for v in 0..vcs {
-                self.want[i * vcs + v] = None;
-            }
             let Some(lid) = self.in_links[i] else { continue };
             // Inject/eject links carry one lane regardless of the
             // router's VC count; neighbour links carry `vcs` lanes.
-            for v in 0..links.vcs(lid).min(vcs) {
-                if let Some(flit) = links.peek_vc(lid, v) {
-                    let o = self.table.lookup(flit.header.dst);
-                    debug_assert!(o < ports, "route table port out of range");
-                    debug_assert!(
-                        o != i,
-                        "loopback disabled: flit at port {i} routed back (dst {:?})",
-                        flit.header.dst
-                    );
+            let nv = links.vcs(lid).min(vcs);
+            let mut occ = links.occupied_lanes(lid) & ((1u32 << nv) - 1);
+            any_input |= occ != 0;
+            while occ != 0 {
+                let v = occ.trailing_zeros() as usize;
+                occ &= occ - 1;
+                let k = i * vcs + v;
+                if let Some(o) = self.want[k] {
+                    // Memo hit: the head was routed when it first
+                    // appeared and this router hasn't popped it since.
                     debug_assert_eq!(
-                        flit.vc as usize,
-                        v,
-                        "flit VC sideband diverged from the lane it rides"
+                        links.peek_vc(lid, v).map(|f| self.table.lookup(f.header.dst)),
+                        Some(o as usize),
+                        "memoized route for input {i} lane {v} went stale"
                     );
-                    self.want[i * vcs + v] = Some(o);
-                    any_input = true;
+                    continue;
                 }
+                let flit = links.peek_vc(lid, v).expect("occupied lane with no head");
+                let o = self.table.lookup(flit.header.dst);
+                debug_assert!(o < ports, "route table port out of range");
+                debug_assert!(
+                    o != i,
+                    "loopback disabled: flit at port {i} routed back (dst {:?})",
+                    flit.header.dst
+                );
+                debug_assert_eq!(
+                    flit.vc as usize,
+                    v,
+                    "flit VC sideband diverged from the lane it rides"
+                );
+                self.want[k] = Some(o as u8);
+                self.req[o] |= 1 << k;
             }
         }
         any_input
@@ -308,8 +349,20 @@ impl Router {
         let vcs = self.cfg.vcs;
         let mut woke: u32 = 0;
         let mut any = false;
+        // Lanes of every input *port* granted a traversal this cycle:
+        // one physical path into the crossbar per port, whatever lane
+        // won, so a granted port's whole lane group is masked out of
+        // later outputs' request sets (the pre-memo switch cleared the
+        // port's scratch entries to the same effect).
+        let mut used_lanes: u32 = 0;
         for o in 0..ports {
             let Some(out_lid) = self.out_links[o] else { continue };
+            // Requesters still eligible this cycle; an output nobody
+            // wants costs one AND and a branch, not an arbiter probe.
+            let avail = self.req[o] & !used_lanes;
+            if avail == 0 {
+                continue;
+            }
             let out_vcs = links.vcs(out_lid);
             let wrap = self.table.crosses_dateline(o);
             // The output lane a traversal (input i, input VC v) lands
@@ -333,34 +386,33 @@ impl Router {
             for (v_out, lock) in locks.iter().enumerate().take(out_vcs) {
                 let Some((li, lv)) = *lock else { continue };
                 let (li, lv) = (li as usize, lv as usize);
+                let k = li * vcs + lv;
                 // Mid-packet, the locked input lane's head (when
                 // present) must still target the locked output — its
                 // packet's remaining flits are the only thing it may
                 // send. A divergent head would deadlock the output lane
                 // silently; fail loudly instead.
                 debug_assert!(
-                    self.want[li * vcs + lv].is_none() || self.want[li * vcs + lv] == Some(o),
+                    self.want[k].is_none() || self.want[k] == Some(o as u8),
                     "locked input {li} (vc {lv}) head diverged from output {o} mid-packet"
                 );
                 debug_assert_eq!(ovc(li, lv), v_out, "lock lane disagrees with dateline rule");
-                if self.want[li * vcs + lv] == Some(o) && links.can_offer_vc(out_lid, v_out) {
+                if (avail >> k) & 1 == 1 && links.can_offer_vc(out_lid, v_out) {
                     winner = Some((li, lv, v_out));
                     break;
                 }
             }
-            // Tier 2 — free lanes: round-robin over (input, VC) pairs
-            // whose dateline-assigned output lane is unlocked and ready.
-            // The arbiter's rotation only advances when it actually
-            // grants, exactly as the pre-VC router never advanced it
-            // while an output was locked or backpressured.
+            // Tier 2 — free lanes: round-robin over the set bits of the
+            // eligible-requester mask (membership already encodes
+            // "wants this output and port unused this cycle"); the
+            // accept gate keeps only the lock and credit checks. The
+            // arbiter's rotation only advances when it actually grants,
+            // exactly as the pre-VC router never advanced it while an
+            // output was locked or backpressured.
             if winner.is_none() {
-                let want = &self.want;
                 let pool = &*links;
                 let arb = &mut self.outputs[o].arb;
-                let grant = arb.arbitrate_with(|k| {
-                    if want[k] != Some(o) {
-                        return false;
-                    }
+                let grant = arb.arbitrate_mask(avail, |k| {
                     let v_out = ovc(k / vcs, k % vcs);
                     locks[v_out].is_none() && pool.can_offer_vc(out_lid, v_out)
                 });
@@ -372,6 +424,15 @@ impl Router {
             let Some((i, v_in, v_out)) = winner else { continue };
             let in_lid = self.in_links[i].unwrap();
             let mut flit = links.pop_vc(in_lid, v_in).unwrap();
+            // The pop retires the lane's head: invalidate its memo (the
+            // next head, if any, is routed on the next compute pass) and
+            // retire its request bit — a lane requests exactly one
+            // output, so clearing `req[o]` covers it.
+            self.want[i * vcs + v_in] = None;
+            self.req[o] &= !(1 << (i * vcs + v_in));
+            // An input *port* feeds at most one output per cycle (one
+            // physical path into the crossbar), whatever lane won.
+            used_lanes |= ((1u32 << vcs) - 1) << (i * vcs);
             self.outputs[o].locks[v_out] = if flit.header.last {
                 None
             } else {
@@ -381,11 +442,6 @@ impl Router {
             links.offer_vc(out_lid, v_out, flit);
             self.outputs[o].forwarded += 1;
             self.forwarded += 1;
-            // An input *port* feeds at most one output per cycle (one
-            // physical path into the crossbar), whatever lane won.
-            for v in 0..vcs {
-                self.want[i * vcs + v] = None;
-            }
             woke |= 1 << o;
             any = true;
         }
@@ -756,6 +812,32 @@ mod tests {
         deliver_all(&mut links);
         let f = links[5 + PORT_E].pop().unwrap();
         assert_eq!((f.header.rob_idx, f.vc), (8, 0), "capped to the only lane");
+    }
+
+    /// Three inputs contending for one output, grant order pinned as a
+    /// literal: the per-output round-robin pointer must visit requester
+    /// slots (LOCAL = 0, S = 6, W = 8 at `vcs = 2`) in rotation and
+    /// advance only on grants, wrapping past slot 9 back to LOCAL. A
+    /// bitmask-walk or memo-invalidation bug fails here with a readable
+    /// diff instead of only tripping the whole-system digest suites.
+    #[test]
+    fn three_input_contention_grant_order_pinned() {
+        let (mut r, mut links) = mini_vc(false);
+        let east = 5 + PORT_E;
+        let mut order = Vec::new();
+        for batch in 0..3u32 {
+            for (src, tag) in [(PORT_LOCAL, 100), (PORT_S, 300), (PORT_W, 400)] {
+                links[src].offer_vc(0, flit_vc(1, true, tag + batch, 0));
+            }
+            deliver_all(&mut links);
+            for _ in 0..3 {
+                r.step(&mut links);
+                deliver_all(&mut links);
+                order.push(links[east].pop_vc(0).unwrap().header.rob_idx / 100);
+            }
+        }
+        assert_eq!(order, vec![1, 3, 4, 1, 3, 4, 1, 3, 4]);
+        assert_eq!(r.forwarded_on(PORT_E), 9);
     }
 
     /// Ejection (a non-cardinal output) resets the VC to 0 — flits hand

@@ -19,6 +19,16 @@ use crate::util::fifo::Fifo;
 /// Opaque link identifier (index into the engine's link table).
 pub type LinkId = usize;
 
+/// Upper bound on virtual-channel lanes per link. Lanes are stored
+/// inline (a fixed array, not a heap `Vec`) so the deliver hot loop
+/// walks one contiguous allocation; matches the router's `MAX_VCS`.
+pub const MAX_LANES: usize = 4;
+
+/// Upper bound on extra pipeline stages per lane. Stages are stored
+/// inline for the same reason; the two-cycle router calibration uses at
+/// most one, long-channel models a few.
+pub const MAX_STAGES: usize = 4;
+
 /// What a [`Link::deliver`] call did, for the activity-gated step loop
 /// (see `docs/performance.md`): whether the link still holds flits (it
 /// must stay in the active set — a flit parked in the last pipeline
@@ -47,8 +57,14 @@ struct Lane<T> {
     reg: Option<T>,
     buf: Fifo<T>,
     /// Extra pipeline registers modelling long routing channels / elastic
-    /// output buffers. `pipe[0]` feeds `buf`; new offers enter the tail.
-    pipe: Vec<Option<T>>,
+    /// output buffers, stored inline (only `pipe[..stages]` is live).
+    /// `pipe[0]` feeds `buf`; new offers enter `pipe[stages - 1]`.
+    pipe: [Option<T>; MAX_STAGES],
+    /// Live prefix length of `pipe` (the configured extra stages).
+    stages: u8,
+    /// Flits currently anywhere in this lane (register + live pipeline
+    /// stages + buffer); drives the link's non-empty-lane bitmask.
+    occ: u16,
     /// Flits that completed delivery into this lane's buffer.
     delivered: u64,
 }
@@ -58,7 +74,9 @@ impl<T> Lane<T> {
         Lane {
             reg: None,
             buf: Fifo::new(buf_depth),
-            pipe: (0..extra_stages).map(|_| None).collect(),
+            pipe: std::array::from_fn(|_| None),
+            stages: extra_stages as u8,
+            occ: 0,
             delivered: 0,
         }
     }
@@ -69,7 +87,19 @@ impl<T> Lane<T> {
 /// per cycle across all lanes), with per-lane stall isolation.
 #[derive(Debug, Clone)]
 pub struct Link<T> {
-    lanes: Vec<Lane<T>>,
+    /// Inline lane storage; only `lanes[..nlanes]` is live (spare lanes
+    /// are empty single-slot stubs that no accessor ever reaches).
+    lanes: [Lane<T>; MAX_LANES],
+    /// Live lane count (the configured `vcs`).
+    nlanes: u8,
+    /// Bit `v` set ⇔ lane `v` holds at least one flit anywhere
+    /// (register, pipeline or buffer). The deliver sweep walks only set
+    /// bits — an empty lane's sub-phases are pure no-ops.
+    lane_occ: u8,
+    /// Bit `v` set ⇔ lane `v`'s consumer buffer is non-empty (i.e.
+    /// `peek_vc(v)` would return `Some`). Consumers use this to skip
+    /// empty lanes without probing each one.
+    buf_occ: u8,
     /// Flits currently anywhere in the link (all lanes: registers +
     /// pipelines + buffers). Kept incrementally so `is_idle` is O(1) —
     /// the drain detector runs every cycle over every link and must not
@@ -108,9 +138,23 @@ impl<T> Link<T> {
     /// SRAM into per-VC regions.
     pub fn with_vcs(buf_depth: usize, vcs: usize, extra_stages: usize) -> Self {
         assert!(vcs >= 1, "a link needs at least one lane");
+        assert!(vcs <= MAX_LANES, "a link carries at most {MAX_LANES} lanes, got {vcs}");
+        assert!(
+            extra_stages <= MAX_STAGES,
+            "a lane carries at most {MAX_STAGES} pipeline stages, got {extra_stages}"
+        );
         let per_lane = (buf_depth / vcs).max(1);
         Link {
-            lanes: (0..vcs).map(|_| Lane::new(per_lane, extra_stages)).collect(),
+            lanes: std::array::from_fn(|v| {
+                if v < vcs {
+                    Lane::new(per_lane, extra_stages)
+                } else {
+                    Lane::new(1, 0)
+                }
+            }),
+            nlanes: vcs as u8,
+            lane_occ: 0,
+            buf_occ: 0,
             occupancy: 0,
             delivered: 0,
             stall_cycles: 0,
@@ -121,7 +165,7 @@ impl<T> Link<T> {
     /// Number of virtual-channel lanes this link carries.
     #[inline]
     pub fn vcs(&self) -> usize {
-        self.lanes.len()
+        self.nlanes as usize
     }
 
     /// Can the producer offer a flit on lane 0 this cycle? Single-lane
@@ -136,11 +180,11 @@ impl<T> Link<T> {
     /// register is empty.)
     #[inline]
     pub fn can_offer_vc(&self, vc: usize) -> bool {
+        debug_assert!(vc < self.nlanes as usize, "lane {vc} out of range");
         let lane = &self.lanes[vc];
-        if let Some(tail) = lane.pipe.last() {
-            tail.is_none()
-        } else {
-            lane.reg.is_none()
+        match lane.stages {
+            0 => lane.reg.is_none(),
+            s => lane.pipe[s as usize - 1].is_none(),
         }
     }
 
@@ -155,14 +199,18 @@ impl<T> Link<T> {
     /// and must check first.
     #[inline]
     pub fn offer_vc(&mut self, vc: usize, flit: T) {
+        debug_assert!(vc < self.nlanes as usize, "lane {vc} out of range");
         let lane = &mut self.lanes[vc];
-        if let Some(tail) = lane.pipe.last_mut() {
+        if lane.stages > 0 {
+            let tail = &mut lane.pipe[lane.stages as usize - 1];
             assert!(tail.is_none(), "offer on busy link (missing can_offer)");
             *tail = Some(flit);
         } else {
             assert!(lane.reg.is_none(), "offer on busy link (missing can_offer)");
             lane.reg = Some(flit);
         }
+        lane.occ += 1;
+        self.lane_occ |= 1 << vc;
         self.occupancy += 1;
     }
 
@@ -193,8 +241,15 @@ impl<T> Link<T> {
         if self.occupancy == 0 {
             return DeliverSummary::default();
         }
-        let mut consumer_ready = false;
-        for lane in &mut self.lanes {
+        // Walk only lanes that hold a flit: an empty lane's sub-phases
+        // are pure no-ops (empty register, empty pipeline, and no
+        // counter or readiness contribution), so skipping clear bits
+        // changes nothing observable.
+        let mut occupied = self.lane_occ;
+        while occupied != 0 {
+            let v = occupied.trailing_zeros() as usize;
+            occupied &= occupied - 1;
+            let lane = &mut self.lanes[v];
             // Phase 1: commit the head register into the input buffer.
             if lane.reg.is_some() {
                 self.busy_cycles += 1;
@@ -204,28 +259,29 @@ impl<T> Link<T> {
                     lane.buf.push(lane.reg.take().unwrap());
                     lane.delivered += 1;
                     self.delivered += 1;
+                    self.buf_occ |= 1 << v;
                 }
             }
             // Phase 2: advance pipeline stages head-first (index 0 feeds
             // the lane register).
-            if !lane.pipe.is_empty() {
+            let stages = lane.stages as usize;
+            if stages > 0 {
                 if lane.reg.is_none() {
                     lane.reg = lane.pipe[0].take();
                 }
-                for i in 1..lane.pipe.len() {
+                for i in 1..stages {
                     if lane.pipe[i - 1].is_none() {
                         lane.pipe[i - 1] = lane.pipe[i].take();
                     }
                 }
             }
-            consumer_ready |= !lane.buf.is_empty();
         }
         // Deliver moves flits *within* the link, so occupancy is exactly
         // what it was at entry (> 0): the link stays active until the
         // consumer pops every lane dry.
         DeliverSummary {
             still_active: true,
-            consumer_ready,
+            consumer_ready: self.buf_occ != 0,
         }
     }
 
@@ -239,6 +295,7 @@ impl<T> Link<T> {
     /// Consumer-side: peek the head of lane `vc`'s input buffer.
     #[inline]
     pub fn peek_vc(&self, vc: usize) -> Option<&T> {
+        debug_assert!(vc < self.nlanes as usize, "lane {vc} out of range");
         self.lanes[vc].buf.front()
     }
 
@@ -252,22 +309,41 @@ impl<T> Link<T> {
     /// Consumer-side: pop the head of lane `vc`'s input buffer.
     #[inline]
     pub fn pop_vc(&mut self, vc: usize) -> Option<T> {
-        let flit = self.lanes[vc].buf.pop();
+        debug_assert!(vc < self.nlanes as usize, "lane {vc} out of range");
+        let lane = &mut self.lanes[vc];
+        let flit = lane.buf.pop();
         if flit.is_some() {
+            lane.occ -= 1;
             self.occupancy -= 1;
+            if lane.buf.is_empty() {
+                self.buf_occ &= !(1 << vc);
+            }
+            if lane.occ == 0 {
+                self.lane_occ &= !(1 << vc);
+            }
         }
         flit
+    }
+
+    /// Bitmask of lanes whose consumer buffer holds at least one
+    /// delivered flit (bit `v` ⇔ [`Self::peek_vc`]`(v)` would return
+    /// `Some`). Maintained incrementally, so consumers (the router's
+    /// route-compute pass) skip empty lanes without probing each one.
+    #[inline]
+    pub fn occupied_lanes(&self) -> u32 {
+        self.buf_occ as u32
     }
 
     /// Number of flits waiting in the input buffers of all lanes.
     #[inline]
     pub fn buffered(&self) -> usize {
-        self.lanes.iter().map(|l| l.buf.len()).sum()
+        self.lanes[..self.nlanes as usize].iter().map(|l| l.buf.len()).sum()
     }
 
     /// Number of flits waiting in lane `vc`'s input buffer.
     #[inline]
     pub fn buffered_vc(&self, vc: usize) -> usize {
+        debug_assert!(vc < self.nlanes as usize, "lane {vc} out of range");
         self.lanes[vc].buf.len()
     }
 
@@ -290,6 +366,11 @@ impl<T> Link<T> {
                 l.reg.is_none() && l.buf.is_empty() && l.pipe.iter().all(Option::is_none)
             }),
             "occupancy counter out of sync"
+        );
+        debug_assert_eq!(
+            self.occupancy == 0,
+            self.lane_occ == 0,
+            "lane-occupancy bitmask out of sync"
         );
         self.occupancy == 0
     }
@@ -314,7 +395,7 @@ impl<T> Link<T> {
     /// Total pipeline latency of the link in cycles (1 + extra stages;
     /// identical for every lane).
     pub fn latency(&self) -> usize {
-        1 + self.lanes[0].pipe.len()
+        1 + self.lanes[0].stages as usize
     }
 }
 
@@ -603,5 +684,33 @@ mod tests {
         assert!(!l.is_idle(), "lane 1 still holds a flit");
         assert_eq!(l.pop_vc(1), Some(2));
         assert!(l.is_idle());
+    }
+
+    /// The non-empty-lane bitmask tracks delivered-and-unconsumed flits
+    /// exactly: a bit is set when a flit lands in that lane's buffer and
+    /// cleared when the consumer pops the lane dry — in-flight flits
+    /// (register/pipeline) do not show.
+    #[test]
+    fn occupied_lanes_bitmask_tracks_buffers() {
+        let mut l: Link<u32> = Link::with_vcs(4, 2, 0);
+        assert_eq!(l.occupied_lanes(), 0);
+        l.offer_vc(1, 7);
+        assert_eq!(l.occupied_lanes(), 0, "in-flight, not yet delivered");
+        l.deliver();
+        assert_eq!(l.occupied_lanes(), 0b10);
+        l.offer_vc(0, 8);
+        l.deliver();
+        assert_eq!(l.occupied_lanes(), 0b11);
+        assert_eq!(l.pop_vc(1), Some(7));
+        assert_eq!(l.occupied_lanes(), 0b01);
+        assert_eq!(l.pop_vc(0), Some(8));
+        assert_eq!(l.occupied_lanes(), 0);
+        assert!(l.is_idle());
+    }
+
+    #[test]
+    #[should_panic(expected = "at most")]
+    fn too_many_lanes_panics() {
+        let _: Link<u32> = Link::with_vcs(8, MAX_LANES + 1, 0);
     }
 }

@@ -27,7 +27,7 @@ pub mod link;
 pub mod engine;
 
 pub use engine::{Engine, SimStats};
-pub use link::{DeliverSummary, Link, LinkId};
+pub use link::{DeliverSummary, Link, LinkId, MAX_LANES, MAX_STAGES};
 
 /// Simulation time in clock cycles.
 pub type Cycle = u64;

@@ -1,4 +1,4 @@
-//! Configuration-consistency lints (`FV101`–`FV105`).
+//! Configuration-consistency lints (`FV101`–`FV106`).
 //!
 //! These are the pipeline's warning tier: each names a configuration
 //! that builds and simulates but is degraded, surprising, or one step
@@ -26,6 +26,13 @@
 //!   from the `rob_slots` config knob — a slot count the header cannot
 //!   index could not echo its grants in hardware, and a zero capacity
 //!   panics at build (`RobAllocator::new`).
+//! * `FV106` — an input-buffer depth smaller than the VC count:
+//!   `Link::with_vcs` splits the configured depth across lanes as
+//!   `(depth / vcs).max(1)`, so every lane collapses to a single
+//!   buffer slot and the built fabric holds `vcs` slots per link —
+//!   *more* than configured, with *less* slack per lane than the
+//!   depth knob suggests (single-slot lanes serialize wormhole
+//!   continuations behind the register stage).
 
 use crate::flit::RobParams;
 use crate::noc::NocConfig;
@@ -33,8 +40,8 @@ use crate::topology::{NodeKind, Topology};
 
 use super::report::{port_label, Category, Finding, Report, Severity};
 
-/// Config-level lints (`FV101`, `FV103`, `FV105`): facts readable from
-/// the [`NocConfig`] knobs plus the fabric geometry.
+/// Config-level lints (`FV101`, `FV103`, `FV105`, `FV106`): facts
+/// readable from the [`NocConfig`] knobs plus the fabric geometry.
 pub fn lint_config(cfg: &NocConfig, topo: &Topology, report: &mut Report) {
     let num_routers = topo.width as usize * topo.height as usize;
     let wraps = (0..num_routers).any(|r| topo.dateline_ports(topo.nodes[r].coord) != 0);
@@ -64,6 +71,31 @@ pub fn lint_config(cfg: &NocConfig, topo: &Topology, report: &mut Report) {
                       so the built fabric is deeper than configured"
                 .to_string(),
             context: vec![],
+        });
+    }
+    // FV106: a depth smaller than the VC count collapses every lane to
+    // the one-slot minimum (`(depth / vcs).max(1)`). Gated on depth >= 1
+    // so a zero depth reports only FV103, not both.
+    if cfg.vcs > 1 && cfg.in_buf_depth >= 1 && cfg.in_buf_depth < cfg.vcs {
+        let per_lane = (cfg.in_buf_depth / cfg.vcs).max(1);
+        report.push(Finding {
+            code: "FV106",
+            severity: Severity::Warning,
+            category: Category::Config,
+            message: format!(
+                "in_buf_depth = {} is below vcs = {}: Link::with_vcs degrades every \
+                 lane to {per_lane} buffer slot(s), so each link carries {} total \
+                 slots instead of the configured {}",
+                cfg.in_buf_depth,
+                cfg.vcs,
+                cfg.vcs * per_lane,
+                cfg.in_buf_depth
+            ),
+            context: vec![
+                "single-slot lanes serialize wormhole continuations behind the \
+                 register stage; raise in_buf_depth to at least vcs"
+                    .to_string(),
+            ],
         });
     }
     // FV105: ROB byte budgets that mismatch the wire format.

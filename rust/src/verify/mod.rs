@@ -9,8 +9,8 @@
 //!
 //! 1. **config lints** ([`lints`]) — wrap fabrics below their dateline
 //!    VC default, dateline bits on non-wrap ports, zero FIFO depths,
-//!    attach-port mismatches, ROB byte-budget mismatches
-//!    (`FV101`–`FV105`, warnings);
+//!    attach-port mismatches, ROB byte-budget mismatches,
+//!    undersized per-VC buffer depths (`FV101`–`FV106`, warnings);
 //! 2. **route sanity** ([`cdg`]) — every `src → dst` route terminates
 //!    within its minimal hop bound, never U-turns, exits through
 //!    connected ports, and stays within the configured VC count

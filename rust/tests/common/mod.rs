@@ -157,3 +157,45 @@ where
         }
     }
 }
+
+/// [`assert_modes_equivalent`] for workloads that **never drain**
+/// (saturated scenarios with `num_txns: u64::MAX`): run every mode ×
+/// shard-count combination to a fixed cycle `horizon` instead of to
+/// completion, then require all digests byte-identical to the serial
+/// dense reference. `run_to_completion` must report *not* drained and
+/// the clock must land exactly on the horizon — a saturated workload
+/// stopping early would mean the equivalence compared fewer cycles than
+/// advertised.
+pub fn assert_modes_equivalent_bounded<F>(label: &str, horizon: u64, mk: F)
+where
+    F: Fn(SimMode) -> TiledWorkload,
+{
+    let run = |mode: SimMode, shards: usize| {
+        let mut w = mk(mode);
+        w.sys.cfg.shards = shards;
+        assert!(
+            !w.run_to_completion(horizon),
+            "{label}/{mode:?}/shards={shards}: a saturated workload must not drain"
+        );
+        assert_eq!(
+            w.sys.now, horizon,
+            "{label}/{mode:?}/shards={shards}: clock must land exactly on the horizon"
+        );
+        assert!(w.protocol_ok(), "{label}/{mode:?}/shards={shards} protocol clean");
+        digest(&mut w)
+    };
+    let dense = run(SimMode::Dense, 1);
+    for shards in [1, 2, 4] {
+        for mode in [SimMode::Dense, SimMode::Gated, SimMode::Event] {
+            if mode == SimMode::Dense && shards == 1 {
+                continue; // the reference itself
+            }
+            let other = run(mode, shards);
+            assert!(
+                other == dense,
+                "{shards}-shard {mode:?} != serial dense for {label}\n\
+                 --- candidate ---\n{other}\n--- dense ---\n{dense}"
+            );
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Bounded-horizon mode-equivalence differential over the **saturated**
+//! bench scenarios (`floonoc::perf`): every tile injecting at full rate,
+//! `num_txns: u64::MAX`, so the workloads never drain and the drain-based
+//! sweep in `mode_equivalence_sweep.rs` cannot cover them. These are
+//! exactly the scenarios the hot-path optimisations (bitmask switch
+//! allocation, memoized route lookups, flattened link lanes) are measured
+//! on — this suite pins that the fast path changes *nothing observable*:
+//! each scenario runs to a fixed cycle horizon under dense / gated /
+//! event stepping at 1, 2 and 4 shards, and every digest must be
+//! byte-identical to the serial dense reference.
+
+mod common;
+
+use floonoc::perf;
+
+#[test]
+fn saturated_4x4_modes_and_shards_identical() {
+    common::assert_modes_equivalent_bounded("saturated_4x4", 1_500, |m| {
+        perf::saturated_workload(4, m)
+    });
+}
+
+#[test]
+fn wrap_saturated_torus_4x4_modes_and_shards_identical() {
+    common::assert_modes_equivalent_bounded("wrap_saturated_torus_4x4", 1_500, |m| {
+        perf::wrap_saturated_workload(4, m)
+    });
+}
+
+#[test]
+fn saturated_8x8_modes_and_shards_identical() {
+    common::assert_modes_equivalent_bounded("saturated_8x8", 800, |m| {
+        perf::saturated_workload(8, m)
+    });
+}

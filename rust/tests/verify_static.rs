@@ -154,6 +154,36 @@ fn three_rings_at_one_vc_are_accepted_with_warnings() {
     }
 }
 
+/// FV106 fires exactly when the input-buffer depth is below the VC
+/// count (every lane collapses to the one-slot minimum), names the
+/// effective per-lane depth, and stays quiet at depth >= vcs and on the
+/// FV103-owned zero-depth case.
+#[test]
+fn undersized_buffer_depth_lints_fv106() {
+    let mut cfg = NocConfig::torus(4, 4); // default: 2 dateline VCs
+    cfg.in_buf_depth = 1;
+    let report = preflight(&cfg);
+    assert!(!report.has_errors(), "a degraded depth is a warning, not an error:\n{report}");
+    let findings = report.with_code("FV106");
+    assert_eq!(findings.len(), 1, "expected exactly one FV106, got:\n{report}");
+    assert!(
+        findings[0].message.contains("1 buffer slot"),
+        "message must name the effective per-lane depth, got: {}",
+        findings[0].message
+    );
+    cfg.in_buf_depth = 2;
+    assert!(
+        preflight(&cfg).with_code("FV106").is_empty(),
+        "depth == vcs must not lint"
+    );
+    cfg.in_buf_depth = 0;
+    let zero = preflight(&cfg);
+    assert!(
+        zero.with_code("FV106").is_empty() && !zero.with_code("FV103").is_empty(),
+        "zero depth belongs to FV103 alone, got:\n{zero}"
+    );
+}
+
 /// The machine-readable report carries the stable schema tag and agrees
 /// with the programmatic verdict on both sides.
 #[test]

@@ -6,9 +6,9 @@
 //! repro reproduce <exp> [--bidir]     regenerate a paper table/figure:
 //!        tab1 | tab2 | fig5a | fig5b | fig6a | fig6b |
 //!        latency | bandwidth | wires | scaling | all
-//! repro simulate [--config f] [--topology k] [--vcs n] [--sim-mode m] [--txns n]  uniform traffic
-//! repro verify [--config f] [--topology k] [--vcs n] [--json] [--deep]  static checks
-//! repro sweep <rob|buffers|burst|mesh|topology|output-reg>  ablations
+//! repro simulate [--config f] [--topology k] [--routing r] [--vcs n] [--sim-mode m] [--txns n]  uniform traffic
+//! repro verify [--config f] [--topology k] [--routing r] [--vcs n] [--json] [--deep]  static checks
+//! repro sweep <rob|buffers|burst|mesh|topology|vcs|output-reg>  ablations
 //! repro scale_topology [--mesh n]     mesh vs torus vs ring at equal tiles
 //! repro dse [--mesh n] [--artifacts dir]              analytical model vs sim
 //! repro bench [--out path] [--quick]  e2e perf scenarios -> BENCH_e2e.json
@@ -110,7 +110,8 @@ COMMANDS:
                                virtual channels)
                                options: --config <file.json>, --txns <n>,
                                --mesh <n>, --topology <mesh|torus|ring>,
-                               --vcs <n>, --sim-mode <gated|dense|event>,
+                               --routing <deterministic|adaptive>, --vcs <n>,
+                               --sim-mode <gated|dense|event>,
                                --shards <n>, --wide-only, --no-verify,
                                --check-invariants
   verify                       statically verify a config before any cycle
@@ -119,12 +120,13 @@ COMMANDS:
                                same preflight simulate runs, as a command
                                (see docs/verification.md)
                                options: --config <file.json>, --mesh <n>,
-                               --topology <mesh|torus|ring>, --vcs <n>,
+                               --topology <mesh|torus|ring>, --routing
+                               <deterministic|adaptive>, --vcs <n>,
                                --wide-only, --json (machine-readable
                                report), --deep (one gated warm-up epoch
                                with invariant scans forced on)
   sweep <ablation>             rob | buffers | burst | mesh | topology |
-                               output-reg; options: --jobs <n>
+                               vcs | output-reg; options: --jobs <n>
   scale_topology               compare mesh vs torus vs ring at the same
                                tile count (uniform-random traffic): mean
                                hop counts and delivered throughput;
@@ -147,8 +149,16 @@ COMMANDS:
 
   --topology <kind>: fabric shape for simulate (mesh is the default;
               torus adds wraparound rows+columns, ring is a 1-D cycle).
+  --routing <r>: routing discipline (simulate/verify): deterministic
+              (default: XY / dateline dimension-order) or adaptive
+              (minimal-adaptive over VC lanes above the fabric's escape
+              lanes, which keep running the deterministic baseline —
+              Duato-style; see docs/deadlock.md). Adaptive raises the
+              default VC count by one adaptive lane; an explicit --vcs
+              below escape+1 is rejected by the verifier (FV107).
   --vcs <n>:  virtual channels per link (default: 1 on meshes, 2 dateline
-              VCs on torus/ring — see docs/deadlock.md).
+              VCs on torus/ring — see docs/deadlock.md; +1 adaptive lane
+              under --routing adaptive).
   --sim-mode <m>: step-loop engine (simulate/verify): gated (default,
               active-set sweeps), dense (reference full sweep), event
               (gated + calendar fast-forward over idle cycles). All three

@@ -19,6 +19,7 @@
 use anyhow::{bail, Context};
 
 use crate::noc::{LinkMode, NocConfig};
+use crate::router::RoutingKind;
 use crate::sim::SimMode;
 use crate::topology::{MemEdge, TopologyKind};
 use crate::util::json::Json;
@@ -78,13 +79,31 @@ pub fn noc_config_from_value(j: &Json) -> crate::Result<NocConfig> {
             other => bail!("unknown sim_mode '{other}' (gated|dense|event)"),
         };
     }
+    // Routing discipline: parsed before `"vcs"` so an adaptive config
+    // with the VC count omitted gets the adaptive default
+    // (`default_vcs + 1`: the escape lanes plus one adaptive lane)
+    // instead of the deterministic fabric default.
+    if let Some(r) = j.get("routing").and_then(Json::as_str) {
+        cfg.routing = match r {
+            "deterministic" => RoutingKind::Deterministic,
+            "adaptive" => RoutingKind::Adaptive,
+            other => bail!("unknown routing '{other}' (deterministic|adaptive)"),
+        };
+    }
     // Virtual channels: explicit `"vcs"` wins; omitted defaults to the
     // fabric's requirement (1 on meshes, 2 dateline VCs on torus/ring —
-    // matching the `NocConfig::torus`/`ring` builders).
+    // matching the `NocConfig::torus`/`ring` builders), plus one
+    // adaptive lane under adaptive routing (matching
+    // `NocConfig::adaptive`). An explicit value below the adaptive
+    // minimum is kept as written — the FV107 preflight lint rejects it
+    // with a readable message instead of a silent correction.
     match j.get("vcs").map(|v| v.as_usize()) {
         Some(Some(v)) if (1..=crate::router::MAX_VCS).contains(&v) => cfg.vcs = v,
         Some(_) => bail!("vcs must be an integer in 1..={}", crate::router::MAX_VCS),
-        None => cfg.vcs = cfg.topology.default_vcs(),
+        None => {
+            cfg.vcs = cfg.topology.default_vcs()
+                + usize::from(cfg.routing == RoutingKind::Adaptive);
+        }
     }
     if let Some(r) = j.get("router") {
         if let Some(d) = r.get("in_buf_depth").and_then(Json::as_usize) {
@@ -180,6 +199,16 @@ pub fn noc_config_to_json(cfg: &NocConfig) -> Json {
             ),
         ),
         ("sim_mode", Json::Str(cfg.sim_mode.name().to_string())),
+        (
+            "routing",
+            Json::Str(
+                match cfg.routing {
+                    RoutingKind::Deterministic => "deterministic",
+                    RoutingKind::Adaptive => "adaptive",
+                }
+                .to_string(),
+            ),
+        ),
         ("vcs", Json::Num(cfg.vcs as f64)),
         ("verify", Json::Bool(cfg.verify)),
         ("check_invariants", Json::Bool(cfg.check_invariants)),
@@ -333,6 +362,39 @@ mod tests {
         let cfg = NocConfig::torus(3, 3).with_vcs(1);
         let back = noc_config_from_value(&noc_config_to_json(&cfg)).unwrap();
         assert_eq!(back.vcs, 1);
+    }
+
+    #[test]
+    fn routing_axis_parses_and_roundtrips() {
+        // Omitted => deterministic (backwards compatible).
+        assert_eq!(
+            noc_config_from_json("{}").unwrap().routing,
+            RoutingKind::Deterministic
+        );
+        // Adaptive with vcs omitted defaults to escape lanes + 1.
+        let mesh = r#"{"routing": "adaptive"}"#;
+        let cfg = noc_config_from_json(mesh).unwrap();
+        assert_eq!((cfg.routing, cfg.vcs), (RoutingKind::Adaptive, 2));
+        let torus = r#"{"topology": "torus", "mesh": {"width": 4, "height": 4},
+                        "routing": "adaptive"}"#;
+        let cfg = noc_config_from_json(torus).unwrap();
+        assert_eq!((cfg.routing, cfg.vcs), (RoutingKind::Adaptive, 3));
+        // An explicit vcs wins (even below the adaptive minimum — the
+        // FV107 preflight lint rejects it at build, not at parse).
+        let j = r#"{"routing": "adaptive", "vcs": 4}"#;
+        assert_eq!(noc_config_from_json(j).unwrap().vcs, 4);
+        let j = r#"{"routing": "adaptive", "vcs": 1}"#;
+        assert_eq!(noc_config_from_json(j).unwrap().vcs, 1);
+        // Key order does not matter: `routing` after `vcs` in the file
+        // still leaves the explicit vcs untouched.
+        let j = r#"{"vcs": 3, "routing": "adaptive"}"#;
+        assert_eq!(noc_config_from_json(j).unwrap().vcs, 3);
+        // Bad names are rejected.
+        assert!(noc_config_from_json(r#"{"routing": "oblivious"}"#).is_err());
+        // Round-trips through serialization.
+        let cfg = NocConfig::torus(4, 4).adaptive();
+        let back = noc_config_from_value(&noc_config_to_json(&cfg)).unwrap();
+        assert_eq!((back.routing, back.vcs), (RoutingKind::Adaptive, 3));
     }
 
     #[test]

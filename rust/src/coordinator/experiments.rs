@@ -5,6 +5,7 @@ use crate::dse::parallel::ParallelRunner;
 use crate::flit::NodeId;
 use crate::noc::{LinkMode, NocConfig, NocSystem, NET_REQ, NET_RSP, NET_WIDE};
 use crate::phys::energy::{Activity, EnergyModel, PowerBreakdown};
+use crate::router::RoutingKind;
 use crate::topology::TopologyKind;
 use crate::traffic::{GenCfg, Generator, Pattern};
 
@@ -529,6 +530,52 @@ pub fn scale_topology_with(n: u8, runner: &ParallelRunner) -> Vec<TopologyRow> {
     })
 }
 
+/// VC-count ablation on the adaptive-routing axis: tornado makespan on
+/// a 4×4 torus as lanes are added above the fabric's 2 dateline escape
+/// lanes. At the escape minimum (`vcs = 2`) the fabric runs the
+/// deterministic dimension-ordered baseline; every additional lane is
+/// an adaptive lane ([`RoutingKind::Adaptive`]), letting heads spread
+/// the tornado's tied-distance flows over both ring directions instead
+/// of piling onto the deterministic direction (`docs/experiments.md`).
+pub fn ablate_vcs(vcs_options: &[usize]) -> Vec<AblationRow> {
+    ablate_vcs_with(vcs_options, &ParallelRunner::default())
+}
+
+/// [`ablate_vcs`] with an explicit sweep runner.
+pub fn ablate_vcs_with(vcs_options: &[usize], runner: &ParallelRunner) -> Vec<AblationRow> {
+    runner.run(vcs_options, |_, &vcs| {
+        let mut cfg = NocConfig::torus(4, 4).with_vcs(vcs);
+        // Lanes above the dateline requirement unlock adaptivity; at the
+        // bare requirement the sweep point is the deterministic baseline.
+        if vcs > cfg.topology.default_vcs() {
+            cfg.routing = RoutingKind::Adaptive;
+        }
+        let sys = NocSystem::new(cfg);
+        let tiles = sys.topo.num_tiles;
+        let profiles: Vec<TileTraffic> = (0..tiles)
+            .map(|i| {
+                let mut c = GenCfg::dma_burst(NodeId(0), 16, false);
+                c.pattern = Pattern::Tornado;
+                c.burst_len = BURST_LEN;
+                c.max_outstanding = 4;
+                c.seed = 0x70AD0 + i as u64;
+                TileTraffic {
+                    core: None,
+                    dma: Some(c),
+                }
+            })
+            .collect();
+        let mut w = TiledWorkload::new(sys, profiles);
+        assert!(w.run_to_completion(5_000_000), "vcs={vcs} tornado did not drain");
+        assert!(w.protocol_ok());
+        AblationRow {
+            param: "vcs",
+            value: vcs as u64,
+            metric: w.sys.now as f64,
+        }
+    })
+}
+
 /// Output-register (1- vs 2-cycle router) ablation on zero-load latency.
 pub fn ablate_output_reg() -> Vec<AblationRow> {
     [false, true]
@@ -666,6 +713,17 @@ mod tests {
         assert_eq!(ring_adj, 18);
         assert_eq!(ring_far, 18, "0 -> 3 is one wrap hop on a 4-ring");
         assert!(mesh_far > ring_far, "the chain pays per extra hop");
+    }
+
+    /// The vcs sweep runs both regimes of its axis — the deterministic
+    /// baseline at the dateline minimum and an adaptive point above it —
+    /// on the same tornado workload, and both drain.
+    #[test]
+    fn vcs_ablation_covers_both_routing_regimes() {
+        let rows = ablate_vcs_with(&[2, 3], &ParallelRunner::serial());
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.param == "vcs" && r.metric > 0.0));
+        assert_eq!((rows[0].value, rows[1].value), (2, 3));
     }
 
     #[test]

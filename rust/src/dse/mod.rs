@@ -9,6 +9,15 @@
 //!    exercised from the L3 hot path;
 //! 3. the cycle-accurate simulator, whose measured per-link throughput
 //!    must agree with the analytical loads in the unsaturated regime.
+//!
+//! The mesh-only XY evaluation ([`link_loads`]) is complemented by a
+//! fabric-generalized walker ([`fabric_link_loads`]) that covers torus
+//! and ring deployments with their **per-VC lane split**: it walks every
+//! flow's deterministic route with the exact same `RouteTable::lookup` +
+//! `dateline_vc` pair the router hot loop asks, so wrap crossings land
+//! on the dateline lane analytically just as they do in the simulator —
+//! and the cross-check against measured per-lane link counters is an
+//! *exact count* identity, not a proportionality fit.
 
 pub mod parallel;
 
@@ -17,9 +26,12 @@ pub use parallel::{run_sweep, sweep_report_json, ParallelRunner, SweepPoint, Swe
 use anyhow::Context;
 
 use crate::cluster::TiledWorkload;
+use crate::flit::NodeId;
 use crate::noc::{NocConfig, NocSystem, NET_WIDE};
-use crate::router::PORT_E;
+use crate::router::routing::dateline_vc;
+use crate::router::{PORT_E, PORT_LOCAL};
 use crate::runtime::Runtime;
+use crate::topology::Topology;
 use crate::traffic::GenCfg;
 
 /// Per-direction link loads for an `n×n` mesh: `loads[dir][y][x]` with
@@ -104,6 +116,88 @@ pub fn uniform_traffic(n: usize, rate: f64) -> Vec<Vec<f64>> {
     t
 }
 
+/// Tornado traffic over a fabric's tiles at `rate` flits/cycle: every
+/// tile targets the tile half-way around each wrapping dimension —
+/// exactly [`crate::traffic::Pattern::Tornado`]'s destination function,
+/// as an analytic matrix. On fabrics with even ring dimensions the
+/// pattern is an involution (tornado of tornado is the identity), so
+/// request and response flows traverse the same links mirrored.
+pub fn tornado_traffic(topo: &Topology, rate: f64) -> Vec<Vec<f64>> {
+    let tiles = topo.num_tiles;
+    let w = topo.width as usize;
+    let h = topo.height as usize;
+    let mut t = vec![vec![0.0; tiles]; tiles];
+    for (s, row) in t.iter_mut().enumerate() {
+        let c = topo.node(NodeId(s as u16)).coord;
+        let nx = (c.x as usize + w / 2) % w;
+        let ny = if h > 1 { (c.y as usize + h / 2) % h } else { c.y as usize };
+        let d = ny * w + nx;
+        if d != s {
+            row[d] = rate;
+        }
+    }
+    t
+}
+
+/// Fabric-generalized analytic link loads with the per-VC lane split:
+/// walk every flow of `traffic` (tile-indexed, flits/cycle) along its
+/// deterministic route and accumulate the rate onto each traversed
+/// `(router, output port, lane)`. Returns `loads[router][port][lane]`
+/// with `radix` ports and `vcs` lanes per router.
+///
+/// The walk asks the same [`crate::router::RouteTable`] the live router
+/// asks and applies the same [`dateline_vc`] lane switch (capped to the
+/// link's top lane, as the router caps it), so on wrap fabrics the
+/// wraparound links carry their load entirely on the dateline lane —
+/// the quantity the simulator's per-lane `Link` counters measure.
+/// Ejection (the final hop into the destination node) is not counted:
+/// the loads cover router-to-router channels only.
+pub fn fabric_link_loads(
+    topo: &Topology,
+    vcs: usize,
+    traffic: &[Vec<f64>],
+) -> Vec<Vec<Vec<f64>>> {
+    assert!(vcs >= 1);
+    let routers = topo.width as usize * topo.height as usize;
+    let radix = topo.router_radix();
+    // Neighbour map from the channel list: nbr[router][port] = (peer
+    // router, peer input port).
+    let mut nbr: Vec<Vec<Option<(usize, usize)>>> = vec![vec![None; radix]; routers];
+    for (a, pa, b, pb) in topo.channels() {
+        nbr[a][pa] = Some((b, pb));
+        nbr[b][pb] = Some((a, pa));
+    }
+    let tables: Vec<_> = (0..routers)
+        .map(|r| topo.route_table(topo.nodes[r].coord))
+        .collect();
+    let mut loads = vec![vec![vec![0.0f64; vcs]; radix]; routers];
+    for (s, row) in traffic.iter().enumerate() {
+        for (d, &t) in row.iter().enumerate() {
+            if t == 0.0 || s == d {
+                continue;
+            }
+            let dst = NodeId(d as u16);
+            let mut r = topo.router_index(topo.node(NodeId(s as u16)).coord);
+            let goal = topo.router_index(topo.node(dst).coord);
+            let (mut in_port, mut vc) = (PORT_LOCAL, 0u8);
+            let mut hops = 0usize;
+            while r != goal {
+                let o = tables[r].lookup(dst);
+                let crosses = tables[r].crosses_dateline(o);
+                let vo = dateline_vc(in_port, o, crosses, vc).min(vcs as u8 - 1);
+                loads[r][o][vo as usize] += t;
+                let (nr, np) = nbr[r][o].expect("deterministic route walked off the fabric");
+                r = nr;
+                in_port = np;
+                vc = vo;
+                hops += 1;
+                assert!(hops <= routers, "route loop walking {s} -> {d}");
+            }
+        }
+    }
+    loads
+}
+
 /// Evaluate the PJRT `noc_perf` artifact on a traffic matrix (must match
 /// the artifact's fixed mesh size). Returns (loads, max, mean, sat).
 pub fn artifact_link_loads(
@@ -181,6 +275,30 @@ pub fn run_dse(n: u8, artifacts_dir: &str, runner: &ParallelRunner) -> crate::Re
             max_load(&loads),
             mean_load(&loads),
             1.0 / max_load(&loads)
+        );
+    }
+    // Fabric-generalized walker: the adversarial tornado on the wrap
+    // fabric, with its per-VC lane split (wrap links ride the dateline
+    // lane exclusively — see docs/deadlock.md).
+    {
+        let torus = Topology::torus(n, n, crate::topology::MemEdge::None);
+        let loads = fabric_link_loads(&torus, 2, &tornado_traffic(&torus, 1.0));
+        let (mut maxv, mut wrap, mut total) = (0.0f64, 0.0f64, 0.0f64);
+        for (r, per_port) in loads.iter().enumerate() {
+            let dl = torus.dateline_ports(torus.nodes[r].coord);
+            for (p, lanes) in per_port.iter().enumerate() {
+                let l: f64 = lanes.iter().sum();
+                maxv = maxv.max(l);
+                total += l;
+                if (dl >> p) & 1 == 1 {
+                    wrap += l;
+                }
+            }
+        }
+        println!(
+            "torus tornado (1 flit/cycle/tile)       max link load {maxv:.3}, \
+             wrap-link share {:.2} (all of it on the dateline lane)",
+            wrap / total.max(1e-12)
         );
     }
     // PJRT artifact cross-check (fixed mesh size).
@@ -317,6 +435,85 @@ mod tests {
             }
         }
         assert!((total - want).abs() < 1e-9);
+    }
+
+    /// Per-VC split of the fabric walker: tornado on a 4×4 torus loads
+    /// the wraparound links on the dateline lane *only* — lane 0 of
+    /// every wrap link stays analytically clear, matching the dateline
+    /// scheme the simulator enforces.
+    #[test]
+    fn tornado_wrap_loads_ride_the_dateline_lane() {
+        use crate::topology::MemEdge;
+        let topo = Topology::torus(4, 4, MemEdge::None);
+        let loads = fabric_link_loads(&topo, 2, &tornado_traffic(&topo, 1.0));
+        let mut wrap_lane1 = 0.0;
+        for (r, per_port) in loads.iter().enumerate() {
+            let dl = topo.dateline_ports(topo.nodes[r].coord);
+            for (p, lanes) in per_port.iter().enumerate() {
+                if (dl >> p) & 1 == 1 {
+                    assert_eq!(lanes[0], 0.0, "wrap link lane 0 must stay clear");
+                    wrap_lane1 += lanes[1];
+                }
+            }
+        }
+        assert!(wrap_lane1 > 0.0, "the tornado must exercise the wraps");
+    }
+
+    /// The analytic cross-check of the fabric walker against the live
+    /// simulator: drive the tornado on a torus and a ring, then compare
+    /// the *exact* per-link per-lane delivered-flit counters of the
+    /// request network against `fabric_link_loads` scaled by the
+    /// transaction count. Every request flit follows the deterministic
+    /// route, so the identity is exact — not a proportionality fit.
+    #[test]
+    fn fabric_loads_match_measured_lane_counters() {
+        use crate::cluster::TileTraffic;
+        use crate::noc::NET_REQ;
+        use crate::traffic::Pattern;
+        let txns = 6u64;
+        for cfg in [NocConfig::torus(4, 4), NocConfig::ring(8)] {
+            let vcs = cfg.vcs;
+            let sys = NocSystem::new(cfg);
+            let tiles = sys.topo.num_tiles;
+            let profiles: Vec<TileTraffic> = (0..tiles)
+                .map(|i| {
+                    let mut c = GenCfg::narrow_probe(NodeId(0), txns);
+                    c.pattern = Pattern::Tornado;
+                    c.seed = 0x7E57 + i as u64;
+                    TileTraffic {
+                        core: Some(c),
+                        dma: None,
+                    }
+                })
+                .collect();
+            let mut w = TiledWorkload::new(sys, profiles);
+            assert!(w.run_to_completion(1_000_000), "tornado did not drain");
+            assert!(w.protocol_ok());
+            let topo = &w.sys.topo;
+            let loads = fabric_link_loads(topo, vcs, &tornado_traffic(topo, 1.0));
+            let routers = topo.width as usize * topo.height as usize;
+            let net = &w.sys.nets[NET_REQ];
+            let mut checked = 0usize;
+            for r in 0..routers {
+                // Cardinal ports only: ejection links (local/attach) are
+                // deliberately outside the analytic model.
+                for p in 1..topo.router_radix() {
+                    let Some(lid) = net.routers[r].out_links[p] else {
+                        continue;
+                    };
+                    for (v, &load) in loads[r][p].iter().enumerate() {
+                        let want = (load * txns as f64).round() as u64;
+                        assert_eq!(
+                            net.links[lid].lane_delivered(v),
+                            want,
+                            "router {r} port {p} lane {v}"
+                        );
+                        checked += 1;
+                    }
+                }
+            }
+            assert!(checked > 0, "cross-check must cover real links");
+        }
     }
 
     #[test]

@@ -7,13 +7,14 @@
 //! repro reproduce <tab1|tab2|fig5a|fig5b|fig6a|fig6b|latency|bandwidth|
 //!                  wires|scaling|all> [--bidir] [--levels a,b,c] [--jobs n]
 //! repro simulate  [--config f.json] [--mesh n] [--txns n] [--wide-only]
-//!                 [--topology mesh|torus|ring] [--vcs n]
+//!                 [--topology mesh|torus|ring]
+//!                 [--routing deterministic|adaptive] [--vcs n]
 //!                 [--sim-mode gated|dense|event] [--shards n]
 //!                 [--no-verify] [--check-invariants]
 //! repro verify    [--config f.json] [--mesh n] [--topology mesh|torus|ring]
-//!                 [--vcs n] [--wide-only] [--sim-mode gated|dense|event]
-//!                 [--json] [--deep]
-//! repro sweep     <rob|buffers|burst|mesh|topology|output-reg> [--jobs n]
+//!                 [--routing deterministic|adaptive] [--vcs n] [--wide-only]
+//!                 [--sim-mode gated|dense|event] [--json] [--deep]
+//! repro sweep     <rob|buffers|burst|mesh|topology|vcs|output-reg> [--jobs n]
 //! repro scale_topology [--mesh n] [--jobs n]
 //! repro dse       [--mesh n] [--artifacts dir] [--jobs n]
 //! repro bench     [--out path] [--quick] [--profile]
@@ -244,6 +245,17 @@ fn build_cfg(args: &Args) -> anyhow::Result<NocConfig> {
             c
         }
     };
+    // `--routing` before `--vcs`: `adaptive()` raises the VC count to
+    // escape + 1 adaptive lane, and an explicit `--vcs` then overrides
+    // it (possibly back down into FV107 territory, which the verifier
+    // reports instead of the CLI silently correcting).
+    if let Some(r) = args.opt("routing") {
+        cfg = match r {
+            "deterministic" => cfg,
+            "adaptive" => cfg.adaptive(),
+            other => bail!("--routing expects deterministic|adaptive, got '{other}'"),
+        };
+    }
     if args.opt("vcs").is_some() {
         let vcs = args.opt_u64("vcs", 0)? as usize;
         anyhow::ensure!(
@@ -419,6 +431,10 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
         "mesh" => report::ablation_table(
             "mesh size vs delivered wide bytes/cycle (neighbor ring)",
             &exp::scale_mesh_with(&[2, 3, 4, 6], &runner),
+        ),
+        "vcs" => report::ablation_table(
+            "VC count vs 4x4-torus tornado makespan (vcs > 2 => adaptive routing)",
+            &exp::ablate_vcs_with(&[2, 3, 4], &runner),
         ),
         "output-reg" => report::ablation_table(
             "router output register (0/1) vs zero-load latency",

@@ -2,7 +2,7 @@
 
 use crate::flit::{ChannelClass, FlooFlit, MsgClass, NodeId, Payload};
 use crate::ni::{Initiator, InitiatorCfg, Target, TargetCfg};
-use crate::router::{Router, RouterCfg, PORT_LOCAL};
+use crate::router::{Router, RouterCfg, RoutingKind, PORT_LOCAL};
 use crate::sim::{Link, LinkId, SimMode};
 use crate::stats::BandwidthMeter;
 use crate::topology::{MemEdge, NodeKind, Topology, TopologyKind};
@@ -127,6 +127,15 @@ pub struct NocConfig {
     /// assert_eq!(NocConfig::torus(4, 4).with_vcs(1).vcs, 1);
     /// ```
     pub vcs: usize,
+    /// Routing discipline (JSON `"routing"`, CLI `--routing`):
+    /// deterministic dimension-ordered/dateline routing (the default),
+    /// or minimal-adaptive routing over Duato escape lanes
+    /// ([`RoutingKind::Adaptive`] — per-cycle congestion-driven output
+    /// choice on lanes above the fabric's escape-lane count, see
+    /// `docs/deadlock.md`). Adaptive routing needs at least one lane
+    /// beyond the escape lanes (`vcs >= default_vcs + 1`, lint FV107);
+    /// [`NocConfig::adaptive`] raises `vcs` accordingly.
+    pub routing: RoutingKind,
     /// Output register on router links ("elastic buffer", §III-C): the
     /// two-cycle router used by the paper's physical implementation.
     pub output_reg: bool,
@@ -176,6 +185,7 @@ impl Default for NocConfig {
             sim_mode: SimMode::Gated,
             in_buf_depth: 2,
             vcs: 1,
+            routing: RoutingKind::default(),
             output_reg: true,
             narrow_init: InitiatorCfg::narrow_default(),
             wide_init: InitiatorCfg::wide_default(),
@@ -278,6 +288,27 @@ impl NocConfig {
             crate::router::MAX_VCS
         );
         self.vcs = vcs;
+        self
+    }
+
+    /// Switch to minimal-adaptive routing on Duato escape lanes (see
+    /// [`NocConfig::routing`]). Raises `vcs` to the fabric's minimum
+    /// for adaptivity (`default_vcs + 1`: one adaptive lane above the
+    /// escape lanes — 2 on meshes, 3 on wrap fabrics) when the current
+    /// value is below it; an explicit higher [`NocConfig::with_vcs`]
+    /// is kept.
+    ///
+    /// ```
+    /// use floonoc::noc::NocConfig;
+    /// use floonoc::router::RoutingKind;
+    /// let cfg = NocConfig::torus(4, 4).adaptive();
+    /// assert_eq!((cfg.routing, cfg.vcs), (RoutingKind::Adaptive, 3));
+    /// assert_eq!(NocConfig::mesh(4, 4).adaptive().vcs, 2);
+    /// assert_eq!(NocConfig::torus(4, 4).with_vcs(4).adaptive().vcs, 4);
+    /// ```
+    pub fn adaptive(mut self) -> Self {
+        self.routing = RoutingKind::Adaptive;
+        self.vcs = self.vcs.max(self.topology.default_vcs() + 1);
         self
     }
 
@@ -982,13 +1013,17 @@ fn build_network(topo: &Topology, cfg: &NocConfig) -> Network {
     let mut routers: Vec<Router> = (0..num_routers)
         .map(|i| {
             let coord = topo.nodes[i].coord;
+            let table = match cfg.routing {
+                RoutingKind::Deterministic => topo.route_table(coord),
+                RoutingKind::Adaptive => topo.route_table_adaptive(coord),
+            };
             Router::new(
                 RouterCfg {
                     ports: radix,
                     in_buf_depth: cfg.in_buf_depth,
                     vcs: cfg.vcs,
                 },
-                topo.route_table(coord),
+                table,
             )
         })
         .collect();

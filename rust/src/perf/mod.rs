@@ -22,6 +22,11 @@
 //!   torus with its default 2 dateline VCs: the VC switch's cps record
 //!   (this workload deadlocked — or needed crippled outstanding budgets
 //!   — before the virtual-channel PR);
+//! * **tornado_adaptive_8x8** — full-rate tornado traffic on an 8×8
+//!   torus under minimal-adaptive routing (2 escape + 1 adaptive VC):
+//!   the adaptive hot path's cps record — per-head candidate scoring
+//!   and plan retraction on top of the VC switch, gated by
+//!   `CPS_FLOOR_TORNADO_ADAPTIVE_8X8`;
 //! * **duty_cycled** — every tile of an 8×8 mesh firing a short
 //!   full-rate burst once per long period, silent between: the
 //!   event-driven mode's home turf (bar: event ≥ 5× gated cycles/s —
@@ -116,6 +121,59 @@ pub fn wrap_saturated_workload(n: u8, mode: SimMode) -> TiledWorkload {
         })
         .collect();
     TiledWorkload::new(sys, profiles)
+}
+
+/// Every tile of an `n × n` torus streaming wide wormhole bursts (plus
+/// narrow probes) to its tornado partner — the tile half-way around
+/// both ring dimensions — at full rate, with `routing` selecting the
+/// discipline. The tornado is the adversarial pattern for deterministic
+/// minimal routing on wrap fabrics: every flow travels the diameter and
+/// the tied-distance choice piles onto one direction. Shared builder
+/// behind [`tornado_adaptive_workload`] / the deterministic twin.
+fn tornado_torus_workload(n: u8, mode: SimMode, adaptive: bool) -> TiledWorkload {
+    let mut cfg = NocConfig::torus(n, n).with_sim_mode(mode);
+    if adaptive {
+        cfg = cfg.adaptive();
+    }
+    let sys = NocSystem::new(cfg);
+    let tiles = sys.topo.num_tiles;
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: Pattern::Tornado,
+                num_txns: u64::MAX,
+                seed: 0x70AD + i as u64,
+                ..GenCfg::narrow_probe(NodeId(0), 1)
+            }),
+            dma: Some(GenCfg {
+                pattern: Pattern::Tornado,
+                num_txns: u64::MAX,
+                burst_len: 15,
+                seed: 0x500 + i as u64,
+                ..GenCfg::dma_burst(NodeId(0), 1, false)
+            }),
+        })
+        .collect();
+    TiledWorkload::new(sys, profiles)
+}
+
+/// The tornado scenario under **minimal-adaptive routing on Duato
+/// escape VCs** (`NocConfig::adaptive`: 2 dateline escape lanes + 1
+/// adaptive lane): heads spread the tornado's tied-distance flows over
+/// both ring directions by local credit availability. Recorded in the
+/// trajectory file as `tornado_adaptive_8x8`; its gated side is the
+/// adaptive hot path's cps record ([`TORNADO_GATE_NAME`]).
+pub fn tornado_adaptive_workload(n: u8, mode: SimMode) -> TiledWorkload {
+    tornado_torus_workload(n, mode, true)
+}
+
+/// The deterministic twin of [`tornado_adaptive_workload`] — identical
+/// traffic and seeds, dimension-ordered dateline routing. The throughput
+/// comparison between the two is the adaptive PR's acceptance study
+/// (`docs/experiments.md`); in this module it exists so benchmarks and
+/// tests can measure both sides of the same scenario.
+pub fn tornado_deterministic_workload(n: u8, mode: SimMode) -> TiledWorkload {
+    tornado_torus_workload(n, mode, false)
 }
 
 /// A sparse trace-style workload on an `n × n` mesh (PATRONoC-style,
@@ -542,6 +600,10 @@ pub struct E2eReport {
     /// feature's cps record; no bar — the entry tracks the VC switch's
     /// cost PR-over-PR).
     pub wrap: ModeComparison,
+    /// Tornado on an 8×8 torus under adaptive routing (3 VCs: 2 escape
+    /// + 1 adaptive) — the adaptive hot path's cps record: per-cycle
+    /// congestion scoring and plan retraction on top of the VC switch.
+    pub tornado_adaptive: ModeComparison,
     /// Duty-cycled scenario under gated vs event stepping (the
     /// fast-forward's target regime; bar: ≥ 5×).
     pub duty: EventComparison,
@@ -559,6 +621,9 @@ pub struct E2eReport {
     pub event_gate_floor: Option<f64>,
     /// The pinned floor the sharded gate enforced, if CI set one.
     pub sharded_gate_floor: Option<f64>,
+    /// The pinned floor the tornado-adaptive gate enforced, if CI set
+    /// one.
+    pub tornado_gate_floor: Option<f64>,
 }
 
 /// The name the cps regression gate runs under (also the suffix of its
@@ -575,6 +640,13 @@ pub const EVENT_GATE_NAME: &str = "8x8-duty-event";
 /// `CPS_FLOOR_SHARDED_16X16`). Its measurement is the sharded side of
 /// the serial-vs-sharded comparison on the saturated 16×16 mesh.
 pub const SHARDED_GATE_NAME: &str = "sharded-16x16";
+
+/// The name the adaptive-routing cps gate runs under (per-gate floor
+/// env var: `CPS_FLOOR_TORNADO_ADAPTIVE_8X8`). Its measurement is the
+/// gated side of the tornado-adaptive comparison — the cost of the
+/// per-cycle candidate scoring and plan retraction the adaptive router
+/// adds on top of the VC switch.
+pub const TORNADO_GATE_NAME: &str = "tornado-adaptive-8x8";
 
 /// Run every scenario. `quick` shrinks cycle counts and sweep sizes for
 /// CI smoke runs; the measured *ratios* stay meaningful, absolute
@@ -596,6 +668,30 @@ pub fn run_e2e(quick: bool) -> E2eReport {
     let wrap = compare_modes("wrap_saturated_torus_4x4", sat_cycles, |m| {
         wrap_saturated_workload(4, m)
     });
+    // The 8×8 adaptive tornado runs the same reduced cycle budget as
+    // saturated_8x8 (four times the routers per cycle, plus the
+    // adaptive scoring work on every head).
+    let tornado_adaptive = compare_modes("tornado_adaptive_8x8", sat_cycles / 2, |m| {
+        tornado_adaptive_workload(8, m)
+    });
+    // Adaptive gate: floor enforced on the gated side's absolute
+    // throughput, same contract as the other gates.
+    let tornado_gate_floor = cps_floor(TORNADO_GATE_NAME);
+    println!(
+        "cps_gate name={TORNADO_GATE_NAME} cycles={} cycles_per_second={:.0} floor={}",
+        tornado_adaptive.cycles,
+        tornado_adaptive.gated_cps,
+        tornado_gate_floor
+            .map(|f| format!("{f:.0}"))
+            .unwrap_or_else(|| "unset".into()),
+    );
+    if let Some(floor) = tornado_gate_floor {
+        assert!(
+            tornado_adaptive.gated_cps >= floor,
+            "cps regression: {TORNADO_GATE_NAME} ran at {:.0} cycles/s, floor is {floor:.0}",
+            tornado_adaptive.gated_cps
+        );
+    }
     if sparse.speedup() < 2.0 {
         println!(
             "    WARNING: sparse-trace gated speedup {:.2}x below the 2x tentpole bar",
@@ -679,6 +775,7 @@ pub fn run_e2e(quick: bool) -> E2eReport {
         saturated,
         saturated8,
         wrap,
+        tornado_adaptive,
         duty,
         sharded,
         sweep,
@@ -686,6 +783,7 @@ pub fn run_e2e(quick: bool) -> E2eReport {
         gate_floor,
         event_gate_floor,
         sharded_gate_floor,
+        tornado_gate_floor,
     }
 }
 
@@ -701,6 +799,7 @@ pub fn report_to_json(r: &E2eReport) -> Json {
                 (r.saturated.name.as_str(), r.saturated.to_json()),
                 (r.saturated8.name.as_str(), r.saturated8.to_json()),
                 (r.wrap.name.as_str(), r.wrap.to_json()),
+                (r.tornado_adaptive.name.as_str(), r.tornado_adaptive.to_json()),
                 (r.duty.name.as_str(), r.duty.to_json()),
                 (r.sharded.name.as_str(), r.sharded.to_json()),
                 ("parallel_sweep", r.sweep.to_json()),
@@ -748,6 +847,21 @@ pub fn report_to_json(r: &E2eReport) -> Json {
                 (
                     "floor",
                     match r.sharded_gate_floor {
+                        Some(f) => Json::Num(f),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+        ),
+        (
+            "tornado_adaptive_cps_gate",
+            Json::obj(vec![
+                ("name", Json::Str(TORNADO_GATE_NAME.into())),
+                ("cycles", Json::Num(r.tornado_adaptive.cycles as f64)),
+                ("cycles_per_second", Json::Num(r.tornado_adaptive.gated_cps)),
+                (
+                    "floor",
+                    match r.tornado_gate_floor {
                         Some(f) => Json::Num(f),
                         None => Json::Null,
                     },
@@ -817,6 +931,8 @@ mod tests {
             sparse_trace_workload,
             saturated_workload,
             wrap_saturated_workload,
+            tornado_adaptive_workload,
+            tornado_deterministic_workload,
             duty_cycled_workload,
         ] {
             let count = |mode: SimMode| {
@@ -884,6 +1000,12 @@ mod tests {
                 dense_cps: 90.0,
                 gated_cps: 90.0,
             },
+            tornado_adaptive: ModeComparison {
+                name: "tornado_adaptive_8x8".into(),
+                cycles: 5,
+                dense_cps: 80.0,
+                gated_cps: 80.0,
+            },
             duty: EventComparison {
                 name: "duty_cycled_8x8".into(),
                 gated: crate::util::bench::CpsResult {
@@ -917,6 +1039,7 @@ mod tests {
             gate_floor: None,
             event_gate_floor: Some(350_000.0),
             sharded_gate_floor: Some(40_000.0),
+            tornado_gate_floor: Some(100_000.0),
         };
         let j = report_to_json(&r);
         assert_eq!(
@@ -952,6 +1075,15 @@ mod tests {
         let sgate = j.get("sharded_cps_gate").unwrap();
         assert_eq!(sgate.get("name").and_then(Json::as_str), Some(SHARDED_GATE_NAME));
         assert_eq!(sgate.get("floor").and_then(Json::as_f64), Some(40_000.0));
+        let tornado = j
+            .get("scenarios")
+            .and_then(|s| s.get("tornado_adaptive_8x8"))
+            .unwrap();
+        assert_eq!(tornado.get("cycles").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(tornado.get("provenance").and_then(Json::as_str), Some("measured"));
+        let tgate = j.get("tornado_adaptive_cps_gate").unwrap();
+        assert_eq!(tgate.get("name").and_then(Json::as_str), Some(TORNADO_GATE_NAME));
+        assert_eq!(tgate.get("floor").and_then(Json::as_f64), Some(100_000.0));
     }
 
     /// The serial-vs-sharded bench comparison's built-in determinism

@@ -38,4 +38,5 @@ pub use router::{
 };
 pub use routing::{
     dateline_vc, port_dim, ring_route, torus_route, xy_route, RouteTable, RoutingAlgorithm,
+    RoutingKind,
 };

@@ -17,8 +17,44 @@
 //! * the output VC of a traversal follows the dateline rule
 //!   ([`super::routing::dateline_vc`]): wrap crossings switch to VC 1,
 //!   in-dimension hops keep the VC, dimension changes reset to VC 0.
+//!
+//! # Adaptive routing on escape VCs
+//!
+//! An **adaptive** route table ([`RouteTable::is_adaptive`]) splits the
+//! VC lanes into *escape* lanes (`0..escape_lanes`, running exactly the
+//! deterministic/dateline baseline above) and *adaptive* lanes
+//! (`escape_lanes..vcs`). Each cycle, every un-granted head re-chooses
+//! its output among the table's minimal candidate set by local
+//! congestion — the count of admissible adaptive lanes (unlocked, with
+//! credit) per candidate output; the highest count wins, lowest port on
+//! ties, and the head plans the lowest admissible adaptive lane. When
+//! no candidate has an admissible adaptive lane the head falls back to
+//! the **escape route**: the deterministic output on the dateline lane.
+//!
+//! Two rules make this Duato-safe (full argument in
+//! `docs/deadlock.md`):
+//!
+//! * **always-available escape** — every head can always *request* its
+//!   escape route, whose (channel, VC) subgraph is proven acyclic by
+//!   the static verifier, so some packet can always eventually drain;
+//! * **no re-entry** — a head that arrives on an escape lane from a
+//!   neighbouring router is *escape-committed*: it routes
+//!   deterministically for the rest of its journey and never climbs
+//!   back onto adaptive lanes. Without this, adaptive hops downstream
+//!   of an escape hop would add indirect dependencies that re-close
+//!   the escape cycle. Commitment also makes an escape entry
+//!   lane-equivalent to a fresh injection (the dateline rule with
+//!   `vc_in = 0` does not depend on the input port), so the escape
+//!   subgraph equals the deterministic fabric's CDG at
+//!   `min(vcs, escape_lanes)` lanes — the proof the verifier already
+//!   runs.
+//!
+//! Adaptivity stays a pure function of pre-cycle simulator state (this
+//! router's own output credits and locks — state no other component
+//! mutates concurrently in any engine), so dense/gated/event × sharded
+//! digests remain byte-identical.
 
-use crate::flit::FlooFlit;
+use crate::flit::{FlooFlit, NodeId};
 use crate::sim::{Link, LinkId};
 
 use super::arbiter::RoundRobin;
@@ -212,6 +248,24 @@ pub struct Router {
     /// instead of a probe-everything closure. Maintained alongside
     /// `want` (set on route, cleared on pop).
     req: Vec<u32>,
+    /// Adaptive mode flag (`table.is_adaptive()` at build), hoisted out
+    /// of the hot loop so the deterministic path costs one branch.
+    adaptive: bool,
+    /// Escape-lane count (`min(table.escape_lanes(), cfg.vcs)`); lanes
+    /// `escape_lanes..vcs` are the adaptive lanes. 1 in deterministic
+    /// mode (unused there).
+    escape_lanes: usize,
+    /// Adaptive mode only: the planned *output lane* for each input
+    /// lane's head, maintained alongside `want` (a deterministic head's
+    /// output lane is a pure function of `(input, output, vc)` so no
+    /// plan is needed; an adaptive head's lane was chosen against this
+    /// cycle's congestion and must be committed as planned).
+    plan_vc: Vec<Option<u8>>,
+    /// Adaptive mode only: `(output port, output lane)` a mid-packet
+    /// input lane is wormhole-committed to — the inverse view of the
+    /// per-output locks. Continuation flits bypass the adaptive choice
+    /// and follow the hold; cleared when the `last` flit is granted.
+    hold: Vec<Option<(u8, u8)>>,
     /// Total flits forwarded (all ports).
     pub forwarded: u64,
     /// Cycles with at least one forwarded flit (activity factor).
@@ -238,6 +292,8 @@ impl Router {
                 forwarded: 0,
             })
             .collect();
+        let adaptive = table.is_adaptive();
+        let escape_lanes = (table.escape_lanes() as usize).min(cfg.vcs);
         Router {
             in_links: vec![None; cfg.ports],
             out_links: vec![None; cfg.ports],
@@ -245,6 +301,10 @@ impl Router {
             outputs,
             want: vec![None; cfg.ports * cfg.vcs],
             req: vec![0; cfg.ports],
+            adaptive,
+            escape_lanes,
+            plan_vc: vec![None; cfg.ports * cfg.vcs],
+            hold: vec![None; cfg.ports * cfg.vcs],
             cfg,
             forwarded: 0,
             active_cycles: 0,
@@ -295,12 +355,33 @@ impl Router {
     fn compute_requests<P: LinkPool + ?Sized>(&mut self, links: &P) -> bool {
         let ports = self.cfg.ports;
         let vcs = self.cfg.vcs;
+        if self.adaptive {
+            // Un-granted adaptive plans are retracted so every free head
+            // re-chooses against *this* cycle's congestion; mid-packet
+            // lanes (hold set) keep their committed output. The memo
+            // optimisation is deterministic-only — adaptivity's whole
+            // point is re-evaluating stalled heads.
+            for k in 0..ports * vcs {
+                if self.hold[k].is_none() {
+                    if let Some(o) = self.want[k] {
+                        self.want[k] = None;
+                        self.plan_vc[k] = None;
+                        self.req[o as usize] &= !(1u32 << k);
+                    }
+                }
+            }
+        }
         let mut any_input = false;
         for i in 0..ports {
             let Some(lid) = self.in_links[i] else { continue };
             // Inject/eject links carry one lane regardless of the
             // router's VC count; neighbour links carry `vcs` lanes.
-            let nv = links.vcs(lid).min(vcs);
+            let in_lanes = links.vcs(lid);
+            let nv = in_lanes.min(vcs);
+            // Single-lane input links are injection/attach feeds (every
+            // router-to-router link carries the full lane complement):
+            // their heads are fresh packets, free to choose adaptively.
+            let from_router = in_lanes > 1;
             let mut occ = links.occupied_lanes(lid) & ((1u32 << nv) - 1);
             any_input |= occ != 0;
             while occ != 0 {
@@ -309,32 +390,114 @@ impl Router {
                 let k = i * vcs + v;
                 if let Some(o) = self.want[k] {
                     // Memo hit: the head was routed when it first
-                    // appeared and this router hasn't popped it since.
-                    debug_assert_eq!(
-                        links.peek_vc(lid, v).map(|f| self.table.lookup(f.header.dst)),
-                        Some(o as usize),
+                    // appeared and this router hasn't popped it since
+                    // (adaptive mode: a held continuation).
+                    debug_assert!(
+                        self.adaptive
+                            || links.peek_vc(lid, v).map(|f| self.table.lookup(f.header.dst))
+                                == Some(o as usize),
                         "memoized route for input {i} lane {v} went stale"
                     );
                     continue;
                 }
                 let flit = links.peek_vc(lid, v).expect("occupied lane with no head");
-                let o = self.table.lookup(flit.header.dst);
+                debug_assert_eq!(
+                    flit.vc as usize,
+                    v,
+                    "flit VC sideband diverged from the lane it rides"
+                );
+                let (o, vo) = if self.adaptive {
+                    self.route_adaptive(links, i, v, from_router, flit.header.dst)
+                } else {
+                    (self.table.lookup(flit.header.dst), 0)
+                };
                 debug_assert!(o < ports, "route table port out of range");
                 debug_assert!(
                     o != i,
                     "loopback disabled: flit at port {i} routed back (dst {:?})",
                     flit.header.dst
                 );
-                debug_assert_eq!(
-                    flit.vc as usize,
-                    v,
-                    "flit VC sideband diverged from the lane it rides"
-                );
                 self.want[k] = Some(o as u8);
                 self.req[o] |= 1 << k;
+                if self.adaptive {
+                    self.plan_vc[k] = Some(vo as u8);
+                }
             }
         }
         any_input
+    }
+
+    /// Adaptive route decision for the head flit on input `i`, lane
+    /// `v_in`: returns `(output port, output lane)`. Pure — reads only
+    /// this router's own state (table, locks, holds) and its output
+    /// links' producer-side credits, all of which are stable for the
+    /// whole compute phase in every engine, so the choice is identical
+    /// across dense/gated/event and serial/sharded execution.
+    fn route_adaptive<P: LinkPool + ?Sized>(
+        &self,
+        links: &P,
+        i: usize,
+        v_in: usize,
+        from_router: bool,
+        dst: NodeId,
+    ) -> (usize, usize) {
+        let vcs = self.cfg.vcs;
+        let esc = self.escape_lanes;
+        if let Some((o, vo)) = self.hold[i * vcs + v_in] {
+            // Mid-packet: follow the wormhole hold, no choice to make.
+            return (o as usize, vo as usize);
+        }
+        // No re-entry: a head that arrived on an escape lane of a
+        // router-to-router link is escape-committed (see the module
+        // docs); only fresh injections and adaptive-lane arrivals
+        // choose adaptively.
+        if !(from_router && v_in < esc) {
+            let mut cand = self.table.candidates(dst);
+            let mut best: Option<(usize, usize, u32)> = None;
+            while cand != 0 {
+                let o = cand.trailing_zeros() as usize;
+                cand &= cand - 1;
+                let Some(out_lid) = self.out_links[o] else { continue };
+                let max_v = vcs.min(links.vcs(out_lid));
+                let locks = &self.outputs[o].locks;
+                // Congestion score: admissible adaptive lanes (unlocked
+                // with credit). The lowest admissible lane is the plan.
+                let mut score = 0u32;
+                let mut lane = None;
+                for vo in esc..max_v {
+                    if locks[vo].is_none() && links.can_offer_vc(out_lid, vo) {
+                        score += 1;
+                        if lane.is_none() {
+                            lane = Some(vo);
+                        }
+                    }
+                }
+                if let Some(vo) = lane {
+                    // Strictly-greater replacement: ties stay with the
+                    // lowest candidate port (deterministic).
+                    let better = match best {
+                        None => true,
+                        Some((_, _, s)) => score > s,
+                    };
+                    if better {
+                        best = Some((o, vo, score));
+                    }
+                }
+            }
+            if let Some((o, vo, _)) = best {
+                return (o, vo);
+            }
+        }
+        // Escape: the deterministic baseline. A committed head keeps
+        // its lane history (`v_in`); a head *entering* escape here is
+        // lane-equivalent to an injection at this router (`vc_in = 0`).
+        let o = self.table.lookup(dst);
+        let out_lid = self.out_links[o].expect("escape route exits an unconnected port");
+        let out_vcs = links.vcs(out_lid);
+        let vc_eff = if from_router && v_in < esc { v_in as u8 } else { 0 };
+        let vo = (dateline_vc(i, o, self.table.crosses_dateline(o), vc_eff) as usize)
+            .min(out_vcs - 1);
+        (o, vo)
     }
 
     /// Commit phase: one winner per output port (the physical channel
@@ -396,7 +559,14 @@ impl Router {
                     self.want[k].is_none() || self.want[k] == Some(o as u8),
                     "locked input {li} (vc {lv}) head diverged from output {o} mid-packet"
                 );
-                debug_assert_eq!(ovc(li, lv), v_out, "lock lane disagrees with dateline rule");
+                debug_assert!(
+                    if self.adaptive {
+                        self.hold[k] == Some((o as u8, v_out as u8))
+                    } else {
+                        ovc(li, lv) == v_out
+                    },
+                    "lock lane disagrees with the planned/dateline lane"
+                );
                 if (avail >> k) & 1 == 1 && links.can_offer_vc(out_lid, v_out) {
                     winner = Some((li, lv, v_out));
                     break;
@@ -411,15 +581,24 @@ impl Router {
             // output was locked or backpressured.
             if winner.is_none() {
                 let pool = &*links;
+                let adaptive = self.adaptive;
+                // Disjoint field borrows: the closure reads the compute
+                // phase's planned lanes while the arbiter is mutably
+                // borrowed from the same struct.
+                let plan_vc = &self.plan_vc;
+                let lane_of = |k: usize| {
+                    if adaptive {
+                        plan_vc[k].expect("adaptive requester without a planned lane") as usize
+                    } else {
+                        ovc(k / vcs, k % vcs)
+                    }
+                };
                 let arb = &mut self.outputs[o].arb;
                 let grant = arb.arbitrate_mask(avail, |k| {
-                    let v_out = ovc(k / vcs, k % vcs);
+                    let v_out = lane_of(k);
                     locks[v_out].is_none() && pool.can_offer_vc(out_lid, v_out)
                 });
-                winner = grant.map(|k| {
-                    let (i, v) = (k / vcs, k % vcs);
-                    (i, v, ovc(i, v))
-                });
+                winner = grant.map(|k| (k / vcs, k % vcs, lane_of(k)));
             }
             let Some((i, v_in, v_out)) = winner else { continue };
             let in_lid = self.in_links[i].unwrap();
@@ -438,6 +617,18 @@ impl Router {
             } else {
                 Some((i as u8, v_in as u8))
             };
+            if self.adaptive {
+                let k = i * vcs + v_in;
+                self.plan_vc[k] = None;
+                // Mid-packet lanes remember their committed (output,
+                // lane) so continuation flits bypass the adaptive
+                // choice; the `last` flit clears the hold.
+                self.hold[k] = if flit.header.last {
+                    None
+                } else {
+                    Some((o as u8, v_out as u8))
+                };
+            }
             flit.vc = v_out as u8;
             links.offer_vc(out_lid, v_out, flit);
             self.outputs[o].forwarded += 1;
@@ -838,6 +1029,156 @@ mod tests {
         }
         assert_eq!(order, vec![1, 3, 4, 1, 3, 4, 1, 3, 4]);
         assert_eq!(r.forwarded_on(PORT_E), 9);
+    }
+
+    // --------------------------------------------- adaptive routing
+
+    /// A 5-port, 3-VC adaptive router: escape lane 0 plus adaptive
+    /// lanes 1–2. Injection/ejection links (LOCAL) carry one lane;
+    /// cardinal links carry 3 lanes with a depth-1 buffer so a lane is
+    /// persistently blocked by two offers around one deliver
+    /// (`block_lane`). dst 0 ejects locally; dst 1 has candidates
+    /// {N, E} with escape step E; dst 2 routes N only.
+    fn mini_adaptive() -> (Router, Vec<Link<FlooFlit>>) {
+        let links: Vec<Link<FlooFlit>> = (0..10)
+            .map(|p| {
+                if p % 5 == PORT_LOCAL {
+                    Link::new(4)
+                } else {
+                    Link::with_vcs(1, 3, 0)
+                }
+            })
+            .collect();
+        let mut r = Router::new(
+            RouterCfg {
+                ports: 5,
+                in_buf_depth: 4,
+                vcs: 3,
+            },
+            RouteTable::with_candidates(
+                vec![PORT_LOCAL as u8, PORT_E as u8, PORT_N as u8],
+                0,
+                vec![1 << PORT_LOCAL, (1 << PORT_E) | (1 << PORT_N), 1 << PORT_N],
+                1,
+            ),
+        );
+        for p in 0..5 {
+            r.in_links[p] = Some(p);
+            r.out_links[p] = Some(5 + p);
+        }
+        (r, links)
+    }
+
+    /// Make lane `vc` of link `lid` refuse offers indefinitely: fill
+    /// the depth-1 buffer and the register with junk.
+    fn block_lane(links: &mut [Link<FlooFlit>], lid: usize, vc: usize) {
+        links[lid].offer_vc(vc, flit_vc(0, true, 0, vc as u8));
+        links[lid].deliver();
+        links[lid].offer_vc(vc, flit_vc(0, true, 0, vc as u8));
+        assert!(!links[lid].can_offer_vc(vc));
+    }
+
+    /// Equal congestion on both candidates resolves to the lowest
+    /// candidate port (N) on the lowest adaptive lane — the
+    /// deterministic tie-break the digest suites depend on.
+    #[test]
+    fn adaptive_tie_resolves_to_lowest_candidate_port() {
+        let (mut r, mut links) = mini_adaptive();
+        links[PORT_LOCAL].offer(flit(1, true, 9));
+        deliver_all(&mut links);
+        r.step(&mut links);
+        deliver_all(&mut links);
+        let f = links[5 + PORT_N].pop_vc(1).unwrap();
+        assert_eq!((f.header.rob_idx, f.vc), (9, 1));
+    }
+
+    /// Congestion steers the choice: with N's adaptive lanes blocked, a
+    /// fresh head takes E even though N wins the uncongested tie.
+    #[test]
+    fn adaptive_head_picks_least_congested_candidate() {
+        let (mut r, mut links) = mini_adaptive();
+        let north = 5 + PORT_N;
+        block_lane(&mut links, north, 1);
+        block_lane(&mut links, north, 2);
+        links[PORT_LOCAL].offer(flit(1, true, 7));
+        deliver_all(&mut links);
+        r.step(&mut links);
+        deliver_all(&mut links);
+        let f = links[5 + PORT_E].pop_vc(1).unwrap();
+        assert_eq!((f.header.rob_idx, f.vc), (7, 1), "freer port, lowest adaptive lane");
+    }
+
+    /// With every adaptive lane of every candidate blocked, the head
+    /// falls back to the escape route: the deterministic step on lane 0.
+    #[test]
+    fn escape_fallback_when_all_adaptive_lanes_blocked() {
+        let (mut r, mut links) = mini_adaptive();
+        for lid in [5 + PORT_E, 5 + PORT_N] {
+            block_lane(&mut links, lid, 1);
+            block_lane(&mut links, lid, 2);
+        }
+        links[PORT_LOCAL].offer(flit(1, true, 11));
+        deliver_all(&mut links);
+        r.step(&mut links);
+        deliver_all(&mut links);
+        let f = links[5 + PORT_E].pop_vc(0).unwrap();
+        assert_eq!((f.header.rob_idx, f.vc), (11, 0), "escape = deterministic step, lane 0");
+    }
+
+    /// The Duato no-re-entry rule: a head arriving on the escape lane
+    /// of a router-to-router link is committed to the deterministic
+    /// route — it never climbs back onto adaptive lanes. An
+    /// adaptive-lane arrival keeps choosing freely.
+    #[test]
+    fn escape_lane_arrival_is_committed_to_the_deterministic_route() {
+        let (mut r, mut links) = mini_adaptive();
+        links[PORT_W].offer_vc(0, flit_vc(1, true, 21, 0));
+        deliver_all(&mut links);
+        r.step(&mut links);
+        deliver_all(&mut links);
+        let f = links[5 + PORT_E].pop_vc(0).unwrap();
+        assert_eq!((f.header.rob_idx, f.vc), (21, 0));
+        assert_eq!(links[5 + PORT_N].buffered(), 0, "no adaptive hop for a committed head");
+        // Same source link, adaptive lane: free choice (N wins the tie).
+        links[PORT_W].offer_vc(2, flit_vc(1, true, 22, 2));
+        deliver_all(&mut links);
+        r.step(&mut links);
+        deliver_all(&mut links);
+        let f = links[5 + PORT_N].pop_vc(1).unwrap();
+        assert_eq!((f.header.rob_idx, f.vc), (22, 1), "adaptive arrival re-chooses");
+    }
+
+    /// Wormhole commitment under adaptivity: a mid-packet lane follows
+    /// its hold even when congestion has since made another candidate
+    /// more attractive; the `last` beat releases the hold and the next
+    /// packet chooses freshly.
+    #[test]
+    fn hold_pins_a_wormhole_packet_through_congestion_changes() {
+        let (mut r, mut links) = mini_adaptive();
+        let north = 5 + PORT_N;
+        // Beat 0 of a 2-beat packet: the uncongested tie picks N lane 1.
+        links[PORT_LOCAL].offer(rflit(1, 0, false));
+        deliver_all(&mut links);
+        r.step(&mut links);
+        deliver_all(&mut links);
+        assert!(matches!(links[north].pop_vc(1).unwrap().payload, Payload::WideR(_)));
+        // Congestion flips (N down to one free adaptive lane, E has
+        // two): a fresh head would pick E, the continuation must not.
+        block_lane(&mut links, north, 2);
+        links[PORT_LOCAL].offer(rflit(1, 1, true));
+        deliver_all(&mut links);
+        r.step(&mut links);
+        deliver_all(&mut links);
+        let f = links[north].pop_vc(1).unwrap();
+        assert!(matches!(f.payload, Payload::WideR(RBeat { beat: 1, .. })));
+        assert_eq!(f.vc, 1, "continuation rides the held lane");
+        // Hold and lock released at `last`: the next packet re-chooses
+        // and lands on the freer port.
+        links[PORT_LOCAL].offer(flit(1, true, 33));
+        deliver_all(&mut links);
+        r.step(&mut links);
+        deliver_all(&mut links);
+        assert_eq!(links[5 + PORT_E].pop_vc(1).unwrap().header.rob_idx, 33);
     }
 
     /// Ejection (a non-cardinal output) resets the VC to 0 — flits hand

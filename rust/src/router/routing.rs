@@ -19,6 +19,19 @@
 //! mask (which output ports cross a wraparound link) and [`dateline_vc`]
 //! switches wrap-crossing flits from VC 0 to VC 1, breaking every
 //! channel-dependency cycle (proof sketch in `docs/deadlock.md`).
+//!
+//! The **adaptive** variants ([`RoutingAlgorithm::AdaptiveXy`],
+//! [`RoutingAlgorithm::AdaptiveTorus`], [`RoutingAlgorithm::AdaptiveRing`])
+//! keep the deterministic rule above as a Duato-style *escape* baseline
+//! and additionally publish a per-destination **candidate set**
+//! ([`RoutingAlgorithm::candidates`]): every output port that strictly
+//! decreases the distance to the destination (minimal adaptivity; on
+//! even rings a diametrically-opposite destination yields *both*
+//! directions). The router picks among candidates per cycle by local
+//! congestion on the adaptive lanes and falls back to the escape lanes
+//! — which run exactly the deterministic step — whenever no adaptive
+//! lane is admissible ([`super::router::Router`],
+//! "Adaptive routing on escape VCs" in `docs/deadlock.md`).
 
 use crate::flit::{Coord, NodeId};
 
@@ -56,6 +69,19 @@ fn ring_step(me: u8, dst: u8, n: u8) -> Option<bool> {
 fn ring_dist(a: u8, b: u8, n: u8) -> u32 {
     let fwd = (b as u16 + n as u16 - a as u16) % n as u16;
     fwd.min(n as u16 - fwd) as u32
+}
+
+/// The *productive* directions along one ring dimension: `(increasing,
+/// decreasing)` flags, each true iff one hop that way strictly
+/// decreases the ring distance to `dst`. Both are true exactly at the
+/// diametrically-opposite tie on an even ring (either arc is minimal);
+/// both are false on arrival.
+fn ring_productive(me: u8, dst: u8, n: u8) -> (bool, bool) {
+    if me == dst {
+        return (false, false);
+    }
+    let fwd = (dst as u16 + n as u16 - me as u16) % n as u16;
+    (fwd <= n as u16 - fwd, n as u16 - fwd <= fwd)
 }
 
 /// Shortest-direction step around a 1-D ring of `n` nodes laid out along
@@ -109,31 +135,153 @@ pub enum RoutingAlgorithm {
         /// Number of nodes on the ring.
         nodes: u8,
     },
+    /// Minimal-adaptive mesh routing over a Duato-style escape lane:
+    /// candidate set = every productive cardinal direction, escape
+    /// baseline = [`RoutingAlgorithm::Xy`].
+    AdaptiveXy,
+    /// Minimal-adaptive torus routing; escape baseline =
+    /// [`RoutingAlgorithm::TorusXy`] on the dateline escape lanes.
+    AdaptiveTorus {
+        /// Ring length of the X dimension.
+        width: u8,
+        /// Ring length of the Y dimension.
+        height: u8,
+    },
+    /// Minimal-adaptive ring routing; escape baseline =
+    /// [`RoutingAlgorithm::RingShortest`] on the dateline escape lanes.
+    AdaptiveRing {
+        /// Number of nodes on the ring.
+        nodes: u8,
+    },
 }
 
 impl RoutingAlgorithm {
     /// One routing step: the output port a flit at router `me` takes
     /// towards destination router `dst` ([`PORT_LOCAL`] on arrival).
+    ///
+    /// For the adaptive variants this is the **escape** step — the
+    /// deterministic, dimension-ordered baseline the escape lanes run.
     pub fn step(&self, me: Coord, dst: Coord) -> usize {
         match *self {
-            RoutingAlgorithm::Xy => xy_route(me, dst),
-            RoutingAlgorithm::TorusXy { width, height } => torus_route(me, dst, width, height),
-            RoutingAlgorithm::RingShortest { nodes } => ring_route(me, dst, nodes),
+            RoutingAlgorithm::Xy | RoutingAlgorithm::AdaptiveXy => xy_route(me, dst),
+            RoutingAlgorithm::TorusXy { width, height }
+            | RoutingAlgorithm::AdaptiveTorus { width, height } => {
+                torus_route(me, dst, width, height)
+            }
+            RoutingAlgorithm::RingShortest { nodes }
+            | RoutingAlgorithm::AdaptiveRing { nodes } => ring_route(me, dst, nodes),
         }
     }
 
     /// Analytic shortest-path router-to-router hop count under this rule
     /// (the routes generated by [`Self::step`] are minimal, so walking a
-    /// table takes exactly this many hops).
+    /// table takes exactly this many hops; adaptive candidates are
+    /// strictly distance-decreasing, so adaptive paths are equally
+    /// minimal whatever the per-cycle choices).
     pub fn distance(&self, a: Coord, b: Coord) -> u32 {
         match *self {
-            RoutingAlgorithm::Xy => (a.x.abs_diff(b.x) + a.y.abs_diff(b.y)) as u32,
-            RoutingAlgorithm::TorusXy { width, height } => {
+            RoutingAlgorithm::Xy | RoutingAlgorithm::AdaptiveXy => {
+                (a.x.abs_diff(b.x) + a.y.abs_diff(b.y)) as u32
+            }
+            RoutingAlgorithm::TorusXy { width, height }
+            | RoutingAlgorithm::AdaptiveTorus { width, height } => {
                 ring_dist(a.x, b.x, width) + ring_dist(a.y, b.y, height)
             }
-            RoutingAlgorithm::RingShortest { nodes } => ring_dist(a.x, b.x, nodes),
+            RoutingAlgorithm::RingShortest { nodes }
+            | RoutingAlgorithm::AdaptiveRing { nodes } => ring_dist(a.x, b.x, nodes),
         }
     }
+
+    /// Whether this rule publishes adaptive candidate sets.
+    pub fn is_adaptive(&self) -> bool {
+        matches!(
+            self,
+            RoutingAlgorithm::AdaptiveXy
+                | RoutingAlgorithm::AdaptiveTorus { .. }
+                | RoutingAlgorithm::AdaptiveRing { .. }
+        )
+    }
+
+    /// The **candidate set** for a flit at `me` towards `dst`: a bitmask
+    /// over output ports, every one of which strictly decreases
+    /// [`Self::distance`] (minimal adaptivity). Always non-empty for
+    /// `me != dst`, and always a superset of `1 << self.step(me, dst)`
+    /// — the escape route is itself a candidate, so the adaptive router
+    /// can fall back to it without ever taking a non-minimal hop.
+    ///
+    /// Deterministic variants return exactly their single step. Adaptive
+    /// variants return every productive cardinal direction; on an even
+    /// ring dimension a diametrically-opposite destination is
+    /// equidistant both ways, so **both** directions are included (each
+    /// strictly decreases the distance). `me == dst` returns
+    /// `1 << PORT_LOCAL` (the caller substitutes the real attach port
+    /// for memory-controller nodes).
+    pub fn candidates(&self, me: Coord, dst: Coord) -> u8 {
+        if me == dst {
+            return 1 << PORT_LOCAL;
+        }
+        match *self {
+            RoutingAlgorithm::Xy
+            | RoutingAlgorithm::TorusXy { .. }
+            | RoutingAlgorithm::RingShortest { .. } => 1 << self.step(me, dst),
+            RoutingAlgorithm::AdaptiveXy => {
+                let mut mask = 0u8;
+                if dst.x > me.x {
+                    mask |= 1 << PORT_E;
+                } else if dst.x < me.x {
+                    mask |= 1 << PORT_W;
+                }
+                if dst.y > me.y {
+                    mask |= 1 << PORT_N;
+                } else if dst.y < me.y {
+                    mask |= 1 << PORT_S;
+                }
+                mask
+            }
+            RoutingAlgorithm::AdaptiveTorus { width, height } => {
+                let mut mask = 0u8;
+                let (e, w) = ring_productive(me.x, dst.x, width);
+                if e {
+                    mask |= 1 << PORT_E;
+                }
+                if w {
+                    mask |= 1 << PORT_W;
+                }
+                let (n, s) = ring_productive(me.y, dst.y, height);
+                if n {
+                    mask |= 1 << PORT_N;
+                }
+                if s {
+                    mask |= 1 << PORT_S;
+                }
+                mask
+            }
+            RoutingAlgorithm::AdaptiveRing { nodes } => {
+                let mut mask = 0u8;
+                let (e, w) = ring_productive(me.x, dst.x, nodes);
+                if e {
+                    mask |= 1 << PORT_E;
+                }
+                if w {
+                    mask |= 1 << PORT_W;
+                }
+                mask
+            }
+        }
+    }
+}
+
+/// The routing discipline a fabric is configured with — the
+/// `NocConfig` knob the network builder turns into per-router
+/// [`RouteTable`]s (deterministic: escape tables only; adaptive:
+/// candidate sets over dateline escape lanes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingKind {
+    /// The deterministic dimension-ordered/dateline baseline.
+    #[default]
+    Deterministic,
+    /// Minimal-adaptive candidates over Duato escape lanes.
+    Adaptive,
 }
 
 /// Routing dimension a cardinal port moves a flit in: `Some(0)` for X
@@ -191,10 +339,21 @@ pub fn dateline_vc(in_port: usize, out_port: usize, crosses_dateline: bool, vc_i
 /// table the single source of the VC-switch decision: the router hot
 /// loop asks [`RouteTable::crosses_dateline`] and [`dateline_vc`] and
 /// never re-derives fabric geometry.
+///
+/// Under adaptive routing the table additionally carries a
+/// per-destination **candidate mask** ([`RouteTable::candidates`], from
+/// [`RoutingAlgorithm::candidates`]) and the number of **escape lanes**
+/// reserved for the deterministic baseline; the `ports` vector then
+/// holds the escape step. A table with no candidate vector
+/// (`!is_adaptive()`) routes exactly as before.
 #[derive(Debug, Clone)]
 pub struct RouteTable {
     ports: Vec<u8>,
     dateline: u8,
+    /// Per-destination candidate port bitmask; empty ⇔ deterministic.
+    cand: Vec<u8>,
+    /// VC lanes `0..escape_lanes` reserved for the escape baseline.
+    escape_lanes: u8,
 }
 
 impl RouteTable {
@@ -208,7 +367,49 @@ impl RouteTable {
     /// `p` crosses a wraparound link). `Topology::route_table` fills
     /// this from `Topology::dateline_ports`.
     pub fn with_dateline(ports: Vec<u8>, dateline: u8) -> Self {
-        RouteTable { ports, dateline }
+        RouteTable {
+            ports,
+            dateline,
+            cand: Vec::new(),
+            escape_lanes: 1,
+        }
+    }
+
+    /// Build an adaptive table: escape steps in `ports`, the dateline
+    /// mask, per-destination candidate masks (same indexing as `ports`)
+    /// and the escape-lane count (the fabric's dateline VC default: 1
+    /// on meshes, 2 on wrap fabrics). `Topology::route_table_adaptive`
+    /// fills all four.
+    pub fn with_candidates(ports: Vec<u8>, dateline: u8, cand: Vec<u8>, escape_lanes: u8) -> Self {
+        assert_eq!(ports.len(), cand.len(), "one candidate mask per destination");
+        assert!(escape_lanes >= 1, "the escape baseline needs a lane");
+        RouteTable {
+            ports,
+            dateline,
+            cand,
+            escape_lanes,
+        }
+    }
+
+    /// Whether this table carries adaptive candidate sets.
+    #[inline]
+    pub fn is_adaptive(&self) -> bool {
+        !self.cand.is_empty()
+    }
+
+    /// Number of VC lanes reserved for the deterministic escape
+    /// baseline (`0..escape_lanes`); lanes above are adaptive.
+    #[inline]
+    pub fn escape_lanes(&self) -> u8 {
+        self.escape_lanes
+    }
+
+    /// Candidate output-port bitmask for `dst` (adaptive tables only;
+    /// panics when the table is deterministic — callers gate on
+    /// [`RouteTable::is_adaptive`]).
+    #[inline]
+    pub fn candidates(&self, dst: NodeId) -> u8 {
+        self.cand[dst.0 as usize]
     }
 
     /// Does leaving this router through `port` cross a wraparound
@@ -367,6 +568,112 @@ mod tests {
         assert_eq!(dateline_vc(PORT_LOCAL, PORT_E, false, 1), 0, "injection");
         assert_eq!(dateline_vc(PORT_E, PORT_LOCAL, false, 1), 0, "ejection");
         assert_eq!(dateline_vc(PORT_E, super::super::router::PORT_MEM, false, 1), 0);
+    }
+
+    #[test]
+    fn adaptive_candidates_are_minimal_and_contain_escape() {
+        let algs = [
+            RoutingAlgorithm::AdaptiveXy,
+            RoutingAlgorithm::AdaptiveTorus { width: 4, height: 4 },
+            RoutingAlgorithm::AdaptiveTorus { width: 5, height: 3 },
+            RoutingAlgorithm::AdaptiveRing { nodes: 8 },
+        ];
+        for alg in algs {
+            let (w, h) = match alg {
+                RoutingAlgorithm::AdaptiveTorus { width, height } => (width, height),
+                RoutingAlgorithm::AdaptiveRing { nodes } => (nodes, 1),
+                _ => (4, 4),
+            };
+            for sy in 0..h {
+                for sx in 0..w {
+                    for dy in 0..h {
+                        for dx in 0..w {
+                            let me = Coord::new(sx, sy);
+                            let dst = Coord::new(dx, dy);
+                            let cand = alg.candidates(me, dst);
+                            assert_ne!(cand, 0, "{alg:?}: empty candidate set");
+                            if me == dst {
+                                assert_eq!(cand, 1 << PORT_LOCAL);
+                                continue;
+                            }
+                            assert_ne!(
+                                cand & (1 << alg.step(me, dst)),
+                                0,
+                                "{alg:?} {me:?}->{dst:?}: escape step not a candidate"
+                            );
+                            // Every candidate hop strictly decreases the
+                            // distance (minimality).
+                            let wraps = !matches!(alg, RoutingAlgorithm::AdaptiveXy);
+                            for port in [PORT_N, PORT_E, PORT_S, PORT_W] {
+                                if cand & (1 << port) == 0 {
+                                    continue;
+                                }
+                                let next = match (port, wraps) {
+                                    (PORT_E, true) => Coord::new((sx + 1) % w, sy),
+                                    (PORT_E, false) => Coord::new(sx + 1, sy),
+                                    (PORT_W, true) => Coord::new((sx + w - 1) % w, sy),
+                                    (PORT_W, false) => Coord::new(sx - 1, sy),
+                                    (PORT_N, true) => Coord::new(sx, (sy + 1) % h),
+                                    (PORT_N, false) => Coord::new(sx, sy + 1),
+                                    (PORT_S, true) => Coord::new(sx, (sy + h - 1) % h),
+                                    (PORT_S, false) => Coord::new(sx, sy - 1),
+                                    _ => unreachable!(),
+                                };
+                                assert_eq!(
+                                    alg.distance(next, dst) + 1,
+                                    alg.distance(me, dst),
+                                    "{alg:?} {me:?}->{dst:?} via {port}: not minimal"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tornado_tie_yields_both_directions() {
+        // Diametrically-opposite destination on an even ring: either arc
+        // is minimal, so the adaptive candidate set carries both
+        // directions while the deterministic escape tie-breaks east.
+        let alg = RoutingAlgorithm::AdaptiveRing { nodes: 8 };
+        let cand = alg.candidates(Coord::new(0, 0), Coord::new(4, 0));
+        assert_eq!(cand, (1 << PORT_E) | (1 << PORT_W));
+        let t = RoutingAlgorithm::AdaptiveTorus { width: 8, height: 8 };
+        let cand = t.candidates(Coord::new(0, 0), Coord::new(4, 4));
+        assert_eq!(
+            cand,
+            (1 << PORT_E) | (1 << PORT_W) | (1 << PORT_N) | (1 << PORT_S),
+            "tornado pairs see all four productive directions"
+        );
+    }
+
+    #[test]
+    fn deterministic_candidates_are_the_single_step() {
+        let alg = RoutingAlgorithm::TorusXy { width: 4, height: 4 };
+        let me = Coord::new(0, 0);
+        for (dx, dy) in [(1u8, 0u8), (3, 0), (0, 2), (2, 3)] {
+            let dst = Coord::new(dx, dy);
+            assert_eq!(alg.candidates(me, dst), 1 << alg.step(me, dst));
+        }
+    }
+
+    #[test]
+    fn adaptive_table_carries_candidates_and_escape_lanes() {
+        let t = RouteTable::with_candidates(
+            vec![PORT_E as u8, PORT_N as u8],
+            1 << PORT_E,
+            vec![(1 << PORT_E) | (1 << PORT_N), 1 << PORT_N],
+            2,
+        );
+        assert!(t.is_adaptive());
+        assert_eq!(t.escape_lanes(), 2);
+        assert_eq!(t.candidates(NodeId(0)), (1 << PORT_E) | (1 << PORT_N));
+        assert_eq!(t.lookup(NodeId(0)), PORT_E);
+        let d = RouteTable::new(vec![0]);
+        assert!(!d.is_adaptive());
+        assert_eq!(d.escape_lanes(), 1);
     }
 
     #[test]

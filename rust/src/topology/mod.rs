@@ -382,6 +382,20 @@ impl Topology {
         }
     }
 
+    /// The minimal-adaptive route-generator rule for this fabric: the
+    /// adaptive twin of [`Topology::algorithm`] (same escape step, plus
+    /// per-destination candidate sets).
+    pub fn adaptive_algorithm(&self) -> RoutingAlgorithm {
+        match self.kind {
+            TopologyKind::Mesh => RoutingAlgorithm::AdaptiveXy,
+            TopologyKind::Torus => RoutingAlgorithm::AdaptiveTorus {
+                width: self.width,
+                height: self.height,
+            },
+            TopologyKind::Ring => RoutingAlgorithm::AdaptiveRing { nodes: self.width },
+        }
+    }
+
     /// Output ports of the router at `me` whose channel is a wraparound
     /// — dateline — link, as a bitmask over port numbers. This is the
     /// geometric complement of [`Topology::channels`]'s wrap rules
@@ -433,6 +447,40 @@ impl Topology {
             })
             .collect();
         RouteTable::with_dateline(ports, self.dateline_ports(me))
+    }
+
+    /// Generate the **adaptive** route table for the router at `me`:
+    /// the escape steps and dateline mask of [`Topology::route_table`],
+    /// plus a per-destination candidate mask
+    /// ([`RoutingAlgorithm::candidates`]) and the fabric's escape-lane
+    /// count ([`TopologyKind::default_vcs`] — the lanes the
+    /// deterministic baseline needs, 1 on meshes and 2 on wrap
+    /// fabrics). Memory controllers at their host router exit through
+    /// the attach port with no alternative, so their candidate mask is
+    /// exactly that port.
+    pub fn route_table_adaptive(&self, me: Coord) -> RouteTable {
+        let alg = self.adaptive_algorithm();
+        let mut ports = Vec::with_capacity(self.nodes.len());
+        let mut cand = Vec::with_capacity(self.nodes.len());
+        for n in &self.nodes {
+            let (port, mask) = if n.coord == me {
+                let p = match n.kind {
+                    NodeKind::Tile => PORT_LOCAL as u8,
+                    NodeKind::MemCtrl { attach_port } => attach_port as u8,
+                };
+                (p, 1u8 << p)
+            } else {
+                (alg.step(me, n.coord) as u8, alg.candidates(me, n.coord))
+            };
+            ports.push(port);
+            cand.push(mask);
+        }
+        RouteTable::with_candidates(
+            ports,
+            self.dateline_ports(me),
+            cand,
+            self.kind.default_vcs() as u8,
+        )
     }
 
     /// Shortest-path hop count between two nodes' host routers under the
@@ -696,6 +744,62 @@ mod tests {
         // The mask flows into the generated route tables.
         assert!(torus.route_table(Coord::new(3, 1)).crosses_dateline(PORT_E));
         assert!(!torus.route_table(Coord::new(1, 1)).crosses_dateline(PORT_E));
+    }
+
+    /// Adaptive tables carry the same escape steps and dateline mask as
+    /// the deterministic tables, candidate sets that always include the
+    /// escape step, and the fabric's escape-lane count.
+    #[test]
+    fn adaptive_tables_extend_the_deterministic_tables() {
+        for t in [
+            Topology::mesh(4, 3, MemEdge::West),
+            Topology::torus(4, 4, MemEdge::West),
+            Topology::ring(6, MemEdge::EastWest),
+        ] {
+            for y in 0..t.height {
+                for x in 0..t.width {
+                    let me = Coord::new(x, y);
+                    let det = t.route_table(me);
+                    let ada = t.route_table_adaptive(me);
+                    assert!(ada.is_adaptive());
+                    assert_eq!(ada.escape_lanes() as usize, t.kind.default_vcs());
+                    for n in &t.nodes {
+                        assert_eq!(
+                            ada.lookup(n.id),
+                            det.lookup(n.id),
+                            "{:?} at {me:?}: escape step diverged for {:?}",
+                            t.kind,
+                            n.id
+                        );
+                        let cand = ada.candidates(n.id);
+                        assert_ne!(cand, 0);
+                        assert_ne!(
+                            cand & (1 << ada.lookup(n.id)),
+                            0,
+                            "{:?} at {me:?}: escape step not a candidate for {:?}",
+                            t.kind,
+                            n.id
+                        );
+                    }
+                    for p in 0..t.router_radix() {
+                        assert_eq!(ada.crosses_dateline(p), det.crosses_dateline(p));
+                    }
+                }
+            }
+        }
+    }
+
+    /// A memory controller's host router exits through the attach port
+    /// with no adaptive alternative.
+    #[test]
+    fn adaptive_mem_ctrl_candidates_are_the_attach_port() {
+        let t = Topology::torus(3, 3, MemEdge::West);
+        for m in t.mem_ctrls() {
+            let host = t.node(m).coord;
+            let ada = t.route_table_adaptive(host);
+            assert_eq!(ada.candidates(m), 1 << PORT_MEM);
+            assert_eq!(ada.lookup(m), PORT_MEM);
+        }
     }
 
     #[test]

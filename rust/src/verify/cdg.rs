@@ -304,6 +304,124 @@ pub fn analyze(topo: &Topology, vcs: usize, masks: &[u8], report: &mut Report) {
     }
 }
 
+/// The **sharpness** analysis behind the escape-VC restriction: build
+/// the channel-level dependency graph of *unrestricted* minimal-adaptive
+/// routing — an edge `c1 → c2` whenever some destination `d` makes `c1`
+/// productive from its source router **and** `c2` productive from `c1`'s
+/// sink router (per [`Topology::route_table_adaptive`]'s candidate
+/// masks) — and report any cycle as `FV001`.
+///
+/// This is what adaptive routing would be *without* the Duato escape
+/// lanes: every wrap fabric with a ring dimension of 4+ routers, and
+/// every mesh of 2×2 or larger (the adaptive candidate sets admit all
+/// four turn directions, closing the classic turn cycle), is cyclic
+/// here. The deployed router never offers these full candidate sets to
+/// a single lane class — adaptive lanes always sit above a proven-
+/// acyclic escape subgraph — so a finding from this pass is the
+/// *justification* for that restriction, not a defect in the deployed
+/// fabric. VC lanes are deliberately not modelled: adaptivity lets a
+/// packet use any adaptive lane of a chosen channel, so lanes add no
+/// separation the channel-level graph doesn't already show.
+pub fn analyze_adaptive_unrestricted(topo: &Topology, report: &mut Report) {
+    let num_routers = topo.width as usize * topo.height as usize;
+    let radix = topo.router_radix();
+
+    let mut dirlinks: Vec<DirLink> = Vec::new();
+    let mut out_map: Vec<Vec<Option<usize>>> = vec![vec![None; radix]; num_routers];
+    for (a, pa, b, pb) in topo.channels() {
+        out_map[a][pa] = Some(dirlinks.len());
+        dirlinks.push(DirLink {
+            src: a,
+            out_port: pa,
+            dst: b,
+            in_port: pb,
+        });
+        out_map[b][pb] = Some(dirlinks.len());
+        dirlinks.push(DirLink {
+            src: b,
+            out_port: pb,
+            dst: a,
+            in_port: pa,
+        });
+    }
+
+    let tables: Vec<RouteTable> = (0..num_routers)
+        .map(|r| topo.route_table_adaptive(topo.nodes[r].coord))
+        .collect();
+
+    let mut edges: std::collections::BTreeSet<(u32, u32)> = std::collections::BTreeSet::new();
+    for (i, dl) in dirlinks.iter().enumerate() {
+        for d in &topo.nodes {
+            // `dl` carries a packet for `d` iff its exit is a candidate
+            // at its source router. A destination's own router returns
+            // only the attach/local port, which has no neighbour
+            // channel — so terminated routes add no edges naturally.
+            if tables[dl.src].candidates(d.id) & (1 << dl.out_port) == 0 {
+                continue;
+            }
+            let next_cand = tables[dl.dst].candidates(d.id);
+            for (p, &slot) in out_map[dl.dst].iter().enumerate() {
+                let Some(j) = slot else { continue };
+                if next_cand & (1 << p) != 0 {
+                    edges.insert((i as u32, j as u32));
+                }
+            }
+        }
+    }
+
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); dirlinks.len()];
+    for &(a, b) in &edges {
+        adj[a as usize].push(b);
+    }
+    let cyclic: Vec<Vec<u32>> = sccs(dirlinks.len(), &adj)
+        .into_iter()
+        .filter(|c| c.len() > 1)
+        .collect();
+    // The printed lane is the fabric's first adaptive lane — the lane
+    // class the unrestricted candidates would actually deadlock.
+    let lane = topo.kind.default_vcs();
+    for comp in cyclic.iter().take(MAX_CYCLES) {
+        let cycle = extract_cycle(&adj, comp);
+        let chain: Vec<ChainNode> = cycle
+            .iter()
+            .map(|&node| {
+                let dl = dirlinks[node as usize];
+                ChainNode {
+                    coord: topo.nodes[dl.src].coord,
+                    port: dl.out_port,
+                    vc: lane,
+                }
+            })
+            .collect();
+        let mut context = vec![format!(
+            "unrestricted adaptive candidates close a cycle over {} channel(s):",
+            comp.len()
+        )];
+        context.extend(format_cycle(&chain));
+        report.push(Finding {
+            code: "FV001",
+            severity: Severity::Error,
+            category: Category::Deadlock,
+            message: "adaptive routing without the escape-VC restriction has a cyclic \
+                      channel dependency graph — wormhole deadlock is reachable"
+                .to_string(),
+            context,
+        });
+    }
+    if cyclic.len() > MAX_CYCLES {
+        report.push(Finding {
+            code: "FV001",
+            severity: Severity::Error,
+            category: Category::Deadlock,
+            message: format!(
+                "... and {} more cyclic component(s) not printed",
+                cyclic.len() - MAX_CYCLES
+            ),
+            context: vec![],
+        });
+    }
+}
+
 /// Tarjan's strongly-connected components, iterative (explicit frame
 /// stack — fabric CDGs are small, but recursion depth must not depend
 /// on fabric size). Returns every SCC; order is reverse-topological.
@@ -393,6 +511,50 @@ pub(crate) fn extract_cycle(adj: &[Vec<u32>], comp: &[u32]) -> Vec<u32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::topology::MemEdge;
+
+    /// The sharpness pass flags every fabric whose unrestricted
+    /// adaptive candidates close a cycle: wrap fabrics with a 4+ ring
+    /// dimension and meshes of 2×2 or larger (the full turn set).
+    #[test]
+    fn unrestricted_adaptive_is_cyclic_on_real_fabrics() {
+        for topo in [
+            Topology::torus(4, 4, MemEdge::None),
+            Topology::ring(4, MemEdge::None),
+            Topology::mesh(2, 2, MemEdge::None),
+            Topology::mesh(4, 4, MemEdge::West),
+        ] {
+            let mut report = Report::new();
+            analyze_adaptive_unrestricted(&topo, &mut report);
+            assert!(
+                !report.with_code("FV001").is_empty(),
+                "{:?} {}x{}: expected a cycle without the escape restriction",
+                topo.kind,
+                topo.width,
+                topo.height
+            );
+        }
+    }
+
+    /// Degenerate fabrics with no closable cycle stay clean even
+    /// without the escape restriction: a 1-D mesh line (single
+    /// productive direction, no turns) and a 3-ring (every pair is one
+    /// hop, so no channel ever depends on another).
+    #[test]
+    fn unrestricted_adaptive_is_acyclic_on_degenerate_fabrics() {
+        for topo in [Topology::mesh(4, 1, MemEdge::None), Topology::ring(3, MemEdge::None)] {
+            let mut report = Report::new();
+            analyze_adaptive_unrestricted(&topo, &mut report);
+            assert!(
+                !report.has_errors(),
+                "{:?} {}x{}: {:?}",
+                topo.kind,
+                topo.width,
+                topo.height,
+                report.findings
+            );
+        }
+    }
 
     #[test]
     fn tarjan_finds_the_cycle_and_the_tail() {

@@ -33,19 +33,47 @@
 //!   *more* than configured, with *less* slack per lane than the
 //!   depth knob suggests (single-slot lanes serialize wormhole
 //!   continuations behind the register stage).
+//! * `FV107` — **error** tier: adaptive routing with no lane above the
+//!   fabric's escape lanes (`vcs <= default_vcs`). The escape lanes run
+//!   the deterministic baseline, so such a config has zero adaptive
+//!   lanes — every head takes the escape fallback and the "adaptive"
+//!   fabric silently degenerates to deterministic routing. An error
+//!   rather than a warning because the configuration cannot mean what
+//!   it says; `NocConfig::adaptive` raises `vcs` automatically.
 
 use crate::flit::RobParams;
 use crate::noc::NocConfig;
+use crate::router::RoutingKind;
 use crate::topology::{NodeKind, Topology};
 
 use super::report::{port_label, Category, Finding, Report, Severity};
 
-/// Config-level lints (`FV101`, `FV103`, `FV105`, `FV106`): facts
+/// Config-level lints (`FV101`, `FV103`, `FV105`–`FV107`): facts
 /// readable from the [`NocConfig`] knobs plus the fabric geometry.
 pub fn lint_config(cfg: &NocConfig, topo: &Topology, report: &mut Report) {
     let num_routers = topo.width as usize * topo.height as usize;
     let wraps = (0..num_routers).any(|r| topo.dateline_ports(topo.nodes[r].coord) != 0);
     let default_vcs = cfg.topology.default_vcs();
+    // FV107 (error): adaptive routing needs at least one lane above the
+    // escape lanes, or there is nothing to adapt on.
+    if cfg.routing == RoutingKind::Adaptive && cfg.vcs < default_vcs + 1 {
+        report.push(Finding {
+            code: "FV107",
+            severity: Severity::Error,
+            category: Category::Config,
+            message: format!(
+                "adaptive routing with vcs = {} leaves no adaptive lane above the \
+                 {} escape lane(s) this fabric reserves for the deterministic \
+                 baseline; the config degenerates to deterministic routing",
+                cfg.vcs, default_vcs
+            ),
+            context: vec![format!(
+                "raise vcs to at least {} (NocConfig::adaptive does this \
+                 automatically), or drop routing back to deterministic",
+                default_vcs + 1
+            )],
+        });
+    }
     if wraps && cfg.vcs < default_vcs {
         report.push(Finding {
             code: "FV101",

@@ -10,7 +10,9 @@
 //! 1. **config lints** ([`lints`]) — wrap fabrics below their dateline
 //!    VC default, dateline bits on non-wrap ports, zero FIFO depths,
 //!    attach-port mismatches, ROB byte-budget mismatches,
-//!    undersized per-VC buffer depths (`FV101`–`FV106`, warnings);
+//!    undersized per-VC buffer depths (`FV101`–`FV106`, warnings), and
+//!    adaptive routing without a lane above the escape lanes (`FV107`,
+//!    an error — adaptivity with nothing to adapt on);
 //! 2. **route sanity** ([`cdg`]) — every `src → dst` route terminates
 //!    within its minimal hop bound, never U-turns, exits through
 //!    connected ports, and stays within the configured VC count
@@ -40,6 +42,7 @@ pub mod report;
 pub use report::{Category, ChainNode, Finding, Report, Severity};
 
 use crate::noc::NocConfig;
+use crate::router::RoutingKind;
 use crate::topology::Topology;
 
 /// The deployed dateline-mask array of `topo`: bit `p` of entry `r`
@@ -100,7 +103,44 @@ pub fn preflight(cfg: &NocConfig) -> Report {
     let masks = default_masks(&topo);
     let mut report = Report::new();
     lints::lint_config(cfg, &topo, &mut report);
-    report.merge(verify_topology(&topo, cfg.vcs, &masks));
+    // Adaptive routing: the Duato argument reduces deadlock freedom to
+    // the acyclicity of the *escape subgraph* — the deterministic
+    // baseline on the escape lanes. The router's no-re-entry rule makes
+    // an escape entry lane-equivalent to a fresh injection, so that
+    // subgraph is exactly the deterministic fabric's CDG at the escape
+    // lane count; the adaptive lanes above it are covered by the
+    // sharpness pass ([`verify_adaptive_unrestricted`]) only as a
+    // justification, never as a deployment requirement.
+    let cdg_vcs = match cfg.routing {
+        RoutingKind::Deterministic => cfg.vcs,
+        RoutingKind::Adaptive => cfg.vcs.min(cfg.topology.default_vcs()),
+    };
+    report.merge(verify_topology(&topo, cdg_vcs, &masks));
+    report
+}
+
+/// The **sharpness** check behind the escape-VC restriction: verify
+/// `topo` as if minimal-adaptive routing ran with *no* escape lanes —
+/// the full candidate sets offered to every lane
+/// ([`cdg::analyze_adaptive_unrestricted`]). An `FV001` here proves the
+/// escape restriction is load-bearing, not conservative: the same
+/// candidate sets the deployed adaptive router uses would deadlock
+/// without the escape subgraph beneath them.
+///
+/// ```
+/// use floonoc::topology::{MemEdge, Topology};
+/// use floonoc::verify::verify_adaptive_unrestricted;
+/// // Unrestricted adaptivity closes cycles on wrap fabrics and meshes…
+/// let torus = Topology::torus(4, 4, MemEdge::None);
+/// assert!(verify_adaptive_unrestricted(&torus).has_errors());
+/// let mesh = Topology::mesh(4, 4, MemEdge::None);
+/// assert!(verify_adaptive_unrestricted(&mesh).has_errors());
+/// // …which the deployed escape-lane restriction provably avoids
+/// // (`preflight` accepts the same fabrics in adaptive configs).
+/// ```
+pub fn verify_adaptive_unrestricted(topo: &Topology) -> Report {
+    let mut report = Report::new();
+    cdg::analyze_adaptive_unrestricted(topo, &mut report);
     report
 }
 
@@ -184,6 +224,40 @@ mod tests {
         topo.nodes[mem].kind = NodeKind::MemCtrl { attach_port: 9 };
         let r = verify_topology(&topo, 2, &masks);
         assert!(!r.with_code("FV104").is_empty(), "{r}");
+    }
+
+    /// Adaptive shipped defaults verify clean: the preflight restricts
+    /// the CDG to the escape subgraph (the deterministic baseline at the
+    /// fabric's escape-lane count), which is exactly the proof the
+    /// deterministic defaults already pass.
+    #[test]
+    fn adaptive_defaults_are_clean() {
+        for cfg in [
+            NocConfig::mesh(4, 4).adaptive(),
+            NocConfig::torus(4, 4).adaptive(),
+            NocConfig::torus(8, 8).adaptive(),
+            NocConfig::ring(8).adaptive(),
+        ] {
+            let r = preflight(&cfg);
+            assert!(r.is_clean(), "{:?} {}x{}: {r}", cfg.topology, cfg.width, cfg.height);
+        }
+    }
+
+    /// FV107: adaptive routing without a lane above the escape lanes is
+    /// an error-tier lint, whatever the fabric.
+    #[test]
+    fn adaptive_without_adaptive_lanes_is_rejected() {
+        let mut mesh = NocConfig::mesh(4, 4).adaptive();
+        mesh.vcs = 1;
+        let mut torus = NocConfig::torus(4, 4).adaptive();
+        torus.vcs = 2;
+        for cfg in [mesh, torus] {
+            let r = preflight(&cfg);
+            assert!(r.has_errors(), "{:?}: {r}", cfg.topology);
+            assert!(!r.with_code("FV107").is_empty(), "{:?}: {r}", cfg.topology);
+        }
+        // The builder cannot produce the degenerate config by itself.
+        assert!(preflight(&NocConfig::torus(4, 4).adaptive()).is_clean());
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! Property battery for minimal-adaptive routing on Duato escape VCs.
+//!
+//! Four pins (see "Adaptive routing on escape VCs" in
+//! `docs/deadlock.md`):
+//!
+//! 1. **Candidate-table properties on live fabrics** — every
+//!    per-router adaptive route table publishes non-empty candidate
+//!    sets, every candidate hop strictly decreases the fabric distance
+//!    (minimal adaptivity: adaptive paths are exactly as long as the
+//!    deterministic ones), the deterministic escape step is always a
+//!    member (fallback never mis-routes), and the escape-lane count is
+//!    the fabric's dateline VC default — the subgraph the CDG proof
+//!    covers.
+//! 2. **Escape-only degeneration** — with zero adaptive lanes
+//!    (`vcs == escape lanes`, buildable only under `no_verify` because
+//!    FV107 rejects it) the adaptive router has no admissible adaptive
+//!    candidate, ever, and must reproduce the deterministic run's
+//!    digest byte for byte: adaptivity is *additive* on top of the
+//!    baseline, not a different router.
+//! 3. **Tornado drain under adaptivity** — the adversarial pattern on
+//!    the wrap fabric drains with a stall watchdog armed: congestion
+//!    scoring plus escape fallback must never livelock or deadlock.
+//! 4. **Adaptivity pays** — at a fixed horizon on the 8×8 torus
+//!    tornado (the pattern whose even-ring ties the deterministic rule
+//!    breaks uniformly east, piling every flow onto one direction),
+//!    the adaptive fabric ejects at least as many flits as the
+//!    deterministic one.
+
+use floonoc::cluster::{TileTraffic, TiledWorkload};
+use floonoc::flit::{Coord, NodeId};
+use floonoc::noc::{NocConfig, NocSystem};
+use floonoc::perf;
+use floonoc::sim::SimMode;
+use floonoc::topology::TopologyKind;
+use floonoc::traffic::{GenCfg, Pattern};
+
+mod common;
+use common::digest;
+
+use floonoc::router::{PORT_E, PORT_LOCAL, PORT_N, PORT_S, PORT_W};
+
+/// Pin 1: candidate sets materialized into live per-router tables are
+/// non-empty, strictly distance-decreasing, contain the escape step,
+/// and reserve exactly the fabric's dateline lanes for escape.
+#[test]
+fn live_adaptive_tables_are_minimal_and_contain_escape() {
+    let cfgs = [
+        NocConfig::mesh(3, 3),
+        NocConfig::mesh(4, 2),
+        NocConfig::torus(4, 4),
+        NocConfig::torus(5, 3),
+        NocConfig::ring(8),
+        NocConfig::ring(7),
+    ];
+    for cfg in cfgs {
+        let sys = NocSystem::new(cfg.adaptive());
+        let topo = &sys.topo;
+        let alg = topo.adaptive_algorithm();
+        let wraps = topo.kind != TopologyKind::Mesh;
+        let (w, h) = (topo.width, topo.height);
+        for y in 0..h {
+            for x in 0..w {
+                let me = Coord::new(x, y);
+                let table = topo.route_table_adaptive(me);
+                assert!(table.is_adaptive());
+                assert_eq!(
+                    table.escape_lanes() as usize,
+                    topo.kind.default_vcs(),
+                    "{:?}: escape lanes are the dateline VC default",
+                    topo.kind
+                );
+                for (i, node) in topo.nodes.iter().enumerate() {
+                    let dst = NodeId(i as u16);
+                    let cand = table.candidates(dst);
+                    let escape = table.lookup(dst);
+                    assert_ne!(cand, 0, "{:?} {me:?}->{dst:?}: empty candidates", topo.kind);
+                    assert_ne!(
+                        cand & (1 << escape),
+                        0,
+                        "{:?} {me:?}->{dst:?}: escape port {escape} not a candidate",
+                        topo.kind
+                    );
+                    if node.coord == me {
+                        // Arrived (tile) or attached (mem ctrl): the
+                        // single exit port, nothing adaptive about it.
+                        assert_eq!(cand, 1 << escape);
+                        continue;
+                    }
+                    // Minimality: each candidate hop is one closer.
+                    for port in [PORT_N, PORT_E, PORT_S, PORT_W] {
+                        if cand & (1 << port) == 0 {
+                            continue;
+                        }
+                        let next = match (port, wraps) {
+                            (PORT_E, true) => Coord::new((x + 1) % w, y),
+                            (PORT_E, false) => Coord::new(x + 1, y),
+                            (PORT_W, true) => Coord::new((x + w - 1) % w, y),
+                            (PORT_W, false) => Coord::new(x - 1, y),
+                            (PORT_N, true) => Coord::new(x, (y + 1) % h),
+                            (PORT_N, false) => Coord::new(x, y + 1),
+                            (PORT_S, true) => Coord::new(x, (y + h - 1) % h),
+                            (PORT_S, false) => Coord::new(x, y - 1),
+                            _ => unreachable!(),
+                        };
+                        assert_eq!(
+                            alg.distance(next, node.coord) + 1,
+                            alg.distance(me, node.coord),
+                            "{:?} {me:?}->{:?} via port {port}: not minimal",
+                            topo.kind,
+                            node.coord
+                        );
+                    }
+                    // Tiles never see PORT_LOCAL as an adaptive detour.
+                    assert_eq!(cand & (1 << PORT_LOCAL), 0);
+                }
+            }
+        }
+    }
+}
+
+/// A small mixed workload (tornado narrow + uniform DMA bursts) on the
+/// given pre-built system.
+fn mixed_workload(sys: NocSystem) -> TiledWorkload {
+    let tiles = sys.topo.num_tiles;
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: Pattern::Tornado,
+                num_txns: 10,
+                seed: 0xE5CA + i as u64,
+                ..GenCfg::narrow_probe(NodeId(0), 10)
+            }),
+            dma: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                num_txns: 2,
+                burst_len: 7,
+                seed: 0xD0A + i as u64,
+                ..GenCfg::dma_burst(NodeId(0), 2, false)
+            }),
+        })
+        .collect();
+    TiledWorkload::new(sys, profiles)
+}
+
+/// Pin 2: with `vcs == escape_lanes` the adaptive lane range is empty,
+/// so every head falls back to the escape baseline every cycle — the
+/// run must be byte-identical to the deterministic configuration. FV107
+/// rejects this degenerate config in normal operation, hence
+/// `no_verify`; the point of building it anyway is exactly this
+/// equality.
+#[test]
+fn escape_only_adaptive_reproduces_deterministic_digest() {
+    for kind in [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::Ring] {
+        let base = NocConfig::fabric(kind, 3, 3);
+        let esc = base.topology.default_vcs();
+        let run = |cfg: NocConfig| {
+            let mut w = mixed_workload(NocSystem::new(cfg));
+            assert!(w.run_to_completion(2_000_000), "{kind:?} must drain");
+            assert!(w.protocol_ok());
+            digest(&mut w)
+        };
+        let det = run(base.clone());
+        let adp = run(base.adaptive().with_vcs(esc).no_verify());
+        assert!(
+            det == adp,
+            "{kind:?}: escape-only adaptive must equal deterministic\n\
+             --- deterministic ---\n{det}\n--- adaptive(vcs={esc}) ---\n{adp}"
+        );
+    }
+}
+
+/// Pin 3: adversarial tornado on the adaptive 8×8 torus drains with a
+/// stall watchdog armed — total ejections must advance every 25 000
+/// cycles until completion (the same window `verify_static.rs` uses for
+/// the deterministic fabrics).
+#[test]
+fn tornado_adaptive_torus_drains_without_stall() {
+    const STALL_WINDOW: u64 = 25_000;
+    let sys = NocSystem::new(NocConfig::torus(8, 8).adaptive());
+    let tiles = sys.topo.num_tiles;
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: Pattern::Tornado,
+                num_txns: 40,
+                seed: 0x70AD + i as u64,
+                ..GenCfg::narrow_probe(NodeId(0), 40)
+            }),
+            dma: Some(GenCfg {
+                pattern: Pattern::Tornado,
+                num_txns: 4,
+                burst_len: 15,
+                seed: 0x500 + i as u64,
+                ..GenCfg::dma_burst(NodeId(0), 4, false)
+            }),
+        })
+        .collect();
+    let mut w = TiledWorkload::new(sys, profiles);
+    let outcome = w.run_with_watchdog(5_000_000, STALL_WINDOW);
+    assert_eq!(
+        outcome,
+        Ok(true),
+        "adaptive tornado must drain without a stall:\n{}",
+        w.stall_analysis()
+    );
+    assert!(w.protocol_ok());
+}
+
+/// Pin 4: the tornado study headline. At a fixed horizon on the 8×8
+/// torus, minimal-adaptive routing must eject at least as many flits as
+/// the deterministic baseline — the deterministic rule breaks every
+/// half-way tie east, so all tornado flows share one direction per ring
+/// while the adaptive candidates spread them over both.
+#[test]
+fn adaptive_beats_deterministic_on_torus_tornado() {
+    let horizon = 4_000u64;
+    let run = |adaptive: bool| {
+        let mut w = if adaptive {
+            perf::tornado_adaptive_workload(8, SimMode::Gated)
+        } else {
+            perf::tornado_deterministic_workload(8, SimMode::Gated)
+        };
+        for _ in 0..horizon {
+            w.step();
+        }
+        assert!(w.protocol_ok());
+        w.sys.counters.iter().map(|c| c.ejected).sum::<u64>()
+    };
+    let det = run(false);
+    let adp = run(true);
+    assert!(det > 0, "deterministic baseline must make progress");
+    assert!(
+        adp >= det,
+        "adaptive tornado throughput regressed: {adp} ejected vs {det} deterministic"
+    );
+}

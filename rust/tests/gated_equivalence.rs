@@ -19,7 +19,10 @@
 //! random, tornado, nearest-neighbor) × both link modes, which together
 //! exercise XY mesh routing, both directions of every wraparound link,
 //! wormhole bursts across pipelined links, and long quiescent stretches
-//! between bursts. The three-way runner itself is shared
+//! between bursts. A second grid reruns every fabric under
+//! minimal-adaptive routing (tornado traffic, escape + adaptive VC
+//! lanes) — congestion-scored port selection must also be a pure
+//! function of simulator state. The three-way runner itself is shared
 //! (`common::assert_modes_equivalent`) with the seeded randomized sweep
 //! in `mode_equivalence_sweep.rs`.
 
@@ -101,6 +104,60 @@ fn torus_gated_equals_dense_across_patterns() {
 fn ring_gated_equals_dense_across_patterns() {
     for p in PATTERNS {
         assert_equivalent(TopologyKind::Ring, p);
+    }
+}
+
+/// The adaptive-routing differential workload: same shape as
+/// [`workload`] but the narrow generators drive tornado (the pattern
+/// adaptivity actually spreads) and the fabric runs minimal-adaptive
+/// routing over `vcs` lanes. Congestion scoring reads only
+/// producer-side credit registers, so the chosen output port must be a
+/// pure function of simulator state — any engine- or shard-dependent
+/// read would flip a grant and split the digests.
+fn adaptive_workload(kind: TopologyKind, vcs: usize, mode: SimMode) -> TiledWorkload {
+    let sys = NocSystem::new(
+        NocConfig::fabric(kind, 3, 3)
+            .adaptive()
+            .with_vcs(vcs)
+            .with_sim_mode(mode),
+    );
+    let tiles = sys.topo.num_tiles;
+    let profiles: Vec<TileTraffic> = (0..tiles)
+        .map(|i| TileTraffic {
+            core: Some(GenCfg {
+                pattern: Pattern::Tornado,
+                num_txns: 12,
+                seed: 0xBEEF + i as u64,
+                ..GenCfg::narrow_probe(NodeId(0), 12)
+            }),
+            dma: Some(GenCfg {
+                pattern: Pattern::UniformTiles,
+                num_txns: 3,
+                burst_len: 7,
+                seed: 0xD0A + i as u64,
+                ..GenCfg::dma_burst(NodeId(0), 3, false)
+            }),
+        })
+        .collect();
+    TiledWorkload::new(sys, profiles)
+}
+
+/// Adaptive routing through the full differential grid: every fabric at
+/// its minimum legal adaptive VC count (escape lanes + 1) and at the
+/// maximum (4), under dense / gated / event stepping.
+#[test]
+fn adaptive_routing_gated_equals_dense_across_fabrics() {
+    for (kind, vcs) in [
+        (TopologyKind::Mesh, 2),
+        (TopologyKind::Mesh, 4),
+        (TopologyKind::Torus, 3),
+        (TopologyKind::Torus, 4),
+        (TopologyKind::Ring, 3),
+        (TopologyKind::Ring, 4),
+    ] {
+        assert_modes_equivalent(&format!("adaptive/{kind:?}/vcs{vcs}"), 2_000_000, |mode| {
+            adaptive_workload(kind, vcs, mode)
+        });
     }
 }
 

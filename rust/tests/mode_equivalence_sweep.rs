@@ -1,6 +1,6 @@
 //! Seeded randomized three-way differential sweep: ~50 random
-//! (topology, shape, pattern, link-mode, vcs, buffer-depth, duty, seed)
-//! points, each run to completion under [`SimMode::Dense`],
+//! (topology, shape, pattern, link-mode, routing, vcs, buffer-depth,
+//! duty, seed) points, each run to completion under [`SimMode::Dense`],
 //! [`SimMode::Gated`] and [`SimMode::Event`] and compared by
 //! byte-identical stats digest (`common::assert_modes_equivalent` — the
 //! same runner the curated grid in `gated_equivalence.rs` uses).
@@ -31,6 +31,7 @@ struct Point {
     width: u8,
     height: u8,
     wide_only: bool,
+    adaptive: bool,
     vcs: usize,
     in_buf_depth: usize,
     pattern: Pattern,
@@ -42,17 +43,22 @@ struct Point {
 }
 
 /// Draw one point. Constraints keep every draw valid: wrap fabrics
-/// (torus/ring) keep at least their 2 dateline VCs, tornado needs a
-/// non-degenerate shape (width ≥ 2, which all draws satisfy).
+/// (torus/ring) keep at least their 2 dateline VCs, adaptive points
+/// keep at least one lane above the escape lanes (mesh ≥ 2, wrap ≥ 3 —
+/// the FV107 bound), tornado needs a non-degenerate shape (width ≥ 2,
+/// which all draws satisfy).
 fn draw(rng: &mut Rng) -> Point {
     let kind = *rng.choose(&[TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::Ring]);
     let (width, height) = match kind {
         TopologyKind::Ring => ((4 + rng.below(7)) as u8, 1),
         _ => ((2 + rng.below(3)) as u8, (2 + rng.below(3)) as u8),
     };
-    let vcs = match kind {
-        TopologyKind::Mesh => 1 + rng.below(2) as usize,
-        _ => 2 + rng.below(2) as usize,
+    let adaptive = rng.chance(0.35);
+    let vcs = match (kind, adaptive) {
+        (TopologyKind::Mesh, false) => 1 + rng.below(2) as usize,
+        (TopologyKind::Mesh, true) => 2 + rng.below(3) as usize,
+        (_, false) => 2 + rng.below(2) as usize,
+        (_, true) => 3 + rng.below(2) as usize,
     };
     let pattern = *rng.choose(&[
         Pattern::UniformTiles,
@@ -70,6 +76,7 @@ fn draw(rng: &mut Rng) -> Point {
         width,
         height,
         wide_only: rng.chance(0.3),
+        adaptive,
         vcs,
         in_buf_depth: *rng.choose(&[1usize, 2, 4]),
         pattern,
@@ -91,6 +98,11 @@ fn build(p: &Point, mode: SimMode) -> TiledWorkload {
     .with_vcs(p.vcs);
     if p.wide_only {
         cfg = cfg.wide_only();
+    }
+    if p.adaptive {
+        // The drawn vcs already satisfies the adaptive minimum, so the
+        // builder only flips the routing discipline here.
+        cfg = cfg.adaptive().with_vcs(p.vcs);
     }
     cfg.in_buf_depth = p.in_buf_depth;
     let sys = NocSystem::new(cfg);

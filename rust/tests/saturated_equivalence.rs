@@ -28,6 +28,13 @@ fn wrap_saturated_torus_4x4_modes_and_shards_identical() {
 }
 
 #[test]
+fn tornado_adaptive_torus_4x4_modes_and_shards_identical() {
+    common::assert_modes_equivalent_bounded("tornado_adaptive_4x4", 1_200, |m| {
+        perf::tornado_adaptive_workload(4, m)
+    });
+}
+
+#[test]
 fn saturated_8x8_modes_and_shards_identical() {
     common::assert_modes_equivalent_bounded("saturated_8x8", 800, |m| {
         perf::saturated_workload(8, m)

@@ -43,6 +43,10 @@ fn shipped_defaults_verify_clean() {
         (NocConfig::ring(16), "ring 16"),
         (NocConfig::torus(4, 4).wide_only(), "torus 4x4 wide-only"),
         (NocConfig::mesh(4, 4).wide_only(), "mesh 4x4 wide-only"),
+        (NocConfig::mesh(4, 4).adaptive(), "mesh 4x4 adaptive"),
+        (NocConfig::torus(4, 4).adaptive(), "torus 4x4 adaptive"),
+        (NocConfig::torus(8, 8).adaptive(), "torus 8x8 adaptive"),
+        (NocConfig::ring(8).adaptive(), "ring 8 adaptive"),
     ];
     for (cfg, label) in configs {
         let report = preflight(&cfg);
@@ -76,7 +80,7 @@ fn example_configs_verify_clean() {
             path.display()
         );
     }
-    assert!(seen >= 3, "expected the shipped example configs, found {seen}");
+    assert!(seen >= 4, "expected the shipped example configs, found {seen}");
 }
 
 // ---------------------------------------------------------------------
@@ -116,6 +120,68 @@ fn rings_at_one_vc_are_rejected() {
         assert!(
             !report.with_code("FV001").is_empty(),
             "ring {n} @ 1 VC must be rejected, got:\n{report}"
+        );
+    }
+}
+
+/// FV107: an adaptive config whose VC count leaves no lane above the
+/// escape lanes has nothing to adapt on — rejected at error tier, on
+/// every fabric, with the escape-lane arithmetic in the message's
+/// context. The builder cannot produce this state (`adaptive()` raises
+/// the VC count); it takes a manual override, exactly what the lint is
+/// for.
+#[test]
+fn adaptive_without_a_lane_above_escape_is_rejected_fv107() {
+    let mut mesh = NocConfig::mesh(4, 4).adaptive();
+    mesh.vcs = 1; // escape lanes alone
+    let mut torus = NocConfig::torus(4, 4).adaptive();
+    torus.vcs = 2; // both dateline lanes, zero adaptive lanes
+    let mut ring = NocConfig::ring(8).adaptive();
+    ring.vcs = 1; // below even the escape minimum
+    for cfg in [mesh, torus, ring] {
+        let report = preflight(&cfg);
+        assert!(report.has_errors(), "{:?}: must reject, got:\n{report}", cfg.topology);
+        assert!(
+            !report.with_code("FV107").is_empty(),
+            "{:?}: expected FV107, got:\n{report}",
+            cfg.topology
+        );
+    }
+}
+
+/// The escape restriction is **sharp**, not conservative: running the
+/// very same candidate sets with no escape subgraph beneath them
+/// (`verify_adaptive_unrestricted`) closes an FV001 cycle on every
+/// fabric the adaptive defaults ship on — while `preflight` accepts
+/// those same fabrics because the deployed router confines the proof
+/// obligation to the deterministic escape lanes.
+#[test]
+fn adaptive_escape_restriction_is_sharp() {
+    for (topo, cfg, label) in [
+        (
+            Topology::torus(4, 4, MemEdge::None),
+            NocConfig::torus(4, 4).adaptive(),
+            "torus 4x4",
+        ),
+        (
+            Topology::ring(8, MemEdge::None),
+            NocConfig::ring(8).adaptive(),
+            "ring 8",
+        ),
+        (
+            Topology::mesh(4, 4, MemEdge::None),
+            NocConfig::mesh(4, 4).adaptive(),
+            "mesh 4x4",
+        ),
+    ] {
+        let unrestricted = floonoc::verify::verify_adaptive_unrestricted(&topo);
+        assert!(
+            unrestricted.has_errors() && !unrestricted.with_code("FV001").is_empty(),
+            "{label}: unrestricted adaptivity must close a cycle, got:\n{unrestricted}"
+        );
+        assert!(
+            !preflight(&cfg).has_errors(),
+            "{label}: the escape-restricted deployment must stay accepted"
         );
     }
 }
@@ -200,6 +266,14 @@ fn json_report_schema_is_stable() {
         );
         assert_eq!(j.get("ok").and_then(floonoc::util::json::Json::as_bool), Some(ok));
     }
+    // FV107 travels through the same machine-readable report: code,
+    // error severity, and the flipped gate verdict.
+    let mut cfg = NocConfig::torus(4, 4).adaptive();
+    cfg.vcs = 2;
+    let j = preflight(&cfg).to_json();
+    assert_eq!(j.get("ok").and_then(floonoc::util::json::Json::as_bool), Some(false));
+    let rendered = j.to_string();
+    assert!(rendered.contains("FV107"), "FV107 must appear in the JSON report: {rendered}");
 }
 
 // ---------------------------------------------------------------------
